@@ -1,0 +1,72 @@
+//! **Fig. 4 walkthrough** — the Data Dispatcher on real TCP sockets:
+//! plan the ref-logprob exchange two ways (single-controller baseline vs
+//! EARL all-to-all), execute both over loopback with emulated 2.5 Gbps
+//! NICs, and verify the plans deliver identical data placements.
+//!
+//!     cargo run --release --example dispatch_demo -- [workers] [mib]
+
+use anyhow::Result;
+
+use earl::dispatch::{
+    plan_alltoall, plan_centralized, satisfies, tcp::execute_plan_tcp_rated,
+    DataLayout,
+};
+use earl::util::bytes::{human_bytes, human_duration};
+
+fn main() -> Result<()> {
+    let workers: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let mib: u64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let nic = Some(312.5e6); // 2.5 Gbps per worker
+
+    // The ExpPrep stage produced ref-logprobs round-robin; the trainers
+    // want contiguous blocks (a full reshard, as after a parallelism
+    // switch).
+    let items = workers * workers;
+    let producer = DataLayout::round_robin(items, workers);
+    let consumer = DataLayout::blocked(items, workers);
+    let item_bytes = (mib << 20) / workers as u64;
+
+    let base = plan_centralized(&producer, &consumer, item_bytes, 0);
+    let earl = plan_alltoall(&producer, &consumer, item_bytes);
+
+    println!("== dispatch plans: {workers} workers, {mib} MiB/worker ==");
+    println!(
+        "baseline: {} transfers in {} phases, {} total",
+        base.n_transfers(),
+        base.phases.len(),
+        human_bytes(base.total_bytes()),
+    );
+    println!(
+        "EARL:     {} transfers in {} phase,  {} total",
+        earl.n_transfers(),
+        earl.phases.len(),
+        human_bytes(earl.total_bytes()),
+    );
+
+    // Content equivalence: both must realize the consumer layout.
+    assert!(satisfies(&base, &producer, &consumer));
+    assert!(satisfies(&earl, &producer, &consumer));
+    println!("both plans deliver the identical item→worker placement ✓");
+
+    println!("\nexecuting on loopback TCP (2.5 Gbps emulated NICs)...");
+    let tb = execute_plan_tcp_rated(&base, workers, nic)?;
+    let te = execute_plan_tcp_rated(&earl, workers, nic)?;
+    println!(
+        "baseline: {}  (gather {} + scatter {})",
+        human_duration(tb.seconds),
+        human_duration(tb.phase_seconds[0]),
+        human_duration(tb.phase_seconds[1]),
+    );
+    println!("EARL:     {}", human_duration(te.seconds));
+    println!(
+        "latency reduction: {:.1}x  (paper Fig. 4: 9.7–11.2x)",
+        tb.seconds / te.seconds
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! **Fig. 3 walkthrough** — the Parallelism Selector end to end on the
+//! simulated paper testbed: profile the TP4/TP8 grid, build the
+//! context-range table, then replay a growing-context training run and
+//! watch the switch happen (the paper's §3.2 narrative).
+//!
+//!     cargo run --release --example parallelism_sweep
+
+use earl::cluster::ClusterSpec;
+use earl::parallelism::{
+    decode_estimate, ModelShape, ParallelismConfig, ProfilePoint, RangeTable,
+    Selector, ThroughputCfg,
+};
+use earl::workload::ContextTrace;
+
+fn main() {
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    let tcfg = ThroughputCfg::default();
+    let responses = 32;
+
+    // --- offline profiling pass (paper §2: "at the start of the training
+    // process, EARL measures the throughput under various parallelism
+    // configurations and context lengths") ---
+    println!("== profiling: decode TGS (tokens/GPU/s), Qwen2.5-72B, resp={responses} ==");
+    println!("{:>8} {:>10} {:>10} {:>10}", "ctx", "TP2", "TP4", "TP8");
+    let ctx_grid = [2048usize, 4096, 8192, 16384, 32768];
+    let mut points = Vec::new();
+    for &ctx in &ctx_grid {
+        print!("{ctx:>8}");
+        for tp in [2usize, 4, 8] {
+            let e = decode_estimate(
+                &shape,
+                &cluster,
+                ParallelismConfig::tp(tp),
+                &tcfg,
+                ctx,
+                responses,
+            );
+            match &e {
+                Some(e) => print!("{:>10.0}", e.tgs),
+                None => print!("{:>10}", "OOM"),
+            }
+            points.push(ProfilePoint {
+                config: tp,
+                ctx,
+                tgs: e.map(|e| e.tgs),
+            });
+        }
+        println!();
+    }
+
+    // --- the range table the selector keeps ---
+    let table = RangeTable::from_profile(&points).expect("feasible");
+    println!("\n== selected configuration per context range ==");
+    for (bound, tp, tgs) in table.entries() {
+        println!("  ctx <= {bound:>6}: TP{tp} ({tgs:.0} TGS)");
+    }
+
+    // --- online: replay a growing-context run ---
+    println!("\n== online replay: context grows across training steps ==");
+    let mut selector = Selector::new(table, 0.35, 2048);
+    let trace = ContextTrace::logistic(30, 2048.0, 36000.0, 0.3, 0.04, 3);
+    for (step, &ctx) in trace.steps.iter().enumerate() {
+        selector.observe(ctx);
+        let d = selector.decide();
+        if d.switched() || step % 5 == 0 {
+            println!(
+                "  step {step:>2}: observed ctx {ctx:>7.0}  ema {:>7.0}  -> TP{}{}",
+                selector.observed_ctx().unwrap_or(0.0),
+                d.config(),
+                if d.switched() { "   [SWITCH before next rollout]" } else { "" }
+            );
+        }
+    }
+    println!(
+        "\ntotal switches: {} (paper: TP4 at short ctx, TP8 from 16K on)",
+        selector.switches
+    );
+}

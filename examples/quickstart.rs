@@ -1,0 +1,46 @@
+//! Quickstart: load the AOT artifacts, run a handful of end-to-end RL
+//! steps on Tic-Tac-Toe, and print what each EARL stage did.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use earl::config::TrainConfig;
+use earl::coordinator::Trainer;
+
+fn main() -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    cfg.steps = 5;
+    cfg.seed = 7;
+    // Artifacts relative to the workspace root.
+    cfg.artifacts_dir =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    println!("EARL quickstart: {} steps of agentic RL on TicTacToe\n", cfg.steps);
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "model: {} params, buckets {:?}, batch {}",
+        trainer.engine.manifest.model.n_params,
+        trainer.engine.manifest.buckets,
+        trainer.engine.manifest.batch,
+    );
+
+    for _ in 0..trainer.cfg.steps {
+        let rec = trainer.step()?;
+        println!(
+            "step {:>2} | return {:+.2} | episode-ctx {:>5.1} | bucket {} | \
+             rollout {:>5.2}s | exp-prep {:>5.2}s | dispatch(sim) {:>7.4}s | \
+             update {:>5.2}s",
+            rec.step,
+            rec.mean_return,
+            rec.mean_episode_ctx,
+            rec.bucket,
+            rec.rollout_seconds,
+            rec.exp_prep_seconds,
+            rec.dispatch_seconds,
+            rec.train_seconds,
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! **Fig. 1 reproduction (real model)** — train the actual PJRT policy on
+//! Tic-Tac-Toe under (A) a hard context limit and (B) EARL's dynamic
+//! buckets, and print the three curves of the paper's figure:
+//! (a) turn-level context, (b) episode-level context + truncation rate,
+//! (c) average return.
+//!
+//! The paper's setting: a 4B model, max context 8,192, ~3 turns/episode;
+//! context grows during training until it hits the limit around step 13,
+//! truncated ("low-quality") rollouts poison the batch, and the return
+//! collapses after step 15. Here the model is the AOT "small" preset and
+//! the limit is scaled to its episode lengths: reasoning tokens are
+//! allowed to grow (high entropy bonus + long per-turn budget), and the
+//! hard limit sits where mid-training episodes land.
+//!
+//!     cargo run --release --example tictactoe_collapse -- [steps]
+
+use anyhow::Result;
+
+use earl::config::TrainConfig;
+use earl::coordinator::Trainer;
+use earl::rollout::LimitPolicy;
+
+fn run(label: &str, limit: LimitPolicy, steps: u64) -> Result<Vec<(f64, f64, f64, f64)>> {
+    let mut cfg = TrainConfig::default();
+    cfg.artifacts_dir =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.steps = steps;
+    cfg.seed = 11;
+    cfg.rollout.limit = limit;
+    // Encourage long reasoning so context grows during training (the
+    // paper's response-length growth): generous per-turn budget + strong
+    // entropy bonus over the think-token vocabulary.
+    cfg.rollout.max_response_tokens = 10;
+    cfg.hp.ent_coef = 0.08;
+    cfg.hp.lr = 2e-3;
+    cfg.hp.kl_coef = 0.0;
+
+    eprintln!("\n### {label} ({limit:?}) ###");
+    let mut trainer = Trainer::new(cfg)?;
+    let mut out = Vec::new();
+    for _ in 0..steps {
+        let rec = trainer.step()?;
+        eprintln!(
+            "  step {:>3}  turn-ctx {:>5.1}  ep-ctx {:>6.1}  trunc {:>5.1}%  \
+             return {:+.3}",
+            rec.step,
+            rec.mean_turn_ctx,
+            rec.mean_episode_ctx,
+            rec.truncation_rate * 100.0,
+            rec.mean_return,
+        );
+        out.push((
+            rec.mean_turn_ctx,
+            rec.mean_episode_ctx,
+            rec.truncation_rate,
+            rec.mean_return,
+        ));
+    }
+    Ok(out)
+}
+
+fn mean_tail(xs: &[(f64, f64, f64, f64)], k: usize, f: impl Fn(&(f64, f64, f64, f64)) -> f64) -> f64 {
+    let tail = &xs[xs.len().saturating_sub(k)..];
+    tail.iter().map(&f).sum::<f64>() / tail.len() as f64
+}
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+
+    // (A) the paper's baseline: hard limit sized to bite mid-training.
+    // The "small" model's tic-tac-toe episodes run ~60–80 tokens with
+    // terse responses and grow well past 100 as reasoning lengthens.
+    let baseline = run("A: hard context limit (Fig. 1 baseline)",
+                       LimitPolicy::Hard(96), steps)?;
+    // (B) EARL: dynamic buckets up to the largest compiled context.
+    let earl = run("B: EARL dynamic buckets", LimitPolicy::Buckets, steps)?;
+
+    println!("\n=== Fig. 1 summary (last 10 steps) ===");
+    println!(
+        "{:<28} {:>12} {:>12}",
+        "", "A: hard-limit", "B: EARL"
+    );
+    let rows: [(&str, fn(&(f64, f64, f64, f64)) -> f64); 4] = [
+        ("turn-level context", |r| r.0),
+        ("episode-level context", |r| r.1),
+        ("truncation rate", |r| r.2),
+        ("average return", |r| r.3),
+    ];
+    for (name, f) in rows {
+        println!(
+            "{name:<28} {:>12.2} {:>12.2}",
+            mean_tail(&baseline, 10, f),
+            mean_tail(&earl, 10, f),
+        );
+    }
+
+    let a_ret = mean_tail(&baseline, 10, |r| r.3);
+    let b_ret = mean_tail(&earl, 10, |r| r.3);
+    let a_trunc = mean_tail(&baseline, 10, |r| r.2);
+    println!(
+        "\npaper Fig. 1: the hard-limit run truncates and its return \
+         collapses; EARL keeps training stable.\n\
+         ours: baseline trunc {:.0}% return {:+.2}; EARL return {:+.2}",
+        a_trunc * 100.0,
+        a_ret,
+        b_ret
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! **End-to-end validation driver** — trains the AOT transformer with
+//! REINFORCE self-play on Tic-Tac-Toe for a few hundred steps through
+//! the complete stack (Pallas attention kernel → JAX model → HLO → PJRT
+//! → rollout → exp-prep → dispatch → fused train step), logging the
+//! return/loss curves to runs/e2e_metrics.jsonl. Recorded run:
+//! EXPERIMENTS.md §End-to-end.
+//!
+//!     cargo run --release --example train_e2e -- [steps] [env]
+
+use anyhow::Result;
+
+use earl::config::{EnvKind, TrainConfig};
+use earl::coordinator::Trainer;
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let env = std::env::args()
+        .nth(2)
+        .map(|s| EnvKind::from_name(&s))
+        .transpose()?
+        .unwrap_or(EnvKind::TicTacToe);
+
+    let mut cfg = TrainConfig::default();
+    cfg.artifacts_dir =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.steps = steps;
+    cfg.env = env;
+    cfg.seed = 42;
+    cfg.hp.lr = 1e-3;
+    cfg.hp.ent_coef = 0.02;
+    cfg.hp.kl_coef = 0.02;
+    cfg.ref_refresh_every = 50;
+    cfg.rollout.max_response_tokens = 4;
+    std::fs::create_dir_all("runs").ok();
+    cfg.metrics_path = Some("runs/e2e_metrics.jsonl".into());
+    cfg.checkpoint_path = Some("runs/e2e_final_params.bin".into());
+
+    println!(
+        "=== end-to-end: {} steps of agentic RL on {} (model {} params) ===",
+        steps,
+        env.name(),
+        "see manifest"
+    );
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "model: {} params | buckets {:?} | batch {}",
+        trainer.engine.manifest.model.n_params,
+        trainer.engine.manifest.buckets,
+        trainer.engine.manifest.batch
+    );
+
+    let mut first20 = 0.0;
+    for i in 0..steps {
+        let rec = trainer.step()?;
+        if i == 19 {
+            first20 = trainer.metrics.rolling_return(20);
+        }
+        if rec.step % 10 == 0 || rec.step == steps {
+            println!(
+                "step {:>4} | return {:+.3} (roll20 {:+.3}) | ep-ctx {:>5.1} | \
+                 loss {:+.4} | kl {:.4} | ent {:.3} | bucket {} | \
+                 step-time {:.2}s",
+                rec.step,
+                rec.mean_return,
+                trainer.metrics.rolling_return(20),
+                rec.mean_episode_ctx,
+                rec.loss,
+                rec.kl,
+                rec.entropy,
+                rec.bucket,
+                rec.step_seconds(),
+            );
+        }
+    }
+    let final20 = trainer.metrics.rolling_return(20);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\n=== e2e done: {steps} steps in {:.0}s ({:.2}s/step) ===",
+        wall,
+        wall / steps as f64
+    );
+    println!(
+        "rolling return: first-20 {first20:+.3} -> last-20 {final20:+.3} \
+         (improvement {:+.3})",
+        final20 - first20
+    );
+    println!("metrics: runs/e2e_metrics.jsonl; checkpoint: runs/e2e_final_params.bin");
+    Ok(())
+}

@@ -1,0 +1,176 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernel) to
+HLO *text* artifacts + a manifest the rust runtime loads.
+
+Run once via ``make artifacts``; python never appears on the request path.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Each exported function is lowered once per **context bucket** (sequence
+length). Buckets are the artifact-level analogue of the paper's dynamic
+parallelism: the rust coordinator monitors the live context length and
+picks the executable for the smallest bucket that fits (Parallelism
+Selector, paper §2), instead of always paying for the maximum context.
+
+Outputs (in --out-dir, default ``artifacts/``):
+  {fn}_b{batch}_t{bucket}.hlo.txt   one per (function, bucket)
+  params.bin                        initial params, f32 LE, param_spec order
+  manifest.json                     config + ABI: shapes, order, artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+FUNCTIONS = ("logits", "logprobs", "train_step")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_structs(cfg: M.ModelConfig):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_spec(cfg)]
+
+
+def _f32():
+    return jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def lower_function(cfg: M.ModelConfig, fn: str, batch: int, seq: int):
+    """Lower one exported function at one context bucket to HLO text."""
+    p = _param_structs(cfg)
+    tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    bt_f32 = jax.ShapeDtypeStruct((batch, seq), jnp.float32)
+
+    if fn == "logits":
+        args = (*p, tokens)
+        f = lambda *a: M.logits_fn(cfg, *a)
+    elif fn == "logprobs":
+        args = (*p, tokens)
+        f = lambda *a: M.logprobs_fn(cfg, *a)
+    elif fn == "train_step":
+        args = (*p, *p, *p, tokens, bt_f32, bt_f32, bt_f32,
+                _f32(), _f32(), _f32(), _f32())
+        f = lambda *a: M.train_step_fn(cfg, *a)
+    else:
+        raise ValueError(f"unknown function {fn!r}")
+
+    lowered = jax.jit(f).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def io_signature(cfg: M.ModelConfig, fn: str, batch: int, seq: int):
+    """Human/rust-readable description of the positional ABI."""
+    n = len(M.param_spec(cfg))
+    if fn in ("logits", "logprobs"):
+        ins = [f"params[{n}]", "tokens:i32[b,t]"]
+        outs = ["logits:f32[b,t,v]"] if fn == "logits" \
+            else ["logprobs:f32[b,t]"]
+    else:
+        ins = [f"params[{n}]", f"adam_m[{n}]", f"adam_v[{n}]",
+               "tokens:i32[b,t]", "mask:f32[b,t]", "advantages:f32[b,t]",
+               "ref_logprobs:f32[b,t]", "step:f32", "lr:f32",
+               "ent_coef:f32", "kl_coef:f32"]
+        outs = [f"params[{n}]", f"adam_m[{n}]", f"adam_v[{n}]",
+                "loss:f32", "pg:f32", "kl:f32", "entropy:f32"]
+    return {"inputs": ins, "outputs": outs, "batch": batch, "seq": seq}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--buckets", default="128,256,512",
+                    help="comma-separated context buckets")
+    ap.add_argument("--functions", default=",".join(FUNCTIONS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.preset]
+    buckets = sorted(int(b) for b in args.buckets.split(","))
+    assert buckets[-1] <= cfg.max_seq, (buckets, cfg.max_seq)
+    fns = [f.strip() for f in args.functions.split(",") if f.strip()]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # --- initial params blob -------------------------------------------------
+    params = M.init_params(cfg, seed=args.seed)
+    blob = b"".join(np.asarray(p, dtype="<f4").tobytes() for p in params)
+    params_path = os.path.join(args.out_dir, "params.bin")
+    with open(params_path, "wb") as f:
+        f.write(blob)
+    print(f"params.bin: {len(blob)} bytes "
+          f"({sum(int(math.prod(s)) for _, s in M.param_spec(cfg))} f32)")
+
+    # --- HLO artifacts --------------------------------------------------------
+    artifacts = []
+    for fn in fns:
+        for seq in buckets:
+            t0 = time.time()
+            text = lower_function(cfg, fn, args.batch, seq)
+            name = f"{fn}_b{args.batch}_t{seq}.hlo.txt"
+            with open(os.path.join(args.out_dir, name), "w") as f:
+                f.write(text)
+            artifacts.append({
+                "function": fn,
+                "bucket": seq,
+                "file": name,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                **io_signature(cfg, fn, args.batch, seq),
+            })
+            print(f"{name}: {len(text)} chars ({time.time() - t0:.1f}s)")
+
+    # --- manifest --------------------------------------------------------------
+    manifest = {
+        "version": 1,
+        "preset": args.preset,
+        "seed": args.seed,
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "rope_theta": cfg.rope_theta,
+            "n_params": sum(int(math.prod(s))
+                            for _, s in M.param_spec(cfg)),
+        },
+        "batch": args.batch,
+        "buckets": buckets,
+        "param_spec": [{"name": n, "shape": list(s)}
+                       for n, s in M.param_spec(cfg)],
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS,
+                 "zero_init": True},
+        "params_file": "params.bin",
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest.json: {len(artifacts)} artifacts, "
+          f"preset={args.preset}, buckets={buckets}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,311 @@
+"""Layer-1 Pallas kernels: blocked causal flash attention (fwd + bwd).
+
+This is the compute hot-spot of both the Rollout stage (decode scoring)
+and the Model-Update stage (fwd/bwd) — exactly the cost that grows with
+context length and that EARL's Parallelism Selector reacts to. The
+backward pass is also hand-written as Pallas kernels (dq and dk/dv
+passes, flash-attention style: recompute P from the saved row-logsumexp
+instead of materializing the O(T^2) score matrix), wired in via
+``jax.custom_vjp`` so the fused ``train_step`` HLO artifact contains the
+kernels end-to-end.
+
+Hardware adaptation (paper targets CUDA GPUs, we target the TPU-shaped
+Pallas model, run under ``interpret=True`` on CPU):
+
+* instead of a threadblock/shared-memory tiling, the kernels tile for
+  VMEM via ``BlockSpec``: each grid step holds one Q (or KV) tile plus
+  the streamed counterpart rows for its (batch, head) slice, walking them
+  in chunks with an online-softmax accumulator;
+* matmul accumulation is f32 (MXU-style), block edges are multiples of
+  the lane width where the shape allows.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers the
+kernels to plain HLO so the same artifacts run on the rust CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes. VMEM estimate per fwd grid step (f32):
+#   q: BQ*d, k/v chunk: 2*BK*d, scores: BQ*BK, acc: BQ*d, m/l: 2*BQ
+# With BQ=BK=64, d=32: ~49 KiB — far under the ~16 MiB VMEM budget; the
+# limit on block growth is the score tile (BQ*BK) staying MXU-aligned.
+# See DESIGN.md §Perf and EXPERIMENTS.md §Perf for the block-shape sweep.
+BLOCK_Q = 64
+BLOCK_K = 64
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *,
+                block_k: int, scale: float):
+    """One grid step: one (batch*head, q-block) tile.
+
+    Block shapes (leading grid-collapsed axis of extent 1):
+      q_ref: (1, block_q, d); k_ref/v_ref: (1, seq, d);
+      o_ref: (1, block_q, d); lse_ref: (1, block_q).
+    """
+    block_q = q_ref.shape[1]
+    seq = k_ref.shape[1]
+    d = q_ref.shape[2]
+
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k_all = k_ref[0]                                   # (seq, d)
+    v_all = v_ref[0]
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k = jax.lax.dynamic_slice(
+            k_all, (j * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_all, (j * block_k, 0), (block_k, d)).astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)          # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                              # (bq, bk)
+        # Rows where everything so far is masked: m_new == NEG_INF, and
+        # exp(NEG_INF - NEG_INF) = 1 would pollute l. Zero those rows.
+        p = jnp.where(m_new > _NEG_INF / 2, p, 0.0)
+        alpha = jnp.where(m_prev > _NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    # Causality: KV blocks strictly after this Q tile contribute nothing;
+    # bound the walk at the last block that intersects the tile's rows.
+    n_live = jnp.minimum((iq + 1) * block_q + block_k - 1, seq) // block_k
+    acc, m, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    # Causal rows always see at least themselves (l >= 1); guard anyway.
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l_safe).astype(o_ref.dtype)
+    lse_ref[0] = (m + jnp.log(l_safe))[:, 0]
+
+
+def _flash_fwd(q, k, v, block_q: int, block_k: int):
+    """Returns (o, lse) with q/k/v: (bh, t, d); lse: (bh, t) f32."""
+    bh, t, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, t // block_q)
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh_, iq: (bh_, iq, 0)),
+            pl.BlockSpec((1, t, d), lambda bh_, iq: (bh_, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda bh_, iq: (bh_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh_, iq: (bh_, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda bh_, iq: (bh_, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, t), jnp.float32),
+        ],
+        interpret=True,  # mandatory for CPU-PJRT execution (see module doc)
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+# Standard flash-attention backward split into two passes so each output
+# tile has a single writer (no cross-grid-step accumulation):
+#   dq pass: grid over Q blocks, streams KV;   dq = scale * dS @ K
+#   dkv pass: grid over KV blocks, streams Q;  dk = scale * dS^T Q,
+#                                              dv = P^T dO
+# with P recomputed from the saved row-logsumexp:
+#   P = exp(scale*QK^T - lse),  dS = P * (dO V^T - delta),
+#   delta_i = sum_d dO_id * O_id  (precomputed outside the kernels).
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+               block_k: int, scale: float):
+    block_q = q_ref.shape[1]
+    seq = k_ref.shape[1]
+    d = q_ref.shape[2]
+
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]        # (bq, 1)
+    delta = delta_ref[0][:, None]    # (bq, 1)
+    k_all, v_all = k_ref[0], v_ref[0]
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    def body(j, acc):
+        k = jax.lax.dynamic_slice(
+            k_all, (j * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_all, (j * block_k, 0), (block_k, d)).astype(jnp.float32)
+        s = scale * jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        p = jnp.exp(s - lse)                                 # (bq, bk)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta)
+        return acc + jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    n_live = jnp.minimum((iq + 1) * block_q + block_k - 1, seq) // block_k
+    acc = jax.lax.fori_loop(
+        0, n_live, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[0] = (scale * acc).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, *, block_q: int, scale: float):
+    seq = q_ref.shape[1]
+    block_k = k_ref.shape[1]
+    d = q_ref.shape[2]
+
+    jk = pl.program_id(1)
+    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    q_all, do_all = q_ref[0], do_ref[0]
+    lse_all, delta_all = lse_ref[0], delta_ref[0]
+    k_pos = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+
+    def body(iq, carry):
+        dk_acc, dv_acc = carry
+        q = jax.lax.dynamic_slice(
+            q_all, (iq * block_q, 0), (block_q, d)).astype(jnp.float32)
+        do = jax.lax.dynamic_slice(
+            do_all, (iq * block_q, 0), (block_q, d)).astype(jnp.float32)
+        lse = jax.lax.dynamic_slice(lse_all, (iq * block_q,),
+                                    (block_q,))[:, None]
+        delta = jax.lax.dynamic_slice(delta_all, (iq * block_q,),
+                                      (block_q,))[:, None]
+        s = scale * jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, 1), 0)
+        s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        p = jnp.exp(s - lse)                                 # (bq, bk)
+        dv_acc = dv_acc + jnp.dot(p.T, do,
+                                  preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta)
+        dk_acc = dk_acc + jnp.dot(ds.T, q,
+                                  preferred_element_type=jnp.float32)
+        return dk_acc, dv_acc
+
+    # Q blocks strictly before this KV block are fully masked; skip them.
+    start = (jk * block_k) // block_q
+    zeros = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(start, seq // block_q, body, (zeros, zeros))
+    dk_ref[0] = (scale * dk).astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _flash_bwd(q, k, v, o, lse, do, block_q: int, block_k: int):
+    bh, t, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)  # (bh, t)
+
+    full = lambda bh_, i: (bh_, 0, 0)
+    full1 = lambda bh_, i: (bh_, 0)
+    qtile = lambda bh_, i: (bh_, i, 0)
+    qtile1 = lambda bh_, i: (bh_, i)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, block_k=block_k, scale=scale),
+        grid=(bh, t // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), qtile),
+            pl.BlockSpec((1, t, d), full),
+            pl.BlockSpec((1, t, d), full),
+            pl.BlockSpec((1, block_q, d), qtile),
+            pl.BlockSpec((1, block_q), qtile1),
+            pl.BlockSpec((1, block_q), qtile1),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), qtile),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, block_q=block_q, scale=scale),
+        grid=(bh, t // block_k),
+        in_specs=[
+            pl.BlockSpec((1, t, d), full),
+            pl.BlockSpec((1, block_k, d), qtile),
+            pl.BlockSpec((1, block_k, d), qtile),
+            pl.BlockSpec((1, t, d), full),
+            pl.BlockSpec((1, t), full1),
+            pl.BlockSpec((1, t), full1),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), qtile),
+            pl.BlockSpec((1, block_k, d), qtile),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, d), k.dtype),
+            jax.ShapeDtypeStruct((bh, t, d), v.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attention_flat(q, k, v, block_q: int, block_k: int):
+    o, _ = _flash_fwd(q, k, v, block_q, block_k)
+    return o
+
+
+def _flash_vjp_fwd(q, k, v, block_q, block_k):
+    o, lse = _flash_fwd(q, k, v, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    return _flash_bwd(q, k, v, o, lse, do, block_q, block_k)
+
+
+_flash_attention_flat.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(q, k, v, *, block_q: int = BLOCK_Q,
+                    block_k: int = BLOCK_K):
+    """Causal multi-head attention via the Pallas kernels (differentiable).
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``.
+    Returns:
+      ``(batch, heads, seq, head_dim)`` attention output, same dtype as q.
+    """
+    b, h, t, d = q.shape
+    assert k.shape == (b, h, t, d) and v.shape == (b, h, t, d)
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+
+    # Collapse (batch, heads) into one grid axis.
+    out = _flash_attention_flat(
+        q.reshape(b * h, t, d), k.reshape(b * h, t, d),
+        v.reshape(b * h, t, d), block_q, block_k)
+    return out.reshape(b, h, t, d)

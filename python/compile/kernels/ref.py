@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the Layer-1 kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the AOT
+artifacts the rust runtime executes) are validated against in pytest.
+Everything here is written for clarity, not speed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def causal_attention(q, k, v):
+    """Naive causal multi-head attention.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``.
+    Returns:
+      ``(batch, heads, seq, head_dim)``.
+    """
+    b, h, t, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def log_softmax(logits):
+    """Numerically-stable log softmax over the last axis."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    return z - jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+
+
+def token_logprobs(logits, tokens):
+    """Per-token log p(tokens[t] | tokens[<t]).
+
+    Args:
+      logits: ``(batch, seq, vocab)`` — logits[:, t] predicts tokens[:, t+1].
+      tokens: ``(batch, seq)`` int32.
+    Returns:
+      ``(batch, seq)`` f32; position 0 (no prediction context) is 0.
+    """
+    logp = log_softmax(logits)
+    # logits at t-1 score tokens at t
+    scored = jnp.take_along_axis(
+        logp[:, :-1, :], tokens[:, 1:, None], axis=-1)[..., 0]
+    return jnp.pad(scored, ((0, 0), (1, 0)))
+
+
+def entropy(logits):
+    """Per-position softmax entropy, ``(batch, seq)``."""
+    logp = log_softmax(logits)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)

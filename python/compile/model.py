@@ -1,0 +1,263 @@
+"""Layer-2 JAX model: GPT-style decoder-only transformer + RL train step.
+
+This is the policy / reference model of the agentic RL loop. The attention
+hot-spot calls the Layer-1 Pallas kernel (``kernels.attention``), so the
+kernel lowers into the same HLO artifact the rust runtime executes.
+
+Everything is expressed over a *flat, ordered tuple* of parameter tensors
+(see :func:`param_spec`) rather than a nested pytree: the rust coordinator
+marshals PJRT literals positionally, so the order here is the ABI between
+the python compile path and the rust hot path. ``manifest.json`` (written
+by ``aot.py``) records the same order.
+
+Architecture: token embedding (tied LM head), per-layer [RMSNorm → MHA
+(RoPE, flash-attention kernel) → residual, RMSNorm → SwiGLU MLP →
+residual], final RMSNorm. Per-layer weights are stacked on a leading
+``n_layers`` axis and consumed with ``lax.scan`` to keep the lowered HLO
+compact (one layer body, not ``n_layers`` copies).
+
+Exported entry points (lowered per context bucket by ``aot.py``):
+
+* :func:`logits_fn` — full-sequence logits; rollout sampling happens in
+  rust on top of these.
+* :func:`logprobs_fn` — per-token log-probabilities; used for the policy's
+  behaviour log-probs and for the *reference model* whose tensors the
+  Data Dispatcher ships between stages (paper §3.3).
+* :func:`train_step_fn` — REINFORCE policy-gradient loss with KL-to-
+  reference penalty and entropy bonus, grads, and a fused Adam update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model hyper-parameters (the ABI with the rust runtime)."""
+
+    vocab: int = 64
+    d_model: int = 256
+    n_layers: int = 6
+    n_heads: int = 8
+    d_ff: int = 512
+    max_seq: int = 512          # largest context bucket
+    rope_theta: float = 10_000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        import math
+        return sum(int(math.prod(s)) for _, s in param_spec(self))
+
+
+# Presets selectable from `aot.py --preset`. "small" is the CPU-tractable
+# end-to-end RL default; "tiny" keeps pytest fast; "medium" is for scaling
+# studies; "100m" matches the paper-scale ratio (artifact-size / compile
+# studies, not e2e CPU training).
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=2,
+                        d_ff=128, max_seq=128),
+    "small": ModelConfig(vocab=64, d_model=128, n_layers=4, n_heads=4,
+                         d_ff=384, max_seq=512),
+    "medium": ModelConfig(),
+    "100m": ModelConfig(vocab=4096, d_model=768, n_layers=12, n_heads=12,
+                        d_ff=2304, max_seq=1024),
+}
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the positional ABI for PJRT literals."""
+    L, D, F, H = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_heads
+    return [
+        ("embed", (cfg.vocab, D)),
+        ("ln1", (L, D)),
+        ("wq", (L, D, D)),
+        ("wk", (L, D, D)),
+        ("wv", (L, D, D)),
+        ("wo", (L, D, D)),
+        ("ln2", (L, D)),
+        ("w1", (L, D, F)),
+        ("w3", (L, D, F)),
+        ("w2", (L, F, D)),
+        ("lnf", (D,)),
+    ]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Deterministic init, returned in :func:`param_spec` order."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.startswith("ln"):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = fan_in ** -0.5
+            # Scale residual-writing projections down by sqrt(2L) (GPT-2).
+            if name in ("wo", "w2"):
+                std /= (2 * cfg.n_layers) ** 0.5
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def _rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, theta: float):
+    """Rotary position embedding over (batch, heads, seq, head_dim)."""
+    b, h, t, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]  # (t, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _block(cfg: ModelConfig, x, lp, *, use_kernel: bool):
+    """One transformer block. ``lp``: dict of this layer's tensors."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    y = _rmsnorm(x, lp["ln1"])
+    q = (y @ lp["wq"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = (y @ lp["wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = (y @ lp["wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    q = _rope(q, cfg.rope_theta)
+    k = _rope(k, cfg.rope_theta)
+    attn = flash_attention(q, k, v) if use_kernel \
+        else kref.causal_attention(q, k, v)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + attn @ lp["wo"]
+
+    y = _rmsnorm(x, lp["ln2"])
+    gate = jax.nn.silu(y @ lp["w1"])
+    x = x + (gate * (y @ lp["w3"])) @ lp["w2"]
+    return x
+
+
+def forward(cfg: ModelConfig, params: List[jnp.ndarray], tokens,
+            *, use_kernel: bool = True):
+    """Full-sequence logits ``(batch, seq, vocab)``.
+
+    ``tokens``: ``(batch, seq)`` int32. Padding is by trailing pad tokens;
+    causality keeps them from affecting earlier positions.
+    """
+    names = [n for n, _ in param_spec(cfg)]
+    p = dict(zip(names, params))
+    x = p["embed"][tokens]  # (b, t, d)
+
+    layer_names = ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w3", "w2"]
+    stacked = {n: p[n] for n in layer_names}
+
+    def step(x, layer):
+        return _block(cfg, x, layer, use_kernel=use_kernel), None
+
+    x, _ = jax.lax.scan(step, x, stacked)
+    x = _rmsnorm(x, p["lnf"])
+    return x @ p["embed"].T
+
+
+def logits_fn(cfg: ModelConfig, *args, use_kernel: bool = True):
+    """AOT entry: ``(*params, tokens) -> (logits,)``."""
+    params, tokens = list(args[:-1]), args[-1]
+    return (forward(cfg, params, tokens, use_kernel=use_kernel),)
+
+
+def logprobs_fn(cfg: ModelConfig, *args, use_kernel: bool = True):
+    """AOT entry: ``(*params, tokens) -> (per-token logprobs,)``.
+
+    Output ``(batch, seq)``: position ``t`` holds log p(tokens[t] |
+    tokens[<t]); position 0 is 0.
+    """
+    params, tokens = list(args[:-1]), args[-1]
+    logits = forward(cfg, params, tokens, use_kernel=use_kernel)
+    return (kref.token_logprobs(logits, tokens),)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def rl_loss(cfg: ModelConfig, params, tokens, mask, advantages,
+            ref_logprobs, ent_coef, kl_coef, *, use_kernel: bool = True):
+    """REINFORCE loss with KL-to-reference penalty and entropy bonus.
+
+    mask: 1.0 at *agent-generated* token positions (the only positions the
+    policy gradient flows through); advantages: per-token advantage
+    (REINFORCE: the whitened episode return broadcast over its tokens);
+    ref_logprobs: the reference model's per-token logprobs — the tensor
+    the Data Dispatcher ships from the ExpPrep stage (paper §3.3).
+
+    Returns (loss, (pg, kl, entropy)).
+    """
+    logits = forward(cfg, params, tokens, use_kernel=use_kernel)
+    logp = kref.token_logprobs(logits, tokens)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+
+    pg = -jnp.sum(logp * advantages * mask) / denom
+    # Schulman k3 estimator: unbiased, non-negative.
+    lr_ratio = ref_logprobs - logp
+    kl = jnp.sum((jnp.exp(lr_ratio) - lr_ratio - 1.0) * mask) / denom
+    ent = jnp.sum(kref.entropy(logits)[:, :-1] * mask[:, 1:]) / denom
+
+    loss = pg + kl_coef * kl - ent_coef * ent
+    return loss, (pg, kl, ent)
+
+
+def train_step_fn(cfg: ModelConfig, *args, use_kernel: bool = True):
+    """AOT entry — fused loss + grad + Adam update.
+
+    Positional signature (n = len(param_spec)):
+      args[0:n]        params
+      args[n:2n]       Adam m
+      args[2n:3n]      Adam v
+      then: tokens (b,t) i32, mask (b,t) f32, advantages (b,t) f32,
+            ref_logprobs (b,t) f32, step f32 scalar (1-based), lr f32,
+            ent_coef f32, kl_coef f32.
+    Returns: (*new_params, *new_m, *new_v, loss, pg, kl, entropy).
+    """
+    n = len(param_spec(cfg))
+    params = list(args[:n])
+    m = list(args[n:2 * n])
+    v = list(args[2 * n:3 * n])
+    (tokens, mask, advantages, ref_logprobs,
+     step, lr, ent_coef, kl_coef) = args[3 * n:]
+
+    def loss_of(ps):
+        return rl_loss(cfg, ps, tokens, mask, advantages, ref_logprobs,
+                       ent_coef, kl_coef, use_kernel=use_kernel)
+
+    (loss, (pg, kl, ent)), grads = jax.value_and_grad(
+        loss_of, has_aux=True)(params)
+
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    new_p, new_m, new_v = [], [], []
+    for p_i, m_i, v_i, g_i in zip(params, m, v, grads):
+        m_n = ADAM_B1 * m_i + (1.0 - ADAM_B1) * g_i
+        v_n = ADAM_B2 * v_i + (1.0 - ADAM_B2) * jnp.square(g_i)
+        upd = (m_n / bc1) / (jnp.sqrt(v_n / bc2) + ADAM_EPS)
+        new_p.append(p_i - lr * upd)
+        new_m.append(m_n)
+        new_v.append(v_n)
+
+    return (*new_p, *new_m, *new_v, loss, pg, kl, ent)

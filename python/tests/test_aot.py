@@ -1,0 +1,115 @@
+"""AOT pipeline: lowering, manifest integrity, and the HLO-text contract
+with the rust runtime."""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+class TestLowering:
+    def test_logits_hlo_text_wellformed(self):
+        text = aot.lower_function(CFG, "logits", 2, 64)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # tokens input and logits output shapes appear
+        assert "s32[2,64]" in text
+        assert f"f32[2,64,{CFG.vocab}]" in text
+
+    def test_bucket_changes_shapes(self):
+        t64 = aot.lower_function(CFG, "logprobs", 2, 64)
+        t128 = aot.lower_function(CFG, "logprobs", 2, 128)
+        assert "s32[2,64]" in t64 and "s32[2,128]" in t128
+        assert t64 != t128
+
+    def test_train_step_arity(self):
+        sig = aot.io_signature(CFG, "train_step", 2, 64)
+        n = len(M.param_spec(CFG))
+        assert sig["inputs"][0] == f"params[{n}]"
+        assert sig["outputs"][-1] == "entropy:f32"
+
+    def test_unknown_function_rejected(self):
+        with pytest.raises(ValueError):
+            aot.lower_function(CFG, "nope", 2, 64)
+
+    def test_hlo_contains_no_custom_call(self):
+        """interpret=True must lower Pallas to plain HLO — a Mosaic
+        custom-call would be unloadable by the CPU PJRT client."""
+        text = aot.lower_function(CFG, "logits", 2, 64)
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+class TestEndToEndArtifacts:
+    @pytest.fixture(scope="class")
+    def outdir(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        argv = sys.argv
+        sys.argv = [
+            "aot", "--preset", "tiny", "--out-dir", str(out),
+            "--buckets", "32,64", "--batch", "2",
+        ]
+        try:
+            aot.main()
+        finally:
+            sys.argv = argv
+        return out
+
+    def test_manifest_complete(self, outdir):
+        m = json.loads((outdir / "manifest.json").read_text())
+        assert m["version"] == 1
+        assert m["buckets"] == [32, 64]
+        assert m["batch"] == 2
+        assert len(m["artifacts"]) == 6  # 3 fns x 2 buckets
+        for a in m["artifacts"]:
+            assert (outdir / a["file"]).exists(), a["file"]
+        names = [p["name"] for p in m["param_spec"]]
+        assert names[0] == "embed" and names[-1] == "lnf"
+
+    def test_params_blob_matches_spec(self, outdir):
+        m = json.loads((outdir / "manifest.json").read_text())
+        blob = (outdir / "params.bin").read_bytes()
+        total = sum(math.prod(p["shape"]) for p in m["param_spec"])
+        assert len(blob) == total * 4
+        assert m["model"]["n_params"] == total
+        # Blob reproduces init_params exactly (little-endian f32).
+        params = M.init_params(CFG, seed=m["seed"])
+        flat = np.concatenate([np.asarray(p).ravel() for p in params])
+        got = np.frombuffer(blob, dtype="<f4")
+        np.testing.assert_array_equal(got, flat.astype("<f4"))
+
+    def test_artifact_checksums(self, outdir):
+        import hashlib
+        m = json.loads((outdir / "manifest.json").read_text())
+        for a in m["artifacts"]:
+            text = (outdir / a["file"]).read_text()
+            assert hashlib.sha256(text.encode()).hexdigest()[:16] == a["sha256"]
+
+
+class TestNumericalContract:
+    """The AOT'd computation must equal the eager computation — this is
+    the python side of the rust integration test's consistency check."""
+
+    def test_lowered_logits_match_eager(self):
+        params = M.init_params(CFG, seed=0)
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(1), (2, 64), 0, CFG.vocab, jnp.int32)
+        eager = M.logits_fn(CFG, *params, tokens)[0]
+        compiled = jax.jit(lambda *a: M.logits_fn(CFG, *a))(*params, tokens)[0]
+        np.testing.assert_allclose(
+            np.asarray(eager), np.asarray(compiled), atol=1e-5, rtol=1e-5)
+
+    def test_logprobs_position_zero_is_zero(self):
+        params = M.init_params(CFG, seed=0)
+        tokens = jnp.zeros((2, 64), jnp.int32)
+        lp = M.logprobs_fn(CFG, *params, tokens)[0]
+        assert float(jnp.abs(lp[:, 0]).max()) == 0.0

@@ -1,0 +1,222 @@
+"""L2 correctness: transformer forward, logprobs, and the fused RL
+train step — shapes, gradients, and learning behaviour."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.PRESETS["tiny"]
+B, T = 4, 64
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def _tokens(key, b=B, t=T):
+    return jax.random.randint(key, (b, t), 0, CFG.vocab, jnp.int32)
+
+
+class TestParamSpec:
+    def test_order_stable(self):
+        names = [n for n, _ in M.param_spec(CFG)]
+        assert names == ["embed", "ln1", "wq", "wk", "wv", "wo",
+                         "ln2", "w1", "w3", "w2", "lnf"]
+
+    def test_init_matches_spec(self, params):
+        for p, (name, shape) in zip(params, M.param_spec(CFG)):
+            assert p.shape == shape, name
+            assert p.dtype == jnp.float32, name
+
+    def test_init_deterministic(self):
+        a = M.init_params(CFG, seed=0)
+        b = M.init_params(CFG, seed=0)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_init_seed_sensitivity(self):
+        a = M.init_params(CFG, seed=0)
+        b = M.init_params(CFG, seed=1)
+        assert not np.allclose(a[0], b[0])
+
+    def test_n_params_counts(self):
+        assert CFG.n_params() == sum(
+            math.prod(s) for _, s in M.param_spec(CFG))
+
+
+class TestForward:
+    def test_logits_shape(self, params):
+        toks = _tokens(jax.random.PRNGKey(0))
+        (lg,) = M.logits_fn(CFG, *params, toks)
+        assert lg.shape == (B, T, CFG.vocab)
+        assert np.isfinite(np.asarray(lg)).all()
+
+    def test_kernel_vs_ref_forward(self, params):
+        """Pallas-kernel model == reference-attention model."""
+        toks = _tokens(jax.random.PRNGKey(1))
+        a = M.forward(CFG, params, toks, use_kernel=True)
+        b = M.forward(CFG, params, toks, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-5)
+
+    def test_causal(self, params):
+        """Changing a suffix token must not change earlier logits."""
+        toks = _tokens(jax.random.PRNGKey(2))
+        toks2 = toks.at[:, T - 1].set((toks[:, T - 1] + 1) % CFG.vocab)
+        a = M.forward(CFG, params, toks)
+        b = M.forward(CFG, params, toks2)
+        np.testing.assert_allclose(np.asarray(a[:, :T - 1]),
+                                   np.asarray(b[:, :T - 1]), atol=1e-5)
+
+    def test_logprobs_are_logprobs(self, params):
+        toks = _tokens(jax.random.PRNGKey(3))
+        (lp,) = M.logprobs_fn(CFG, *params, toks)
+        assert lp.shape == (B, T)
+        lp = np.asarray(lp)
+        assert (lp[:, 1:] <= 1e-6).all()   # log-probabilities
+        assert (lp[:, 0] == 0.0).all()     # position 0 unscored
+
+    def test_logprobs_consistent_with_logits(self, params):
+        toks = _tokens(jax.random.PRNGKey(4))
+        (lg,) = M.logits_fn(CFG, *params, toks)
+        (lp,) = M.logprobs_fn(CFG, *params, toks)
+        want = ref.token_logprobs(lg, toks)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(want),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def _train_args(params, key, adv_scale=1.0):
+    n = len(params)
+    zeros = [jnp.zeros_like(p) for p in params]
+    toks = _tokens(key)
+    mask = jnp.ones((B, T), jnp.float32).at[:, :4].set(0.0)
+    adv = adv_scale * jax.random.normal(key, (B, T), jnp.float32)
+    ref_lp = M.logprobs_fn(CFG, *params, toks)[0]
+    return (*params, *zeros, *zeros, toks, mask, adv, ref_lp,
+            jnp.float32(1.0), jnp.float32(1e-3),
+            jnp.float32(0.0), jnp.float32(0.0)), n
+
+
+class TestTrainStep:
+    def test_output_arity_and_shapes(self, params):
+        args, n = _train_args(params, jax.random.PRNGKey(0))
+        out = M.train_step_fn(CFG, *args)
+        assert len(out) == 3 * n + 4
+        for i, p in enumerate(params):
+            assert out[i].shape == p.shape
+            assert out[n + i].shape == p.shape
+            assert out[2 * n + i].shape == p.shape
+        for s in out[3 * n:]:
+            assert s.shape == ()
+
+    def test_zero_advantage_zero_pg(self, params):
+        args, n = _train_args(params, jax.random.PRNGKey(1), adv_scale=0.0)
+        out = M.train_step_fn(CFG, *args)
+        pg = float(out[3 * n + 1])
+        assert abs(pg) < 1e-6
+
+    def test_kl_zero_against_self(self, params):
+        """ref model == policy → k3 KL estimate is ~0."""
+        args, n = _train_args(params, jax.random.PRNGKey(2))
+        out = M.train_step_fn(CFG, *args)
+        kl = float(out[3 * n + 2])
+        assert abs(kl) < 1e-5
+
+    def test_params_move(self, params):
+        args, n = _train_args(params, jax.random.PRNGKey(3))
+        out = M.train_step_fn(CFG, *args)
+        moved = any(not np.allclose(np.asarray(out[i]), np.asarray(params[i]))
+                    for i in range(n))
+        assert moved
+
+    def test_policy_gradient_reinforces(self, params):
+        """Positive advantage on chosen tokens raises their logprob."""
+        key = jax.random.PRNGKey(4)
+        toks = _tokens(key)
+        mask = jnp.ones((B, T), jnp.float32).at[:, 0].set(0.0)
+        adv = jnp.ones((B, T), jnp.float32)
+        ref_lp = M.logprobs_fn(CFG, *params, toks)[0]
+        zeros = [jnp.zeros_like(p) for p in params]
+        n = len(params)
+        ps = list(params)
+        ms, vs = zeros, zeros
+        before = float(jnp.sum(ref_lp * mask))
+        for step in range(5):
+            out = M.train_step_fn(
+                CFG, *ps, *ms, *vs, toks, mask, adv, ref_lp,
+                jnp.float32(step + 1), jnp.float32(3e-3),
+                jnp.float32(0.0), jnp.float32(0.0))
+            ps, ms, vs = (list(out[:n]), list(out[n:2 * n]),
+                          list(out[2 * n:3 * n]))
+        after = float(jnp.sum(M.logprobs_fn(CFG, *ps, toks)[0] * mask))
+        assert after > before
+
+    def test_mask_gates_gradient(self, params):
+        """With an all-zero mask, params must not move."""
+        key = jax.random.PRNGKey(5)
+        toks = _tokens(key)
+        mask = jnp.zeros((B, T), jnp.float32)
+        adv = jnp.ones((B, T), jnp.float32)
+        ref_lp = M.logprobs_fn(CFG, *params, toks)[0]
+        zeros = [jnp.zeros_like(p) for p in params]
+        n = len(params)
+        out = M.train_step_fn(
+            CFG, *params, *zeros, *zeros, toks, mask, adv, ref_lp,
+            jnp.float32(1.0), jnp.float32(1e-2),
+            jnp.float32(0.0), jnp.float32(0.0))
+        for i in range(n):
+            np.testing.assert_allclose(np.asarray(out[i]),
+                                       np.asarray(params[i]), atol=1e-7)
+
+    def test_kl_pulls_toward_reference(self, params):
+        """With only the KL term active, policy logprobs approach ref."""
+        key = jax.random.PRNGKey(6)
+        toks = _tokens(key)
+        mask = jnp.ones((B, T), jnp.float32).at[:, 0].set(0.0)
+        adv = jnp.zeros((B, T), jnp.float32)
+        ref_lp = M.logprobs_fn(CFG, *params, toks)[0]
+        # Perturb the policy away from the reference.
+        pert = [p + 0.02 * jax.random.normal(jax.random.PRNGKey(7 + i),
+                                             p.shape)
+                for i, p in enumerate(params)]
+        zeros = [jnp.zeros_like(p) for p in params]
+        n = len(params)
+
+        def kl_of(ps):
+            lp = M.logprobs_fn(CFG, *ps, toks)[0]
+            r = ref_lp - lp
+            return float(jnp.sum((jnp.exp(r) - r - 1) * mask)
+                         / jnp.sum(mask))
+
+        k0 = kl_of(pert)
+        ps, ms, vs = list(pert), zeros, zeros
+        for step in range(8):
+            out = M.train_step_fn(
+                CFG, *ps, *ms, *vs, toks, mask, adv, ref_lp,
+                jnp.float32(step + 1), jnp.float32(3e-3),
+                jnp.float32(0.0), jnp.float32(1.0))
+            ps, ms, vs = (list(out[:n]), list(out[n:2 * n]),
+                          list(out[2 * n:3 * n]))
+        assert kl_of(ps) < k0
+
+
+class TestRoPE:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 16, 8))
+        y = M._rope(x, 10_000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_rope_position_zero_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 4, 8))
+        y = M._rope(x, 10_000.0)
+        np.testing.assert_allclose(np.asarray(y[:, :, 0]),
+                                   np.asarray(x[:, :, 0]), atol=1e-6)

@@ -1,0 +1,48 @@
+//! Bench: paper **Tab. 1** — intermediate data batch size (and planning
+//! cost) across context lengths on the 1k-GPU cluster.
+//!
+//! Regenerates the table (analytic payload model vs the paper's numbers)
+//! and times the Data Dispatcher's planning path at 1k-GPU scale to show
+//! plan construction is never the bottleneck.
+
+use earl::dispatch::{plan_alltoall, plan_centralized, DataLayout, PayloadModel, PAPER_TAB1};
+use earl::testkit::bench::{print_table, Bench};
+use earl::util::bytes::human_duration;
+use earl::workload::tab1_contexts;
+
+fn main() {
+    println!("\n=== Tab. 1: Intermediate Data Batch Size (1k-GPU cluster) ===\n");
+    let m = PayloadModel::default();
+    let mut rows = Vec::new();
+    for (i, ctx) in tab1_contexts().iter().enumerate() {
+        let ours = m.total_mib(*ctx);
+        let paper = PAPER_TAB1[i].1;
+        rows.push(vec![
+            format!("{ctx}"),
+            format!("{paper:.0}"),
+            format!("{ours:.0}"),
+            format!("{:+.2}%", (ours - paper) / paper * 100.0),
+            human_duration(m.transmission_seconds(*ctx, 25e9 / 8.0)),
+        ]);
+    }
+    print_table(
+        &["ctx", "paper MiB", "ours MiB", "delta", "xfer @ 25 Gbps"],
+        &rows,
+    );
+
+    println!("\n--- dispatch planning cost at 1k-GPU scale ---");
+    let mut bench = Bench::default();
+    let workers = 1024;
+    let items = workers * 4; // 4 sequences per worker
+    let producer = DataLayout::round_robin(items, workers);
+    let consumer = DataLayout::blocked(items, workers);
+    bench.run("plan_alltoall 1024 workers x 4096 items", || {
+        let p = plan_alltoall(&producer, &consumer, 1 << 20);
+        std::hint::black_box(p.n_transfers());
+    });
+    bench.run("plan_centralized 1024 workers x 4096 items", || {
+        let p = plan_centralized(&producer, &consumer, 1 << 20, 0);
+        std::hint::black_box(p.n_transfers());
+    });
+    println!("\ntab1_batch_size: done");
+}

@@ -1,0 +1,13 @@
+//! Simulated cluster substrate: topology (nodes/GPUs/links), network
+//! cost models and a port-contention transfer simulator. The performance
+//! experiments of the paper (Fig. 3, Fig. 4, Tab. 1) run against this
+//! substrate at the paper's scale (128–1,024 H100s), since the physical
+//! testbed is not available — see DESIGN.md §Substitutions.
+
+pub mod network;
+pub mod topology;
+
+pub use network::{
+    allgather_time, allreduce_time, alltoall_time, NetSim, SimOutcome, Transfer,
+};
+pub use topology::{ClusterSpec, GpuId, GpuSpec, LinkSpec, LinkTier};

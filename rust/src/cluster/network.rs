@@ -1,0 +1,259 @@
+//! Network cost model: analytic collective costs (α+β model) and a
+//! port-contention discrete-event simulator for bulk transfer plans.
+//!
+//! The simulator is what makes the single-controller bottleneck visible:
+//! every node has one NIC, and a gather of N shards into the controller
+//! serializes on the controller's ingress port, while a decentralized
+//! all-to-all spreads the same bytes across N disjoint port pairs
+//! (paper §2 "Data Dispatcher", §3.3).
+
+use crate::cluster::topology::{ClusterSpec, GpuId, LinkTier};
+
+/// A point-to-point bulk transfer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub src: GpuId,
+    pub dst: GpuId,
+    pub bytes: u64,
+}
+
+/// Ring all-reduce over `n` ranks: `2(n-1)` latency hops, `2(n-1)/n`
+/// of the payload over the slowest link.
+pub fn allreduce_time(n: usize, bytes: u64, bw: f64, alpha: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * (nf - 1.0) * alpha + 2.0 * (nf - 1.0) / nf * bytes as f64 / bw
+}
+
+/// Ring all-gather: `(n-1)` hops, each rank receives `(n-1)/n` of total.
+pub fn allgather_time(n: usize, bytes_total: u64, bw: f64, alpha: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (nf - 1.0) * alpha + (nf - 1.0) / nf * bytes_total as f64 / bw
+}
+
+/// Pairwise all-to-all: each rank sends `(n-1)` messages of `bytes_per_pair`.
+pub fn alltoall_time(n: usize, bytes_per_pair: u64, bw: f64, alpha: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (nf - 1.0) * (alpha + bytes_per_pair as f64 / bw)
+}
+
+/// Outcome of simulating a transfer plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimOutcome {
+    /// Wall-clock makespan, seconds.
+    pub makespan: f64,
+    /// Total bytes moved.
+    pub bytes: u64,
+    /// Busiest single port's cumulative busy time (the bottleneck).
+    pub max_port_busy: f64,
+}
+
+/// Port-contention simulator. Each *node* has one full-duplex NIC for
+/// inter-node traffic (egress + ingress tracked separately); intra-node
+/// traffic rides per-GPU NVLink ports. A transfer occupies its source
+/// egress and destination ingress for its full duration (store-and-
+/// forward approximation — adequate for plan-shape comparisons).
+pub struct NetSim<'a> {
+    cluster: &'a ClusterSpec,
+    /// Next-free time of each node's NIC egress / ingress.
+    nic_egress: Vec<f64>,
+    nic_ingress: Vec<f64>,
+    /// Next-free time of each GPU's NVLink port (intra-node).
+    nvl_port: Vec<f64>,
+}
+
+impl<'a> NetSim<'a> {
+    pub fn new(cluster: &'a ClusterSpec) -> Self {
+        NetSim {
+            cluster,
+            nic_egress: vec![0.0; cluster.nodes],
+            nic_ingress: vec![0.0; cluster.nodes],
+            nvl_port: vec![0.0; cluster.total_gpus()],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.nic_egress.iter_mut().for_each(|t| *t = 0.0);
+        self.nic_ingress.iter_mut().for_each(|t| *t = 0.0);
+        self.nvl_port.iter_mut().for_each(|t| *t = 0.0);
+    }
+
+    /// Simulate all transfers released at t=0, list-scheduled in order.
+    /// Returns the makespan and bottleneck stats.
+    pub fn run(&mut self, transfers: &[Transfer]) -> SimOutcome {
+        self.reset();
+        self.run_phase(transfers, 0.0)
+    }
+
+    /// Simulate a *sequence of barriered phases* (e.g. gather; scatter).
+    pub fn run_phases(&mut self, phases: &[&[Transfer]]) -> SimOutcome {
+        self.reset();
+        let mut t = 0.0;
+        let mut bytes = 0;
+        let mut max_busy = 0.0f64;
+        for phase in phases {
+            let out = self.run_phase(phase, t);
+            t = out.makespan;
+            bytes += out.bytes;
+            max_busy = max_busy.max(out.max_port_busy);
+        }
+        SimOutcome { makespan: t, bytes, max_port_busy: max_busy }
+    }
+
+    fn run_phase(&mut self, transfers: &[Transfer], release: f64) -> SimOutcome {
+        let mut makespan = release;
+        let mut bytes = 0u64;
+        for tr in transfers {
+            let tier = self.cluster.tier(tr.src, tr.dst);
+            let link = self.cluster.link(tier);
+            let dur = link.latency + tr.bytes as f64 / link.bandwidth;
+            let (sn, dn) = (self.cluster.node_of(tr.src), self.cluster.node_of(tr.dst));
+            let start = match tier {
+                LinkTier::Local => release,
+                LinkTier::IntraNode => release
+                    .max(self.nvl_port[tr.src.0])
+                    .max(self.nvl_port[tr.dst.0]),
+                LinkTier::InterNode => release
+                    .max(self.nic_egress[sn])
+                    .max(self.nic_ingress[dn]),
+            };
+            let end = start + dur;
+            match tier {
+                LinkTier::Local => {}
+                LinkTier::IntraNode => {
+                    self.nvl_port[tr.src.0] = end;
+                    self.nvl_port[tr.dst.0] = end;
+                }
+                LinkTier::InterNode => {
+                    self.nic_egress[sn] = end;
+                    self.nic_ingress[dn] = end;
+                }
+            }
+            makespan = makespan.max(end);
+            bytes += tr.bytes;
+        }
+        let max_port_busy = self
+            .nic_egress
+            .iter()
+            .chain(self.nic_ingress.iter())
+            .chain(self.nvl_port.iter())
+            .fold(0.0f64, |a, &b| a.max(b - release));
+        SimOutcome { makespan, bytes, max_port_busy }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::paper_testbed()
+    }
+
+    #[test]
+    fn collective_formulas_basic() {
+        // n=1 is free.
+        assert_eq!(allreduce_time(1, 1 << 20, 1e9, 1e-6), 0.0);
+        assert_eq!(allgather_time(1, 1 << 20, 1e9, 1e-6), 0.0);
+        // More ranks cost more latency.
+        let a4 = allreduce_time(4, 1 << 20, 900e9, 2e-6);
+        let a8 = allreduce_time(8, 1 << 20, 900e9, 2e-6);
+        assert!(a8 > a4);
+        // Bandwidth term approaches 2×bytes/bw as n grows.
+        let big = allreduce_time(64, 1 << 30, 900e9, 0.0);
+        let limit = 2.0 * (1u64 << 30) as f64 / 900e9;
+        assert!((big - limit * 63.0 / 64.0).abs() < 1e-9);
+        assert!(alltoall_time(4, 1 << 20, 1e9, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn fan_in_serializes_on_ingress() {
+        // 15 remote senders → one destination node: ingress is the
+        // bottleneck, makespan ≈ 15 × per-transfer time.
+        let c = cluster();
+        let mut sim = NetSim::new(&c);
+        let bytes = 100 << 20;
+        let transfers: Vec<Transfer> = (1..16)
+            .map(|n| Transfer {
+                src: GpuId(n * c.gpus_per_node),
+                dst: GpuId(0),
+                bytes,
+            })
+            .collect();
+        let out = sim.run(&transfers);
+        let single = c.link(LinkTier::InterNode).transfer_time(bytes);
+        assert!(
+            (out.makespan - 15.0 * single).abs() / (15.0 * single) < 0.01,
+            "makespan {} vs 15×{}",
+            out.makespan,
+            single
+        );
+    }
+
+    #[test]
+    fn disjoint_pairs_run_in_parallel() {
+        // node i → node i+8 for i in 0..8: disjoint ports → makespan ≈ 1×.
+        let c = cluster();
+        let mut sim = NetSim::new(&c);
+        let bytes = 100 << 20;
+        let transfers: Vec<Transfer> = (0..8)
+            .map(|i| Transfer {
+                src: GpuId(i * c.gpus_per_node),
+                dst: GpuId((i + 8) * c.gpus_per_node),
+                bytes,
+            })
+            .collect();
+        let out = sim.run(&transfers);
+        let single = c.link(LinkTier::InterNode).transfer_time(bytes);
+        assert!(
+            (out.makespan - single).abs() / single < 0.01,
+            "makespan {} vs {}",
+            out.makespan,
+            single
+        );
+    }
+
+    #[test]
+    fn phases_are_barriered() {
+        let c = cluster();
+        let mut sim = NetSim::new(&c);
+        let t = |src: usize, dst: usize| Transfer {
+            src: GpuId(src * c.gpus_per_node),
+            dst: GpuId(dst * c.gpus_per_node),
+            bytes: 10 << 20,
+        };
+        let p1 = [t(1, 0)];
+        let p2 = [t(0, 2)];
+        let seq = sim.run_phases(&[&p1, &p2]);
+        let single = c.link(LinkTier::InterNode).transfer_time(10 << 20);
+        assert!((seq.makespan - 2.0 * single).abs() / (2.0 * single) < 0.01);
+    }
+
+    #[test]
+    fn intra_node_uses_nvlink() {
+        let c = cluster();
+        let mut sim = NetSim::new(&c);
+        let out = sim.run(&[Transfer { src: GpuId(0), dst: GpuId(1), bytes: 1 << 30 }]);
+        // 1 GiB over 900 GB/s ≈ 1.2 ms, far faster than IB (43 ms).
+        assert!(out.makespan < 5e-3, "{}", out.makespan);
+    }
+
+    #[test]
+    fn bytes_accounted() {
+        let c = cluster();
+        let mut sim = NetSim::new(&c);
+        let transfers = [
+            Transfer { src: GpuId(0), dst: GpuId(8), bytes: 100 },
+            Transfer { src: GpuId(8), dst: GpuId(16), bytes: 200 },
+        ];
+        assert_eq!(sim.run(&transfers).bytes, 300);
+    }
+}

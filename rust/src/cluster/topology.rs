@@ -1,0 +1,204 @@
+//! Cluster topology: nodes × GPUs with hierarchical interconnect
+//! (NVLink intra-node, InfiniBand/Ethernet inter-node), calibrated to the
+//! paper's testbed (§3.1: 16 nodes × 8 H100-80GB, NVLink + 200 Gbps IB)
+//! and its 1,024-GPU scenario (§1, Tab. 1, 25 Gbps peak for dispatch).
+
+/// One GPU's capabilities.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    /// HBM capacity in bytes.
+    pub mem_bytes: u64,
+    /// Peak dense bf16 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA H100 SXM 80 GB (the paper's testbed GPU).
+    pub fn h100_80g() -> GpuSpec {
+        GpuSpec {
+            mem_bytes: 80 * (1 << 30),
+            peak_flops: 989e12, // dense bf16
+            mem_bw: 3.35e12,
+        }
+    }
+}
+
+/// A point-to-point or shared link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Bytes per second.
+    pub bandwidth: f64,
+    /// One-way latency, seconds.
+    pub latency: f64,
+}
+
+impl LinkSpec {
+    /// NVLink 4 (H100): ~900 GB/s aggregate per GPU, sub-µs latency.
+    pub fn nvlink() -> LinkSpec {
+        LinkSpec { bandwidth: 900e9, latency: 2e-6 }
+    }
+
+    /// 200 Gbps InfiniBand (paper testbed inter-node).
+    pub fn infiniband_200g() -> LinkSpec {
+        LinkSpec { bandwidth: 25e9, latency: 5e-6 }
+    }
+
+    /// 25 Gbps Ethernet/TCP (paper §1 & §3.3 dispatch transport).
+    /// 25 Gbit/s line rate → bytes/s, ~85% TCP goodput.
+    pub fn ethernet_25g() -> LinkSpec {
+        LinkSpec { bandwidth: 0.85 * 25e9 / 8.0, latency: 50e-6 }
+    }
+
+    /// Time to move `bytes` over this link, exclusive use.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Global GPU index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId(pub usize);
+
+/// Which tier of the interconnect joins two GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTier {
+    Local,
+    IntraNode,
+    InterNode,
+}
+
+/// The whole cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+    pub intra: LinkSpec,
+    pub inter: LinkSpec,
+}
+
+impl ClusterSpec {
+    /// The paper's §3.1 testbed: 16 nodes × 8 H100, NVLink + 200Gb IB.
+    pub fn paper_testbed() -> ClusterSpec {
+        ClusterSpec {
+            nodes: 16,
+            gpus_per_node: 8,
+            gpu: GpuSpec::h100_80g(),
+            intra: LinkSpec::nvlink(),
+            inter: LinkSpec::infiniband_200g(),
+        }
+    }
+
+    /// The paper's §1 / Tab. 1 scale: 1,024 GPUs, 25 Gbps dispatch fabric.
+    pub fn kilo_gpu() -> ClusterSpec {
+        ClusterSpec {
+            nodes: 128,
+            gpus_per_node: 8,
+            gpu: GpuSpec::h100_80g(),
+            intra: LinkSpec::nvlink(),
+            inter: LinkSpec::ethernet_25g(),
+        }
+    }
+
+    pub fn single_node(gpus: usize) -> ClusterSpec {
+        ClusterSpec {
+            nodes: 1,
+            gpus_per_node: gpus,
+            gpu: GpuSpec::h100_80g(),
+            intra: LinkSpec::nvlink(),
+            inter: LinkSpec::infiniband_200g(),
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, gpu: GpuId) -> usize {
+        gpu.0 / self.gpus_per_node
+    }
+
+    pub fn tier(&self, a: GpuId, b: GpuId) -> LinkTier {
+        if a == b {
+            LinkTier::Local
+        } else if self.node_of(a) == self.node_of(b) {
+            LinkTier::IntraNode
+        } else {
+            LinkTier::InterNode
+        }
+    }
+
+    pub fn link(&self, tier: LinkTier) -> LinkSpec {
+        match tier {
+            // Same-GPU "transfer" is a device-local copy at HBM speed.
+            LinkTier::Local => LinkSpec { bandwidth: self.gpu.mem_bw, latency: 0.0 },
+            LinkTier::IntraNode => self.intra,
+            LinkTier::InterNode => self.inter,
+        }
+    }
+
+    /// GPUs `[first, first+n)` — a TP group must be intra-node to use
+    /// NVLink (the paper's TP=4 and TP=8 are both within one 8-GPU node).
+    pub fn tp_group_intra_node(&self, first: GpuId, n: usize) -> bool {
+        let last = GpuId(first.0 + n - 1);
+        n <= self.gpus_per_node && self.node_of(first) == self.node_of(last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_dimensions() {
+        let c = ClusterSpec::paper_testbed();
+        assert_eq!(c.total_gpus(), 128);
+        assert_eq!(c.gpu.mem_bytes, 80 * (1 << 30));
+    }
+
+    #[test]
+    fn kilo_gpu_scale() {
+        assert_eq!(ClusterSpec::kilo_gpu().total_gpus(), 1024);
+    }
+
+    #[test]
+    fn node_and_tier_mapping() {
+        let c = ClusterSpec::paper_testbed();
+        assert_eq!(c.node_of(GpuId(0)), 0);
+        assert_eq!(c.node_of(GpuId(7)), 0);
+        assert_eq!(c.node_of(GpuId(8)), 1);
+        assert_eq!(c.tier(GpuId(0), GpuId(0)), LinkTier::Local);
+        assert_eq!(c.tier(GpuId(0), GpuId(7)), LinkTier::IntraNode);
+        assert_eq!(c.tier(GpuId(0), GpuId(8)), LinkTier::InterNode);
+    }
+
+    #[test]
+    fn link_hierarchy_ordering() {
+        let c = ClusterSpec::paper_testbed();
+        let local = c.link(LinkTier::Local).bandwidth;
+        let intra = c.link(LinkTier::IntraNode).bandwidth;
+        let inter = c.link(LinkTier::InterNode).bandwidth;
+        assert!(local > intra && intra > inter);
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let l = LinkSpec::infiniband_200g();
+        assert!(l.transfer_time(2_000_000) > l.transfer_time(1_000_000));
+        // 25 GB/s → 1 GiB in ~43 ms
+        let t = l.transfer_time(1 << 30);
+        assert!((t - (1u64 << 30) as f64 / 25e9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn tp_groups_respect_node_boundaries() {
+        let c = ClusterSpec::paper_testbed();
+        assert!(c.tp_group_intra_node(GpuId(0), 4));
+        assert!(c.tp_group_intra_node(GpuId(0), 8));
+        assert!(c.tp_group_intra_node(GpuId(4), 4));
+        assert!(!c.tp_group_intra_node(GpuId(4), 8)); // spans nodes 0+1
+        assert!(!c.tp_group_intra_node(GpuId(0), 16)); // larger than node
+    }
+}

@@ -1,0 +1,241 @@
+//! Typed run configuration: JSON config files (parsed with the built-in
+//! JSON substrate) + programmatic presets, validated before a run.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::rollout::{LimitPolicy, RolloutCfg, SamplerCfg};
+use crate::runtime::TrainHp;
+
+/// Which game environment to train on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvKind {
+    TicTacToe,
+    ConnectFour,
+}
+
+impl EnvKind {
+    pub fn from_name(s: &str) -> Result<EnvKind> {
+        Ok(match s {
+            "tictactoe" | "ttt" => EnvKind::TicTacToe,
+            "connect_four" | "connect4" | "c4" => EnvKind::ConnectFour,
+            other => bail!("unknown env {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EnvKind::TicTacToe => "tictactoe",
+            EnvKind::ConnectFour => "connect_four",
+        }
+    }
+}
+
+/// Which opponent the agent trains against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpponentKind {
+    Random,
+    Heuristic,
+}
+
+impl OpponentKind {
+    pub fn from_name(s: &str) -> Result<OpponentKind> {
+        Ok(match s {
+            "random" => OpponentKind::Random,
+            "heuristic" => OpponentKind::Heuristic,
+            other => bail!("unknown opponent {other:?}"),
+        })
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifacts_dir: PathBuf,
+    pub env: EnvKind,
+    pub opponent: OpponentKind,
+    pub steps: u64,
+    pub rollout: RolloutCfg,
+    pub hp: TrainHp,
+    /// Discount across turns for REINFORCE credit.
+    pub gamma: f32,
+    pub whiten_advantages: bool,
+    /// Refresh the frozen reference model from the policy every N steps
+    /// (0 = never).
+    pub ref_refresh_every: u64,
+    /// EMA weight of the selector's context monitor.
+    pub selector_alpha: f64,
+    /// Disable the selector (always use the largest bucket) — the
+    /// ablation baseline.
+    pub dynamic_buckets: bool,
+    pub metrics_path: Option<PathBuf>,
+    pub checkpoint_path: Option<PathBuf>,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            env: EnvKind::TicTacToe,
+            opponent: OpponentKind::Random,
+            steps: 200,
+            rollout: RolloutCfg::default(),
+            hp: TrainHp::default(),
+            gamma: 1.0,
+            whiten_advantages: true,
+            ref_refresh_every: 0,
+            selector_alpha: 0.3,
+            dynamic_buckets: true,
+            metrics_path: None,
+            checkpoint_path: None,
+            seed: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if !(0.0..=1.0).contains(&(self.gamma as f64)) {
+            bail!("gamma must be in [0,1]");
+        }
+        if !(0.0..=1.0).contains(&self.selector_alpha) {
+            bail!("selector_alpha must be in [0,1]");
+        }
+        if self.hp.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        if self.rollout.max_response_tokens < 1 {
+            bail!("max_response_tokens must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON config file onto defaults.
+    pub fn from_json_file(path: &Path) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<TrainConfig> {
+        let j = crate::util::json::Json::parse(text)
+            .map_err(|e| anyhow!("config: {e}"))?;
+        let mut c = TrainConfig::default();
+        if let Some(s) = j.at(&["artifacts_dir"]).as_str() {
+            c.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = j.at(&["env"]).as_str() {
+            c.env = EnvKind::from_name(s)?;
+        }
+        if let Some(s) = j.at(&["opponent"]).as_str() {
+            c.opponent = OpponentKind::from_name(s)?;
+        }
+        if let Some(n) = j.at(&["steps"]).as_usize() {
+            c.steps = n as u64;
+        }
+        if let Some(n) = j.at(&["seed"]).as_usize() {
+            c.seed = n as u64;
+        }
+        if let Some(n) = j.at(&["rollout", "max_context"]).as_usize() {
+            c.rollout.limit = LimitPolicy::Hard(n);
+        }
+        if let Some(b) = j.at(&["rollout", "dynamic_buckets"]).as_bool() {
+            if b {
+                c.rollout.limit = LimitPolicy::Buckets;
+            }
+            c.dynamic_buckets = b;
+        }
+        if let Some(n) = j.at(&["rollout", "max_response_tokens"]).as_usize() {
+            c.rollout.max_response_tokens = n;
+        }
+        if let Some(t) = j.at(&["rollout", "temperature"]).as_f64() {
+            c.rollout.sampler = SamplerCfg {
+                temperature: t as f32,
+                ..c.rollout.sampler
+            };
+        }
+        if let Some(v) = j.at(&["hp", "lr"]).as_f64() {
+            c.hp.lr = v as f32;
+        }
+        if let Some(v) = j.at(&["hp", "ent_coef"]).as_f64() {
+            c.hp.ent_coef = v as f32;
+        }
+        if let Some(v) = j.at(&["hp", "kl_coef"]).as_f64() {
+            c.hp.kl_coef = v as f32;
+        }
+        if let Some(v) = j.at(&["gamma"]).as_f64() {
+            c.gamma = v as f32;
+        }
+        if let Some(b) = j.at(&["whiten_advantages"]).as_bool() {
+            c.whiten_advantages = b;
+        }
+        if let Some(n) = j.at(&["ref_refresh_every"]).as_usize() {
+            c.ref_refresh_every = n as u64;
+        }
+        if let Some(v) = j.at(&["selector_alpha"]).as_f64() {
+            c.selector_alpha = v;
+        }
+        if let Some(s) = j.at(&["metrics_path"]).as_str() {
+            c.metrics_path = Some(PathBuf::from(s));
+        }
+        if let Some(s) = j.at(&["checkpoint_path"]).as_str() {
+            c.checkpoint_path = Some(PathBuf::from(s));
+        }
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let c = TrainConfig::from_json_str(
+            r#"{
+              "env": "connect4", "opponent": "heuristic", "steps": 50,
+              "rollout": {"max_context": 256, "max_response_tokens": 3,
+                          "temperature": 0.7},
+              "hp": {"lr": 0.001, "kl_coef": 0.2},
+              "gamma": 0.95, "seed": 9
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.env, EnvKind::ConnectFour);
+        assert_eq!(c.opponent, OpponentKind::Heuristic);
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.rollout.limit, LimitPolicy::Hard(256));
+        assert_eq!(c.rollout.max_response_tokens, 3);
+        assert!((c.rollout.sampler.temperature - 0.7).abs() < 1e-6);
+        assert!((c.hp.lr - 1e-3).abs() < 1e-9);
+        assert!((c.hp.kl_coef - 0.2).abs() < 1e-6);
+        assert!((c.gamma - 0.95).abs() < 1e-6);
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(TrainConfig::from_json_str(r#"{"steps": 0}"#).is_err());
+        assert!(TrainConfig::from_json_str(r#"{"gamma": 1.5}"#).is_err());
+        assert!(TrainConfig::from_json_str(r#"{"env": "chess"}"#).is_err());
+        assert!(TrainConfig::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn env_names_roundtrip() {
+        for e in [EnvKind::TicTacToe, EnvKind::ConnectFour] {
+            assert_eq!(EnvKind::from_name(e.name()).unwrap(), e);
+        }
+    }
+}

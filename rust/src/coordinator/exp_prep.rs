@@ -1,0 +1,192 @@
+//! Experience Preparation stage: pack rolled-out episodes into padded
+//! training tensors, score them with the frozen reference model, and
+//! compute REINFORCE advantages — the stage whose output tensors the
+//! Data Dispatcher ships to the trainers (paper Fig. 2, steps ②–⑤).
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::rl::advantage::{reinforce_advantages, AdvantageCfg};
+use crate::rl::episode::{Episode, ExperienceBatch};
+use crate::runtime::{Engine, F32Batch, TokenBatch, TrainBatch};
+
+/// Padded per-token tensors before reference scoring.
+pub struct PackedBatch {
+    pub tokens: TokenBatch,
+    pub mask: F32Batch,
+    pub advantages: F32Batch,
+    /// Bucket the batch is padded to.
+    pub bucket: usize,
+    /// Episodes that had to be clipped to fit the largest bucket.
+    pub clipped: usize,
+}
+
+/// Pick the training bucket: the selector's suggestion, escalated if any
+/// episode is longer (the batch must physically fit).
+pub fn train_bucket(
+    episodes: &[Episode],
+    buckets: &[usize],
+    suggested: usize,
+) -> usize {
+    let longest = episodes.iter().map(|e| e.context_len()).max().unwrap_or(0);
+    let needed = buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= longest)
+        .unwrap_or(*buckets.last().unwrap());
+    needed.max(suggested)
+}
+
+/// Pack episodes (one per batch row) into padded tensors with per-token
+/// advantages broadcast over each episode's generated positions.
+pub fn pack_episodes(
+    batch: &ExperienceBatch,
+    batch_size: usize,
+    bucket: usize,
+) -> Result<PackedBatch> {
+    if batch.episodes.len() != batch_size {
+        bail!(
+            "need exactly {batch_size} episodes, got {}",
+            batch.episodes.len()
+        );
+    }
+    if batch.advantages.len() != batch.episodes.len() {
+        bail!("advantages not computed");
+    }
+    let mut tokens = TokenBatch::new(batch_size, bucket);
+    let mut mask = F32Batch::new(batch_size, bucket);
+    let mut advantages = F32Batch::new(batch_size, bucket);
+    let mut clipped = 0;
+
+    for (row, ep) in batch.episodes.iter().enumerate() {
+        let n = ep.tokens.len().min(bucket);
+        if ep.tokens.len() > bucket {
+            clipped += 1;
+        }
+        tokens.row_mut(row)[..n].copy_from_slice(&ep.tokens[..n]);
+        mask.row_mut(row)[..n].copy_from_slice(&ep.action_mask[..n]);
+        let adv = batch.advantages[row];
+        for (t, m) in ep.action_mask[..n].iter().enumerate() {
+            if *m > 0.0 {
+                advantages.row_mut(row)[t] = adv;
+            }
+        }
+    }
+    Ok(PackedBatch { tokens, mask, advantages, bucket, clipped })
+}
+
+/// Full ExpPrep: advantages + reference logprobs → a ready TrainBatch.
+/// Returns (train batch, dispatched ref-logprob bytes) — the byte count
+/// is what the Data Dispatcher moves in a multi-worker deployment.
+pub fn prepare(
+    engine: &Engine,
+    ref_params: &[Literal],
+    batch: &mut ExperienceBatch,
+    bucket: usize,
+    adv_cfg: AdvantageCfg,
+) -> Result<(TrainBatch, u64)> {
+    reinforce_advantages(batch, adv_cfg);
+    let packed = pack_episodes(batch, engine.manifest.batch, bucket)?;
+
+    // Reference-model scoring (the paper's ExpPrep-stage model).
+    let ref_lp = engine.logprobs(ref_params, &packed.tokens)?;
+    let ref_logprobs = F32Batch {
+        data: ref_lp,
+        batch: packed.tokens.batch,
+        seq: packed.tokens.seq,
+    };
+    let bytes = (ref_logprobs.data.len() * 4) as u64;
+    batch.ref_logprobs = (0..packed.tokens.batch)
+        .map(|b| ref_logprobs.row(b).to_vec())
+        .collect();
+
+    Ok((
+        TrainBatch {
+            tokens: packed.tokens,
+            mask: packed.mask,
+            advantages: packed.advantages,
+            ref_logprobs,
+        },
+        bytes,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::episode::{EpisodeStatus, Turn};
+    use crate::tokenizer as tok;
+
+    fn make(len: usize, reward: f32) -> Episode {
+        let mut tokens = vec![tok::BOS, tok::ENV, tok::AGENT];
+        let mut mask = vec![0.0, 0.0, 0.0];
+        let response_start = 3;
+        while tokens.len() < len {
+            tokens.push(tok::THINK_BASE);
+            mask.push(1.0);
+        }
+        Episode {
+            tokens: tokens.clone(),
+            action_mask: mask,
+            turns: vec![Turn {
+                prompt_start: 1,
+                response_start,
+                response_end: tokens.len(),
+                action: None,
+            }],
+            status: EpisodeStatus::Finished,
+            reward,
+        }
+    }
+
+    #[test]
+    fn bucket_escalates_to_fit() {
+        let eps = vec![make(100, 1.0), make(200, -1.0)];
+        assert_eq!(train_bucket(&eps, &[128, 256, 512], 128), 256);
+        assert_eq!(train_bucket(&eps, &[128, 256, 512], 512), 512);
+        let short = vec![make(50, 0.0)];
+        assert_eq!(train_bucket(&short, &[128, 256, 512], 128), 128);
+    }
+
+    #[test]
+    fn pack_pads_and_broadcasts_advantage() {
+        let mut b = ExperienceBatch::new(vec![make(10, 1.0), make(6, -1.0)]);
+        reinforce_advantages(&mut b, AdvantageCfg { gamma: 1.0, whiten: false });
+        let packed = pack_episodes(&b, 2, 16).unwrap();
+        assert_eq!(packed.tokens.seq, 16);
+        assert_eq!(packed.clipped, 0);
+        // Row 0: positions 3..10 generated with advantage +1.
+        assert_eq!(packed.advantages.row(0)[3], 1.0);
+        assert_eq!(packed.advantages.row(0)[9], 1.0);
+        assert_eq!(packed.advantages.row(0)[2], 0.0); // prompt
+        assert_eq!(packed.advantages.row(0)[10], 0.0); // padding
+        assert_eq!(packed.advantages.row(1)[3], -1.0);
+        // Mask matches generated positions.
+        assert_eq!(packed.mask.row(0)[3], 1.0);
+        assert_eq!(packed.mask.row(0)[12], 0.0);
+        // Padding tokens are PAD.
+        assert_eq!(packed.tokens.row(1)[10], tok::PAD);
+    }
+
+    #[test]
+    fn pack_clips_oversized_episodes() {
+        let mut b = ExperienceBatch::new(vec![make(20, 1.0), make(5, 0.0)]);
+        reinforce_advantages(&mut b, AdvantageCfg::default());
+        let packed = pack_episodes(&b, 2, 16).unwrap();
+        assert_eq!(packed.clipped, 1);
+        assert_eq!(packed.tokens.row(0).len(), 16);
+    }
+
+    #[test]
+    fn pack_rejects_wrong_count() {
+        let mut b = ExperienceBatch::new(vec![make(5, 0.0)]);
+        reinforce_advantages(&mut b, AdvantageCfg::default());
+        assert!(pack_episodes(&b, 2, 16).is_err());
+    }
+
+    #[test]
+    fn pack_requires_advantages() {
+        let b = ExperienceBatch::new(vec![make(5, 0.0), make(5, 0.0)]);
+        assert!(pack_episodes(&b, 2, 16).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordination: the RL training loop (Rollout → ExpPrep → Dispatch →
+//! ModelUpdate) with the Parallelism Selector and Data Dispatcher wired
+//! in as first-class stages (paper Fig. 2).
+
+pub mod exp_prep;
+pub mod trainer;
+
+pub use exp_prep::{pack_episodes, prepare, train_bucket, PackedBatch};
+pub use trainer::{DispatchMode, Trainer};

@@ -1,0 +1,294 @@
+//! The training loop — paper Fig. 2 wired end to end:
+//!
+//! ```text
+//! ┌─ Parallelism Selector (① before Rollout: pick bucket/config)
+//! │   Rollout      → episodes (multi-turn, context accounting)
+//! ├─ Selector      (② before ExpPrep)
+//! │   ExpPrep      → advantages + reference logprobs
+//! │   Dispatcher   (③–⑤: layout-aware plan; simulated or TCP timing)
+//! │   ModelUpdate  → fused REINFORCE/Adam artifact
+//! └─ monitor: feed mean context back to the selector
+//! ```
+//!
+//! Single-process deployment: the "cluster" is one PJRT device, so the
+//! selector switches *context buckets* (which compiled executable runs —
+//! the cost/capacity analogue of a TP switch), and the dispatcher's
+//! transfer plan is timed on the network simulator (or actually executed
+//! over loopback TCP with `DispatchMode::Tcp`).
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::cluster::ClusterSpec;
+use crate::config::{EnvKind, OpponentKind, TrainConfig};
+use crate::coordinator::exp_prep;
+use crate::dispatch::{
+    plan_alltoall, plan_centralized, simulate_plan, DataLayout, WorkerMap,
+};
+use crate::envs::{ConnectFour, Game, HeuristicOpponent, Opponent, RandomOpponent, TicTacToe};
+use crate::metrics::{MetricsLog, StepRecord};
+use crate::parallelism::{ProfilePoint, RangeTable, Selector};
+use crate::rl::advantage::AdvantageCfg;
+use crate::rl::episode::{EpisodeStatus, ExperienceBatch};
+use crate::rollout::{LimitPolicy, RolloutEngine};
+use crate::runtime::{Engine, ModelState};
+
+/// How the dispatch stage is executed/timed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Plan + network-simulator timing (default; adds no wall-clock).
+    Simulated,
+    /// Plan + real loopback TCP execution (slower, real bytes).
+    Tcp,
+    /// EARL all-to-all disabled → single-controller baseline plan.
+    SimulatedCentralized,
+}
+
+/// The end-to-end trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub engine: Engine,
+    pub state: ModelState,
+    /// Frozen reference model parameters (KL anchor; ExpPrep scoring).
+    pub ref_params: Vec<Literal>,
+    pub selector: Selector<usize>,
+    pub metrics: MetricsLog,
+    pub dispatch_mode: DispatchMode,
+    /// Conceptual DP worker count for dispatch planning.
+    pub dispatch_workers: usize,
+    rollout_seed: u64,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let engine = Engine::load(&cfg.artifacts_dir)
+            .context("loading AOT artifacts (run `make artifacts`)")?;
+        let state = engine.initial_state()?;
+        let ref_params = state.clone_params()?;
+
+        // Selector table over context buckets: smaller bucket = higher
+        // decode TGS (quadratic attention + linear logits cost), so the
+        // offline "profile" is simply cost-ordered by bucket; OOM never
+        // applies on the host. `earl profile` measures the real table.
+        let points: Vec<ProfilePoint<usize>> = engine
+            .manifest
+            .buckets
+            .iter()
+            .flat_map(|&cap| {
+                engine.manifest.buckets.iter().map(move |&b| ProfilePoint {
+                    config: b,
+                    ctx: cap,
+                    tgs: if b >= cap {
+                        // usable; cheaper (smaller) buckets score higher
+                        Some(1e6 / b as f64)
+                    } else {
+                        None // bucket cannot hold this context
+                    },
+                })
+            })
+            .collect();
+        let table = RangeTable::from_profile(&points)
+            .context("building selector table")?;
+        let selector = Selector::new(table, cfg.selector_alpha, 1);
+
+        let metrics = match &cfg.metrics_path {
+            Some(p) => MetricsLog::to_file(p)?,
+            None => MetricsLog::memory(),
+        };
+        let rollout_seed = cfg.seed;
+        Ok(Trainer {
+            cfg,
+            engine,
+            state,
+            ref_params,
+            selector,
+            metrics,
+            dispatch_mode: DispatchMode::Simulated,
+            dispatch_workers: 8,
+            rollout_seed,
+        })
+    }
+
+    fn make_game(&self) -> Box<dyn Fn() -> Box<dyn Game>> {
+        match self.cfg.env {
+            EnvKind::TicTacToe => Box::new(|| Box::new(TicTacToe::new())),
+            EnvKind::ConnectFour => Box::new(|| Box::new(ConnectFour::new())),
+        }
+    }
+
+    fn make_opponent(&self) -> Box<dyn Fn() -> Box<dyn Opponent>> {
+        match self.cfg.opponent {
+            OpponentKind::Random => Box::new(|| Box::new(RandomOpponent)),
+            OpponentKind::Heuristic => Box::new(|| Box::new(HeuristicOpponent)),
+        }
+    }
+
+    /// One full training step (Rollout → ExpPrep → Dispatch → Update).
+    pub fn step(&mut self) -> Result<StepRecord> {
+        let step_idx = self.state.step;
+
+        // ① Parallelism Selector before Rollout.
+        let decision = self.selector.decide();
+        let switched = decision.switched();
+
+        // Rollout.
+        let t0 = std::time::Instant::now();
+        let mut rollout_cfg = self.cfg.rollout.clone();
+        rollout_cfg.seed = self.rollout_seed.wrapping_add(step_idx);
+        if !self.cfg.dynamic_buckets {
+            // Ablation: no dynamic adaptation — always the largest bucket
+            // (pay max cost), with the same hard truncation budget.
+            rollout_cfg.limit = match rollout_cfg.limit {
+                LimitPolicy::Hard(n) => LimitPolicy::Hard(n),
+                LimitPolicy::Buckets => LimitPolicy::Buckets,
+            };
+        }
+        let mut rollout = RolloutEngine::new(&self.engine, rollout_cfg);
+        let (episodes, rstats) = rollout.run_batch(
+            &self.state,
+            self.make_game().as_ref(),
+            self.make_opponent().as_ref(),
+        )?;
+        let rollout_seconds = t0.elapsed().as_secs_f64();
+
+        // Feed the context monitor (paper: averaged context length).
+        self.selector.observe(rstats.mean_episode_context);
+
+        // ② ExpPrep (reference scoring + advantages) at the selected
+        // bucket (escalated to fit).
+        let t1 = std::time::Instant::now();
+        let suggested = if self.cfg.dynamic_buckets {
+            self.selector.current()
+        } else {
+            self.engine.manifest.max_bucket()
+        };
+        let bucket = exp_prep::train_bucket(
+            &episodes,
+            &self.engine.manifest.buckets,
+            suggested,
+        );
+        let mut batch = ExperienceBatch::new(episodes);
+        let adv_cfg = AdvantageCfg {
+            gamma: self.cfg.gamma,
+            whiten: self.cfg.whiten_advantages,
+        };
+        let (train_batch, dispatch_bytes) = exp_prep::prepare(
+            &self.engine,
+            &self.ref_params,
+            &mut batch,
+            bucket,
+            adv_cfg,
+        )?;
+        let exp_prep_seconds = t1.elapsed().as_secs_f64();
+
+        // ③–⑤ Data Dispatcher: plan the ref-logprob exchange between the
+        // conceptual ExpPrep workers and trainer workers.
+        let t2 = std::time::Instant::now();
+        let n_items = self.engine.manifest.batch;
+        let producer = DataLayout::round_robin(n_items, self.dispatch_workers);
+        let consumer = DataLayout::blocked(n_items, self.dispatch_workers);
+        let shard = dispatch_bytes / n_items as u64;
+        let dispatch_seconds = match self.dispatch_mode {
+            DispatchMode::Simulated => {
+                let plan = plan_alltoall(&producer, &consumer, shard);
+                let cluster = ClusterSpec::paper_testbed();
+                let map = WorkerMap::one_per_node(&cluster, self.dispatch_workers);
+                simulate_plan(&cluster, &map, &plan).makespan
+            }
+            DispatchMode::SimulatedCentralized => {
+                let plan = plan_centralized(&producer, &consumer, shard, 0);
+                let cluster = ClusterSpec::paper_testbed();
+                let map = WorkerMap::one_per_node(&cluster, self.dispatch_workers);
+                simulate_plan(&cluster, &map, &plan).makespan
+            }
+            DispatchMode::Tcp => {
+                let plan = plan_alltoall(&producer, &consumer, shard);
+                crate::dispatch::execute_plan_tcp(&plan, self.dispatch_workers)?
+                    .seconds
+            }
+        };
+        let _ = t2;
+
+        // Model Update.
+        let t3 = std::time::Instant::now();
+        let tstats = self.engine.train_step(&mut self.state, &train_batch, self.cfg.hp)?;
+        let train_seconds = t3.elapsed().as_secs_f64();
+
+        // Reference refresh (off-policy anchor update).
+        if self.cfg.ref_refresh_every > 0
+            && self.state.step % self.cfg.ref_refresh_every == 0
+        {
+            self.ref_params = self.state.clone_params()?;
+        }
+
+        let n_eps = batch.episodes.len().max(1) as f64;
+        let rec = StepRecord {
+            step: self.state.step,
+            mean_return: batch.mean_reward(),
+            mean_turn_ctx: rstats.mean_turn_context,
+            mean_episode_ctx: rstats.mean_episode_context,
+            truncation_rate: rstats.truncated as f64 / n_eps,
+            illegal_rate: rstats.illegal as f64 / n_eps,
+            loss: tstats.loss as f64,
+            kl: tstats.kl as f64,
+            entropy: tstats.entropy as f64,
+            tgs: rstats.tgs,
+            bucket,
+            selector_switched: switched,
+            rollout_seconds,
+            exp_prep_seconds,
+            dispatch_seconds,
+            train_seconds,
+        };
+        self.metrics.record(rec.clone())?;
+        Ok(rec)
+    }
+
+    /// Run the configured number of steps; returns final rolling return.
+    pub fn run(&mut self) -> Result<f64> {
+        for _ in 0..self.cfg.steps {
+            let rec = self.step()?;
+            eprintln!(
+                "[step {:>4}] return {:+.3} ctx(ep) {:>5.1} ctx(turn) {:>5.1} \
+                 trunc {:>4.1}% loss {:+.4} ent {:.3} bucket {} tgs {:.1}{}",
+                rec.step,
+                rec.mean_return,
+                rec.mean_episode_ctx,
+                rec.mean_turn_ctx,
+                rec.truncation_rate * 100.0,
+                rec.loss,
+                rec.entropy,
+                rec.bucket,
+                rec.tgs,
+                if rec.selector_switched { " [switch]" } else { "" },
+            );
+        }
+        if let Some(p) = &self.cfg.checkpoint_path {
+            self.state.save_params(p)?;
+            eprintln!("checkpoint saved to {}", p.display());
+        }
+        Ok(self.metrics.rolling_return(20))
+    }
+
+    /// Count of episodes with each terminal status in the last batch —
+    /// exposed for examples/tests.
+    pub fn status_counts(batch: &ExperienceBatch) -> (usize, usize, usize) {
+        let f = batch
+            .episodes
+            .iter()
+            .filter(|e| e.status == EpisodeStatus::Finished)
+            .count();
+        let t = batch
+            .episodes
+            .iter()
+            .filter(|e| e.status == EpisodeStatus::Truncated)
+            .count();
+        let i = batch
+            .episodes
+            .iter()
+            .filter(|e| e.status == EpisodeStatus::Illegal)
+            .count();
+        (f, t, i)
+    }
+}

@@ -1,0 +1,180 @@
+//! Data layouts: which worker holds which shard of the intermediate
+//! experience tensors. The Data Dispatcher is "parallelism- and
+//! layout-aware" (paper §2): it plans transfers from the *producer*
+//! layout (how the ExpPrep stage sharded its outputs) to the *consumer*
+//! layout (how the Model Update stage wants them), without staging
+//! through a central controller.
+
+use std::collections::BTreeMap;
+
+/// The intermediate tensors of an RL training batch (paper §1: "tokens,
+/// log probabilities, rewards, returns, and other auxiliary tensors").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TensorKind {
+    TokenIds,
+    Logprobs,
+    RefLogprobs,
+    Rewards,
+    Returns,
+    Advantages,
+    Values,
+    LossMask,
+    Positions,
+    Aux,
+}
+
+impl TensorKind {
+    pub const ALL: [TensorKind; 10] = [
+        TensorKind::TokenIds,
+        TensorKind::Logprobs,
+        TensorKind::RefLogprobs,
+        TensorKind::Rewards,
+        TensorKind::Returns,
+        TensorKind::Advantages,
+        TensorKind::Values,
+        TensorKind::LossMask,
+        TensorKind::Positions,
+        TensorKind::Aux,
+    ];
+
+    /// Bytes per token of this field in the dispatch payload.
+    pub fn bytes_per_token(self) -> f64 {
+        match self {
+            TensorKind::TokenIds => 8.0,   // i64 ids (HF convention)
+            TensorKind::Logprobs => 4.0,
+            TensorKind::RefLogprobs => 4.0,
+            TensorKind::Rewards => 4.0,
+            TensorKind::Returns => 4.0,
+            TensorKind::Advantages => 4.0,
+            TensorKind::Values => 4.0,
+            TensorKind::LossMask => 4.0,
+            TensorKind::Positions => 8.0,
+            // Framework-dependent auxiliaries (attention masks, ids,
+            // padding) — sized so the total matches the paper's Tab. 1
+            // estimate of 62.5 B/token. 8+4+4+4+4+4+4+4+8 = 44.
+            TensorKind::Aux => 18.5,
+        }
+    }
+
+    /// Whether this tensor is needed for *aggregation* in advantage
+    /// estimation. The paper's §3.3 prototype dispatches only tensors
+    /// with no inter-stage aggregation dependency (log-probabilities);
+    /// rewards/returns still ride the controller (paper §5 lists
+    /// distributing them as future work).
+    pub fn needs_aggregation(self) -> bool {
+        matches!(
+            self,
+            TensorKind::Rewards | TensorKind::Returns | TensorKind::Advantages
+        )
+    }
+}
+
+/// Total dispatch payload per token (all fields).
+pub fn payload_bytes_per_token() -> f64 {
+    TensorKind::ALL.iter().map(|k| k.bytes_per_token()).sum()
+}
+
+/// An item is one sequence's shard of one tensor kind.
+pub type ItemId = usize;
+
+/// Assignment of items to workers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataLayout {
+    pub n_workers: usize,
+    /// `owner[item] = worker`.
+    pub owner: Vec<usize>,
+}
+
+impl DataLayout {
+    /// Round-robin layout of `n_items` over `n_workers` (the natural
+    /// producer layout: each ExpPrep worker scored its own sequences).
+    pub fn round_robin(n_items: usize, n_workers: usize) -> DataLayout {
+        DataLayout {
+            n_workers,
+            owner: (0..n_items).map(|i| i % n_workers).collect(),
+        }
+    }
+
+    /// Block layout (consumer side: each trainer takes a contiguous
+    /// chunk of the global batch).
+    pub fn blocked(n_items: usize, n_workers: usize) -> DataLayout {
+        let per = n_items.div_ceil(n_workers);
+        DataLayout {
+            n_workers,
+            owner: (0..n_items).map(|i| (i / per).min(n_workers - 1)).collect(),
+        }
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn items_of(&self, worker: usize) -> Vec<ItemId> {
+        (0..self.owner.len())
+            .filter(|&i| self.owner[i] == worker)
+            .collect()
+    }
+
+    /// item → worker map as a BTreeMap (for equivalence checks).
+    pub fn as_map(&self) -> BTreeMap<ItemId, usize> {
+        self.owner.iter().copied().enumerate().collect()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, &w) in self.owner.iter().enumerate() {
+            if w >= self.n_workers {
+                return Err(format!("item {i} owned by ghost worker {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_matches_paper_tab1_rate() {
+        // Tab. 1 implies 62.5 B per token (15,625 MiB at 1,024 GPUs ×
+        // 250 seqs/GPU × 1,024 ctx).
+        assert!((payload_bytes_per_token() - 62.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregation_split_matches_paper() {
+        // §3.3: log-probabilities are dispatchable (no aggregation);
+        // rewards/returns are aggregated for advantage estimation.
+        assert!(!TensorKind::RefLogprobs.needs_aggregation());
+        assert!(!TensorKind::Logprobs.needs_aggregation());
+        assert!(TensorKind::Rewards.needs_aggregation());
+        assert!(TensorKind::Returns.needs_aggregation());
+    }
+
+    #[test]
+    fn round_robin_balances() {
+        let l = DataLayout::round_robin(10, 4);
+        l.validate().unwrap();
+        assert_eq!(l.items_of(0), vec![0, 4, 8]);
+        assert_eq!(l.items_of(3), vec![3, 7]);
+        let sizes: Vec<usize> = (0..4).map(|w| l.items_of(w).len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn blocked_is_contiguous() {
+        let l = DataLayout::blocked(10, 4);
+        l.validate().unwrap();
+        assert_eq!(l.items_of(0), vec![0, 1, 2]);
+        assert_eq!(l.items_of(3), vec![9]);
+        // Every item owned exactly once.
+        let total: usize = (0..4).map(|w| l.items_of(w).len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn validate_rejects_ghost_workers() {
+        let l = DataLayout { n_workers: 2, owner: vec![0, 1, 2] };
+        assert!(l.validate().is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! EARL contribution #2: the **Data Dispatcher** — layout-aware,
+//! decentralized exchange of intermediate experience tensors between RL
+//! stages, replacing the single-controller gather-and-scatter (paper §2,
+//! evaluated in §3.3 / Fig. 4; volumes modelled in Tab. 1).
+//!
+//! * [`layout`] — tensor kinds + item→worker layouts.
+//! * [`plan`] — centralized-baseline and all-to-all planners.
+//! * [`sim`] — execute plans on the cluster network simulator.
+//! * [`tcp`] — execute plans on real loopback sockets.
+//! * [`payload`] — the Tab. 1 batch-size model.
+
+pub mod layout;
+pub mod payload;
+pub mod plan;
+pub mod sim;
+pub mod tcp;
+
+pub use layout::{payload_bytes_per_token, DataLayout, TensorKind};
+pub use payload::{PayloadModel, PAPER_TAB1};
+pub use plan::{
+    item_bytes, plan_alltoall, plan_centralized, satisfies, DispatchPlan,
+    WorkerTransfer,
+};
+pub use sim::{simulate_plan, WorkerMap};
+pub use tcp::{execute_plan_tcp, TcpReport};

@@ -1,0 +1,234 @@
+//! Dispatch planners: the single-controller **gather-and-scatter
+//! baseline** (VeRL-style, paper §1) versus EARL's **layout-aware
+//! all-to-all** (paper §2), producing transfer plans that the network
+//! simulator or the real TCP engine executes.
+
+use std::collections::BTreeMap;
+
+use crate::dispatch::layout::{DataLayout, ItemId};
+
+/// One planned point-to-point transfer between workers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerTransfer {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+    /// Which items ride this transfer (for content-equivalence checks).
+    pub items: Vec<ItemId>,
+}
+
+/// A plan is a sequence of barriered phases of parallel transfers.
+#[derive(Debug, Clone, Default)]
+pub struct DispatchPlan {
+    pub phases: Vec<Vec<WorkerTransfer>>,
+    pub strategy: &'static str,
+}
+
+impl DispatchPlan {
+    pub fn total_bytes(&self) -> u64 {
+        self.phases
+            .iter()
+            .flat_map(|p| p.iter())
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    pub fn n_transfers(&self) -> usize {
+        self.phases.iter().map(|p| p.len()).sum()
+    }
+
+    /// Final location of every item after executing the plan from
+    /// `producer` — used to verify plans against the consumer layout.
+    pub fn delivered(&self, producer: &DataLayout) -> BTreeMap<ItemId, usize> {
+        let mut loc = producer.as_map();
+        for phase in &self.phases {
+            for t in phase {
+                for &item in &t.items {
+                    // A transfer of an item the src doesn't hold is a bug.
+                    debug_assert_eq!(loc.get(&item), Some(&t.src), "item {item}");
+                    loc.insert(item, t.dst);
+                }
+            }
+        }
+        loc
+    }
+}
+
+/// Bytes of one item's shard (one sequence's slice of the dispatched
+/// tensor(s)).
+pub fn item_bytes(ctx: usize, bytes_per_token: f64) -> u64 {
+    (ctx as f64 * bytes_per_token).ceil() as u64
+}
+
+/// Baseline: every producer sends its shards to the controller
+/// (worker 0 of the dispatch group); after a barrier, the controller
+/// sends each consumer its shards. This is the "centralized
+/// gather-and-dispatch mechanism in the single-controller architecture"
+/// the paper identifies as the bottleneck (§1, §2).
+pub fn plan_centralized(
+    producer: &DataLayout,
+    consumer: &DataLayout,
+    shard_bytes: u64,
+    controller: usize,
+) -> DispatchPlan {
+    assert_eq!(producer.n_items(), consumer.n_items());
+    let mut gather: BTreeMap<usize, Vec<ItemId>> = BTreeMap::new();
+    for item in 0..producer.n_items() {
+        let src = producer.owner[item];
+        if src != controller {
+            gather.entry(src).or_default().push(item);
+        }
+    }
+    let phase1: Vec<WorkerTransfer> = gather
+        .into_iter()
+        .map(|(src, items)| WorkerTransfer {
+            src,
+            dst: controller,
+            bytes: shard_bytes * items.len() as u64,
+            items,
+        })
+        .collect();
+
+    let mut scatter: BTreeMap<usize, Vec<ItemId>> = BTreeMap::new();
+    for item in 0..consumer.n_items() {
+        let dst = consumer.owner[item];
+        if dst != controller {
+            scatter.entry(dst).or_default().push(item);
+        }
+    }
+    let phase2: Vec<WorkerTransfer> = scatter
+        .into_iter()
+        .map(|(dst, items)| WorkerTransfer {
+            src: controller,
+            dst,
+            bytes: shard_bytes * items.len() as u64,
+            items,
+        })
+        .collect();
+
+    DispatchPlan { phases: vec![phase1, phase2], strategy: "centralized" }
+}
+
+/// EARL: direct producer→consumer transfers ("sends data directly to the
+/// target workers from their computation origins", paper §2). Items
+/// already on the right worker move zero bytes; messages between the
+/// same (src, dst) pair are coalesced.
+pub fn plan_alltoall(
+    producer: &DataLayout,
+    consumer: &DataLayout,
+    shard_bytes: u64,
+) -> DispatchPlan {
+    assert_eq!(producer.n_items(), consumer.n_items());
+    let mut pairs: BTreeMap<(usize, usize), Vec<ItemId>> = BTreeMap::new();
+    for item in 0..producer.n_items() {
+        let src = producer.owner[item];
+        let dst = consumer.owner[item];
+        if src != dst {
+            pairs.entry((src, dst)).or_default().push(item);
+        }
+    }
+    let phase: Vec<WorkerTransfer> = pairs
+        .into_iter()
+        .map(|((src, dst), items)| WorkerTransfer {
+            src,
+            dst,
+            bytes: shard_bytes * items.len() as u64,
+            items,
+        })
+        .collect();
+    DispatchPlan { phases: vec![phase], strategy: "alltoall" }
+}
+
+/// Does a plan leave every item at its consumer-required worker?
+pub fn satisfies(
+    plan: &DispatchPlan,
+    producer: &DataLayout,
+    consumer: &DataLayout,
+) -> bool {
+    plan.delivered(producer) == consumer.as_map()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layouts() -> (DataLayout, DataLayout) {
+        // 32 items: produced round-robin over 8 ExpPrep workers,
+        // consumed blocked over 8 trainers.
+        (DataLayout::round_robin(32, 8), DataLayout::blocked(32, 8))
+    }
+
+    #[test]
+    fn both_plans_deliver_consumer_layout() {
+        let (p, c) = layouts();
+        let central = plan_centralized(&p, &c, 1000, 0);
+        let a2a = plan_alltoall(&p, &c, 1000);
+        assert!(satisfies(&central, &p, &c));
+        assert!(satisfies(&a2a, &p, &c));
+    }
+
+    #[test]
+    fn alltoall_moves_fewer_bytes() {
+        let (p, c) = layouts();
+        let central = plan_centralized(&p, &c, 1000, 0);
+        let a2a = plan_alltoall(&p, &c, 1000);
+        // Centralized moves ~2× (in and out of the controller).
+        assert!(central.total_bytes() > a2a.total_bytes());
+        assert!(
+            central.total_bytes() as f64 / a2a.total_bytes() as f64 > 1.5,
+            "central {} vs a2a {}",
+            central.total_bytes(),
+            a2a.total_bytes()
+        );
+    }
+
+    #[test]
+    fn alltoall_skips_in_place_items() {
+        // Identical layouts → nothing to move.
+        let p = DataLayout::blocked(16, 4);
+        let plan = plan_alltoall(&p, &p, 500);
+        assert_eq!(plan.total_bytes(), 0);
+        assert_eq!(plan.n_transfers(), 0);
+        assert!(satisfies(&plan, &p, &p));
+    }
+
+    #[test]
+    fn centralized_still_relays_when_layouts_match() {
+        // The single-controller architecture aggregates regardless —
+        // that's exactly its pathology.
+        let p = DataLayout::blocked(16, 4);
+        let plan = plan_centralized(&p, &p, 500, 0);
+        assert!(plan.total_bytes() > 0);
+        assert!(satisfies(&plan, &p, &p));
+    }
+
+    #[test]
+    fn centralized_phases_are_gather_then_scatter() {
+        let (p, c) = layouts();
+        let plan = plan_centralized(&p, &c, 100, 0);
+        assert_eq!(plan.phases.len(), 2);
+        assert!(plan.phases[0].iter().all(|t| t.dst == 0));
+        assert!(plan.phases[1].iter().all(|t| t.src == 0));
+    }
+
+    #[test]
+    fn coalescing_bounds_transfer_count() {
+        let (p, c) = layouts();
+        let a2a = plan_alltoall(&p, &c, 100);
+        // At most one message per (src, dst) pair.
+        assert!(a2a.n_transfers() <= 8 * 8);
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &a2a.phases[0] {
+            assert!(seen.insert((t.src, t.dst)), "duplicate pair");
+        }
+    }
+
+    #[test]
+    fn bytes_proportional_to_items() {
+        let (p, c) = layouts();
+        let plan = plan_alltoall(&p, &c, 1234);
+        for t in &plan.phases[0] {
+            assert_eq!(t.bytes, 1234 * t.items.len() as u64);
+        }
+    }
+}

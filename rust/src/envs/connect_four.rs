@@ -1,0 +1,245 @@
+//! Connect Four — the evaluation environment of the paper's §3.1
+//! (Qwen2.5-72B agentic training; implemented in the paper via open_spiel,
+//! implemented here natively).
+
+use crate::envs::{Game, Outcome, Side};
+use crate::tokenizer as tok;
+
+pub const COLS: usize = 7;
+pub const ROWS: usize = 6;
+
+/// 7×6 board; actions are column indices 0..7. Row 0 is the bottom.
+#[derive(Debug, Clone)]
+pub struct ConnectFour {
+    /// `cells[col][row]`, filled from row 0 upward.
+    cells: [[Option<Side>; ROWS]; COLS],
+    heights: [usize; COLS],
+    to_move: Side,
+    outcome: Option<Outcome>,
+    last: Option<(usize, usize)>,
+}
+
+impl ConnectFour {
+    pub fn new() -> Self {
+        ConnectFour {
+            cells: [[None; ROWS]; COLS],
+            heights: [0; COLS],
+            to_move: Side::X,
+            outcome: None,
+            last: None,
+        }
+    }
+
+    pub fn cell(&self, col: usize, row: usize) -> Option<Side> {
+        self.cells[col][row]
+    }
+
+    pub fn height(&self, col: usize) -> usize {
+        self.heights[col]
+    }
+
+    /// Check for 4-in-a-row through the last move only (each move can
+    /// only create lines through itself).
+    fn wins_through(&self, col: usize, row: usize) -> bool {
+        let side = match self.cells[col][row] {
+            Some(s) => s,
+            None => return false,
+        };
+        const DIRS: [(isize, isize); 4] = [(1, 0), (0, 1), (1, 1), (1, -1)];
+        for (dc, dr) in DIRS {
+            let mut run = 1;
+            for sign in [1isize, -1] {
+                let (mut c, mut r) = (col as isize, row as isize);
+                loop {
+                    c += dc * sign;
+                    r += dr * sign;
+                    if c < 0 || c >= COLS as isize || r < 0 || r >= ROWS as isize
+                    {
+                        break;
+                    }
+                    if self.cells[c as usize][r as usize] != Some(side) {
+                        break;
+                    }
+                    run += 1;
+                }
+            }
+            if run >= 4 {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl Default for ConnectFour {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for ConnectFour {
+    fn name(&self) -> &'static str {
+        "connect_four"
+    }
+
+    fn num_actions(&self) -> usize {
+        COLS
+    }
+
+    fn reset(&mut self) {
+        *self = ConnectFour::new();
+    }
+
+    fn board_tokens(&self, out: &mut Vec<i32>) {
+        // Top row first (the way a human reads the board).
+        for row in (0..ROWS).rev() {
+            for col in 0..COLS {
+                out.push(match self.cells[col][row] {
+                    None => tok::CELL_EMPTY,
+                    Some(Side::X) => tok::CELL_X,
+                    Some(Side::O) => tok::CELL_O,
+                });
+            }
+            if row > 0 {
+                out.push(tok::ROW);
+            }
+        }
+    }
+
+    fn legal_actions(&self) -> Vec<usize> {
+        if self.outcome.is_some() {
+            return Vec::new();
+        }
+        (0..COLS).filter(|&c| self.heights[c] < ROWS).collect()
+    }
+
+    fn is_legal(&self, action: usize) -> bool {
+        action < COLS && self.outcome.is_none() && self.heights[action] < ROWS
+    }
+
+    fn play(&mut self, action: usize) {
+        assert!(self.is_legal(action), "illegal move {action}");
+        let row = self.heights[action];
+        self.cells[action][row] = Some(self.to_move);
+        self.heights[action] += 1;
+        self.last = Some((action, row));
+        if self.wins_through(action, row) {
+            self.outcome = Some(match self.to_move {
+                Side::X => Outcome::XWins,
+                Side::O => Outcome::OWins,
+            });
+        } else if self.heights.iter().all(|&h| h == ROWS) {
+            self.outcome = Some(Outcome::Draw);
+        }
+        self.to_move = self.to_move.other();
+    }
+
+    fn to_move(&self) -> Side {
+        self.to_move
+    }
+
+    fn outcome(&self) -> Option<Outcome> {
+        self.outcome
+    }
+
+    fn clone_game(&self) -> Box<dyn Game> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::opponent::{Opponent, RandomOpponent};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn vertical_win() {
+        let mut g = ConnectFour::new();
+        for m in [3, 0, 3, 1, 3, 2, 3] {
+            g.play(m); // X stacks column 3
+        }
+        assert_eq!(g.outcome(), Some(Outcome::XWins));
+    }
+
+    #[test]
+    fn horizontal_win() {
+        let mut g = ConnectFour::new();
+        for m in [0, 0, 1, 1, 2, 2, 3] {
+            g.play(m); // X: bottom row 0..3
+        }
+        assert_eq!(g.outcome(), Some(Outcome::XWins));
+    }
+
+    #[test]
+    fn diagonal_win() {
+        let mut g = ConnectFour::new();
+        // X at (0,0),(1,1),(2,2),(3,3) — rising diagonal.
+        for m in [0, 1, 1, 2, 2, 3, 2, 3, 3, 5, 3] {
+            g.play(m);
+        }
+        assert_eq!(g.outcome(), Some(Outcome::XWins));
+    }
+
+    #[test]
+    fn anti_diagonal_win_for_o() {
+        let mut g = ConnectFour::new();
+        // O builds the descending diagonal (3,0),(2,1),(1,2),(0,3);
+        // X's filler stones never line up 4.
+        for m in [2, 3, 1, 2, 1, 1, 0, 0, 0, 0] {
+            g.play(m);
+        }
+        assert_eq!(g.outcome(), Some(Outcome::OWins));
+    }
+
+    #[test]
+    fn column_fills_up() {
+        let mut g = ConnectFour::new();
+        for _ in 0..ROWS {
+            let col0_legal = g.is_legal(0);
+            assert!(col0_legal);
+            g.play(0);
+        }
+        assert!(!g.is_legal(0));
+        assert!(!g.legal_actions().contains(&0));
+        assert_eq!(g.height(0), ROWS);
+    }
+
+    #[test]
+    fn board_tokens_layout() {
+        let mut g = ConnectFour::new();
+        g.play(0); // X at col 0 row 0 (bottom-left)
+        let mut t = Vec::new();
+        g.board_tokens(&mut t);
+        assert_eq!(t.len(), COLS * ROWS + (ROWS - 1));
+        // Bottom-left is the first cell of the LAST rendered row.
+        let last_row_start = t.len() - COLS;
+        assert_eq!(t[last_row_start], tok::CELL_X);
+        assert_eq!(t[0], tok::CELL_EMPTY); // top-left empty
+    }
+
+    #[test]
+    fn random_playouts_terminate_consistently() {
+        let mut rng = Pcg64::new(9);
+        let mut ro = RandomOpponent;
+        for _ in 0..300 {
+            let mut g = ConnectFour::new();
+            let mut moves = 0;
+            while g.outcome().is_none() {
+                let a = ro.choose(&g, &mut rng);
+                g.play(a);
+                moves += 1;
+                assert!(moves <= COLS * ROWS);
+            }
+            // Outcome claims a winner → that winner's last stone formed a
+            // line; at minimum the board is non-trivial.
+            assert!(moves >= 7 || g.outcome() != Some(Outcome::Draw));
+        }
+    }
+
+    #[test]
+    fn no_wins_through_empty() {
+        let g = ConnectFour::new();
+        assert!(!g.wins_through(3, 0));
+    }
+}

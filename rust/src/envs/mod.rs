@@ -1,0 +1,118 @@
+//! Agentic environments: self-contained implementations of the two games
+//! the paper trains on — Tic-Tac-Toe (Fig. 1, the 4B industrial case) and
+//! Connect Four (§3.1, the Qwen2.5-72B evaluation) — behind an
+//! open_spiel-like trait, plus scripted opponents.
+
+pub mod connect_four;
+pub mod opponent;
+pub mod tictactoe;
+
+pub use connect_four::ConnectFour;
+pub use opponent::{HeuristicOpponent, Opponent, RandomOpponent};
+pub use tictactoe::TicTacToe;
+
+use crate::util::rng::Pcg64;
+
+/// Which side is to move. The RL agent always plays [`Side::X`] (moves
+/// first); the scripted opponent plays [`Side::O`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    X,
+    O,
+}
+
+impl Side {
+    pub fn other(self) -> Side {
+        match self {
+            Side::X => Side::O,
+            Side::O => Side::X,
+        }
+    }
+}
+
+/// Terminal game outcome (absolute, not per-side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    XWins,
+    OWins,
+    Draw,
+}
+
+impl Outcome {
+    /// Reward from the agent's (X's) perspective.
+    pub fn agent_reward(self) -> f32 {
+        match self {
+            Outcome::XWins => 1.0,
+            Outcome::OWins => -1.0,
+            Outcome::Draw => 0.0,
+        }
+    }
+}
+
+/// A two-player, perfect-information, alternating-move board game.
+pub trait Game: Send {
+    fn name(&self) -> &'static str;
+
+    /// Number of distinct action indices (TicTacToe: 9, ConnectFour: 7).
+    fn num_actions(&self) -> usize;
+
+    fn reset(&mut self);
+
+    /// Append the board rendering (cell/row tokens) to `out`.
+    fn board_tokens(&self, out: &mut Vec<i32>);
+
+    fn legal_actions(&self) -> Vec<usize>;
+
+    fn is_legal(&self, action: usize) -> bool;
+
+    /// Apply `action` for the side to move. Panics on illegal input —
+    /// callers must check (the rollout engine translates illegal *model*
+    /// outputs into a terminal penalty before ever calling this).
+    fn play(&mut self, action: usize);
+
+    fn to_move(&self) -> Side;
+
+    fn outcome(&self) -> Option<Outcome>;
+
+    fn clone_game(&self) -> Box<dyn Game>;
+}
+
+/// Roll a full game between two scripted opponents (testing/calibration).
+pub fn play_out(
+    game: &mut dyn Game,
+    x: &mut dyn Opponent,
+    o: &mut dyn Opponent,
+    rng: &mut Pcg64,
+) -> Outcome {
+    game.reset();
+    loop {
+        if let Some(out) = game.outcome() {
+            return out;
+        }
+        let side = game.to_move();
+        let action = match side {
+            Side::X => x.choose(game, rng),
+            Side::O => o.choose(game, rng),
+        };
+        assert!(game.is_legal(action), "opponent produced illegal move");
+        game.play(action);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn side_other() {
+        assert_eq!(Side::X.other(), Side::O);
+        assert_eq!(Side::O.other(), Side::X);
+    }
+
+    #[test]
+    fn outcome_rewards() {
+        assert_eq!(Outcome::XWins.agent_reward(), 1.0);
+        assert_eq!(Outcome::OWins.agent_reward(), -1.0);
+        assert_eq!(Outcome::Draw.agent_reward(), 0.0);
+    }
+}

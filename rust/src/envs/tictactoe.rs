@@ -1,0 +1,217 @@
+//! Tic-Tac-Toe — the environment of the paper's Fig. 1 industrial case
+//! study (4B model, ~3 turns/episode, context-collapse demonstration).
+
+use crate::envs::{Game, Outcome, Side};
+use crate::tokenizer as tok;
+
+/// 3×3 board; actions are cell indices 0..9 in row-major order.
+#[derive(Debug, Clone)]
+pub struct TicTacToe {
+    cells: [Option<Side>; 9],
+    to_move: Side,
+    outcome: Option<Outcome>,
+}
+
+const LINES: [[usize; 3]; 8] = [
+    [0, 1, 2],
+    [3, 4, 5],
+    [6, 7, 8], // rows
+    [0, 3, 6],
+    [1, 4, 7],
+    [2, 5, 8], // cols
+    [0, 4, 8],
+    [2, 4, 6], // diagonals
+];
+
+impl TicTacToe {
+    pub fn new() -> Self {
+        TicTacToe { cells: [None; 9], to_move: Side::X, outcome: None }
+    }
+
+    pub fn cell(&self, i: usize) -> Option<Side> {
+        self.cells[i]
+    }
+
+    fn recompute_outcome(&mut self) {
+        for line in &LINES {
+            let [a, b, c] = *line;
+            if let (Some(x), Some(y), Some(z)) =
+                (self.cells[a], self.cells[b], self.cells[c])
+            {
+                if x == y && y == z {
+                    self.outcome = Some(match x {
+                        Side::X => Outcome::XWins,
+                        Side::O => Outcome::OWins,
+                    });
+                    return;
+                }
+            }
+        }
+        if self.cells.iter().all(|c| c.is_some()) {
+            self.outcome = Some(Outcome::Draw);
+        }
+    }
+}
+
+impl Default for TicTacToe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for TicTacToe {
+    fn name(&self) -> &'static str {
+        "tictactoe"
+    }
+
+    fn num_actions(&self) -> usize {
+        9
+    }
+
+    fn reset(&mut self) {
+        *self = TicTacToe::new();
+    }
+
+    fn board_tokens(&self, out: &mut Vec<i32>) {
+        for row in 0..3 {
+            for col in 0..3 {
+                out.push(match self.cells[row * 3 + col] {
+                    None => tok::CELL_EMPTY,
+                    Some(Side::X) => tok::CELL_X,
+                    Some(Side::O) => tok::CELL_O,
+                });
+            }
+            if row < 2 {
+                out.push(tok::ROW);
+            }
+        }
+    }
+
+    fn legal_actions(&self) -> Vec<usize> {
+        if self.outcome.is_some() {
+            return Vec::new();
+        }
+        (0..9).filter(|&i| self.cells[i].is_none()).collect()
+    }
+
+    fn is_legal(&self, action: usize) -> bool {
+        action < 9 && self.outcome.is_none() && self.cells[action].is_none()
+    }
+
+    fn play(&mut self, action: usize) {
+        assert!(self.is_legal(action), "illegal move {action}");
+        self.cells[action] = Some(self.to_move);
+        self.to_move = self.to_move.other();
+        self.recompute_outcome();
+    }
+
+    fn to_move(&self) -> Side {
+        self.to_move
+    }
+
+    fn outcome(&self) -> Option<Outcome> {
+        self.outcome
+    }
+
+    fn clone_game(&self) -> Box<dyn Game> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::opponent::{Opponent, RandomOpponent};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn fresh_board() {
+        let g = TicTacToe::new();
+        assert_eq!(g.legal_actions().len(), 9);
+        assert_eq!(g.to_move(), Side::X);
+        assert_eq!(g.outcome(), None);
+    }
+
+    #[test]
+    fn row_win() {
+        let mut g = TicTacToe::new();
+        for m in [0, 3, 1, 4, 2] {
+            g.play(m); // X: 0,1,2 — top row
+        }
+        assert_eq!(g.outcome(), Some(Outcome::XWins));
+        assert!(g.legal_actions().is_empty());
+    }
+
+    #[test]
+    fn col_and_diag_wins() {
+        let mut g = TicTacToe::new();
+        for m in [0, 1, 3, 2, 6] {
+            g.play(m); // X: 0,3,6 — left column
+        }
+        assert_eq!(g.outcome(), Some(Outcome::XWins));
+
+        let mut g = TicTacToe::new();
+        for m in [1, 0, 3, 4, 5, 8] {
+            g.play(m); // O: 0,4,8 — main diagonal
+        }
+        assert_eq!(g.outcome(), Some(Outcome::OWins));
+    }
+
+    #[test]
+    fn draw_game() {
+        let mut g = TicTacToe::new();
+        // X O X / X O O / O X X — no line
+        for m in [0, 1, 2, 4, 3, 5, 7, 6, 8] {
+            g.play(m);
+        }
+        assert_eq!(g.outcome(), Some(Outcome::Draw));
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal move")]
+    fn occupied_cell_panics() {
+        let mut g = TicTacToe::new();
+        g.play(4);
+        g.play(4);
+    }
+
+    #[test]
+    fn board_tokens_layout() {
+        let mut g = TicTacToe::new();
+        g.play(0); // X
+        g.play(8); // O
+        let mut t = Vec::new();
+        g.board_tokens(&mut t);
+        // 9 cells + 2 row separators
+        assert_eq!(t.len(), 11);
+        assert_eq!(t[0], tok::CELL_X);
+        assert_eq!(t[3], tok::ROW);
+        assert_eq!(*t.last().unwrap(), tok::CELL_O);
+        assert_eq!(t.iter().filter(|&&x| x == tok::CELL_EMPTY).count(), 7);
+    }
+
+    #[test]
+    fn random_playout_invariants() {
+        // Every random game ends; move counts alternate; outcome is
+        // consistent with filled cells.
+        let mut rng = Pcg64::new(42);
+        let mut ro = RandomOpponent;
+        for _ in 0..500 {
+            let mut g = TicTacToe::new();
+            let mut moves = 0;
+            while g.outcome().is_none() {
+                let a = ro.choose(&g, &mut rng);
+                assert!(g.is_legal(a));
+                g.play(a);
+                moves += 1;
+                assert!(moves <= 9);
+            }
+            let x_count = (0..9).filter(|&i| g.cell(i) == Some(Side::X)).count();
+            let o_count = (0..9).filter(|&i| g.cell(i) == Some(Side::O)).count();
+            assert!(x_count == o_count || x_count == o_count + 1);
+            if g.outcome() == Some(Outcome::Draw) {
+                assert_eq!(x_count + o_count, 9);
+            }
+        }
+    }
+}

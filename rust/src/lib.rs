@@ -1,0 +1,35 @@
+//! # EARL — Efficient Agentic Reinforcement Learning Systems for LLMs
+//!
+//! Rust reproduction of *EARL* (Tan et al., SAA '25): a scalable agentic
+//! RL training system whose two contributions attack the context-length
+//! explosion of multi-turn agentic training:
+//!
+//! * the **Parallelism Selector** ([`parallelism`]) — dynamically adapts
+//!   the model/training parallelism configuration across RL stages based
+//!   on the live context length and system load;
+//! * the **Data Dispatcher** ([`dispatch`]) — replaces the single-
+//!   controller gather-and-scatter of intermediate experience tensors
+//!   with a layout-aware, decentralized all-to-all.
+//!
+//! The stack is three layers: a Pallas flash-attention kernel (L1) inside
+//! a JAX transformer (L2), AOT-lowered to HLO text and executed from this
+//! crate via PJRT ([`runtime`]); everything else — the RL loop
+//! ([`coordinator`]), rollout engine ([`rollout`]), game environments
+//! ([`envs`]), cluster/memory/network simulator ([`cluster`]) — is rust
+//! (L3). See DESIGN.md for the full inventory and the per-experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dispatch;
+pub mod envs;
+pub mod metrics;
+pub mod parallelism;
+pub mod rl;
+pub mod rollout;
+pub mod runtime;
+pub mod testkit;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,344 @@
+//! `earl` — CLI for the EARL reproduction.
+//!
+//! Subcommands:
+//!   train          run agentic RL training end-to-end (real PJRT model)
+//!   profile        measure the real per-bucket throughput table
+//!   figures        regenerate the paper's tables/figures on the simulator
+//!   dispatch-bench run the Fig. 4 dispatch comparison on real TCP sockets
+//!
+//! (Hand-rolled argument parsing: the offline build has no clap.)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use earl::cluster::ClusterSpec;
+use earl::config::{EnvKind, OpponentKind, TrainConfig};
+use earl::coordinator::Trainer;
+use earl::dispatch::{
+    execute_plan_tcp, plan_alltoall, plan_centralized, simulate_plan,
+    DataLayout, PayloadModel, WorkerMap, PAPER_TAB1,
+};
+use earl::parallelism::{speedup_pct, ModelShape, ThroughputCfg};
+use earl::rollout::LimitPolicy;
+use earl::runtime::{Engine, TokenBatch};
+use earl::util::bytes::{human_bytes, human_duration};
+use earl::workload::{fig3_grid, fig4_shards, tab1_contexts};
+
+/// Tiny flag parser: `--key value` and bare `--flag` supported.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value =
+                    argv.get(i + 1).map_or(false, |n| !n.starts_with("--"));
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(
+                v.parse().with_context(|| format!("--{key} {v:?}"))?,
+            )),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[argv.len().min(1)..]);
+
+    match cmd {
+        "train" => cmd_train(&args),
+        "profile" => cmd_profile(&args),
+        "figures" => cmd_figures(&args),
+        "dispatch-bench" => cmd_dispatch_bench(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command {other:?}");
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "earl — Efficient Agentic RL (paper reproduction)\n\
+         \n\
+         USAGE: earl <command> [flags]\n\
+         \n\
+         COMMANDS\n\
+           train            end-to-end agentic RL training (PJRT model)\n\
+             --steps N --env tictactoe|connect4 --opponent random|heuristic\n\
+             --max-context N (hard limit baseline; default: dynamic buckets)\n\
+             --static-buckets (disable dynamic bucket selection)\n\
+             --lr F --kl F --ent F --gamma F --seed N\n\
+             --artifacts DIR --metrics FILE --checkpoint FILE --config FILE\n\
+           profile          measure real per-bucket decode TGS table\n\
+             --artifacts DIR\n\
+           figures          print paper tables/figures from the simulator\n\
+             --tab1 --fig3 --fig4 --all\n\
+           dispatch-bench   Fig. 4 on real TCP loopback sockets\n\
+             --workers N --scale F (shard-size scale, default 0.125)"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => TrainConfig::from_json_file(&PathBuf::from(p))?,
+        None => TrainConfig::default(),
+    };
+    if let Some(n) = args.get_usize("steps")? {
+        cfg.steps = n as u64;
+    }
+    if let Some(e) = args.get("env") {
+        cfg.env = EnvKind::from_name(e)?;
+    }
+    if let Some(o) = args.get("opponent") {
+        cfg.opponent = OpponentKind::from_name(o)?;
+    }
+    if let Some(n) = args.get_usize("max-context")? {
+        cfg.rollout.limit = LimitPolicy::Hard(n);
+    }
+    if args.has("static-buckets") {
+        cfg.dynamic_buckets = false;
+    }
+    if let Some(v) = args.get("lr") {
+        cfg.hp.lr = v.parse()?;
+    }
+    if let Some(v) = args.get("kl") {
+        cfg.hp.kl_coef = v.parse()?;
+    }
+    if let Some(v) = args.get("ent") {
+        cfg.hp.ent_coef = v.parse()?;
+    }
+    if let Some(v) = args.get("gamma") {
+        cfg.gamma = v.parse()?;
+    }
+    if let Some(n) = args.get_usize("seed")? {
+        cfg.seed = n as u64;
+    }
+    if let Some(n) = args.get_usize("ref-refresh")? {
+        cfg.ref_refresh_every = n as u64;
+    }
+    if let Some(p) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(p);
+    }
+    if let Some(p) = args.get("metrics") {
+        cfg.metrics_path = Some(PathBuf::from(p));
+    }
+    if let Some(p) = args.get("checkpoint") {
+        cfg.checkpoint_path = Some(PathBuf::from(p));
+    }
+
+    eprintln!(
+        "training {} vs {:?} for {} steps (limit {:?})",
+        cfg.env.name(),
+        cfg.opponent,
+        cfg.steps,
+        cfg.rollout.limit
+    );
+    let mut trainer = Trainer::new(cfg)?;
+    let final_return = trainer.run()?;
+    println!("final rolling return (20 steps): {final_return:+.3}");
+    Ok(())
+}
+
+/// Measure the real throughput table the Parallelism Selector would use:
+/// decode TGS per context bucket on the local PJRT device.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let engine = Engine::load(&dir)?;
+    engine.warmup()?;
+    let state = engine.initial_state()?;
+    println!("# real per-bucket decode profile ({})", engine.platform());
+    println!("{:>8} {:>14} {:>14}", "bucket", "s/forward", "TGS(batch)");
+    for &bucket in &engine.manifest.buckets {
+        let mut tb = TokenBatch::new(engine.manifest.batch, bucket);
+        for r in 0..engine.manifest.batch {
+            for t in 0..bucket.min(64) {
+                tb.row_mut(r)[t] =
+                    ((r + t * 7) % engine.manifest.model.vocab) as i32;
+            }
+        }
+        // Warm then measure.
+        engine.logits(&state.params, &tb)?;
+        let reps = 5;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            engine.logits(&state.params, &tb)?;
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let tgs = engine.manifest.batch as f64 / per;
+        println!("{bucket:>8} {per:>14.4} {tgs:>14.1}");
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let all = args.has("all")
+        || (!args.has("tab1") && !args.has("fig3") && !args.has("fig4"));
+    if all || args.has("tab1") {
+        figures_tab1();
+    }
+    if all || args.has("fig3") {
+        figures_fig3();
+    }
+    if all || args.has("fig4") {
+        figures_fig4();
+    }
+    Ok(())
+}
+
+fn figures_tab1() {
+    println!("\n== Tab. 1: Intermediate data batch size, 1k-GPU cluster ==");
+    let m = PayloadModel::default();
+    println!(
+        "{:>10} {:>16} {:>16} {:>10}",
+        "ctx", "paper (MiB)", "ours (MiB)", "xfer@25Gb"
+    );
+    for (i, ctx) in tab1_contexts().iter().enumerate() {
+        let ours = m.total_mib(*ctx);
+        let paper = PAPER_TAB1[i].1;
+        let secs = m.transmission_seconds(*ctx, 25e9 / 8.0);
+        println!(
+            "{ctx:>10} {paper:>16.0} {ours:>16.0} {:>10}",
+            human_duration(secs)
+        );
+    }
+}
+
+fn figures_fig3() {
+    println!(
+        "\n== Fig. 3: Speedup%(TP4→TP8), decode TGS, Qwen2.5-72B on \
+         H100-80G (simulator) =="
+    );
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    let tcfg = ThroughputCfg::default();
+    let (ctxs, resps) = fig3_grid();
+    print!("{:>12}", "ctx \\ resp");
+    for r in &resps {
+        print!("{r:>12}");
+    }
+    println!();
+    for ctx in &ctxs {
+        print!("{ctx:>12}");
+        for r in &resps {
+            let (t4, _t8, s) = speedup_pct(&shape, &cluster, &tcfg, 4, 8, *ctx, *r);
+            match s {
+                Some(s) => print!("{:>11.1}%", s),
+                None => {
+                    if t4.is_none() {
+                        print!("{:>12}", "TP4-OOM")
+                    } else {
+                        print!("{:>12}", "TP8-OOM")
+                    }
+                }
+            }
+        }
+        println!();
+    }
+    println!(
+        "(positive = TP8 better; paper: TP4 +31% at short ctx, switch at \
+         16K, TP4 OOM at (128, 32K))"
+    );
+}
+
+fn figures_fig4() {
+    println!(
+        "\n== Fig. 4: dispatch latency, baseline (single-controller) vs \
+         EARL all-to-all (simulator, 8 node-workers) =="
+    );
+    let cluster = ClusterSpec::paper_testbed();
+    let n = 8;
+    let map = WorkerMap::one_per_node(&cluster, n);
+    println!(
+        "{:>8} {:>12} {:>14} {:>14} {:>10}",
+        "ctx", "MiB/worker", "baseline", "EARL", "reduction"
+    );
+    for (ctx, mib) in fig4_shards() {
+        let items = n * n;
+        let producer = DataLayout::round_robin(items, n);
+        let consumer = DataLayout::blocked(items, n);
+        let item_bytes = mib * (1 << 20) / n as u64;
+        let base = plan_centralized(&producer, &consumer, item_bytes, 0);
+        let earl = plan_alltoall(&producer, &consumer, item_bytes);
+        let tb = simulate_plan(&cluster, &map, &base).makespan;
+        let te = simulate_plan(&cluster, &map, &earl).makespan;
+        println!(
+            "{ctx:>8} {mib:>12} {:>14} {:>14} {:>9.1}x",
+            human_duration(tb),
+            human_duration(te),
+            tb / te
+        );
+    }
+    println!("(paper: 9.7x at 8K rising to 11.2x at 32K)");
+}
+
+fn cmd_dispatch_bench(args: &Args) -> Result<()> {
+    let n = args.get_usize("workers")?.unwrap_or(8);
+    let scale: f64 = args
+        .get("scale")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(0.125);
+    println!(
+        "== Fig. 4 on real TCP loopback: {n} workers, shard scale {scale} =="
+    );
+    println!(
+        "{:>8} {:>12} {:>14} {:>14} {:>10}",
+        "ctx", "bytes/worker", "baseline", "EARL", "reduction"
+    );
+    for (ctx, mib) in fig4_shards() {
+        let shard_bytes = ((mib * (1 << 20)) as f64 * scale) as u64;
+        let items = n * n;
+        let producer = DataLayout::round_robin(items, n);
+        let consumer = DataLayout::blocked(items, n);
+        let item_bytes = shard_bytes / n as u64;
+        let base = plan_centralized(&producer, &consumer, item_bytes, 0);
+        let earl = plan_alltoall(&producer, &consumer, item_bytes);
+        let tb = execute_plan_tcp(&base, n)?.seconds;
+        let te = execute_plan_tcp(&earl, n)?.seconds;
+        println!(
+            "{ctx:>8} {:>12} {:>14} {:>14} {:>9.1}x",
+            human_bytes(shard_bytes),
+            human_duration(tb),
+            human_duration(te),
+            tb / te
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Metrics: per-step training records and a JSONL emitter (the paper's
+//! Fig. 1 curves are plots of exactly these records).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One training step's record — everything needed to re-plot Fig. 1
+/// (a: turn-level ctx, b: episode-level ctx, c: average return) plus the
+/// systems metrics EARL adds.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub mean_return: f64,
+    pub mean_turn_ctx: f64,
+    pub mean_episode_ctx: f64,
+    pub truncation_rate: f64,
+    pub illegal_rate: f64,
+    pub loss: f64,
+    pub kl: f64,
+    pub entropy: f64,
+    pub tgs: f64,
+    pub bucket: usize,
+    pub selector_switched: bool,
+    pub rollout_seconds: f64,
+    pub exp_prep_seconds: f64,
+    pub dispatch_seconds: f64,
+    pub train_seconds: f64,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("mean_return", Json::num(self.mean_return)),
+            ("mean_turn_ctx", Json::num(self.mean_turn_ctx)),
+            ("mean_episode_ctx", Json::num(self.mean_episode_ctx)),
+            ("truncation_rate", Json::num(self.truncation_rate)),
+            ("illegal_rate", Json::num(self.illegal_rate)),
+            ("loss", Json::num(self.loss)),
+            ("kl", Json::num(self.kl)),
+            ("entropy", Json::num(self.entropy)),
+            ("tgs", Json::num(self.tgs)),
+            ("bucket", Json::num(self.bucket as f64)),
+            ("selector_switched", Json::Bool(self.selector_switched)),
+            ("rollout_seconds", Json::num(self.rollout_seconds)),
+            ("exp_prep_seconds", Json::num(self.exp_prep_seconds)),
+            ("dispatch_seconds", Json::num(self.dispatch_seconds)),
+            ("train_seconds", Json::num(self.train_seconds)),
+        ])
+    }
+
+    pub fn step_seconds(&self) -> f64 {
+        self.rollout_seconds
+            + self.exp_prep_seconds
+            + self.dispatch_seconds
+            + self.train_seconds
+    }
+}
+
+/// Append-only JSONL metrics sink.
+pub struct MetricsLog {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    pub records: Vec<StepRecord>,
+}
+
+impl MetricsLog {
+    /// In-memory only.
+    pub fn memory() -> MetricsLog {
+        MetricsLog { out: None, records: Vec::new() }
+    }
+
+    /// Backed by a JSONL file (created/truncated).
+    pub fn to_file(path: &Path) -> Result<MetricsLog> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(MetricsLog {
+            out: Some(std::io::BufWriter::new(f)),
+            records: Vec::new(),
+        })
+    }
+
+    pub fn record(&mut self, rec: StepRecord) -> Result<()> {
+        if let Some(out) = &mut self.out {
+            writeln!(out, "{}", rec.to_json()).context("writing metrics")?;
+            out.flush().ok();
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// Rolling mean of returns over the last `window` steps.
+    pub fn rolling_return(&self, window: usize) -> f64 {
+        let n = self.records.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let start = n.saturating_sub(window);
+        let slice = &self.records[start..];
+        slice.iter().map(|r| r.mean_return).sum::<f64>() / slice.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, ret: f64) -> StepRecord {
+        StepRecord {
+            step,
+            mean_return: ret,
+            mean_turn_ctx: 40.0,
+            mean_episode_ctx: 100.0,
+            truncation_rate: 0.0,
+            illegal_rate: 0.0,
+            loss: 0.5,
+            kl: 0.01,
+            entropy: 2.0,
+            tgs: 15.0,
+            bucket: 128,
+            selector_switched: false,
+            rollout_seconds: 1.0,
+            exp_prep_seconds: 0.5,
+            dispatch_seconds: 0.1,
+            train_seconds: 2.0,
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let r = rec(3, 0.25);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.at(&["step"]).as_usize(), Some(3));
+        assert_eq!(j.at(&["mean_return"]).as_f64(), Some(0.25));
+        assert_eq!(j.at(&["bucket"]).as_usize(), Some(128));
+        assert_eq!(j.at(&["selector_switched"]).as_bool(), Some(false));
+    }
+
+    #[test]
+    fn file_sink_writes_lines() {
+        let tmp = std::env::temp_dir().join("earl_metrics_test.jsonl");
+        {
+            let mut log = MetricsLog::to_file(&tmp).unwrap();
+            log.record(rec(0, 0.1)).unwrap();
+            log.record(rec(1, 0.2)).unwrap();
+        }
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            Json::parse(line).unwrap();
+        }
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn rolling_return_window() {
+        let mut log = MetricsLog::memory();
+        for (i, r) in [0.0, 0.0, 1.0, 1.0].iter().enumerate() {
+            log.record(rec(i as u64, *r)).unwrap();
+        }
+        assert!((log.rolling_return(2) - 1.0).abs() < 1e-9);
+        assert!((log.rolling_return(4) - 0.5).abs() < 1e-9);
+        assert!((log.rolling_return(100) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_seconds_sums_stages() {
+        assert!((rec(0, 0.0).step_seconds() - 3.6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,108 @@
+//! Parallelism configurations — what the Parallelism Selector switches
+//! between RL stages (paper §2: policy model in Rollout; reference /
+//! value / reward models in Experience Preparation).
+
+use crate::cluster::ClusterSpec;
+
+/// A (TP, PP, DP) placement for one model on the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelismConfig {
+    /// Tensor-parallel degree (intra-node in this work, as in the paper).
+    pub tp: usize,
+    /// Pipeline-parallel degree (1 for rollout engines).
+    pub pp: usize,
+    /// Data-parallel replicas.
+    pub dp: usize,
+}
+
+impl ParallelismConfig {
+    pub fn tp(tp: usize) -> Self {
+        ParallelismConfig { tp, pp: 1, dp: 1 }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+
+    pub fn label(&self) -> String {
+        format!("TP{}xPP{}xDP{}", self.tp, self.pp, self.dp)
+    }
+
+    /// Is this config placeable on the cluster (TP groups must fit within
+    /// a node to ride NVLink, total GPUs must exist)?
+    pub fn placeable(&self, cluster: &ClusterSpec) -> bool {
+        self.tp >= 1
+            && self.pp >= 1
+            && self.dp >= 1
+            && self.tp <= cluster.gpus_per_node
+            && cluster.gpus_per_node % self.tp == 0
+            && self.gpus() <= cluster.total_gpus()
+    }
+
+    /// All TP-only rollout configs available on one node of the cluster
+    /// (the paper's Fig. 3 compares TP=4 and TP=8; we enumerate powers of
+    /// two up to the node size).
+    pub fn rollout_candidates(cluster: &ClusterSpec) -> Vec<ParallelismConfig> {
+        let mut out = Vec::new();
+        let mut tp = 1;
+        while tp <= cluster.gpus_per_node {
+            out.push(ParallelismConfig::tp(tp));
+            tp *= 2;
+        }
+        out
+    }
+}
+
+/// The RL pipeline stages EARL reconfigures (paper Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Policy decode/sampling.
+    Rollout,
+    /// Reference/value/reward model scoring.
+    ExperiencePrep,
+    /// Policy update (dynamic parallelism here is future work in the
+    /// paper §5; we model it for the ablation benches).
+    ModelUpdate,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Rollout => "rollout",
+            Stage::ExperiencePrep => "experience_prep",
+            Stage::ModelUpdate => "model_update",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_accounting() {
+        let c = ParallelismConfig { tp: 4, pp: 2, dp: 3 };
+        assert_eq!(c.gpus(), 24);
+        assert_eq!(c.label(), "TP4xPP2xDP3");
+    }
+
+    #[test]
+    fn placement_rules() {
+        let cluster = ClusterSpec::paper_testbed(); // 16×8
+        assert!(ParallelismConfig::tp(4).placeable(&cluster));
+        assert!(ParallelismConfig::tp(8).placeable(&cluster));
+        assert!(!ParallelismConfig::tp(16).placeable(&cluster)); // > node
+        assert!(!ParallelismConfig::tp(3).placeable(&cluster)); // 8 % 3 != 0
+        let too_big = ParallelismConfig { tp: 8, pp: 16, dp: 2 };
+        assert!(!too_big.placeable(&cluster)); // 256 > 128 GPUs
+    }
+
+    #[test]
+    fn rollout_candidates_cover_paper_configs() {
+        let cluster = ClusterSpec::paper_testbed();
+        let cands = ParallelismConfig::rollout_candidates(&cluster);
+        assert!(cands.contains(&ParallelismConfig::tp(4)));
+        assert!(cands.contains(&ParallelismConfig::tp(8)));
+        assert_eq!(cands.len(), 4); // 1, 2, 4, 8
+    }
+}

@@ -1,0 +1,199 @@
+//! GPU memory estimator — decides which parallelism configurations fit
+//! (the OOM boundary of paper Fig. 3's (128 responses, 32K) cell, and the
+//! §1 example: Llama-70B needs ~97 GB / ~354 GB of activations at 4K/8K).
+
+use crate::cluster::GpuSpec;
+use crate::parallelism::config::ParallelismConfig;
+use crate::parallelism::shape::ModelShape;
+
+/// Fraction of HBM usable for model + KV (the rest: CUDA context,
+/// NCCL buffers, fragmentation) — mirrors vLLM's `gpu_memory_utilization`.
+pub const USABLE_FRACTION: f64 = 0.90;
+
+/// Rollout (inference) memory demand per GPU, bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct RolloutMemory {
+    pub weights: u64,
+    /// KV cache for `responses` sequences at full `ctx` length.
+    pub kv_demand: u64,
+    /// Decode activation / logits scratch.
+    pub scratch: u64,
+}
+
+impl RolloutMemory {
+    pub fn total(&self) -> u64 {
+        self.weights + self.kv_demand + self.scratch
+    }
+}
+
+/// Estimate rollout memory per GPU for `responses` concurrent sequences
+/// at context `ctx` under `cfg`.
+pub fn rollout_memory(
+    shape: &ModelShape,
+    cfg: ParallelismConfig,
+    ctx: usize,
+    responses: usize,
+) -> RolloutMemory {
+    let t = cfg.tp as u64;
+    let weights = shape.weight_bytes(2) / (t * cfg.pp as u64);
+    let kv_demand = shape.kv_bytes_per_seq(ctx) * responses as u64 / t;
+    // Logits buffer (fp32) + decode activations for the running batch.
+    let scratch = (responses * shape.vocab * 4) as u64
+        + (responses * shape.hidden * shape.layers / 8) as u64;
+    RolloutMemory { weights, kv_demand, scratch }
+}
+
+/// Usable HBM per GPU.
+pub fn usable_bytes(gpu: &GpuSpec) -> u64 {
+    (gpu.mem_bytes as f64 * USABLE_FRACTION) as u64
+}
+
+/// Bytes available for KV after weights + scratch.
+pub fn kv_budget(gpu: &GpuSpec, mem: &RolloutMemory) -> u64 {
+    usable_bytes(gpu).saturating_sub(mem.weights + mem.scratch)
+}
+
+/// How many full-length sequences fit in the KV budget.
+pub fn fit_sequences(
+    shape: &ModelShape,
+    cfg: ParallelismConfig,
+    gpu: &GpuSpec,
+    ctx: usize,
+    responses: usize,
+) -> usize {
+    let mem = rollout_memory(shape, cfg, ctx, responses);
+    let per_seq = shape.kv_bytes_per_seq(ctx) / cfg.tp as u64;
+    if per_seq == 0 {
+        return responses;
+    }
+    (kv_budget(gpu, &mem) / per_seq) as usize
+}
+
+/// Minimum fraction of the requested batch that must be resident for the
+/// engine to make progress; below this the run is declared OOM (paged
+/// engines thrash/abort — the paper's TP4 @ (128, 32K) failure).
+pub const MIN_LIVE_FRACTION: f64 = 0.125;
+
+/// OOM verdict for a rollout configuration.
+pub fn rollout_oom(
+    shape: &ModelShape,
+    cfg: ParallelismConfig,
+    gpu: &GpuSpec,
+    ctx: usize,
+    responses: usize,
+) -> bool {
+    let mem = rollout_memory(shape, cfg, ctx, responses);
+    if mem.weights + mem.scratch >= usable_bytes(gpu) {
+        return true; // weights alone don't fit
+    }
+    let fit = fit_sequences(shape, cfg, gpu, ctx, responses);
+    (fit as f64) < (responses as f64 * MIN_LIVE_FRACTION).max(1.0)
+}
+
+/// Training memory per GPU (mixed precision + Adam), bytes. Used by the
+/// §1 motivation bench and the ModelUpdate-stage ablation.
+///
+/// Per parameter: bf16 weights (2) + bf16 grads (2) + fp32 master (4) +
+/// fp32 Adam m/v (8) = 16 bytes, sharded over tp*pp (ZeRO-style DP
+/// sharding of optimizer state is modelled via `zero_shard`).
+pub fn train_memory_per_gpu(
+    shape: &ModelShape,
+    cfg: ParallelismConfig,
+    ctx: usize,
+    micro_batch: usize,
+    zero_shard: bool,
+) -> u64 {
+    let mp = (cfg.tp * cfg.pp) as u64;
+    let weights_grads = shape.params() * 4 / mp;
+    let opt = shape.params() * 12 / mp / if zero_shard { cfg.dp as u64 } else { 1 };
+    // Activation memory per microbatch (full recompute off): the standard
+    // ~`s·b·h·(34 + 5·a·s/h)` per layer estimate (Korthikanti et al.),
+    // sharded by TP.
+    let s = ctx as u64;
+    let b = micro_batch as u64;
+    let h = shape.hidden as u64;
+    let a = shape.heads as u64;
+    let per_layer = s * b * h * 34 + 5 * a * s * s * b;
+    let acts = shape.layers as u64 * per_layer / (cfg.tp as u64) / cfg.pp as u64;
+    weights_grads + opt + acts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuSpec;
+
+    fn qwen() -> ModelShape {
+        ModelShape::qwen2_5_72b()
+    }
+
+    #[test]
+    fn weights_shard_with_tp() {
+        let m4 = rollout_memory(&qwen(), ParallelismConfig::tp(4), 8192, 32);
+        let m8 = rollout_memory(&qwen(), ParallelismConfig::tp(8), 8192, 32);
+        assert!((m4.weights as f64 / m8.weights as f64 - 2.0).abs() < 0.01);
+        assert!((m4.kv_demand as f64 / m8.kv_demand as f64 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn kv_demand_grows_linearly_with_ctx_and_responses() {
+        let base = rollout_memory(&qwen(), ParallelismConfig::tp(8), 8192, 32);
+        let c2 = rollout_memory(&qwen(), ParallelismConfig::tp(8), 16384, 32);
+        let r2 = rollout_memory(&qwen(), ParallelismConfig::tp(8), 8192, 64);
+        assert_eq!(c2.kv_demand, base.kv_demand * 2);
+        assert_eq!(r2.kv_demand, base.kv_demand * 2);
+    }
+
+    #[test]
+    fn paper_fig3_oom_cell() {
+        // TP4 @ (128 responses, 32K ctx) OOMs; TP8 survives (paper §3.2).
+        let gpu = GpuSpec::h100_80g();
+        assert!(rollout_oom(&qwen(), ParallelismConfig::tp(4), &gpu, 32_768, 128));
+        assert!(!rollout_oom(&qwen(), ParallelismConfig::tp(8), &gpu, 32_768, 128));
+    }
+
+    #[test]
+    fn no_oom_in_benign_cells() {
+        let gpu = GpuSpec::h100_80g();
+        for &(ctx, resp) in &[(2048usize, 32usize), (8192, 64), (16384, 32),
+                              (32768, 32), (32768, 64)] {
+            assert!(
+                !rollout_oom(&qwen(), ParallelismConfig::tp(4), &gpu, ctx, resp),
+                "TP4 should survive ({ctx}, {resp})"
+            );
+            assert!(
+                !rollout_oom(&qwen(), ParallelismConfig::tp(8), &gpu, ctx, resp),
+                "TP8 should survive ({ctx}, {resp})"
+            );
+        }
+    }
+
+    #[test]
+    fn tp1_cannot_hold_72b() {
+        let gpu = GpuSpec::h100_80g();
+        assert!(rollout_oom(&qwen(), ParallelismConfig::tp(1), &gpu, 1024, 1));
+    }
+
+    #[test]
+    fn fit_sequences_monotone() {
+        let gpu = GpuSpec::h100_80g();
+        let f8k = fit_sequences(&qwen(), ParallelismConfig::tp(8), &gpu, 8192, 64);
+        let f32k = fit_sequences(&qwen(), ParallelismConfig::tp(8), &gpu, 32_768, 64);
+        assert!(f8k > f32k);
+        assert!(f32k >= 16, "TP8 must hold >=16 seqs at 32K: {f32k}");
+    }
+
+    #[test]
+    fn paper_sec1_llama70b_training_activation_example() {
+        // §1: Llama-3.1-70B training batch needs ~97 GB at 4K and ~354 GB
+        // at 8K — i.e. far beyond one 80 GB GPU without sharding.
+        let shape = ModelShape::llama3_70b();
+        let cfg = ParallelismConfig { tp: 1, pp: 1, dp: 1 };
+        let m4k = train_memory_per_gpu(&shape, cfg, 4096, 1, false);
+        let m8k = train_memory_per_gpu(&shape, cfg, 8192, 1, false);
+        // The activation component alone grows superlinearly; both far
+        // exceed 80 GB.
+        assert!(m4k > 80 * (1u64 << 30));
+        assert!(m8k > m4k);
+    }
+}

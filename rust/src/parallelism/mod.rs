@@ -1,0 +1,16 @@
+//! EARL contribution #1: the **Parallelism Selector** and its supporting
+//! models — parallelism configurations, per-GPU memory estimation (the
+//! OOM boundary), and the decode-throughput model that reproduces paper
+//! Fig. 3.
+
+pub mod config;
+pub mod memory;
+pub mod selector;
+pub mod shape;
+pub mod throughput;
+
+pub use config::{ParallelismConfig, Stage};
+pub use memory::{fit_sequences, rollout_memory, rollout_oom, train_memory_per_gpu};
+pub use selector::{Decision, ProfilePoint, RangeTable, Selector};
+pub use shape::ModelShape;
+pub use throughput::{decode_estimate, speedup_pct, DecodeEstimate, ThroughputCfg};

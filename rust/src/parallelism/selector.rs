@@ -1,0 +1,244 @@
+//! The **Parallelism Selector** — EARL's first contribution (paper §2).
+//!
+//! Offline, at the start of training, it profiles throughput under the
+//! candidate parallelism configurations across a grid of context
+//! lengths, and stores the argmax configuration per context range.
+//! Online, it monitors the average context length the model is
+//! generating (EMA over rollout batches); when the average crosses into
+//! a new range, it switches the configuration before the next Rollout
+//! stage. Configurations whose memory estimate OOMs at a context range
+//! are never eligible for it — this is what keeps TP4 from being chosen
+//! at (128 responses, 32K) in Fig. 3.
+//!
+//! The selector is generic over the configuration type `C`: the cluster
+//! simulation instantiates it with [`ParallelismConfig`] (TP degree),
+//! while the local PJRT runtime instantiates it with the context-bucket
+//! size (switching compiled executables — the single-device analogue of
+//! a parallelism switch).
+
+use crate::util::stats::Ema;
+
+/// One profiled row: measured throughput for (config, ctx).
+#[derive(Debug, Clone, Copy)]
+pub struct ProfilePoint<C> {
+    pub config: C,
+    pub ctx: usize,
+    /// Tokens/GPU/s (higher is better); `None` = OOM / infeasible.
+    pub tgs: Option<f64>,
+}
+
+/// The context-range → configuration table the selector consults.
+#[derive(Debug, Clone)]
+pub struct RangeTable<C> {
+    /// `(ctx_upper_bound, best_config, expected_tgs)`, sorted by bound;
+    /// the last entry's bound is the largest profiled ctx.
+    entries: Vec<(usize, C, f64)>,
+}
+
+impl<C: Copy + PartialEq + std::fmt::Debug> RangeTable<C> {
+    /// Build from profiling data: for each profiled ctx (ascending), pick
+    /// the feasible config with max TGS.
+    pub fn from_profile(points: &[ProfilePoint<C>]) -> Option<RangeTable<C>> {
+        let mut ctxs: Vec<usize> = points.iter().map(|p| p.ctx).collect();
+        ctxs.sort_unstable();
+        ctxs.dedup();
+        let mut entries = Vec::with_capacity(ctxs.len());
+        for ctx in ctxs {
+            let best = points
+                .iter()
+                .filter(|p| p.ctx == ctx)
+                .filter_map(|p| p.tgs.map(|t| (p.config, t)))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            match best {
+                Some((cfg, tgs)) => entries.push((ctx, cfg, tgs)),
+                None => return None, // nothing feasible at this ctx
+            }
+        }
+        if entries.is_empty() {
+            None
+        } else {
+            Some(RangeTable { entries })
+        }
+    }
+
+    /// Best config for a given live context length: the entry for the
+    /// smallest profiled bound >= ctx (or the largest bound if beyond).
+    pub fn lookup(&self, ctx: usize) -> (usize, C, f64) {
+        for &(bound, cfg, tgs) in &self.entries {
+            if ctx <= bound {
+                return (bound, cfg, tgs);
+            }
+        }
+        *self.entries.last().unwrap()
+    }
+
+    pub fn entries(&self) -> &[(usize, C, f64)] {
+        &self.entries
+    }
+}
+
+/// What the selector decided before a stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision<C> {
+    Keep(C),
+    Switch { from: C, to: C },
+}
+
+impl<C: Copy> Decision<C> {
+    pub fn config(&self) -> C {
+        match *self {
+            Decision::Keep(c) => c,
+            Decision::Switch { to, .. } => to,
+        }
+    }
+
+    pub fn switched(&self) -> bool {
+        matches!(self, Decision::Switch { .. })
+    }
+}
+
+/// The online selector (one per reconfigurable stage).
+#[derive(Debug, Clone)]
+pub struct Selector<C> {
+    table: RangeTable<C>,
+    monitor: Ema,
+    current: C,
+    /// Number of switches performed (metric).
+    pub switches: usize,
+}
+
+impl<C: Copy + PartialEq + std::fmt::Debug> Selector<C> {
+    /// `ema_alpha` weights recent rollout batches in the context monitor
+    /// (paper: "EARL monitors the averaged context length").
+    pub fn new(table: RangeTable<C>, ema_alpha: f64, initial_ctx: usize) -> Self {
+        let current = table.lookup(initial_ctx).1;
+        Selector { table, monitor: Ema::new(ema_alpha), current, switches: 0 }
+    }
+
+    pub fn current(&self) -> C {
+        self.current
+    }
+
+    pub fn observed_ctx(&self) -> Option<f64> {
+        self.monitor.get()
+    }
+
+    /// Feed the mean context length of the last rollout batch.
+    pub fn observe(&mut self, mean_ctx: f64) {
+        self.monitor.add(mean_ctx);
+    }
+
+    /// Called before the Rollout (or ExpPrep) stage: decide whether to
+    /// switch for the upcoming stage.
+    pub fn decide(&mut self) -> Decision<C> {
+        let ctx = match self.monitor.get() {
+            Some(c) => c.ceil() as usize,
+            None => return Decision::Keep(self.current),
+        };
+        let (_, best, _) = self.table.lookup(ctx);
+        if best == self.current {
+            Decision::Keep(self.current)
+        } else {
+            let from = self.current;
+            self.current = best;
+            self.switches += 1;
+            Decision::Switch { from, to: best }
+        }
+    }
+
+    pub fn table(&self) -> &RangeTable<C> {
+        &self.table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_tp48() -> RangeTable<usize> {
+        // TP4 best through 8K, TP8 best at 16K+ (the Fig. 3 outcome).
+        RangeTable::from_profile(&[
+            ProfilePoint { config: 4, ctx: 2048, tgs: Some(600.0) },
+            ProfilePoint { config: 8, ctx: 2048, tgs: Some(450.0) },
+            ProfilePoint { config: 4, ctx: 8192, tgs: Some(340.0) },
+            ProfilePoint { config: 8, ctx: 8192, tgs: Some(260.0) },
+            ProfilePoint { config: 4, ctx: 16384, tgs: Some(190.0) },
+            ProfilePoint { config: 8, ctx: 16384, tgs: Some(205.0) },
+            ProfilePoint { config: 4, ctx: 32768, tgs: None }, // OOM
+            ProfilePoint { config: 8, ctx: 32768, tgs: Some(140.0) },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn table_picks_argmax_per_range() {
+        let t = table_tp48();
+        assert_eq!(t.lookup(1000).1, 4);
+        assert_eq!(t.lookup(8192).1, 4);
+        assert_eq!(t.lookup(9000).1, 8);
+        assert_eq!(t.lookup(16384).1, 8);
+        assert_eq!(t.lookup(999_999).1, 8); // beyond grid → largest bound
+    }
+
+    #[test]
+    fn oom_configs_never_selected() {
+        let t = table_tp48();
+        // At 32K only TP8 was feasible.
+        assert_eq!(t.lookup(32768).1, 8);
+    }
+
+    #[test]
+    fn all_oom_at_some_ctx_fails_table() {
+        let r = RangeTable::from_profile(&[
+            ProfilePoint { config: 4usize, ctx: 1024, tgs: None },
+            ProfilePoint { config: 8usize, ctx: 1024, tgs: None },
+        ]);
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn selector_switches_as_context_grows() {
+        // Mirrors the paper's training dynamic: context grows over steps,
+        // the selector flips TP4 → TP8 exactly once, before a rollout.
+        let mut sel = Selector::new(table_tp48(), 0.5, 1024);
+        assert_eq!(sel.current(), 4);
+        let mut switch_step = None;
+        for (step, ctx) in
+            [1000.0, 2000.0, 4000.0, 9000.0, 15000.0, 20000.0, 30000.0]
+                .iter()
+                .enumerate()
+        {
+            sel.observe(*ctx);
+            let d = sel.decide();
+            if d.switched() {
+                assert!(switch_step.is_none(), "must switch exactly once");
+                switch_step = Some(step);
+                assert_eq!(d.config(), 8);
+            }
+        }
+        assert!(switch_step.is_some());
+        assert_eq!(sel.current(), 8);
+        assert_eq!(sel.switches, 1);
+    }
+
+    #[test]
+    fn ema_smooths_spikes() {
+        // One outlier batch must not trigger a switch at low alpha.
+        let mut sel = Selector::new(table_tp48(), 0.1, 1024);
+        for _ in 0..20 {
+            sel.observe(2000.0);
+            sel.decide();
+        }
+        sel.observe(32_000.0); // single spike
+        let d = sel.decide();
+        assert!(!d.switched(), "EMA should absorb a single spike");
+        assert_eq!(sel.current(), 4);
+    }
+
+    #[test]
+    fn no_observation_keeps_initial() {
+        let mut sel = Selector::new(table_tp48(), 0.5, 20_000);
+        assert_eq!(sel.current(), 8); // initialized from initial ctx
+        assert!(!sel.decide().switched());
+    }
+}

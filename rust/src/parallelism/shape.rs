@@ -1,0 +1,145 @@
+//! Transformer model shapes — the paper's evaluation models, described
+//! by the dimensions the memory/throughput models need.
+
+/// Decoder-only transformer shape (GQA-aware).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelShape {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+impl ModelShape {
+    /// Qwen2.5-72B-Instruct — the paper's §3.1 evaluation model.
+    pub fn qwen2_5_72b() -> ModelShape {
+        ModelShape {
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            kv_heads: 8,
+            head_dim: 128,
+            ffn: 29568,
+            vocab: 152064,
+        }
+    }
+
+    /// A 4B-class model — the paper's Fig. 1 industrial case study.
+    pub fn qwen_4b() -> ModelShape {
+        ModelShape {
+            layers: 36,
+            hidden: 2560,
+            heads: 20,
+            kv_heads: 4,
+            head_dim: 128,
+            ffn: 9728,
+            vocab: 151936,
+        }
+    }
+
+    /// Llama-3.1-70B — the paper's §1 memory example.
+    pub fn llama3_70b() -> ModelShape {
+        ModelShape {
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            kv_heads: 8,
+            head_dim: 128,
+            ffn: 28672,
+            vocab: 128256,
+        }
+    }
+
+    /// The local AOT model (preset "small") — for sanity cross-checks
+    /// between the simulator and the real runtime.
+    pub fn local_small() -> ModelShape {
+        ModelShape {
+            layers: 4,
+            hidden: 128,
+            heads: 4,
+            kv_heads: 4,
+            head_dim: 32,
+            ffn: 384,
+            vocab: 64,
+        }
+    }
+
+    /// Approximate parameter count from dimensions.
+    pub fn params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let kv_dim = (self.kv_heads * self.head_dim) as u64;
+        let q_dim = (self.heads * self.head_dim) as u64;
+        let attn = h * q_dim + 2 * h * kv_dim + q_dim * h;
+        let mlp = 3 * h * self.ffn as u64;
+        let norms = 2 * h;
+        let per_layer = attn + mlp + norms;
+        let embed = (self.vocab as u64) * h; // tied LM head
+        embed + self.layers as u64 * per_layer + h
+    }
+
+    /// Weight bytes at the given per-parameter width (bf16 = 2).
+    pub fn weight_bytes(&self, bytes_per_param: u64) -> u64 {
+        self.params() * bytes_per_param
+    }
+
+    /// KV-cache bytes per token (all layers, both K and V, bf16).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.layers * self.kv_heads * self.head_dim * 2) as u64
+    }
+
+    /// KV-cache bytes for one sequence at `ctx` tokens.
+    pub fn kv_bytes_per_seq(&self, ctx: usize) -> u64 {
+        self.kv_bytes_per_token() * ctx as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen72b_param_count_plausible() {
+        let p = ModelShape::qwen2_5_72b().params();
+        // Known ≈ 72.7e9.
+        assert!((p as f64) > 68e9 && (p as f64) < 76e9, "{p}");
+    }
+
+    #[test]
+    fn llama70b_param_count_plausible() {
+        let p = ModelShape::llama3_70b().params();
+        assert!((p as f64) > 66e9 && (p as f64) < 74e9, "{p}");
+    }
+
+    #[test]
+    fn qwen4b_param_count_plausible() {
+        let p = ModelShape::qwen_4b().params();
+        assert!((p as f64) > 2.5e9 && (p as f64) < 5.5e9, "{p}");
+    }
+
+    #[test]
+    fn kv_bytes_qwen72b() {
+        // 2 (K+V) × 80 layers × 8 kv_heads × 128 dim × 2 B = 327,680 B/token.
+        assert_eq!(ModelShape::qwen2_5_72b().kv_bytes_per_token(), 327_680);
+        // 10.7 GB per sequence at 32K.
+        let per_seq = ModelShape::qwen2_5_72b().kv_bytes_per_seq(32_768);
+        assert!((per_seq as f64 - 10.7e9).abs() / 10.7e9 < 0.01);
+    }
+
+    #[test]
+    fn weight_bytes_bf16() {
+        let s = ModelShape::qwen2_5_72b();
+        assert_eq!(s.weight_bytes(2), s.params() * 2);
+        // ≈ 145 GB.
+        assert!((s.weight_bytes(2) as f64) > 135e9);
+    }
+
+    #[test]
+    fn local_small_matches_manifest_scale() {
+        let p = ModelShape::local_small().params() as f64;
+        // the AOT "small" preset is ~0.86M params
+        assert!(p > 0.5e6 && p < 1.5e6, "{p}");
+    }
+}

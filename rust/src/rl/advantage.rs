@@ -1,0 +1,170 @@
+//! Advantage estimation. The paper's customized agentic algorithm uses
+//! REINFORCE (§3.1, citing REINFORCE++): the episode's (optionally
+//! discounted) return, whitened across the batch, broadcast over the
+//! episode's generated tokens.
+
+use crate::rl::episode::ExperienceBatch;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdvantageCfg {
+    /// Per-turn discount applied to the terminal reward (1.0 = none).
+    pub gamma: f32,
+    /// Whiten advantages across the batch (zero mean, unit variance).
+    pub whiten: bool,
+}
+
+impl Default for AdvantageCfg {
+    fn default() -> Self {
+        AdvantageCfg { gamma: 1.0, whiten: true }
+    }
+}
+
+/// Discounted return per turn for a terminal-reward episode of `n_turns`
+/// turns: `R_t = gamma^(n_turns-1-t) * reward`.
+pub fn discounted_returns(reward: f32, n_turns: usize, gamma: f32) -> Vec<f32> {
+    (0..n_turns)
+        .map(|t| gamma.powi((n_turns - 1 - t) as i32) * reward)
+        .collect()
+}
+
+/// In-place whitening to zero mean / unit std. Degenerate (constant)
+/// inputs become all-zero rather than NaN.
+pub fn whiten(xs: &mut [f32]) {
+    if xs.len() < 2 {
+        for x in xs.iter_mut() {
+            *x = 0.0;
+        }
+        return;
+    }
+    let n = xs.len() as f32;
+    let mean: f32 = xs.iter().sum::<f32>() / n;
+    let var: f32 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n;
+    let std = var.sqrt();
+    if std < 1e-8 {
+        for x in xs.iter_mut() {
+            *x = 0.0;
+        }
+    } else {
+        for x in xs.iter_mut() {
+            *x = (*x - mean) / std;
+        }
+    }
+}
+
+/// Compute per-episode REINFORCE advantages for a batch and store them in
+/// `batch.advantages`. Returns the raw (pre-whitening) mean return.
+pub fn reinforce_advantages(batch: &mut ExperienceBatch, cfg: AdvantageCfg) -> f64 {
+    let mut adv: Vec<f32> = batch
+        .episodes
+        .iter()
+        .map(|e| {
+            // Terminal reward attributed to the whole episode; with
+            // gamma < 1 earlier turns get discounted credit, but the
+            // advantage is per-episode (REINFORCE), so we use the return
+            // at turn 0 scaled by episode length normalization.
+            if e.n_turns() == 0 {
+                0.0
+            } else {
+                cfg.gamma.powi((e.n_turns() - 1) as i32) * e.reward
+            }
+        })
+        .collect();
+    let raw_mean = adv.iter().map(|&a| a as f64).sum::<f64>()
+        / adv.len().max(1) as f64;
+    if cfg.whiten {
+        whiten(&mut adv);
+    }
+    batch.advantages = adv;
+    raw_mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::episode::{Episode, EpisodeStatus, Turn};
+    use crate::tokenizer as tok;
+
+    fn ep(n_turns: usize, reward: f32) -> Episode {
+        let mut tokens = vec![tok::BOS];
+        let mut mask = vec![0.0];
+        let mut turns = Vec::new();
+        for _ in 0..n_turns {
+            let prompt_start = tokens.len();
+            tokens.extend([tok::ENV, tok::CELL_EMPTY, tok::SEP, tok::AGENT]);
+            mask.extend([0.0; 4]);
+            let response_start = tokens.len();
+            tokens.push(tok::move_token(0));
+            mask.push(1.0);
+            turns.push(Turn {
+                prompt_start,
+                response_start,
+                response_end: tokens.len(),
+                action: Some(0),
+            });
+        }
+        Episode {
+            tokens,
+            action_mask: mask,
+            turns,
+            status: EpisodeStatus::Finished,
+            reward,
+        }
+    }
+
+    #[test]
+    fn discounted_returns_shape() {
+        let r = discounted_returns(1.0, 3, 0.9);
+        assert_eq!(r.len(), 3);
+        assert!((r[2] - 1.0).abs() < 1e-6);
+        assert!((r[1] - 0.9).abs() < 1e-6);
+        assert!((r[0] - 0.81).abs() < 1e-6);
+    }
+
+    #[test]
+    fn whiten_normalizes() {
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0];
+        whiten(&mut xs);
+        let mean: f32 = xs.iter().sum::<f32>() / 4.0;
+        let var: f32 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn whiten_constant_is_zero() {
+        let mut xs = vec![5.0; 8];
+        whiten(&mut xs);
+        assert!(xs.iter().all(|&x| x == 0.0));
+        let mut one = vec![3.0];
+        whiten(&mut one);
+        assert_eq!(one, vec![0.0]);
+    }
+
+    #[test]
+    fn advantages_ordering_preserved() {
+        // Winner must end with a larger advantage than loser after
+        // whitening.
+        let mut b = ExperienceBatch::new(vec![
+            ep(2, 1.0),
+            ep(2, -1.0),
+            ep(2, 0.0),
+            ep(2, 1.0),
+        ]);
+        let raw = reinforce_advantages(&mut b, AdvantageCfg::default());
+        assert!((raw - 0.25).abs() < 1e-9);
+        assert_eq!(b.advantages.len(), 4);
+        assert!(b.advantages[0] > b.advantages[2]);
+        assert!(b.advantages[2] > b.advantages[1]);
+        assert_eq!(b.advantages[0], b.advantages[3]);
+    }
+
+    #[test]
+    fn gamma_discounts_long_episodes() {
+        let mut b = ExperienceBatch::new(vec![ep(1, 1.0), ep(3, 1.0)]);
+        let cfg = AdvantageCfg { gamma: 0.9, whiten: false };
+        reinforce_advantages(&mut b, cfg);
+        assert!(b.advantages[0] > b.advantages[1]);
+        assert!((b.advantages[0] - 1.0).abs() < 1e-6);
+        assert!((b.advantages[1] - 0.81).abs() < 1e-6);
+    }
+}

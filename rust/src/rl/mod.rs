@@ -1,0 +1,9 @@
+//! RL algorithm layer: episode records, REINFORCE advantage estimation
+//! (the paper's §3.1 algorithm choice), return computation, and the
+//! experience buffer handed between stages by the Data Dispatcher.
+
+pub mod advantage;
+pub mod episode;
+
+pub use advantage::{discounted_returns, reinforce_advantages, whiten, AdvantageCfg};
+pub use episode::{Episode, EpisodeStatus, ExperienceBatch, Turn};

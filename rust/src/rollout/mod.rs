@@ -1,0 +1,423 @@
+//! Rollout engine: batched multi-turn agent↔environment interaction over
+//! the PJRT policy, with per-turn / per-episode context accounting —
+//! the stage whose context growth drives everything EARL optimizes.
+//!
+//! The engine plays `batch` episodes in lockstep. Each agent turn appends
+//! `ENV <board> SEP AGENT` to every live context, then decodes token by
+//! token (one batched `logits` execution per decode position — there is
+//! no KV cache in the AOT artifacts, so each position is a fresh
+//! full-sequence forward, exactly the workload shape whose cost explodes
+//! with context and motivates bucket/parallelism switching).
+//!
+//! Context-limit behaviour is the experiment knob of paper Fig. 1:
+//! * [`LimitPolicy::Hard`] — truncate the episode when the context hits
+//!   a fixed budget (the baseline that collapses);
+//! * [`LimitPolicy::Buckets`] — let the live bucket (selected by the
+//!   Parallelism Selector) grow up to the largest compiled bucket.
+
+pub mod sampler;
+
+pub use sampler::{sample_token, SamplerCfg};
+
+use anyhow::Result;
+
+use crate::envs::{Game, Opponent, Outcome, Side};
+use crate::rl::episode::{Episode, EpisodeStatus, Turn};
+use crate::runtime::{Engine, ModelState, TokenBatch};
+use crate::tokenizer as tok;
+use crate::util::rng::Pcg64;
+
+/// Context-limit policy for the rollout stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LimitPolicy {
+    /// Fixed budget: episodes exceeding it are truncated (paper Fig. 1's
+    /// baseline with `max_context = 8192`).
+    Hard(usize),
+    /// Dynamic: grow through the compiled context buckets; truncate only
+    /// past the largest (EARL behaviour).
+    Buckets,
+}
+
+#[derive(Debug, Clone)]
+pub struct RolloutCfg {
+    pub limit: LimitPolicy,
+    /// Max generated tokens per turn (reasoning + the move token).
+    pub max_response_tokens: usize,
+    pub sampler: SamplerCfg,
+    /// Penalty reward for truncated / illegal episodes.
+    pub fail_reward: f32,
+    pub seed: u64,
+}
+
+impl Default for RolloutCfg {
+    fn default() -> Self {
+        RolloutCfg {
+            limit: LimitPolicy::Buckets,
+            max_response_tokens: 4,
+            sampler: SamplerCfg::default(),
+            fail_reward: -1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregate statistics of one rollout batch (the selector's monitoring
+/// input and the TGS metric of paper §3.1).
+#[derive(Debug, Clone, Default)]
+pub struct RolloutStats {
+    pub episodes: usize,
+    pub mean_reward: f64,
+    pub mean_episode_context: f64,
+    pub mean_turn_context: f64,
+    pub mean_response_len: f64,
+    pub truncated: usize,
+    pub illegal: usize,
+    pub generated_tokens: usize,
+    pub decode_seconds: f64,
+    /// Decode-phase tokens-per-second (per-"GPU": single device here).
+    pub tgs: f64,
+    /// Largest bucket used during decode.
+    pub max_bucket_used: usize,
+}
+
+/// One live episode slot in the lockstep batch.
+struct Slot {
+    game: Box<dyn Game>,
+    tokens: Vec<i32>,
+    mask: Vec<f32>,
+    turns: Vec<Turn>,
+    status: Option<EpisodeStatus>,
+    reward: f32,
+    /// Generation state within the current turn.
+    response_start: usize,
+    prompt_start: usize,
+    generating: bool,
+}
+
+impl Slot {
+    fn live(&self) -> bool {
+        self.status.is_none()
+    }
+}
+
+/// Batched rollout driver.
+pub struct RolloutEngine<'a> {
+    engine: &'a Engine,
+    cfg: RolloutCfg,
+    rng: Pcg64,
+}
+
+impl<'a> RolloutEngine<'a> {
+    pub fn new(engine: &'a Engine, cfg: RolloutCfg) -> Self {
+        let rng = Pcg64::new(cfg.seed);
+        RolloutEngine { engine, cfg, rng }
+    }
+
+    /// Effective context budget: the hard limit, or the largest compiled
+    /// bucket under the dynamic policy.
+    pub fn context_budget(&self) -> usize {
+        match self.cfg.limit {
+            LimitPolicy::Hard(n) => n.min(self.engine.manifest.max_bucket()),
+            LimitPolicy::Buckets => self.engine.manifest.max_bucket(),
+        }
+    }
+
+    /// Play one batch of episodes with the current policy parameters.
+    ///
+    /// `make_game`/`make_opponent` are factories so every slot gets fresh
+    /// state; the opponent RNG is forked per slot for determinism under
+    /// any scheduling.
+    pub fn run_batch(
+        &mut self,
+        state: &ModelState,
+        make_game: &dyn Fn() -> Box<dyn Game>,
+        make_opponent: &dyn Fn() -> Box<dyn Opponent>,
+    ) -> Result<(Vec<Episode>, RolloutStats)> {
+        let batch = self.engine.manifest.batch;
+        let budget = self.context_budget();
+
+        let mut opponents: Vec<Box<dyn Opponent>> =
+            (0..batch).map(|_| make_opponent()).collect();
+        let mut opp_rngs: Vec<Pcg64> =
+            (0..batch).map(|i| self.rng.fork(i as u64)).collect();
+
+        let mut slots: Vec<Slot> = (0..batch)
+            .map(|_| {
+                let mut game = make_game();
+                game.reset();
+                Slot {
+                    game,
+                    tokens: vec![tok::BOS],
+                    mask: vec![0.0],
+                    turns: Vec::new(),
+                    status: None,
+                    reward: 0.0,
+                    response_start: 0,
+                    prompt_start: 0,
+                    generating: false,
+                }
+            })
+            .collect();
+
+        let mut stats = RolloutStats::default();
+        let decode_t0 = std::time::Instant::now();
+
+        loop {
+            // 1. Open a new agent turn on every live, non-generating slot.
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if !slot.live() || slot.generating {
+                    continue;
+                }
+                debug_assert_eq!(slot.game.to_move(), Side::X);
+                Self::open_turn(slot, budget, self.cfg.fail_reward)?;
+                if slot.live() {
+                    slot.generating = true;
+                }
+                let _ = i;
+            }
+
+            if slots.iter().all(|s| !s.live()) {
+                break;
+            }
+
+            // 2. Batched decode: one logits() execution per position until
+            //    every generating slot has produced its move.
+            while slots.iter().any(|s| s.live() && s.generating) {
+                let max_len = slots
+                    .iter()
+                    .filter(|s| s.live() && s.generating)
+                    .map(|s| s.tokens.len())
+                    .max()
+                    .unwrap();
+                // Next position must fit the bucket.
+                let bucket = match self.engine.manifest.bucket_for(max_len) {
+                    Some(b) => b,
+                    None => {
+                        // Shouldn't happen: budget <= max bucket, and slots
+                        // at budget are truncated in step 3.
+                        self.engine.manifest.max_bucket()
+                    }
+                };
+                stats.max_bucket_used = stats.max_bucket_used.max(bucket);
+
+                let mut tb = TokenBatch::new(batch, bucket);
+                for (i, slot) in slots.iter().enumerate() {
+                    if slot.live() && slot.generating {
+                        let n = slot.tokens.len().min(bucket);
+                        tb.row_mut(i)[..n].copy_from_slice(&slot.tokens[..n]);
+                    }
+                }
+                let logits = self.engine.logits(&state.params, &tb)?;
+                let vocab = self.engine.manifest.model.vocab;
+
+                for (i, slot) in slots.iter_mut().enumerate() {
+                    if !(slot.live() && slot.generating) {
+                        continue;
+                    }
+                    let pos = slot.tokens.len() - 1;
+                    let base = (i * bucket + pos) * vocab;
+                    let row = &logits[base..base + vocab];
+
+                    let legal = slot.game.legal_actions();
+                    let resp_len = slot.tokens.len() - slot.response_start;
+                    let must_move =
+                        resp_len + 1 >= self.cfg.max_response_tokens
+                            || slot.tokens.len() + 2 > budget;
+                    let token = sample_token(
+                        row,
+                        &legal,
+                        self.cfg.sampler,
+                        must_move,
+                        &mut self.rng,
+                    );
+                    slot.tokens.push(token);
+                    slot.mask.push(1.0);
+                    stats.generated_tokens += 1;
+
+                    if let Some(action) = tok::decode_move(token) {
+                        slot.generating = false;
+                        Self::close_turn(slot, Some(action));
+                        if slot.game.is_legal(action) {
+                            slot.game.play(action);
+                            Self::resolve_after_agent_move(
+                                slot,
+                                &mut *opponents[i],
+                                &mut opp_rngs[i],
+                            );
+                        } else {
+                            Self::finish(
+                                slot,
+                                EpisodeStatus::Illegal,
+                                self.cfg.fail_reward,
+                            );
+                        }
+                    } else if !tok::is_think(token) {
+                        // Unconstrained sampling picked a non-action token.
+                        slot.generating = false;
+                        Self::close_turn(slot, None);
+                        Self::finish(
+                            slot,
+                            EpisodeStatus::Illegal,
+                            self.cfg.fail_reward,
+                        );
+                    } else if slot.tokens.len() >= budget {
+                        // Ran out of context mid-reasoning: the truncated
+                        // "low-quality data" of paper Fig. 1b.
+                        slot.generating = false;
+                        Self::close_turn(slot, None);
+                        Self::finish(
+                            slot,
+                            EpisodeStatus::Truncated,
+                            self.cfg.fail_reward,
+                        );
+                    }
+                }
+            }
+        }
+
+        stats.decode_seconds = decode_t0.elapsed().as_secs_f64();
+        stats.tgs = if stats.decode_seconds > 0.0 {
+            stats.generated_tokens as f64 / stats.decode_seconds
+        } else {
+            0.0
+        };
+
+        // 3. Package episodes.
+        let episodes: Vec<Episode> = slots
+            .into_iter()
+            .map(|s| Episode {
+                tokens: s.tokens,
+                action_mask: s.mask,
+                turns: s.turns,
+                status: s.status.unwrap(),
+                reward: s.reward,
+            })
+            .collect();
+
+        stats.episodes = episodes.len();
+        stats.mean_reward = episodes.iter().map(|e| e.reward as f64).sum::<f64>()
+            / episodes.len() as f64;
+        stats.mean_episode_context = episodes
+            .iter()
+            .map(|e| e.context_len() as f64)
+            .sum::<f64>()
+            / episodes.len() as f64;
+        let all_turns: Vec<&Turn> =
+            episodes.iter().flat_map(|e| e.turns.iter()).collect();
+        if !all_turns.is_empty() {
+            stats.mean_turn_context = all_turns
+                .iter()
+                .map(|t| t.context_len() as f64)
+                .sum::<f64>()
+                / all_turns.len() as f64;
+            stats.mean_response_len = all_turns
+                .iter()
+                .map(|t| t.response_len() as f64)
+                .sum::<f64>()
+                / all_turns.len() as f64;
+        }
+        stats.truncated = episodes
+            .iter()
+            .filter(|e| e.status == EpisodeStatus::Truncated)
+            .count();
+        stats.illegal = episodes
+            .iter()
+            .filter(|e| e.status == EpisodeStatus::Illegal)
+            .count();
+
+        for e in &episodes {
+            debug_assert!(e.validate().is_ok(), "{:?}", e.validate());
+        }
+        Ok((episodes, stats))
+    }
+
+    /// Append `ENV <board> SEP AGENT` and mark the turn open. If even the
+    /// prompt does not fit the budget, truncate immediately.
+    fn open_turn(slot: &mut Slot, budget: usize, fail_reward: f32) -> Result<()> {
+        let prompt_start = slot.tokens.len();
+        let mut prompt = vec![tok::ENV];
+        slot.game.board_tokens(&mut prompt);
+        prompt.push(tok::SEP);
+        prompt.push(tok::AGENT);
+
+        // Prompt + at least one generated token must fit.
+        if slot.tokens.len() + prompt.len() + 1 > budget {
+            slot.status = Some(EpisodeStatus::Truncated);
+            slot.reward = fail_reward;
+            return Ok(());
+        }
+        slot.tokens.extend_from_slice(&prompt);
+        slot.mask.extend(std::iter::repeat(0.0).take(prompt.len()));
+        slot.prompt_start = prompt_start;
+        slot.response_start = slot.tokens.len();
+        Ok(())
+    }
+
+    fn close_turn(slot: &mut Slot, action: Option<usize>) {
+        slot.turns.push(Turn {
+            prompt_start: slot.prompt_start,
+            response_start: slot.response_start,
+            response_end: slot.tokens.len(),
+            action,
+        });
+    }
+
+    /// After a legal agent move: check terminal, else let the opponent
+    /// reply, check terminal again.
+    fn resolve_after_agent_move(
+        slot: &mut Slot,
+        opponent: &mut dyn Opponent,
+        rng: &mut Pcg64,
+    ) {
+        if let Some(out) = slot.game.outcome() {
+            Self::finish_game(slot, out);
+            return;
+        }
+        let action = opponent.choose(slot.game.as_ref(), rng);
+        slot.game.play(action);
+        if let Some(out) = slot.game.outcome() {
+            Self::finish_game(slot, out);
+        }
+    }
+
+    fn finish_game(slot: &mut Slot, out: Outcome) {
+        let result_tok = match out {
+            Outcome::XWins => tok::RES_WIN,
+            Outcome::OWins => tok::RES_LOSE,
+            Outcome::Draw => tok::RES_DRAW,
+        };
+        slot.tokens.push(result_tok);
+        slot.mask.push(0.0);
+        slot.tokens.push(tok::EOS);
+        slot.mask.push(0.0);
+        slot.status = Some(EpisodeStatus::Finished);
+        slot.reward = out.agent_reward();
+    }
+
+    fn finish(slot: &mut Slot, status: EpisodeStatus, reward: f32) {
+        let result_tok = match status {
+            EpisodeStatus::Illegal => tok::RES_ILLEGAL,
+            EpisodeStatus::Truncated => tok::RES_TRUNCATED,
+            EpisodeStatus::Finished => unreachable!(),
+        };
+        if slot.tokens.len() < usize::MAX {
+            slot.tokens.push(result_tok);
+            slot.mask.push(0.0);
+        }
+        slot.status = Some(status);
+        slot.reward = reward;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cfg_sane() {
+        let cfg = RolloutCfg::default();
+        assert!(cfg.max_response_tokens >= 2);
+        assert_eq!(cfg.limit, LimitPolicy::Buckets);
+        assert!(cfg.fail_reward < 0.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Token sampling for the rollout decode loop: temperature softmax over a
+//! constrained candidate set (legal move tokens + optional "reasoning"
+//! tokens), matching how agentic frameworks grammar-constrain tool calls.
+
+use crate::tokenizer as tok;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerCfg {
+    pub temperature: f32,
+    /// Greedy argmax instead of sampling (evaluation rollouts).
+    pub greedy: bool,
+    /// Permit free "reasoning" tokens before the move token.
+    pub allow_think: bool,
+    /// If false, sample from the full vocabulary (illegal outputs then
+    /// terminate the episode with a penalty).
+    pub constrain: bool,
+}
+
+impl Default for SamplerCfg {
+    fn default() -> Self {
+        SamplerCfg {
+            temperature: 1.0,
+            greedy: false,
+            allow_think: true,
+            constrain: true,
+        }
+    }
+}
+
+/// Candidate token set for one decode position.
+pub fn candidates(
+    legal_actions: &[usize],
+    cfg: SamplerCfg,
+    must_move: bool,
+) -> Vec<i32> {
+    let mut c: Vec<i32> =
+        legal_actions.iter().map(|&a| tok::move_token(a)).collect();
+    if cfg.allow_think && !must_move {
+        c.extend(tok::THINK_BASE..tok::VOCAB as i32);
+    }
+    c
+}
+
+/// Sample the next token given the `vocab`-sized logits slice for the
+/// current position.
+pub fn sample_token(
+    logits: &[f32],
+    legal_actions: &[usize],
+    cfg: SamplerCfg,
+    must_move: bool,
+    rng: &mut Pcg64,
+) -> i32 {
+    debug_assert_eq!(logits.len(), tok::VOCAB);
+    let cand: Vec<i32> = if cfg.constrain {
+        candidates(legal_actions, cfg, must_move)
+    } else {
+        (0..tok::VOCAB as i32).collect()
+    };
+    assert!(!cand.is_empty(), "no candidate tokens");
+
+    if cfg.greedy {
+        return *cand
+            .iter()
+            .max_by(|&&a, &&b| {
+                logits[a as usize]
+                    .partial_cmp(&logits[b as usize])
+                    .unwrap()
+            })
+            .unwrap();
+    }
+
+    let temp = cfg.temperature.max(1e-4);
+    let max = cand
+        .iter()
+        .map(|&t| logits[t as usize])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = cand
+        .iter()
+        .map(|&t| (((logits[t as usize] - max) / temp) as f64).exp())
+        .collect();
+    cand[rng.categorical(&weights)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_with(hot: i32, val: f32) -> Vec<f32> {
+        let mut l = vec![0.0f32; tok::VOCAB];
+        l[hot as usize] = val;
+        l
+    }
+
+    #[test]
+    fn greedy_picks_hottest_candidate() {
+        let cfg = SamplerCfg { greedy: true, ..Default::default() };
+        let mut rng = Pcg64::new(0);
+        let logits = logits_with(tok::move_token(3), 5.0);
+        let t = sample_token(&logits, &[1, 3, 5], cfg, false, &mut rng);
+        assert_eq!(t, tok::move_token(3));
+    }
+
+    #[test]
+    fn greedy_ignores_illegal_hot_token() {
+        let cfg = SamplerCfg { greedy: true, allow_think: false, ..Default::default() };
+        let mut rng = Pcg64::new(0);
+        // Hottest is move 7, but only 1 and 2 are legal.
+        let mut logits = logits_with(tok::move_token(7), 9.0);
+        logits[tok::move_token(2) as usize] = 1.0;
+        let t = sample_token(&logits, &[1, 2], cfg, false, &mut rng);
+        assert_eq!(t, tok::move_token(2));
+    }
+
+    #[test]
+    fn must_move_excludes_think() {
+        let cfg = SamplerCfg { greedy: true, ..Default::default() };
+        let mut rng = Pcg64::new(0);
+        // Think token is hottest, but must_move forces a move token.
+        let logits = logits_with(tok::THINK_BASE + 2, 9.0);
+        let t = sample_token(&logits, &[4], cfg, true, &mut rng);
+        assert_eq!(t, tok::move_token(4));
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let cfg = SamplerCfg { allow_think: false, ..Default::default() };
+        let mut rng = Pcg64::new(7);
+        let mut logits = vec![0.0f32; tok::VOCAB];
+        logits[tok::move_token(0) as usize] = 2.0;
+        logits[tok::move_token(1) as usize] = 0.0;
+        let mut hits0 = 0;
+        for _ in 0..2000 {
+            if sample_token(&logits, &[0, 1], cfg, false, &mut rng)
+                == tok::move_token(0)
+            {
+                hits0 += 1;
+            }
+        }
+        // P(0) = e^2/(e^2+1) ≈ 0.88
+        let p = hits0 as f64 / 2000.0;
+        assert!((p - 0.88).abs() < 0.05, "p={p}");
+    }
+
+    #[test]
+    fn high_temperature_flattens() {
+        let cfg = SamplerCfg {
+            temperature: 100.0,
+            allow_think: false,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(8);
+        let mut logits = vec![0.0f32; tok::VOCAB];
+        logits[tok::move_token(0) as usize] = 2.0;
+        let mut hits0 = 0;
+        for _ in 0..2000 {
+            if sample_token(&logits, &[0, 1], cfg, false, &mut rng)
+                == tok::move_token(0)
+            {
+                hits0 += 1;
+            }
+        }
+        let p = hits0 as f64 / 2000.0;
+        assert!((p - 0.5).abs() < 0.05, "p={p}");
+    }
+
+    #[test]
+    fn unconstrained_can_pick_anything() {
+        let cfg = SamplerCfg { constrain: false, greedy: true, ..Default::default() };
+        let mut rng = Pcg64::new(9);
+        let logits = logits_with(tok::EOS, 9.0); // EOS is never a candidate when constrained
+        let t = sample_token(&logits, &[0], cfg, false, &mut rng);
+        assert_eq!(t, tok::EOS);
+    }
+
+    #[test]
+    fn candidate_set_contents() {
+        let cfg = SamplerCfg::default();
+        let c = candidates(&[2, 5], cfg, false);
+        assert!(c.contains(&tok::move_token(2)));
+        assert!(c.contains(&tok::move_token(5)));
+        assert!(c.contains(&tok::THINK_BASE));
+        let c2 = candidates(&[2], cfg, true);
+        assert_eq!(c2, vec![tok::move_token(2)]);
+    }
+}

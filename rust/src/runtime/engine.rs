@@ -1,0 +1,337 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, and exposes typed entry points for the coordinator's
+//! hot path. Executables are compiled lazily and cached per
+//! (function, context bucket) — switching buckets at runtime is the
+//! executable-level analogue of the paper's dynamic parallelism switch.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::manifest::{Func, Manifest};
+use crate::runtime::state::ModelState;
+
+/// A `(batch, seq)` i32 token matrix, padded to a bucket width.
+#[derive(Debug, Clone)]
+pub struct TokenBatch {
+    pub data: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TokenBatch {
+    pub fn new(batch: usize, seq: usize) -> Self {
+        TokenBatch { data: vec![0; batch * seq], batch, seq }
+    }
+
+    pub fn row_mut(&mut self, b: usize) -> &mut [i32] {
+        &mut self.data[b * self.seq..(b + 1) * self.seq]
+    }
+
+    pub fn row(&self, b: usize) -> &[i32] {
+        &self.data[b * self.seq..(b + 1) * self.seq]
+    }
+
+    fn literal(&self) -> Result<Literal> {
+        Ok(Literal::vec1(&self.data)
+            .reshape(&[self.batch as i64, self.seq as i64])?)
+    }
+}
+
+/// A `(batch, seq)` f32 matrix (masks, advantages, ref logprobs).
+#[derive(Debug, Clone)]
+pub struct F32Batch {
+    pub data: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl F32Batch {
+    pub fn new(batch: usize, seq: usize) -> Self {
+        F32Batch { data: vec![0.0; batch * seq], batch, seq }
+    }
+
+    pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
+        &mut self.data[b * self.seq..(b + 1) * self.seq]
+    }
+
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.data[b * self.seq..(b + 1) * self.seq]
+    }
+
+    fn literal(&self) -> Result<Literal> {
+        Ok(Literal::vec1(&self.data)
+            .reshape(&[self.batch as i64, self.seq as i64])?)
+    }
+}
+
+/// Training hyper-parameters fed to the fused train_step artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainHp {
+    pub lr: f32,
+    pub ent_coef: f32,
+    pub kl_coef: f32,
+}
+
+impl Default for TrainHp {
+    fn default() -> Self {
+        TrainHp { lr: 3e-4, ent_coef: 0.01, kl_coef: 0.05 }
+    }
+}
+
+/// Scalars returned by one train step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub pg: f32,
+    pub kl: f32,
+    pub entropy: f32,
+}
+
+/// Inputs to one train step (already padded to a bucket).
+pub struct TrainBatch {
+    pub tokens: TokenBatch,
+    pub mask: F32Batch,
+    pub advantages: F32Batch,
+    pub ref_logprobs: F32Batch,
+}
+
+/// Timing of a single artifact execution (fed to the metrics layer and to
+/// the Parallelism Selector's profiling pass).
+#[derive(Debug, Clone, Copy)]
+pub struct ExecTiming {
+    pub func: Func,
+    pub bucket: usize,
+    pub seconds: f64,
+}
+
+/// The PJRT engine. One per process; `Send` but used single-threaded from
+/// the coordinator (a single simulated "device").
+pub struct Engine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    cache: Mutex<HashMap<(Func, usize), PjRtLoadedExecutable>>,
+    timings: Mutex<Vec<ExecTiming>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory (compiles lazily).
+    pub fn load(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            timings: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for (func, bucket).
+    fn executable(&self, func: Func, bucket: usize) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(&(func, bucket)) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .artifact(func, bucket)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for {} at bucket {bucket} \
+                     (available: {:?})",
+                    func.name(),
+                    self.manifest.buckets
+                )
+            })?
+            .clone();
+        let path = self.manifest.artifact_path(&entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        eprintln!(
+            "[engine] compiled {} t={bucket} in {:.2}s",
+            func.name(),
+            t0.elapsed().as_secs_f64()
+        );
+        cache.insert((func, bucket), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile every artifact in the manifest (used by `earl
+    /// profile` so the selector's throughput table excludes compile time).
+    pub fn warmup(&self) -> Result<()> {
+        let entries: Vec<_> = self
+            .manifest
+            .artifacts()
+            .map(|a| (a.func, a.bucket))
+            .collect();
+        for (f, b) in entries {
+            self.executable(f, b)?;
+        }
+        Ok(())
+    }
+
+    fn run(&self, func: Func, bucket: usize, args: &[&Literal]) -> Result<Vec<Literal>> {
+        self.executable(func, bucket)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(&(func, bucket)).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e}", func.name()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.timings
+            .lock()
+            .unwrap()
+            .push(ExecTiming { func, bucket, seconds: secs });
+        // All artifacts are lowered with return_tuple=True.
+        lit.to_tuple().map_err(|e| anyhow!("untupling: {e}"))
+    }
+
+    /// Drain accumulated execution timings.
+    pub fn take_timings(&self) -> Vec<ExecTiming> {
+        std::mem::take(&mut self.timings.lock().unwrap())
+    }
+
+    fn check_batch(&self, b: usize, t: usize, func: Func) -> Result<()> {
+        if b != self.manifest.batch {
+            bail!(
+                "{}: batch {b} != compiled batch {}",
+                func.name(),
+                self.manifest.batch
+            );
+        }
+        if !self.manifest.buckets.contains(&t) {
+            bail!(
+                "{}: seq {t} is not a compiled bucket {:?}",
+                func.name(),
+                self.manifest.buckets
+            );
+        }
+        Ok(())
+    }
+
+    /// Full-sequence logits: returns `(batch, seq, vocab)` flattened.
+    pub fn logits(&self, params: &[Literal], tokens: &TokenBatch) -> Result<Vec<f32>> {
+        self.check_batch(tokens.batch, tokens.seq, Func::Logits)?;
+        let tok = tokens.literal()?;
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&tok);
+        let out = self.run(Func::Logits, tokens.seq, &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Per-token logprobs: returns `(batch, seq)` flattened.
+    pub fn logprobs(&self, params: &[Literal], tokens: &TokenBatch) -> Result<Vec<f32>> {
+        self.check_batch(tokens.batch, tokens.seq, Func::Logprobs)?;
+        let tok = tokens.literal()?;
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&tok);
+        let out = self.run(Func::Logprobs, tokens.seq, &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// One fused REINFORCE/Adam step; updates `state` in place.
+    pub fn train_step(
+        &self,
+        state: &mut ModelState,
+        batch: &TrainBatch,
+        hp: TrainHp,
+    ) -> Result<TrainStats> {
+        let t = batch.tokens.seq;
+        self.check_batch(batch.tokens.batch, t, Func::TrainStep)?;
+        let n = self.manifest.param_spec.len();
+
+        let tok = batch.tokens.literal()?;
+        let mask = batch.mask.literal()?;
+        let adv = batch.advantages.literal()?;
+        let ref_lp = batch.ref_logprobs.literal()?;
+        let step = Literal::scalar((state.step + 1) as f32);
+        let lr = Literal::scalar(hp.lr);
+        let ent = Literal::scalar(hp.ent_coef);
+        let kl = Literal::scalar(hp.kl_coef);
+
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * n + 8);
+        args.extend(state.params.iter());
+        args.extend(state.adam_m.iter());
+        args.extend(state.adam_v.iter());
+        args.extend([&tok, &mask, &adv, &ref_lp, &step, &lr, &ent, &kl]);
+
+        let mut out = self.run(Func::TrainStep, t, &args)?;
+        if out.len() != 3 * n + 4 {
+            bail!(
+                "train_step returned {} tensors, expected {}",
+                out.len(),
+                3 * n + 4
+            );
+        }
+        let entropy = out.pop().unwrap().get_first_element::<f32>()?;
+        let kl_v = out.pop().unwrap().get_first_element::<f32>()?;
+        let pg = out.pop().unwrap().get_first_element::<f32>()?;
+        let loss = out.pop().unwrap().get_first_element::<f32>()?;
+
+        let adam_v: Vec<Literal> = out.split_off(2 * n);
+        let adam_m: Vec<Literal> = out.split_off(n);
+        state.params = out;
+        state.adam_m = adam_m;
+        state.adam_v = adam_v;
+        state.step += 1;
+
+        let stats = TrainStats { loss, pg, kl: kl_v, entropy };
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {}: {stats:?}", state.step);
+        }
+        Ok(stats)
+    }
+
+    /// Load initial model state from the manifest blob.
+    pub fn initial_state(&self) -> Result<ModelState> {
+        ModelState::load_initial(&self.manifest)
+            .context("loading initial model state")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_batch_rows() {
+        let mut tb = TokenBatch::new(2, 4);
+        tb.row_mut(1).copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(tb.row(0), &[0, 0, 0, 0]);
+        assert_eq!(tb.row(1), &[1, 2, 3, 4]);
+        assert_eq!(tb.data, vec![0, 0, 0, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn f32_batch_rows() {
+        let mut fb = F32Batch::new(2, 3);
+        fb.row_mut(0)[2] = 5.0;
+        assert_eq!(fb.row(0), &[0.0, 0.0, 5.0]);
+        assert_eq!(fb.row(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn default_hp_sane() {
+        let hp = TrainHp::default();
+        assert!(hp.lr > 0.0 && hp.lr < 1.0);
+        assert!(hp.ent_coef >= 0.0 && hp.kl_coef >= 0.0);
+    }
+}

@@ -1,0 +1,317 @@
+//! `artifacts/manifest.json` — the ABI between the python compile path and
+//! this runtime: model shape, parameter order, context buckets, and the
+//! HLO artifact per (function, bucket).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Which exported model function an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Func {
+    /// Full-sequence logits — rollout scoring.
+    Logits,
+    /// Per-token log-probabilities — policy/reference scoring (the tensor
+    /// the Data Dispatcher ships between stages).
+    Logprobs,
+    /// Fused REINFORCE loss + grads + Adam update.
+    TrainStep,
+}
+
+impl Func {
+    pub fn name(self) -> &'static str {
+        match self {
+            Func::Logits => "logits",
+            Func::Logprobs => "logprobs",
+            Func::TrainStep => "train_step",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Func> {
+        Ok(match s {
+            "logits" => Func::Logits,
+            "logprobs" => Func::Logprobs,
+            "train_step" => Func::TrainStep,
+            other => bail!("unknown function {other:?} in manifest"),
+        })
+    }
+}
+
+/// Model hyper-parameters (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+}
+
+/// One named parameter tensor in ABI order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled artifact: an HLO text file for (function, context bucket).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub func: Func,
+    pub bucket: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub model: ModelSpec,
+    pub batch: usize,
+    pub buckets: Vec<usize>,
+    pub param_spec: Vec<ParamEntry>,
+    pub params_file: String,
+    artifacts: BTreeMap<(Func, usize), ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let version = j.at(&["version"]).as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+
+        let need = |path: &[&str]| -> Result<usize> {
+            j.at(path)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing {}", path.join(".")))
+        };
+
+        let model = ModelSpec {
+            vocab: need(&["model", "vocab"])?,
+            d_model: need(&["model", "d_model"])?,
+            n_layers: need(&["model", "n_layers"])?,
+            n_heads: need(&["model", "n_heads"])?,
+            d_ff: need(&["model", "d_ff"])?,
+            max_seq: need(&["model", "max_seq"])?,
+            n_params: need(&["model", "n_params"])?,
+        };
+
+        let buckets: Vec<usize> = j
+            .at(&["buckets"])
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| anyhow!("bad bucket")))
+            .collect::<Result<_>>()?;
+        if buckets.is_empty() {
+            bail!("manifest has no context buckets");
+        }
+        if buckets.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("buckets must be strictly increasing: {buckets:?}");
+        }
+
+        let param_spec: Vec<ParamEntry> = j
+            .at(&["param_spec"])
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing param_spec"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p
+                        .at(&["name"])
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .at(&["shape"])
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+
+        let total: usize = param_spec.iter().map(|p| p.numel()).sum();
+        if total != model.n_params {
+            bail!(
+                "param_spec totals {total} elements but model.n_params = {}",
+                model.n_params
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .at(&["artifacts"])
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let func = Func::from_name(
+                a.at(&["function"])
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact missing function"))?,
+            )?;
+            let bucket = a
+                .at(&["bucket"])
+                .as_usize()
+                .ok_or_else(|| anyhow!("artifact missing bucket"))?;
+            let file = a
+                .at(&["file"])
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string();
+            artifacts.insert((func, bucket), ArtifactEntry { func, bucket, file });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            preset: j
+                .at(&["preset"])
+                .as_str()
+                .unwrap_or("unknown")
+                .to_string(),
+            model,
+            batch: need(&["batch"])?,
+            buckets,
+            param_spec,
+            params_file: j
+                .at(&["params_file"])
+                .as_str()
+                .unwrap_or("params.bin")
+                .to_string(),
+            artifacts,
+        })
+    }
+
+    /// The artifact for (func, bucket), if compiled.
+    pub fn artifact(&self, func: Func, bucket: usize) -> Option<&ArtifactEntry> {
+        self.artifacts.get(&(func, bucket))
+    }
+
+    pub fn artifacts(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.artifacts.values()
+    }
+
+    /// Smallest bucket that fits `ctx_len`, or None if it exceeds the
+    /// largest bucket (the caller must then truncate — the failure mode
+    /// Fig. 1 of the paper demonstrates).
+    pub fn bucket_for(&self, ctx_len: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= ctx_len)
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    pub fn params_path(&self) -> PathBuf {
+        self.dir.join(&self.params_file)
+    }
+
+    pub fn artifact_path(&self, a: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(buckets: &str) -> String {
+        format!(
+            r#"{{
+              "version": 1, "preset": "tiny", "batch": 4,
+              "buckets": {buckets},
+              "model": {{"vocab": 8, "d_model": 4, "n_layers": 1,
+                         "n_heads": 1, "d_ff": 8, "max_seq": 64,
+                         "rope_theta": 10000.0, "n_params": 44}},
+              "param_spec": [
+                 {{"name": "embed", "shape": [8, 4]}},
+                 {{"name": "lnf", "shape": [4]}},
+                 {{"name": "w", "shape": [2, 2, 2]}}
+              ],
+              "params_file": "params.bin",
+              "artifacts": [
+                 {{"function": "logits", "bucket": 32, "file": "l32.hlo.txt"}},
+                 {{"function": "logits", "bucket": 64, "file": "l64.hlo.txt"}},
+                 {{"function": "train_step", "bucket": 64, "file": "t.hlo.txt"}}
+              ]
+            }}"#
+        )
+    }
+
+    #[test]
+    fn parses_valid() {
+        let m = Manifest::parse(&sample("[32, 64]"), Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.model.vocab, 8);
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.buckets, vec![32, 64]);
+        assert_eq!(m.param_spec.len(), 3);
+        assert_eq!(m.param_spec[2].numel(), 8);
+        assert!(m.artifact(Func::Logits, 32).is_some());
+        assert!(m.artifact(Func::Logprobs, 32).is_none());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(&sample("[32, 64]"), Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.bucket_for(1), Some(32));
+        assert_eq!(m.bucket_for(32), Some(32));
+        assert_eq!(m.bucket_for(33), Some(64));
+        assert_eq!(m.bucket_for(64), Some(64));
+        assert_eq!(m.bucket_for(65), None); // context explosion → Fig 1
+        assert_eq!(m.max_bucket(), 64);
+    }
+
+    #[test]
+    fn rejects_unsorted_buckets() {
+        assert!(Manifest::parse(&sample("[64, 32]"), Path::new("/t")).is_err());
+        assert!(Manifest::parse(&sample("[32, 32]"), Path::new("/t")).is_err());
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let bad = sample("[32, 64]").replace("\"n_params\": 44", "\"n_params\": 43");
+        assert!(Manifest::parse(&bad, Path::new("/t")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = sample("[32]").replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/t")).is_err());
+    }
+
+    #[test]
+    fn func_names_roundtrip() {
+        for f in [Func::Logits, Func::Logprobs, Func::TrainStep] {
+            assert_eq!(Func::from_name(f.name()).unwrap(), f);
+        }
+        assert!(Func::from_name("nope").is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Runtime layer: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//! Python never runs on this path — the rust binary is self-contained
+//! once `make artifacts` has been run.
+//!
+//! * [`manifest`] — the python↔rust ABI (`manifest.json`).
+//! * [`state`] — model parameters + Adam moments as XLA literals.
+//! * [`engine`] — lazy-compiling executable cache + typed entry points
+//!   (`logits`, `logprobs`, `train_step`), one executable per
+//!   (function, context bucket).
+
+pub mod engine;
+pub mod manifest;
+pub mod state;
+
+pub use engine::{
+    Engine, ExecTiming, F32Batch, TokenBatch, TrainBatch, TrainHp, TrainStats,
+};
+pub use manifest::{ArtifactEntry, Func, Manifest, ModelSpec, ParamEntry};
+pub use state::ModelState;

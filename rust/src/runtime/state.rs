@@ -1,0 +1,103 @@
+//! Model state held on the rust side: parameters + Adam moments as XLA
+//! literals, marshalled positionally per the manifest's `param_spec` ABI.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::runtime::manifest::Manifest;
+use crate::util::bytes;
+
+/// Policy (or reference) model state: parameter literals in ABI order,
+/// plus Adam first/second moments and the step counter.
+pub struct ModelState {
+    pub params: Vec<Literal>,
+    pub adam_m: Vec<Literal>,
+    pub adam_v: Vec<Literal>,
+    /// Number of optimizer steps applied (Adam bias correction is keyed
+    /// off `step + 1` at call time).
+    pub step: u64,
+}
+
+impl ModelState {
+    /// Load initial parameters from the manifest's `params.bin` blob
+    /// (concatenated little-endian f32 in param_spec order) and zero-init
+    /// the Adam moments.
+    pub fn load_initial(manifest: &Manifest) -> Result<ModelState> {
+        let path = manifest.params_path();
+        let flat = bytes::read_f32_file(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_flat(manifest, &flat)
+    }
+
+    /// Build state from one flat f32 vector (param_spec order).
+    pub fn from_flat(manifest: &Manifest, flat: &[f32]) -> Result<ModelState> {
+        let total: usize = manifest.param_spec.iter().map(|p| p.numel()).sum();
+        if flat.len() != total {
+            bail!(
+                "params blob has {} f32s, param_spec wants {total}",
+                flat.len()
+            );
+        }
+        let mut params = Vec::with_capacity(manifest.param_spec.len());
+        let mut adam_m = Vec::with_capacity(manifest.param_spec.len());
+        let mut adam_v = Vec::with_capacity(manifest.param_spec.len());
+        let mut off = 0;
+        for spec in &manifest.param_spec {
+            let n = spec.numel();
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = Literal::vec1(&flat[off..off + n])
+                .reshape(&dims)
+                .with_context(|| format!("reshaping param {}", spec.name))?;
+            let zeros = Literal::vec1(&vec![0f32; n])
+                .reshape(&dims)
+                .with_context(|| format!("zeros for {}", spec.name))?;
+            let zeros2 = Literal::vec1(&vec![0f32; n]).reshape(&dims)?;
+            params.push(lit);
+            adam_m.push(zeros);
+            adam_v.push(zeros2);
+            off += n;
+        }
+        Ok(ModelState { params, adam_m, adam_v, step: 0 })
+    }
+
+    /// Flatten current parameters back to one f32 vector (for
+    /// checkpointing and the reference-model snapshot).
+    pub fn params_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            out.extend(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Deep-copy the parameter literals (reference model snapshot).
+    pub fn clone_params(&self) -> Result<Vec<Literal>> {
+        self.params
+            .iter()
+            .map(|p| {
+                let v = p.to_vec::<f32>()?;
+                let shape = p.array_shape()?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                Ok(Literal::vec1(&v).reshape(&dims)?)
+            })
+            .collect()
+    }
+
+    /// Persist parameters (checkpoint). Format: raw little-endian f32,
+    /// identical to `params.bin`, so a checkpoint can seed a new run.
+    pub fn save_params(&self, path: &Path) -> Result<()> {
+        let flat = self.params_flat()?;
+        std::fs::write(path, bytes::f32_to_le_bytes(&flat))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Restore parameters from a checkpoint; Adam moments reset to zero.
+    pub fn load_params(manifest: &Manifest, path: &Path) -> Result<ModelState> {
+        let flat = bytes::read_f32_file(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_flat(manifest, &flat)
+    }
+}

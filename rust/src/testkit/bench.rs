@@ -1,0 +1,150 @@
+//! Micro-benchmark harness (no `criterion` offline): warmup + timed
+//! iterations with mean/std/min, plus table-row helpers so each bench
+//! binary prints the paper table it regenerates.
+
+use std::time::Instant;
+
+use crate::util::stats::Welford;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} it  {:>12} ± {:>10}  (min {})",
+            self.name,
+            self.iters,
+            crate::util::bytes::human_duration(self.mean),
+            crate::util::bytes::human_duration(self.std),
+            crate::util::bytes::human_duration(self.min),
+        )
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget_seconds: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget_seconds: 5.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup_iters: 1, min_iters: 3, max_iters: 20, budget_seconds: 2.0, ..Default::default() }
+    }
+
+    /// Time `f`; returns and records the result.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut w = Welford::new();
+        let budget = Instant::now();
+        let mut iters = 0;
+        while iters < self.min_iters
+            || (iters < self.max_iters
+                && budget.elapsed().as_secs_f64() < self.budget_seconds)
+        {
+            let t0 = Instant::now();
+            f();
+            w.add(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: w.mean(),
+            std: w.std(),
+            min: w.min(),
+        };
+        eprintln!("{}", r.row());
+        self.results.push(r.clone());
+        r
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Right-aligned table printer for the paper-table outputs.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_stats() {
+        let mut b = Bench { warmup_iters: 0, min_iters: 5, max_iters: 5, budget_seconds: 1.0, results: Vec::new() };
+        let r = b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean >= 0.0);
+        assert!(r.min <= r.mean);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn bench_respects_budget() {
+        let mut b = Bench { warmup_iters: 0, min_iters: 2, max_iters: 1000, budget_seconds: 0.05, results: Vec::new() };
+        let r = b.run("sleepy", || {
+            std::thread::sleep(std::time::Duration::from_millis(10))
+        });
+        assert!(r.iters < 20, "budget ignored: {} iters", r.iters);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        print_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

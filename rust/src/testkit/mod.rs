@@ -1,0 +1,118 @@
+//! Property-based testing harness (no `proptest` offline): generate
+//! random cases from the deterministic PCG substrate, run a property,
+//! and on failure report the seed so the case replays exactly.
+
+pub mod bench;
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropCfg {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropCfg {
+    fn default() -> Self {
+        PropCfg { cases: 256, seed: 0xEA71 }
+    }
+}
+
+/// Run `prop` on `cfg.cases` RNG-derived cases. The property receives a
+/// forked RNG per case; panics are annotated with the replay seed.
+pub fn check<F: Fn(&mut Pcg64)>(name: &str, cfg: PropCfg, prop: F) {
+    let mut root = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = root.next_u64();
+        let mut rng = Pcg64::new(case_seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut rng)),
+        );
+        if let Err(payload) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{total} \
+                 (replay: Pcg64::new({case_seed:#x}))",
+                total = cfg.cases,
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn check_default<F: Fn(&mut Pcg64)>(name: &str, prop: F) {
+    check(name, PropCfg::default(), prop);
+}
+
+/// Generators over the harness RNG.
+pub mod gen {
+    use crate::util::rng::Pcg64;
+
+    /// usize in [lo, hi].
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        rng.range_f64(lo, hi)
+    }
+
+    /// A vector of length in [min_len, max_len] whose elements come
+    /// from `f`.
+    pub fn vec_of<T>(
+        rng: &mut Pcg64,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Pcg64) -> T,
+    ) -> Vec<T> {
+        let n = usize_in(rng, min_len, max_len);
+        (0..n).map(|_| f(rng)).collect()
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(rng: &mut Pcg64, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0usize);
+        check("trivial", PropCfg { cases: 50, seed: 1 }, |_rng| {
+            counter.set(counter.get() + 1);
+        });
+        assert_eq!(counter.get(), 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("fails", PropCfg { cases: 10, seed: 2 }, |rng| {
+            assert!(rng.below(10) < 5, "deliberate failure");
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", PropCfg { cases: 100, seed: 3 }, |rng| {
+            let n = gen::usize_in(rng, 3, 9);
+            assert!((3..=9).contains(&n));
+            let x = gen::f64_in(rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+            let v = gen::vec_of(rng, 1, 5, |r| r.below(100));
+            assert!((1..=5).contains(&v.len()));
+            let p = gen::permutation(rng, 8);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+        });
+    }
+}

@@ -1,0 +1,180 @@
+//! Fixed 64-token vocabulary shared with the python compile path (the
+//! manifest records only `vocab_size`; the table itself lives here — the
+//! model is trained from scratch, so the assignment is arbitrary but must
+//! be stable).
+//!
+//! Episode stream layout (one LLM context per episode):
+//!
+//! ```text
+//! BOS  ENV <board tokens> SEP  AGENT <reasoning*> <MOVE_i> SEP
+//!      ENV <board tokens> SEP  AGENT ... SEP  ... <RESULT> EOS
+//! ```
+//!
+//! Every agent turn re-renders the full board (the paper's "turn-level
+//! context"), and the episode context accumulates across turns — the
+//! context-growth mechanics of agentic RL that EARL targets (paper §1,
+//! Fig. 1).
+
+/// Total vocabulary size — must match `ModelConfig.vocab` in python.
+pub const VOCAB: usize = 64;
+
+// --- special tokens --------------------------------------------------------
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const AGENT: i32 = 4;
+pub const ENV: i32 = 5;
+
+// --- board cell symbols ------------------------------------------------------
+pub const CELL_EMPTY: i32 = 6;
+pub const CELL_X: i32 = 7;
+pub const CELL_O: i32 = 8;
+/// Row separator in board renderings (Connect Four is 2-D).
+pub const ROW: i32 = 9;
+
+// --- result tokens -----------------------------------------------------------
+pub const RES_WIN: i32 = 10;
+pub const RES_LOSE: i32 = 11;
+pub const RES_DRAW: i32 = 12;
+pub const RES_ILLEGAL: i32 = 13;
+/// Episode aborted by the context-length limit (truncated reasoning — the
+/// "low-quality data" of paper Fig. 1b).
+pub const RES_TRUNCATED: i32 = 14;
+
+// --- moves -------------------------------------------------------------------
+/// First move token; `MOVE_BASE + i` encodes action index `i`.
+pub const MOVE_BASE: i32 = 16;
+/// Maximum distinct actions any supported environment exposes
+/// (TicTacToe: 9 cells; Connect Four: 7 columns).
+pub const MAX_MOVES: usize = 9;
+
+// --- free "reasoning" tokens ---------------------------------------------------
+/// Tokens the policy may emit before its move (chain-of-thought stand-in;
+/// these are what make response length — and thus context — grow during
+/// training).
+pub const THINK_BASE: i32 = 32;
+pub const THINK_COUNT: usize = VOCAB - THINK_BASE as usize;
+
+/// Encode an action index as a move token.
+pub fn move_token(action: usize) -> i32 {
+    assert!(action < MAX_MOVES, "action {action} out of range");
+    MOVE_BASE + action as i32
+}
+
+/// Decode a move token to an action index.
+pub fn decode_move(token: i32) -> Option<usize> {
+    if (MOVE_BASE..MOVE_BASE + MAX_MOVES as i32).contains(&token) {
+        Some((token - MOVE_BASE) as usize)
+    } else {
+        None
+    }
+}
+
+pub fn is_think(token: i32) -> bool {
+    (THINK_BASE..VOCAB as i32).contains(&token)
+}
+
+pub fn is_special(token: i32) -> bool {
+    (PAD..=ENV).contains(&token)
+}
+
+pub fn is_result(token: i32) -> bool {
+    (RES_WIN..=RES_TRUNCATED).contains(&token)
+}
+
+/// Human-readable rendering (debug transcripts / `earl train -v`).
+pub fn describe(token: i32) -> String {
+    match token {
+        PAD => "<pad>".into(),
+        BOS => "<bos>".into(),
+        EOS => "<eos>".into(),
+        SEP => "<sep>".into(),
+        AGENT => "<agent>".into(),
+        ENV => "<env>".into(),
+        CELL_EMPTY => ".".into(),
+        CELL_X => "X".into(),
+        CELL_O => "O".into(),
+        ROW => "/".into(),
+        RES_WIN => "<win>".into(),
+        RES_LOSE => "<lose>".into(),
+        RES_DRAW => "<draw>".into(),
+        RES_ILLEGAL => "<illegal>".into(),
+        RES_TRUNCATED => "<truncated>".into(),
+        t => {
+            if let Some(m) = decode_move(t) {
+                format!("<move:{m}>")
+            } else if is_think(t) {
+                format!("<think:{}>", t - THINK_BASE)
+            } else {
+                format!("<unk:{t}>")
+            }
+        }
+    }
+}
+
+/// Render a token stream for logging.
+pub fn render(tokens: &[i32]) -> String {
+    tokens.iter().map(|&t| describe(t)).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_disjoint() {
+        // specials, cells, results, moves, think must not overlap
+        let specials = PAD..=ENV;
+        let cells = CELL_EMPTY..=ROW;
+        let results = RES_WIN..=RES_TRUNCATED;
+        let moves = MOVE_BASE..MOVE_BASE + MAX_MOVES as i32;
+        let think = THINK_BASE..VOCAB as i32;
+        let all: Vec<i32> = specials
+            .chain(cells)
+            .chain(results)
+            .chain(moves)
+            .chain(think)
+            .collect();
+        let mut uniq = all.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), all.len(), "token ranges overlap");
+        assert!(all.iter().all(|&t| t >= 0 && (t as usize) < VOCAB));
+    }
+
+    #[test]
+    fn move_roundtrip() {
+        for a in 0..MAX_MOVES {
+            assert_eq!(decode_move(move_token(a)), Some(a));
+        }
+        assert_eq!(decode_move(MOVE_BASE - 1), None);
+        assert_eq!(decode_move(MOVE_BASE + MAX_MOVES as i32), None);
+    }
+
+    #[test]
+    fn think_tokens_exist() {
+        assert!(THINK_COUNT >= 16, "need headroom for reasoning tokens");
+        assert!(is_think(THINK_BASE));
+        assert!(is_think(VOCAB as i32 - 1));
+        assert!(!is_think(MOVE_BASE));
+    }
+
+    #[test]
+    fn classification_predicates() {
+        assert!(is_special(PAD) && is_special(ENV));
+        assert!(!is_special(CELL_EMPTY));
+        assert!(is_result(RES_WIN) && is_result(RES_TRUNCATED));
+        assert!(!is_result(EOS));
+    }
+
+    #[test]
+    fn describe_all_tokens_total() {
+        for t in 0..VOCAB as i32 {
+            assert!(!describe(t).is_empty());
+        }
+        // render smoke
+        let s = render(&[BOS, ENV, CELL_EMPTY, SEP, AGENT, move_token(4), EOS]);
+        assert!(s.contains("<move:4>"));
+    }
+}

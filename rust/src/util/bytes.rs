@@ -1,0 +1,121 @@
+//! Byte-level helpers: f32 little-endian blobs (the params.bin format
+//! shared with the python compile path) and human-readable size formatting.
+
+use std::io::{self, Read, Write};
+
+/// Read a whole file of little-endian f32s.
+pub fn read_f32_file(path: &std::path::Path) -> io::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{}: length {} not a multiple of 4", path.display(), bytes.len()),
+        ));
+    }
+    Ok(f32_from_le_bytes(&bytes))
+}
+
+/// Decode little-endian f32s from raw bytes.
+pub fn f32_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Encode f32s to little-endian bytes.
+pub fn f32_to_le_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Length-prefixed frame write (u64 LE header) — the wire format of the
+/// TCP dispatch engine.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)
+}
+
+/// Length-prefixed frame read. Returns None on clean EOF at a frame
+/// boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    let mut hdr = [0u8; 8];
+    match r.read_exact(&mut hdr) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u64::from_le_bytes(hdr) as usize;
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+/// "12.3 MiB"-style formatting.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// "1.23 s" / "45.6 ms" style duration formatting.
+pub fn human_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} µs", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25, f32::MAX, f32::MIN_POSITIVE];
+        let bytes = f32_to_le_bytes(&xs);
+        assert_eq!(f32_from_le_bytes(&bytes), xs);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[7u8; 1000]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), vec![7u8; 1000]);
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(15_625 * 1024 * 1024), "15.3 GiB");
+    }
+
+    #[test]
+    fn human_duration_units() {
+        assert_eq!(human_duration(2.5), "2.50 s");
+        assert_eq!(human_duration(0.0123), "12.30 ms");
+        assert_eq!(human_duration(42e-6), "42.00 µs");
+    }
+}

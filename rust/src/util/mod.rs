@@ -1,0 +1,9 @@
+//! From-scratch substrates: the build environment is fully offline, so the
+//! crates a framework would normally lean on (serde_json, rand, rayon,
+//! tokio) are re-implemented here at the scale this project needs.
+
+pub mod bytes;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,227 @@
+//! Streaming statistics + fixed-point helpers used by the metrics layer,
+//! the selector's profiling pass, and the bench harness.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a sample (sorts a copy; fine for metric volumes).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Exponential moving average — the selector's context-length monitor.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn add(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Simple fixed-bucket histogram (for latency distributions).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// `bounds` are the upper edges of each bucket; a final +inf bucket is
+    /// appended automatically.
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let n = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; n], total: 0 }
+    }
+
+    /// Exponential edges: `start * ratio^i` for i in 0..n.
+    pub fn exponential(start: f64, ratio: f64, n: usize) -> Self {
+        let mut b = Vec::with_capacity(n);
+        let mut x = start;
+        for _ in 0..n {
+            b.push(x);
+            x *= ratio;
+        }
+        Self::new(b)
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Upper-bound estimate of percentile from bucket edges.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut cum = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.get(), None);
+        e.add(0.0);
+        for _ in 0..30 {
+            e.add(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(vec![1.0, 10.0, 100.0]);
+        for x in [0.5, 5.0, 50.0, 500.0, 0.1] {
+            h.add(x);
+        }
+        assert_eq!(h.counts(), &[2, 1, 1, 1]);
+        assert_eq!(h.total(), 5);
+    }
+
+    #[test]
+    fn histogram_percentile_upper_bound() {
+        let mut h = Histogram::exponential(1.0, 2.0, 10);
+        for i in 0..1000 {
+            h.add((i % 100) as f64);
+        }
+        let p99 = h.percentile(99.0);
+        assert!(p99 >= 99.0, "p99 {p99}");
+    }
+}

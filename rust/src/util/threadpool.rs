@@ -1,0 +1,148 @@
+//! Minimal fixed-size thread pool (no `tokio`/`rayon` offline).
+//!
+//! Used by the coordinator for stage-parallel work and by the TCP dispatch
+//! engine for concurrent per-peer transfers. Supports fire-and-forget
+//! `spawn` and a scoped `map` that preserves input order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            in_flight.fetch_sub(1, Ordering::Release);
+                        }
+                        Err(_) => break, // all senders dropped
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers gone");
+    }
+
+    /// Run `f` over `items` on the pool, returning outputs in input order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.spawn(move || {
+                let r = f(item);
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("worker panicked")).collect()
+    }
+
+    /// Block until every spawned job has finished.
+    pub fn wait_idle(&self) {
+        while self.in_flight.load(Ordering::Acquire) != 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit on recv Err
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..64).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn map_actually_parallel() {
+        // With 4 threads, 8 sleeps of 30ms should take well under 8*30ms.
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        pool.map(vec![(); 8], |_| {
+            std::thread::sleep(std::time::Duration::from_millis(30))
+        });
+        assert!(t0.elapsed() < std::time::Duration::from_millis(200));
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+}

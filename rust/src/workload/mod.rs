@@ -1,0 +1,118 @@
+//! Synthetic workload generation: context-growth traces shaped like the
+//! paper's Fig. 1 measurements, and the parameter grids of the Fig. 3 /
+//! Fig. 4 sweeps — inputs for the simulator benches at paper scale.
+
+use crate::util::rng::Pcg64;
+
+/// A context-growth trace: mean episode context length per training step.
+/// The paper observes roughly monotone growth (turn-level response
+/// lengths increase; episodes run more turns) until the limit is hit.
+#[derive(Debug, Clone)]
+pub struct ContextTrace {
+    pub steps: Vec<f64>,
+}
+
+impl ContextTrace {
+    /// Logistic growth from `start` toward `ceiling` with noise — the
+    /// shape of paper Fig. 1b before the limit interferes.
+    pub fn logistic(
+        n_steps: usize,
+        start: f64,
+        ceiling: f64,
+        rate: f64,
+        noise: f64,
+        seed: u64,
+    ) -> ContextTrace {
+        let mut rng = Pcg64::new(seed);
+        let mut steps = Vec::with_capacity(n_steps);
+        for i in 0..n_steps {
+            let t = i as f64;
+            let mid = n_steps as f64 / 2.0;
+            let base =
+                start + (ceiling - start) / (1.0 + (-rate * (t - mid)).exp());
+            let jitter = 1.0 + noise * rng.gaussian();
+            steps.push((base * jitter).max(1.0));
+        }
+        ContextTrace { steps }
+    }
+
+    /// The paper's Fig. 1 dynamic scaled to a given limit: context grows
+    /// and crosses `limit` around 2/3 through the trace.
+    pub fn fig1_like(n_steps: usize, limit: f64, seed: u64) -> ContextTrace {
+        ContextTrace::logistic(
+            n_steps,
+            limit * 0.25,
+            limit * 1.5,
+            8.0 / n_steps as f64,
+            0.05,
+            seed,
+        )
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.steps.iter().sum::<f64>() / self.steps.len().max(1) as f64
+    }
+}
+
+/// Fig. 3's sweep grid (context lengths × response counts).
+pub fn fig3_grid() -> (Vec<usize>, Vec<usize>) {
+    (
+        vec![2_048, 4_096, 8_192, 16_384, 32_768],
+        vec![32, 64, 128],
+    )
+}
+
+/// Fig. 4's per-worker shard sizes (MiB) and the context lengths they
+/// correspond to in the paper (§3.3).
+pub fn fig4_shards() -> Vec<(usize, u64)> {
+    vec![(8_192, 46), (16_384, 93), (32_768, 187)]
+}
+
+/// Tab. 1's context lengths.
+pub fn tab1_contexts() -> Vec<usize> {
+    vec![1_024, 2_048, 4_096, 8_192, 16_384, 32_768]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logistic_grows_monotonically_in_expectation() {
+        let t = ContextTrace::logistic(100, 100.0, 1000.0, 0.1, 0.0, 0);
+        assert!(t.steps[0] < t.steps[50]);
+        assert!(t.steps[50] < t.steps[99]);
+        assert!(t.steps[0] >= 100.0 * 0.9);
+        assert!(t.steps[99] <= 1000.0 * 1.1);
+    }
+
+    #[test]
+    fn fig1_like_crosses_limit() {
+        let limit = 8192.0;
+        let t = ContextTrace::fig1_like(60, limit, 1);
+        assert!(t.steps[0] < limit * 0.5, "starts low: {}", t.steps[0]);
+        assert!(
+            t.steps.iter().any(|&c| c > limit),
+            "trace must cross the limit"
+        );
+        // Crossing happens in the middle half, not immediately.
+        let first_cross = t.steps.iter().position(|&c| c > limit).unwrap();
+        assert!(first_cross > 10, "cross at {first_cross}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ContextTrace::fig1_like(50, 4096.0, 7);
+        let b = ContextTrace::fig1_like(50, 4096.0, 7);
+        assert_eq!(a.steps, b.steps);
+    }
+
+    #[test]
+    fn grids_match_paper() {
+        let (ctxs, resps) = fig3_grid();
+        assert!(ctxs.contains(&16_384) && ctxs.contains(&32_768));
+        assert_eq!(resps, vec![32, 64, 128]);
+        assert_eq!(fig4_shards().len(), 3);
+        assert_eq!(tab1_contexts().len(), 6);
+    }
+}

@@ -1,0 +1,101 @@
+//! Integration: the Data Dispatcher end to end — plans executed on the
+//! network simulator AND on real TCP loopback, with content/latency
+//! cross-checks between the two engines and against the paper's Fig. 4
+//! expectations.
+
+use earl::cluster::ClusterSpec;
+use earl::dispatch::{
+    plan_alltoall, plan_centralized, satisfies, simulate_plan,
+    tcp::execute_plan_tcp_rated, DataLayout, WorkerMap,
+};
+
+const N: usize = 8;
+
+fn layouts() -> (DataLayout, DataLayout) {
+    let items = N * N;
+    (
+        DataLayout::round_robin(items, N),
+        DataLayout::blocked(items, N),
+    )
+}
+
+#[test]
+fn sim_and_tcp_agree_on_winner() {
+    let (p, c) = layouts();
+    let shard = 256 << 10; // keep the test fast
+    let base = plan_centralized(&p, &c, shard, 0);
+    let earl = plan_alltoall(&p, &c, shard);
+
+    let cluster = ClusterSpec::paper_testbed();
+    let map = WorkerMap::one_per_node(&cluster, N);
+    let sim_base = simulate_plan(&cluster, &map, &base).makespan;
+    let sim_earl = simulate_plan(&cluster, &map, &earl).makespan;
+
+    let nic = Some(100e6); // 100 MB/s emulated NIC keeps this quick
+    let tcp_base = execute_plan_tcp_rated(&base, N, nic).unwrap().seconds;
+    let tcp_earl = execute_plan_tcp_rated(&earl, N, nic).unwrap().seconds;
+
+    assert!(sim_base > sim_earl, "simulator: baseline must be slower");
+    assert!(tcp_base > tcp_earl, "tcp: baseline must be slower");
+    // Both engines should see a substantial (>3x) reduction at 8 workers.
+    assert!(sim_base / sim_earl > 3.0, "sim ratio {}", sim_base / sim_earl);
+    assert!(tcp_base / tcp_earl > 3.0, "tcp ratio {}", tcp_base / tcp_earl);
+}
+
+#[test]
+fn tcp_rated_latency_tracks_bytes() {
+    // Double the bytes -> roughly double the (rated) latency.
+    let (p, c) = layouts();
+    let nic = Some(100e6);
+    let small = plan_alltoall(&p, &c, 512 << 10);
+    let large = plan_alltoall(&p, &c, 1 << 20);
+    let ts = execute_plan_tcp_rated(&small, N, nic).unwrap().seconds;
+    let tl = execute_plan_tcp_rated(&large, N, nic).unwrap().seconds;
+    let ratio = tl / ts;
+    assert!(
+        ratio > 1.4 && ratio < 2.8,
+        "latency should ~double with bytes: {ratio:.2}"
+    );
+}
+
+#[test]
+fn plans_identical_placement_across_engines() {
+    let (p, c) = layouts();
+    let base = plan_centralized(&p, &c, 1000, 0);
+    let earl = plan_alltoall(&p, &c, 1000);
+    assert!(satisfies(&base, &p, &c));
+    assert!(satisfies(&earl, &p, &c));
+    assert_eq!(base.delivered(&p), earl.delivered(&p));
+}
+
+#[test]
+fn controller_choice_does_not_change_content() {
+    let (p, c) = layouts();
+    for controller in 0..N {
+        let plan = plan_centralized(&p, &c, 500, controller);
+        assert!(satisfies(&plan, &p, &c), "controller {controller}");
+    }
+}
+
+#[test]
+fn simulator_reduction_in_paper_band_at_full_scale() {
+    // Full 46–187 MiB shards on the simulator (fast — no real bytes).
+    let cluster = ClusterSpec::paper_testbed();
+    let map = WorkerMap::one_per_node(&cluster, N);
+    let (p, c) = layouts();
+    let mut prev_ratio = 0.0;
+    for mib in [46u64, 93, 187] {
+        let item = mib * (1 << 20) / N as u64;
+        let base = plan_centralized(&p, &c, item, 0);
+        let earl = plan_alltoall(&p, &c, item);
+        let tb = simulate_plan(&cluster, &map, &base).makespan;
+        let te = simulate_plan(&cluster, &map, &earl).makespan;
+        let ratio = tb / te;
+        assert!(
+            ratio > 6.0 && ratio < 20.0,
+            "{mib} MiB: ratio {ratio:.1} outside Fig. 4 band"
+        );
+        assert!(ratio >= prev_ratio * 0.95, "ratio should not shrink");
+        prev_ratio = ratio;
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: the PJRT engine executes the real AOT artifacts
+//! (`make artifacts` must have run; skipped otherwise).
+//!
+//! Cross-artifact consistency is the key check: `logprobs` (one HLO
+//! module) must agree with log-softmax computed in rust over `logits`
+//! (a different HLO module) — i.e. the python→HLO→PJRT→rust path
+//! round-trips numerics, not just shapes.
+
+use std::path::Path;
+
+use earl::runtime::{Engine, TokenBatch};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts`; skipping");
+        None
+    }
+}
+
+fn test_tokens(engine: &Engine, seq: usize) -> TokenBatch {
+    let b = engine.manifest.batch;
+    let v = engine.manifest.model.vocab as i32;
+    let mut tb = TokenBatch::new(b, seq);
+    // Deterministic, varied content per row.
+    for row in 0..b {
+        for t in 0..seq {
+            tb.row_mut(row)[t] = ((row * 7 + t * 13 + 3) as i32) % v;
+        }
+    }
+    tb
+}
+
+#[test]
+fn logits_shape_and_finiteness() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let bucket = engine.manifest.buckets[0];
+    let tokens = test_tokens(&engine, bucket);
+    let state = engine.initial_state().unwrap();
+
+    let logits = engine.logits(&state.params, &tokens).unwrap();
+    let (b, v) = (engine.manifest.batch, engine.manifest.model.vocab);
+    assert_eq!(logits.len(), b * bucket * v);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    // Not degenerate: some variation across vocab.
+    let row0 = &logits[..v];
+    let min = row0.iter().cloned().fold(f32::INFINITY, f32::min);
+    let max = row0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    assert!(max > min, "logits are constant");
+}
+
+#[test]
+fn logprobs_consistent_with_logits() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let bucket = engine.manifest.buckets[0];
+    let tokens = test_tokens(&engine, bucket);
+    let state = engine.initial_state().unwrap();
+
+    let logits = engine.logits(&state.params, &tokens).unwrap();
+    let logprobs = engine.logprobs(&state.params, &tokens).unwrap();
+
+    let (b, t, v) = (engine.manifest.batch, bucket, engine.manifest.model.vocab);
+    assert_eq!(logprobs.len(), b * t);
+
+    for row in 0..b {
+        // Position 0 is unscored by construction.
+        assert_eq!(logprobs[row * t], 0.0);
+        for pos in 1..t {
+            // log softmax of logits[row, pos-1, :] at tokens[row, pos]
+            let base = (row * t + pos - 1) * v;
+            let slice = &logits[base..base + v];
+            let m = slice.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m + slice.iter().map(|x| (x - m).exp()).sum::<f32>().ln();
+            let tok = tokens.row(row)[pos] as usize;
+            let want = slice[tok] - lse;
+            let got = logprobs[row * t + pos];
+            assert!(
+                (got - want).abs() < 5e-4,
+                "row {row} pos {pos}: engine {got} vs rust {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn logits_deterministic_across_calls() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let bucket = engine.manifest.buckets[0];
+    let tokens = test_tokens(&engine, bucket);
+    let state = engine.initial_state().unwrap();
+    let a = engine.logits(&state.params, &tokens).unwrap();
+    let b = engine.logits(&state.params, &tokens).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn params_roundtrip_through_state() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let state = engine.initial_state().unwrap();
+    let flat = state.params_flat().unwrap();
+    assert_eq!(flat.len(), engine.manifest.model.n_params);
+
+    // Save → reload → identical.
+    let tmp = std::env::temp_dir().join("earl_test_ckpt.bin");
+    state.save_params(&tmp).unwrap();
+    let restored =
+        earl::runtime::ModelState::load_params(&engine.manifest, &tmp).unwrap();
+    assert_eq!(restored.params_flat().unwrap(), flat);
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn bucket_mismatch_is_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let state = engine.initial_state().unwrap();
+    // seq=3 is not a compiled bucket.
+    let tokens = TokenBatch::new(engine.manifest.batch, 3);
+    assert!(engine.logits(&state.params, &tokens).is_err());
+    // wrong batch
+    let tokens = TokenBatch::new(engine.manifest.batch + 1,
+                                 engine.manifest.buckets[0]);
+    assert!(engine.logits(&state.params, &tokens).is_err());
+}

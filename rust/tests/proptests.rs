@@ -1,0 +1,384 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md §6),
+//! using the in-tree `testkit` harness (no proptest crate offline).
+
+use std::collections::BTreeMap;
+
+use earl::cluster::ClusterSpec;
+use earl::dispatch::{plan_alltoall, plan_centralized, satisfies, DataLayout};
+use earl::envs::{ConnectFour, Game, Outcome, TicTacToe};
+use earl::parallelism::{
+    decode_estimate, rollout_memory, ModelShape, ParallelismConfig,
+    ProfilePoint, RangeTable, ThroughputCfg,
+};
+use earl::rl::advantage::{reinforce_advantages, whiten, AdvantageCfg};
+use earl::rl::episode::{Episode, EpisodeStatus, ExperienceBatch, Turn};
+use earl::testkit::{check_default, gen};
+use earl::tokenizer as tok;
+use earl::util::json::Json;
+use earl::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Dispatch invariants
+// ---------------------------------------------------------------------------
+
+fn random_layout(rng: &mut Pcg64, n_items: usize, n_workers: usize) -> DataLayout {
+    DataLayout {
+        n_workers,
+        owner: (0..n_items).map(|_| rng.below(n_workers)).collect(),
+    }
+}
+
+#[test]
+fn prop_plans_deliver_consumer_layout() {
+    check_default("plans_deliver", |rng| {
+        let workers = gen::usize_in(rng, 2, 12);
+        let items = gen::usize_in(rng, 1, 64);
+        let producer = random_layout(rng, items, workers);
+        let consumer = random_layout(rng, items, workers);
+        let shard = 1 + rng.below(10_000) as u64;
+        let controller = rng.below(workers);
+
+        let central = plan_centralized(&producer, &consumer, shard, controller);
+        let a2a = plan_alltoall(&producer, &consumer, shard);
+        assert!(satisfies(&central, &producer, &consumer), "centralized");
+        assert!(satisfies(&a2a, &producer, &consumer), "alltoall");
+    });
+}
+
+#[test]
+fn prop_alltoall_never_moves_more_bytes() {
+    check_default("alltoall_bytes_minimal", |rng| {
+        let workers = gen::usize_in(rng, 2, 12);
+        let items = gen::usize_in(rng, 1, 64);
+        let producer = random_layout(rng, items, workers);
+        let consumer = random_layout(rng, items, workers);
+        let shard = 1 + rng.below(10_000) as u64;
+
+        let central = plan_centralized(&producer, &consumer, shard, 0);
+        let a2a = plan_alltoall(&producer, &consumer, shard);
+        assert!(a2a.total_bytes() <= central.total_bytes());
+        // All-to-all moves exactly shard x (items whose owner changes).
+        let moved = (0..items)
+            .filter(|&i| producer.owner[i] != consumer.owner[i])
+            .count() as u64;
+        assert_eq!(a2a.total_bytes(), shard * moved);
+    });
+}
+
+#[test]
+fn prop_plan_transfers_coalesced_per_pair() {
+    check_default("coalesced_pairs", |rng| {
+        let workers = gen::usize_in(rng, 2, 10);
+        let items = gen::usize_in(rng, 1, 80);
+        let producer = random_layout(rng, items, workers);
+        let consumer = random_layout(rng, items, workers);
+        let a2a = plan_alltoall(&producer, &consumer, 7);
+        let mut seen = BTreeMap::new();
+        for t in &a2a.phases[0] {
+            assert_ne!(t.src, t.dst, "self-transfer planned");
+            assert!(seen.insert((t.src, t.dst), ()).is_none(), "dup pair");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Selector / throughput invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_selector_never_picks_oom_config() {
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    let tcfg = ThroughputCfg::default();
+    check_default("selector_no_oom", |rng| {
+        let responses = *rng.choose(&[32usize, 64, 128]);
+        let ctx_grid = [2048usize, 4096, 8192, 16384, 32768];
+        let points: Vec<ProfilePoint<usize>> = ctx_grid
+            .iter()
+            .flat_map(|&ctx| [2usize, 4, 8].map(move |tp| (ctx, tp)))
+            .map(|(ctx, tp)| ProfilePoint {
+                config: tp,
+                ctx,
+                tgs: decode_estimate(
+                    &shape,
+                    &cluster,
+                    ParallelismConfig::tp(tp),
+                    &tcfg,
+                    ctx,
+                    responses,
+                )
+                .map(|e| e.tgs),
+            })
+            .collect();
+        let table = RangeTable::from_profile(&points).expect("feasible");
+        // Whatever ctx we query, the selected config must not OOM there
+        // (at the profiled grid resolution).
+        let ctx = *rng.choose(&ctx_grid);
+        let (_, tp, _) = table.lookup(ctx);
+        assert!(
+            decode_estimate(
+                &shape,
+                &cluster,
+                ParallelismConfig::tp(tp),
+                &tcfg,
+                ctx,
+                responses
+            )
+            .is_some(),
+            "selector chose TP{tp} which OOMs at ctx {ctx} resp {responses}"
+        );
+    });
+}
+
+#[test]
+fn prop_memory_estimator_monotone() {
+    let shape = ModelShape::qwen2_5_72b();
+    check_default("memory_monotone", |rng| {
+        let tp = *rng.choose(&[2usize, 4, 8]);
+        let ctx = 1024 * gen::usize_in(rng, 1, 32);
+        let resp = gen::usize_in(rng, 1, 128);
+        let cfg = ParallelismConfig::tp(tp);
+        let base = rollout_memory(&shape, cfg, ctx, resp);
+        let more_ctx = rollout_memory(&shape, cfg, ctx * 2, resp);
+        let more_resp = rollout_memory(&shape, cfg, ctx, resp * 2);
+        assert!(more_ctx.kv_demand >= base.kv_demand);
+        assert!(more_resp.kv_demand >= base.kv_demand);
+        // Doubling TP halves per-GPU weights (within rounding).
+        if tp <= 4 {
+            let half =
+                rollout_memory(&shape, ParallelismConfig::tp(tp * 2), ctx, resp);
+            assert!(half.weights <= base.weights / 2 + 1);
+        }
+    });
+}
+
+#[test]
+fn prop_tgs_decreases_with_context() {
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    let tcfg = ThroughputCfg::default();
+    check_default("tgs_monotone_ctx", |rng| {
+        let tp = *rng.choose(&[4usize, 8]);
+        let resp = *rng.choose(&[32usize, 64]);
+        let ctx = 1024 * gen::usize_in(rng, 2, 16);
+        let a = decode_estimate(
+            &shape, &cluster, ParallelismConfig::tp(tp), &tcfg, ctx, resp,
+        );
+        let b = decode_estimate(
+            &shape, &cluster, ParallelismConfig::tp(tp), &tcfg, ctx * 2, resp,
+        );
+        if let (Some(a), Some(b)) = (a, b) {
+            assert!(
+                b.tgs <= a.tgs * 1.0001,
+                "TGS rose with context: {} -> {} (TP{tp}, resp {resp}, ctx {ctx})",
+                a.tgs,
+                b.tgs
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Environment invariants
+// ---------------------------------------------------------------------------
+
+fn random_playout(rng: &mut Pcg64, game: &mut dyn Game) -> Outcome {
+    loop {
+        if let Some(o) = game.outcome() {
+            return o;
+        }
+        let legal = game.legal_actions();
+        assert!(!legal.is_empty(), "non-terminal game with no moves");
+        game.play(*rng.choose(&legal));
+    }
+}
+
+#[test]
+fn prop_games_terminate_with_consistent_state() {
+    check_default("game_invariants", |rng| {
+        let mut game: Box<dyn Game> = if rng.below(2) == 0 {
+            Box::new(TicTacToe::new())
+        } else {
+            Box::new(ConnectFour::new())
+        };
+        let max_moves = game.num_actions() * 7; // 9*7 / 7*7 upper bounds
+        let mut moves = 0;
+        while game.outcome().is_none() {
+            let legal = game.legal_actions();
+            // Legal actions are unique, in range, and actually legal.
+            let mut sorted = legal.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), legal.len());
+            assert!(legal.iter().all(|&a| a < game.num_actions()));
+            assert!(legal.iter().all(|&a| game.is_legal(a)));
+            let side = game.to_move();
+            game.play(*rng.choose(&legal));
+            assert_ne!(game.to_move(), side, "side must alternate");
+            moves += 1;
+            assert!(moves <= max_moves, "game failed to terminate");
+        }
+        // Terminal: no legal moves, outcome stable.
+        assert!(game.legal_actions().is_empty());
+        assert_eq!(game.outcome(), game.outcome());
+    });
+}
+
+#[test]
+fn prop_clone_game_is_deep() {
+    check_default("clone_deep", |rng| {
+        let mut game = TicTacToe::new();
+        for _ in 0..gen::usize_in(rng, 0, 4) {
+            let legal = game.legal_actions();
+            if legal.is_empty() {
+                break;
+            }
+            game.play(*rng.choose(&legal));
+        }
+        let snapshot = game.clone_game();
+        let before: Vec<usize> = snapshot.legal_actions();
+        // Mutate the original; the clone must not change.
+        if game.outcome().is_none() {
+            if let Some(&a) = game.legal_actions().first() {
+                game.play(a);
+            }
+        }
+        assert_eq!(snapshot.legal_actions(), before);
+        let _ = random_playout(rng, &mut game);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// RL / advantage invariants
+// ---------------------------------------------------------------------------
+
+fn synth_episode(rng: &mut Pcg64, n_turns: usize, reward: f32) -> Episode {
+    let mut tokens = vec![tok::BOS];
+    let mut mask = vec![0.0f32];
+    let mut turns = Vec::new();
+    for _ in 0..n_turns {
+        let prompt_start = tokens.len();
+        tokens.extend([tok::ENV, tok::CELL_EMPTY, tok::SEP, tok::AGENT]);
+        mask.extend([0.0; 4]);
+        let response_start = tokens.len();
+        for _ in 0..gen::usize_in(rng, 0, 3) {
+            tokens.push(tok::THINK_BASE + rng.below(8) as i32);
+            mask.push(1.0);
+        }
+        tokens.push(tok::move_token(rng.below(9)));
+        mask.push(1.0);
+        turns.push(Turn {
+            prompt_start,
+            response_start,
+            response_end: tokens.len(),
+            action: None,
+        });
+    }
+    Episode {
+        tokens,
+        action_mask: mask,
+        turns,
+        status: EpisodeStatus::Finished,
+        reward,
+    }
+}
+
+#[test]
+fn prop_synthetic_episodes_validate() {
+    check_default("episode_validate", |rng| {
+        let n_turns = gen::usize_in(rng, 1, 6);
+        let ep = synth_episode(rng, n_turns, 1.0);
+        ep.validate().unwrap();
+        // Episode context = BOS + sum of turn extents (turns abut).
+        let turn_total: usize = ep.turns.iter().map(|t| t.context_len()).sum();
+        assert_eq!(ep.context_len(), 1 + turn_total);
+    });
+}
+
+#[test]
+fn prop_whiten_statistics() {
+    check_default("whiten_stats", |rng| {
+        let mut xs: Vec<f32> =
+            gen::vec_of(rng, 2, 64, |r| (r.gaussian() * 3.0) as f32);
+        // Ensure non-constant.
+        xs[0] += 1.0;
+        let orig = xs.clone();
+        whiten(&mut xs);
+        let n = xs.len() as f32;
+        let mean: f32 = xs.iter().sum::<f32>() / n;
+        assert!(mean.abs() < 1e-4, "mean {mean}");
+        // Order preserved.
+        for i in 0..xs.len() {
+            for j in 0..xs.len() {
+                if orig[i] < orig[j] {
+                    assert!(xs[i] <= xs[j] + 1e-5);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_advantages_rank_by_outcome() {
+    check_default("advantage_ranking", |rng| {
+        let n = gen::usize_in(rng, 3, 16);
+        let rewards: Vec<f32> =
+            (0..n).map(|_| *rng.choose(&[-1.0f32, 0.0, 1.0])).collect();
+        let eps: Vec<Episode> = rewards
+            .iter()
+            .map(|&r| synth_episode(rng, 2, r))
+            .collect();
+        let mut batch = ExperienceBatch::new(eps);
+        reinforce_advantages(
+            &mut batch,
+            AdvantageCfg { gamma: 1.0, whiten: true },
+        );
+        for i in 0..n {
+            for j in 0..n {
+                if rewards[i] < rewards[j] {
+                    assert!(
+                        batch.advantages[i] <= batch.advantages[j] + 1e-5,
+                        "adv ranking violated"
+                    );
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON substrate (round-trip under random values)
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.gaussian() * 1e3).round()),
+        3 => Json::Str(
+            (0..rng.below(12))
+                .map(|_| *rng.choose(&['a', 'b', '\\', '"', 'x', '\n', '7']))
+                .collect(),
+        ),
+        4 => Json::Arr(
+            (0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check_default("json_roundtrip", |rng| {
+        let v = random_json(rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| {
+            panic!("reparse failed for {s:?}: {e}");
+        });
+        assert_eq!(back, v, "roundtrip mismatch for {s:?}");
+    });
+}
