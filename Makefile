@@ -1,0 +1,19 @@
+# Repo-level targets. The rust crate lives in rust/; the AOT artifacts
+# it executes are produced by the python compile path.
+
+.PHONY: check test artifacts bench-pipeline
+
+# Tier-1 verify + lint gate.
+check:
+	cd rust && cargo build --release && cargo test -q && cargo clippy -- -D warnings
+
+test:
+	cd rust && cargo test -q
+
+# AOT-lower the JAX model to HLO-text artifacts for the rust runtime.
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../rust/artifacts
+
+# Fig. 5 (ours): serial vs overlapped steps/sec; emits BENCH_pipeline.json.
+bench-pipeline:
+	cd rust && cargo bench --bench fig5_pipeline

@@ -5,6 +5,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::pipeline::PipelineMode;
 use crate::rollout::{LimitPolicy, RolloutCfg, SamplerCfg};
 use crate::runtime::TrainHp;
 
@@ -69,6 +70,10 @@ pub struct TrainConfig {
     /// Disable the selector (always use the largest bucket) — the
     /// ablation baseline.
     pub dynamic_buckets: bool,
+    /// Stage scheduling: serial (seed-identical order) or overlapped
+    /// (dispatch runs concurrently with update + next-step rollout;
+    /// training metrics are identical for a fixed seed).
+    pub pipeline: PipelineMode,
     pub metrics_path: Option<PathBuf>,
     pub checkpoint_path: Option<PathBuf>,
     pub seed: u64,
@@ -88,6 +93,7 @@ impl Default for TrainConfig {
             ref_refresh_every: 0,
             selector_alpha: 0.3,
             dynamic_buckets: true,
+            pipeline: PipelineMode::Serial,
             metrics_path: None,
             checkpoint_path: None,
             seed: 0,
@@ -180,6 +186,9 @@ impl TrainConfig {
         if let Some(v) = j.at(&["selector_alpha"]).as_f64() {
             c.selector_alpha = v;
         }
+        if let Some(s) = j.at(&["pipeline"]).as_str() {
+            c.pipeline = PipelineMode::from_name(s)?;
+        }
         if let Some(s) = j.at(&["metrics_path"]).as_str() {
             c.metrics_path = Some(PathBuf::from(s));
         }
@@ -208,7 +217,7 @@ mod tests {
               "rollout": {"max_context": 256, "max_response_tokens": 3,
                           "temperature": 0.7},
               "hp": {"lr": 0.001, "kl_coef": 0.2},
-              "gamma": 0.95, "seed": 9
+              "gamma": 0.95, "seed": 9, "pipeline": "overlapped"
             }"#,
         )
         .unwrap();
@@ -222,6 +231,7 @@ mod tests {
         assert!((c.hp.kl_coef - 0.2).abs() < 1e-6);
         assert!((c.gamma - 0.95).abs() < 1e-6);
         assert_eq!(c.seed, 9);
+        assert_eq!(c.pipeline, PipelineMode::Overlapped);
     }
 
     #[test]
@@ -229,6 +239,7 @@ mod tests {
         assert!(TrainConfig::from_json_str(r#"{"steps": 0}"#).is_err());
         assert!(TrainConfig::from_json_str(r#"{"gamma": 1.5}"#).is_err());
         assert!(TrainConfig::from_json_str(r#"{"env": "chess"}"#).is_err());
+        assert!(TrainConfig::from_json_str(r#"{"pipeline": "warp"}"#).is_err());
         assert!(TrainConfig::from_json_str("not json").is_err());
     }
 

@@ -1,9 +1,14 @@
 //! L3 coordination: the RL training loop (Rollout → ExpPrep → Dispatch →
 //! ModelUpdate) with the Parallelism Selector and Data Dispatcher wired
-//! in as first-class stages (paper Fig. 2).
+//! in as first-class stages (paper Fig. 2), schedulable either serially
+//! or through the overlapped step pipeline ([`pipeline`]).
 
 pub mod exp_prep;
+pub mod pipeline;
 pub mod trainer;
 
 pub use exp_prep::{pack_episodes, prepare, train_bucket, PackedBatch};
+pub use pipeline::{
+    DispatchJob, DispatchResult, DispatchWorker, PipelineMode, PIPELINE_DEPTH,
+};
 pub use trainer::{DispatchMode, Trainer};

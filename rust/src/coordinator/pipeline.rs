@@ -1,0 +1,379 @@
+//! The pipelined step engine: stage tasks connected by bounded channels,
+//! with a **persistent dispatch worker** so the Dispatch stage of step
+//! *k* overlaps the Update of step *k* and the Rollout/ExpPrep of step
+//! *k+1* on the engine thread.
+//!
+//! ## Overlap design
+//!
+//! `Trainer::step` used to run Rollout → ExpPrep → Dispatch → Update
+//! strictly serially, and the TCP dispatcher rebuilt every socket and OS
+//! thread each phase. This module splits the step into explicit stage
+//! tasks:
+//!
+//! ```text
+//!  engine thread:   R(k) E(k) ───────── U(k) R(k+1) E(k+1) ── U(k+1) …
+//!                             └▶ submit            ┌▶ recv
+//!  dispatch worker:            D(k) ═══════════════┘  D(k+1) …
+//! ```
+//!
+//! The dispatch worker is a long-lived thread fed through a **bounded**
+//! `sync_channel` (depth [`PIPELINE_DEPTH`]), owning a persistent
+//! [`TcpRuntime`] whose `(src, dst)` connections are established once and
+//! reused across phases and steps; send jobs run on the shared
+//! [`ThreadPool`]. Simulated dispatch modes run on the same worker so the
+//! Serial/Overlapped knob is engine-independent.
+//!
+//! ## Why Rollout(k+1) does not overlap with itself against Update(k)'s
+//! *output* — the determinism argument
+//!
+//! Rollout for step *k+1* must read θ_{k+1}, which only exists once
+//! Update(*k*) finished; overlapping the two would force rollout onto
+//! stale θ_k (one-step off-policy) and change every training metric.
+//! `PipelineMode::Overlapped` therefore overlaps the stages whose data
+//! dependencies allow it *without* changing the dataflow: Dispatch(k)
+//! (whose only consumer is the metrics record) runs concurrently with
+//! Update(k) **and** with Rollout/ExpPrep(k+1). The result is that
+//! Overlapped mode reproduces Serial-mode training metrics bit-for-bit
+//! for a fixed seed — the ablation isolates the systems win.
+//!
+//! ## Double-buffered parameter snapshots
+//!
+//! In Overlapped mode the rollout stage reads a
+//! [`crate::runtime::SnapshotBuffer`] front snapshot (published right
+//! after each update) instead of the live `ModelState`. Values are
+//! identical — the snapshot is a deep copy of θ_{k+1} — but the buffer
+//! decouples the rollout's reads from in-place mutation of the live
+//! literals, which is what will let Update(k+1) move off the critical
+//! path onto its own stage thread without changing this module's
+//! contract.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::trainer::DispatchMode;
+use crate::dispatch::{simulate_plan, DispatchPlan, TcpRuntime, WorkerMap};
+use crate::util::threadpool::ThreadPool;
+
+/// Stage-channel depth: one step in flight plus one being staged.
+pub const PIPELINE_DEPTH: usize = 2;
+
+/// How the four training stages are scheduled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Seed-identical stage order: Rollout → ExpPrep → Dispatch → Update,
+    /// each stage finishing before the next starts.
+    Serial,
+    /// Dispatch(k) overlaps Update(k) and Rollout/ExpPrep(k+1); training
+    /// metrics are identical to `Serial` for a fixed seed.
+    Overlapped,
+}
+
+impl PipelineMode {
+    pub fn from_name(s: &str) -> Result<PipelineMode> {
+        Ok(match s {
+            "serial" => PipelineMode::Serial,
+            "overlapped" | "overlap" | "pipelined" => PipelineMode::Overlapped,
+            other => bail!("unknown pipeline mode {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineMode::Serial => "serial",
+            PipelineMode::Overlapped => "overlapped",
+        }
+    }
+}
+
+/// Work order for the persistent dispatch stage.
+pub struct DispatchJob {
+    /// Trainer step index the exchange belongs to (metrics correlation).
+    pub step: u64,
+    pub plan: DispatchPlan,
+    pub mode: DispatchMode,
+    pub n_workers: usize,
+    /// Emulated per-worker NIC rate for `DispatchMode::Tcp`
+    /// (`None` = unthrottled loopback).
+    pub nic_bytes_per_sec: Option<f64>,
+}
+
+/// Completion record of one dispatch stage execution.
+#[derive(Debug, Clone)]
+pub struct DispatchResult {
+    pub step: u64,
+    /// Modeled exchange latency: simulator makespan, or the TCP report's
+    /// measured transfer window.
+    pub modeled_seconds: f64,
+    /// Real wall-clock seconds the stage occupied on the worker.
+    pub wall_seconds: f64,
+    pub bytes: u64,
+    pub transfers: usize,
+    /// New TCP connections opened while executing (0 after warmup;
+    /// always 0 for the simulated modes).
+    pub connections_opened: usize,
+}
+
+/// Cached TCP runtime keyed by the job shape that created it.
+struct TcpCache {
+    n_workers: usize,
+    nic_bytes_per_sec: Option<f64>,
+    runtime: TcpRuntime,
+}
+
+fn run_job(
+    tcp: &mut Option<TcpCache>,
+    pool: &Arc<ThreadPool>,
+    job: DispatchJob,
+) -> Result<DispatchResult> {
+    let t0 = Instant::now();
+    match job.mode {
+        DispatchMode::Simulated | DispatchMode::SimulatedCentralized => {
+            let cluster = ClusterSpec::paper_testbed();
+            let map = WorkerMap::one_per_node(&cluster, job.n_workers);
+            let makespan = simulate_plan(&cluster, &map, &job.plan).makespan;
+            Ok(DispatchResult {
+                step: job.step,
+                modeled_seconds: makespan,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+                bytes: job.plan.total_bytes(),
+                transfers: job.plan.n_transfers(),
+                connections_opened: 0,
+            })
+        }
+        DispatchMode::Tcp => {
+            let stale = match tcp.as_ref() {
+                Some(c) => {
+                    c.n_workers != job.n_workers
+                        || c.nic_bytes_per_sec != job.nic_bytes_per_sec
+                }
+                None => true,
+            };
+            if stale {
+                // An all-to-all phase fans out up to w*(w-1) concurrent
+                // transfers; if the shared pool is smaller than that the
+                // measured dispatch time would include pool queuing, so
+                // give the runtime a right-sized pool instead.
+                let fan_out = crate::dispatch::tcp::send_pool_threads(
+                    job.n_workers * job.n_workers.saturating_sub(1),
+                );
+                let send_pool = if pool.threads() >= fan_out {
+                    Arc::clone(pool)
+                } else {
+                    Arc::new(ThreadPool::new(fan_out))
+                };
+                *tcp = Some(TcpCache {
+                    n_workers: job.n_workers,
+                    nic_bytes_per_sec: job.nic_bytes_per_sec,
+                    runtime: TcpRuntime::new(
+                        job.n_workers,
+                        job.nic_bytes_per_sec,
+                        send_pool,
+                    )?,
+                });
+            }
+            let runtime = &tcp.as_ref().unwrap().runtime;
+            let report = runtime.execute(&job.plan)?;
+            Ok(DispatchResult {
+                step: job.step,
+                modeled_seconds: report.seconds,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+                bytes: report.bytes,
+                transfers: report.transfers,
+                connections_opened: report.connections_opened,
+            })
+        }
+    }
+}
+
+/// Persistent dispatch stage: one long-lived worker thread consuming
+/// [`DispatchJob`]s from a bounded channel and producing
+/// [`DispatchResult`]s in submission order. For `DispatchMode::Tcp` it
+/// owns a [`TcpRuntime`] that survives across jobs, so steady-state
+/// dispatch reuses every connection.
+pub struct DispatchWorker {
+    tx: Option<SyncSender<DispatchJob>>,
+    rx: Receiver<Result<DispatchResult>>,
+    handle: Option<JoinHandle<()>>,
+    pending: usize,
+}
+
+impl DispatchWorker {
+    /// Start the worker; `pool` is the shared thread pool its TCP send
+    /// jobs run on.
+    pub fn spawn(pool: Arc<ThreadPool>) -> DispatchWorker {
+        let (jtx, jrx) = sync_channel::<DispatchJob>(PIPELINE_DEPTH);
+        let (rtx, rrx) = sync_channel::<Result<DispatchResult>>(PIPELINE_DEPTH);
+        let handle = std::thread::spawn(move || {
+            let mut tcp: Option<TcpCache> = None;
+            while let Ok(job) = jrx.recv() {
+                let out = run_job(&mut tcp, &pool, job);
+                if rtx.send(out).is_err() {
+                    break;
+                }
+            }
+        });
+        DispatchWorker {
+            tx: Some(jtx),
+            rx: rrx,
+            handle: Some(handle),
+            pending: 0,
+        }
+    }
+
+    /// Enqueue a dispatch; blocks only if [`PIPELINE_DEPTH`] jobs are
+    /// already in flight (bounded-channel backpressure).
+    pub fn submit(&mut self, job: DispatchJob) -> Result<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("dispatch worker shut down"))?
+            .send(job)
+            .map_err(|_| anyhow!("dispatch worker died"))?;
+        self.pending += 1;
+        Ok(())
+    }
+
+    /// Await the oldest in-flight dispatch.
+    pub fn recv(&mut self) -> Result<DispatchResult> {
+        if self.pending == 0 {
+            bail!("no dispatch in flight");
+        }
+        let r = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("dispatch worker died"))?;
+        self.pending -= 1;
+        r
+    }
+
+    /// Jobs submitted but not yet received.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+}
+
+impl Drop for DispatchWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // worker's recv errs; thread exits
+        // Drain unread results so a worker blocked on the bounded result
+        // channel can finish (otherwise join would deadlock).
+        while self.rx.recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::{plan_alltoall, DataLayout};
+
+    fn job(step: u64, mode: DispatchMode) -> DispatchJob {
+        let p = DataLayout::round_robin(16, 4);
+        let c = DataLayout::blocked(16, 4);
+        DispatchJob {
+            step,
+            plan: plan_alltoall(&p, &c, 10_000),
+            mode,
+            n_workers: 4,
+            nic_bytes_per_sec: None,
+        }
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [PipelineMode::Serial, PipelineMode::Overlapped] {
+            assert_eq!(PipelineMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(PipelineMode::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn worker_runs_simulated_jobs_in_order() {
+        let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(2)));
+        w.submit(job(7, DispatchMode::Simulated)).unwrap();
+        w.submit(job(8, DispatchMode::Simulated)).unwrap();
+        assert_eq!(w.pending(), 2);
+        let a = w.recv().unwrap();
+        let b = w.recv().unwrap();
+        assert_eq!((a.step, b.step), (7, 8));
+        assert!(a.modeled_seconds > 0.0);
+        assert!(a.bytes > 0);
+        assert_eq!(a.connections_opened, 0);
+        assert_eq!(w.pending(), 0);
+    }
+
+    #[test]
+    fn recv_without_submit_is_an_error() {
+        let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(2)));
+        assert!(w.recv().is_err());
+    }
+
+    #[test]
+    fn worker_keeps_tcp_runtime_warm_across_jobs() {
+        let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));
+        w.submit(job(0, DispatchMode::Tcp)).unwrap();
+        let warm = w.recv().unwrap();
+        assert!(warm.connections_opened > 0, "first job must connect");
+        for step in 1..4 {
+            w.submit(job(step, DispatchMode::Tcp)).unwrap();
+            let r = w.recv().unwrap();
+            assert_eq!(
+                r.connections_opened, 0,
+                "step {step} must reuse connections"
+            );
+            assert_eq!(r.bytes, warm.bytes);
+        }
+    }
+
+    #[test]
+    fn dispatch_overlaps_caller_work() {
+        // A paced TCP job takes ~>100ms; the caller does its own work
+        // meanwhile. If the worker were synchronous the elapsed time
+        // would be the sum, not the max.
+        let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));
+        let p = DataLayout::round_robin(16, 4);
+        let c = DataLayout::blocked(16, 4);
+        let plan = plan_alltoall(&p, &c, 200_000); // 2.4 MB total
+        let nic = Some(5e6); // ~120ms of paced egress per worker NIC
+        // Warm up connections first so timing is steady-state.
+        w.submit(DispatchJob {
+            step: 0,
+            plan: plan.clone(),
+            mode: DispatchMode::Tcp,
+            n_workers: 4,
+            nic_bytes_per_sec: nic,
+        })
+        .unwrap();
+        let warm = w.recv().unwrap();
+
+        assert!(warm.wall_seconds > 0.0);
+        let t0 = Instant::now();
+        w.submit(DispatchJob {
+            step: 1,
+            plan,
+            mode: DispatchMode::Tcp,
+            n_workers: 4,
+            nic_bytes_per_sec: nic,
+        })
+        .unwrap();
+        let submit_secs = t0.elapsed().as_secs_f64();
+        let r = w.recv().unwrap();
+        assert_eq!(r.connections_opened, 0);
+        assert!(
+            r.wall_seconds > 0.05,
+            "paced job too fast to measure: {}",
+            r.wall_seconds
+        );
+        assert!(
+            submit_secs < r.wall_seconds / 2.0,
+            "submit blocked for {submit_secs}s against a {}s job",
+            r.wall_seconds
+        );
+    }
+}

@@ -15,23 +15,36 @@
 //! the cost/capacity analogue of a TP switch), and the dispatcher's
 //! transfer plan is timed on the network simulator (or actually executed
 //! over loopback TCP with `DispatchMode::Tcp`).
+//!
+//! The step is decomposed into explicit stage tasks
+//! (`stage_rollout_exp_prep` → `submit_dispatch` → `stage_update` →
+//! `finalize`) driven either serially ([`Trainer::step`]) or by the
+//! overlapped pipeline of [`crate::coordinator::pipeline`], which runs
+//! Dispatch(k) concurrently with Update(k) and Rollout/ExpPrep(k+1) on a
+//! persistent dispatch worker. Rollout, the dispatch worker, and (for
+//! `DispatchMode::Tcp`) every TCP connection are constructed once in
+//! [`Trainer::new`] and reused every step.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 use xla::Literal;
 
-use crate::cluster::ClusterSpec;
 use crate::config::{EnvKind, OpponentKind, TrainConfig};
 use crate::coordinator::exp_prep;
-use crate::dispatch::{
-    plan_alltoall, plan_centralized, simulate_plan, DataLayout, WorkerMap,
+use crate::coordinator::pipeline::{
+    DispatchJob, DispatchResult, DispatchWorker, PipelineMode,
 };
+use crate::dispatch::{plan_alltoall, plan_centralized, DataLayout};
 use crate::envs::{ConnectFour, Game, HeuristicOpponent, Opponent, RandomOpponent, TicTacToe};
 use crate::metrics::{MetricsLog, StepRecord};
 use crate::parallelism::{ProfilePoint, RangeTable, Selector};
 use crate::rl::advantage::AdvantageCfg;
 use crate::rl::episode::{EpisodeStatus, ExperienceBatch};
-use crate::rollout::{LimitPolicy, RolloutEngine};
-use crate::runtime::{Engine, ModelState};
+use crate::rollout::{RolloutEngine, RolloutStats};
+use crate::runtime::{Engine, ModelState, SnapshotBuffer, TrainBatch};
+use crate::util::threadpool::ThreadPool;
 
 /// How the dispatch stage is executed/timed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +55,25 @@ pub enum DispatchMode {
     Tcp,
     /// EARL all-to-all disabled → single-controller baseline plan.
     SimulatedCentralized,
+}
+
+/// Rollout + ExpPrep outputs of one step, in flight between stages.
+struct StagedStep {
+    switched: bool,
+    bucket: usize,
+    train_batch: TrainBatch,
+    dispatch_bytes: u64,
+    mean_return: f64,
+    rstats: RolloutStats,
+    n_eps: f64,
+    rollout_seconds: f64,
+    exp_prep_seconds: f64,
+}
+
+/// A step that has been updated but whose dispatch is still in flight:
+/// everything for the record except the dispatch timings.
+struct PendingStep {
+    rec: StepRecord,
 }
 
 /// The end-to-end trainer.
@@ -56,7 +88,18 @@ pub struct Trainer {
     pub dispatch_mode: DispatchMode,
     /// Conceptual DP worker count for dispatch planning.
     pub dispatch_workers: usize,
+    /// Emulated per-worker NIC for `DispatchMode::Tcp` (`None` =
+    /// unthrottled loopback).
+    pub dispatch_nic: Option<f64>,
+    /// Persistent rollout driver (decode buffers survive across steps).
+    rollout: RolloutEngine,
+    /// Double-buffered parameter snapshots for the overlapped pipeline.
+    snapshots: SnapshotBuffer,
+    /// Persistent dispatch stage worker (owns the TCP runtime).
+    dispatcher: DispatchWorker,
     rollout_seed: u64,
+    /// Wall-clock anchor of the step currently being measured.
+    step_t0: Instant,
 }
 
 impl Trainer {
@@ -97,6 +140,9 @@ impl Trainer {
             None => MetricsLog::memory(),
         };
         let rollout_seed = cfg.seed;
+        let rollout = RolloutEngine::new(cfg.rollout.clone());
+        // Shared pool: TCP send jobs of the persistent dispatch runtime.
+        let dispatcher = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
         Ok(Trainer {
             cfg,
             engine,
@@ -106,7 +152,12 @@ impl Trainer {
             metrics,
             dispatch_mode: DispatchMode::Simulated,
             dispatch_workers: 8,
+            dispatch_nic: None,
+            rollout,
+            snapshots: SnapshotBuffer::new(),
+            dispatcher,
             rollout_seed,
+            step_t0: Instant::now(),
         })
     }
 
@@ -124,32 +175,38 @@ impl Trainer {
         }
     }
 
-    /// One full training step (Rollout → ExpPrep → Dispatch → Update).
-    pub fn step(&mut self) -> Result<StepRecord> {
+    /// Stage 1+2: ① selector decision, Rollout, monitor feedback,
+    /// ② ExpPrep at the (escalated) selected bucket.
+    fn stage_rollout_exp_prep(&mut self) -> Result<StagedStep> {
         let step_idx = self.state.step;
 
         // ① Parallelism Selector before Rollout.
         let decision = self.selector.decide();
         let switched = decision.switched();
 
-        // Rollout.
-        let t0 = std::time::Instant::now();
-        let mut rollout_cfg = self.cfg.rollout.clone();
-        rollout_cfg.seed = self.rollout_seed.wrapping_add(step_idx);
-        if !self.cfg.dynamic_buckets {
-            // Ablation: no dynamic adaptation — always the largest bucket
-            // (pay max cost), with the same hard truncation budget.
-            rollout_cfg.limit = match rollout_cfg.limit {
-                LimitPolicy::Hard(n) => LimitPolicy::Hard(n),
-                LimitPolicy::Buckets => LimitPolicy::Buckets,
-            };
-        }
-        let mut rollout = RolloutEngine::new(&self.engine, rollout_cfg);
-        let (episodes, rstats) = rollout.run_batch(
-            &self.state,
-            self.make_game().as_ref(),
-            self.make_opponent().as_ref(),
-        )?;
+        // Rollout off the front parameter snapshot when pipelining (a
+        // value-identical deep copy of θ, decoupled from the live state
+        // the concurrent-update future mutates); off the live state in
+        // serial mode (seed-identical path, no copy).
+        let t0 = Instant::now();
+        self.rollout.reseed(self.rollout_seed.wrapping_add(step_idx));
+        let make_game = self.make_game();
+        let make_opponent = self.make_opponent();
+        let use_snapshot = self.cfg.pipeline == PipelineMode::Overlapped;
+        let (episodes, rstats) = match (use_snapshot, self.snapshots.front()) {
+            (true, Some(snap)) => self.rollout.run_batch(
+                &self.engine,
+                &snap.params,
+                make_game.as_ref(),
+                make_opponent.as_ref(),
+            )?,
+            _ => self.rollout.run_batch(
+                &self.engine,
+                &self.state.params,
+                make_game.as_ref(),
+                make_opponent.as_ref(),
+            )?,
+        };
         let rollout_seconds = t0.elapsed().as_secs_f64();
 
         // Feed the context monitor (paper: averaged context length).
@@ -157,7 +214,7 @@ impl Trainer {
 
         // ② ExpPrep (reference scoring + advantages) at the selected
         // bucket (escalated to fit).
-        let t1 = std::time::Instant::now();
+        let t1 = Instant::now();
         let suggested = if self.cfg.dynamic_buckets {
             self.selector.current()
         } else {
@@ -182,37 +239,51 @@ impl Trainer {
         )?;
         let exp_prep_seconds = t1.elapsed().as_secs_f64();
 
-        // ③–⑤ Data Dispatcher: plan the ref-logprob exchange between the
-        // conceptual ExpPrep workers and trainer workers.
-        let t2 = std::time::Instant::now();
+        Ok(StagedStep {
+            switched,
+            bucket,
+            train_batch,
+            dispatch_bytes,
+            mean_return: batch.mean_reward(),
+            n_eps: batch.episodes.len().max(1) as f64,
+            rstats,
+            rollout_seconds,
+            exp_prep_seconds,
+        })
+    }
+
+    /// Stage ③–⑤: plan the ref-logprob exchange between the conceptual
+    /// ExpPrep workers and trainer workers, and hand it to the persistent
+    /// dispatch worker (non-blocking).
+    fn submit_dispatch(&mut self, staged: &StagedStep) -> Result<()> {
         let n_items = self.engine.manifest.batch;
         let producer = DataLayout::round_robin(n_items, self.dispatch_workers);
         let consumer = DataLayout::blocked(n_items, self.dispatch_workers);
-        let shard = dispatch_bytes / n_items as u64;
-        let dispatch_seconds = match self.dispatch_mode {
-            DispatchMode::Simulated => {
-                let plan = plan_alltoall(&producer, &consumer, shard);
-                let cluster = ClusterSpec::paper_testbed();
-                let map = WorkerMap::one_per_node(&cluster, self.dispatch_workers);
-                simulate_plan(&cluster, &map, &plan).makespan
+        let shard = staged.dispatch_bytes / n_items as u64;
+        let plan = match self.dispatch_mode {
+            DispatchMode::Simulated | DispatchMode::Tcp => {
+                plan_alltoall(&producer, &consumer, shard)
             }
             DispatchMode::SimulatedCentralized => {
-                let plan = plan_centralized(&producer, &consumer, shard, 0);
-                let cluster = ClusterSpec::paper_testbed();
-                let map = WorkerMap::one_per_node(&cluster, self.dispatch_workers);
-                simulate_plan(&cluster, &map, &plan).makespan
-            }
-            DispatchMode::Tcp => {
-                let plan = plan_alltoall(&producer, &consumer, shard);
-                crate::dispatch::execute_plan_tcp(&plan, self.dispatch_workers)?
-                    .seconds
+                plan_centralized(&producer, &consumer, shard, 0)
             }
         };
-        let _ = t2;
+        self.dispatcher.submit(DispatchJob {
+            // Post-update numbering, matching the StepRecord.
+            step: self.state.step + 1,
+            plan,
+            mode: self.dispatch_mode,
+            n_workers: self.dispatch_workers,
+            nic_bytes_per_sec: self.dispatch_nic,
+        })
+    }
 
-        // Model Update.
-        let t3 = std::time::Instant::now();
-        let tstats = self.engine.train_step(&mut self.state, &train_batch, self.cfg.hp)?;
+    /// Stage: Model Update (+ reference refresh and snapshot publish).
+    fn stage_update(&mut self, staged: StagedStep) -> Result<PendingStep> {
+        let t3 = Instant::now();
+        let tstats =
+            self.engine
+                .train_step(&mut self.state, &staged.train_batch, self.cfg.hp)?;
         let train_seconds = t3.elapsed().as_secs_f64();
 
         // Reference refresh (off-policy anchor update).
@@ -222,47 +293,115 @@ impl Trainer {
             self.ref_params = self.state.clone_params()?;
         }
 
-        let n_eps = batch.episodes.len().max(1) as f64;
+        // Publish θ_{k+1} for the pipelined rollout of step k+1.
+        if self.cfg.pipeline == PipelineMode::Overlapped {
+            self.snapshots.publish(&self.state)?;
+        }
+
         let rec = StepRecord {
             step: self.state.step,
-            mean_return: batch.mean_reward(),
-            mean_turn_ctx: rstats.mean_turn_context,
-            mean_episode_ctx: rstats.mean_episode_context,
-            truncation_rate: rstats.truncated as f64 / n_eps,
-            illegal_rate: rstats.illegal as f64 / n_eps,
+            mean_return: staged.mean_return,
+            mean_turn_ctx: staged.rstats.mean_turn_context,
+            mean_episode_ctx: staged.rstats.mean_episode_context,
+            truncation_rate: staged.rstats.truncated as f64 / staged.n_eps,
+            illegal_rate: staged.rstats.illegal as f64 / staged.n_eps,
             loss: tstats.loss as f64,
             kl: tstats.kl as f64,
             entropy: tstats.entropy as f64,
-            tgs: rstats.tgs,
-            bucket,
-            selector_switched: switched,
-            rollout_seconds,
-            exp_prep_seconds,
-            dispatch_seconds,
+            tgs: staged.rstats.tgs,
+            bucket: staged.bucket,
+            selector_switched: staged.switched,
+            rollout_seconds: staged.rollout_seconds,
+            exp_prep_seconds: staged.exp_prep_seconds,
+            dispatch_seconds: 0.0,
+            dispatch_wall_seconds: 0.0,
             train_seconds,
+            step_wall_seconds: 0.0,
         };
+        Ok(PendingStep { rec })
+    }
+
+    /// Join the dispatch result into the step record and commit it.
+    fn finalize(
+        &mut self,
+        pend: PendingStep,
+        d: DispatchResult,
+    ) -> Result<StepRecord> {
+        let mut rec = pend.rec;
+        rec.dispatch_seconds = d.modeled_seconds;
+        rec.dispatch_wall_seconds = d.wall_seconds;
+        rec.step_wall_seconds = self.step_t0.elapsed().as_secs_f64();
+        self.step_t0 = Instant::now();
         self.metrics.record(rec.clone())?;
         Ok(rec)
     }
 
+    /// One full training step in the seed-identical serial stage order
+    /// (Rollout → ExpPrep → Dispatch → Update).
+    pub fn step(&mut self) -> Result<StepRecord> {
+        self.step_t0 = Instant::now();
+        let staged = self.stage_rollout_exp_prep()?;
+        self.submit_dispatch(&staged)?;
+        // Serial barrier: the exchange completes before the update runs.
+        let d = self.dispatcher.recv()?;
+        let pend = self.stage_update(staged)?;
+        self.finalize(pend, d)
+    }
+
+    /// Pipelined driver: Dispatch(k) overlaps Update(k) and
+    /// Rollout/ExpPrep(k+1). Training metrics are identical to the
+    /// serial path for a fixed seed (see `coordinator::pipeline` docs).
+    fn run_overlapped(&mut self) -> Result<()> {
+        self.step_t0 = Instant::now();
+        self.snapshots.publish(&self.state)?;
+        let mut staged = self.stage_rollout_exp_prep()?;
+        for k in 0..self.cfg.steps {
+            self.submit_dispatch(&staged)?;
+            let pend = self.stage_update(staged)?;
+            // Prefetch the next step's rollout while Dispatch(k) drains.
+            let next = if k + 1 < self.cfg.steps {
+                Some(self.stage_rollout_exp_prep()?)
+            } else {
+                None
+            };
+            let d = self.dispatcher.recv()?;
+            let rec = self.finalize(pend, d)?;
+            Self::print_step(&rec);
+            match next {
+                Some(s) => staged = s,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn print_step(rec: &StepRecord) {
+        eprintln!(
+            "[step {:>4}] return {:+.3} ctx(ep) {:>5.1} ctx(turn) {:>5.1} \
+             trunc {:>4.1}% loss {:+.4} ent {:.3} bucket {} tgs {:.1}{}",
+            rec.step,
+            rec.mean_return,
+            rec.mean_episode_ctx,
+            rec.mean_turn_ctx,
+            rec.truncation_rate * 100.0,
+            rec.loss,
+            rec.entropy,
+            rec.bucket,
+            rec.tgs,
+            if rec.selector_switched { " [switch]" } else { "" },
+        );
+    }
+
     /// Run the configured number of steps; returns final rolling return.
     pub fn run(&mut self) -> Result<f64> {
-        for _ in 0..self.cfg.steps {
-            let rec = self.step()?;
-            eprintln!(
-                "[step {:>4}] return {:+.3} ctx(ep) {:>5.1} ctx(turn) {:>5.1} \
-                 trunc {:>4.1}% loss {:+.4} ent {:.3} bucket {} tgs {:.1}{}",
-                rec.step,
-                rec.mean_return,
-                rec.mean_episode_ctx,
-                rec.mean_turn_ctx,
-                rec.truncation_rate * 100.0,
-                rec.loss,
-                rec.entropy,
-                rec.bucket,
-                rec.tgs,
-                if rec.selector_switched { " [switch]" } else { "" },
-            );
+        match self.cfg.pipeline {
+            PipelineMode::Serial => {
+                for _ in 0..self.cfg.steps {
+                    let rec = self.step()?;
+                    Self::print_step(&rec);
+                }
+            }
+            PipelineMode::Overlapped => self.run_overlapped()?,
         }
         if let Some(p) = &self.cfg.checkpoint_path {
             self.state.save_params(p)?;

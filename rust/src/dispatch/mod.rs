@@ -22,4 +22,4 @@ pub use plan::{
     WorkerTransfer,
 };
 pub use sim::{simulate_plan, WorkerMap};
-pub use tcp::{execute_plan_tcp, TcpReport};
+pub use tcp::{execute_plan_tcp, execute_plan_tcp_rated, TcpReport, TcpRuntime};

@@ -1,10 +1,24 @@
-//! Real-socket dispatch engine: executes a [`DispatchPlan`] over TCP
-//! loopback with one OS thread per worker — the measured-bytes
-//! counterpart of the network simulator for paper Fig. 4 (the paper's
-//! prototype likewise "employs TCP over Ethernet, identical to the
-//! baseline transport").
+//! Real-socket dispatch engine: executes [`DispatchPlan`]s over TCP
+//! loopback — the measured-bytes counterpart of the network simulator for
+//! paper Fig. 4 (the paper's prototype likewise "employs TCP over
+//! Ethernet, identical to the baseline transport").
 //!
-//! Loopback has no physical NIC, so without shaping, every worker would
+//! ## Persistent worker runtime
+//!
+//! [`TcpRuntime`] is built **once** and reused across phases and steps:
+//! listeners are bound and long-lived acceptor/receiver threads started at
+//! construction, one connection is established per `(src, dst)` worker
+//! pair on first use and then cached, and every transfer is framed with a
+//! small header on the shared stream. Steady-state dispatch therefore
+//! performs **no** `bind`/`connect`/thread-spawn work — only framed
+//! writes — in contrast to the old thread-and-socket-per-transfer design
+//! that tore everything down every phase. Per-transfer send jobs run on a
+//! shared [`ThreadPool`]; the long-lived acceptors/receivers get dedicated
+//! OS threads so they can never starve the pool.
+//!
+//! ## NIC emulation
+//!
+//! Loopback has no physical NIC, so without shaping every worker would
 //! enjoy memory-bus bandwidth and the *endpoint* bottleneck the paper
 //! measures would vanish. `nic_bytes_per_sec` therefore emulates each
 //! worker's NIC with a token-bucket rate limiter shared by all of that
@@ -13,27 +27,39 @@
 //! plan pushes 2× the payload through ONE worker's NIC; the all-to-all
 //! plan spreads 1× the payload over all of them.
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::dispatch::plan::DispatchPlan;
+use crate::util::threadpool::ThreadPool;
 
 /// Result of executing a plan on real sockets.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct TcpReport {
     pub seconds: f64,
-    /// Per-phase wall times.
-    pub phase_seconds: [f64; 4],
+    /// Per-phase wall times (one entry per plan phase, no cap).
+    pub phase_seconds: Vec<f64>,
     pub n_phases: usize,
     pub bytes: u64,
     pub transfers: usize,
+    /// `TcpStream::connect` calls performed during this execution —
+    /// 0 once the runtime's connection cache is warm.
+    pub connections_opened: usize,
 }
 
 const CHUNK: usize = 256 << 10;
+
+/// How long a phase may wait on a single completion before the runtime
+/// declares the exchange wedged (generous: paced bulk transfers are slow
+/// by design, silent hangs should still fail loudly).
+const PHASE_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Token-bucket pacer: one per worker per direction. `acquire(n)` blocks
 /// until `n` bytes "fit" the configured rate.
@@ -76,26 +102,361 @@ fn maybe_acquire(p: &Option<Arc<Pacer>>, bytes: usize) {
     }
 }
 
-/// Wire header: src worker, dst worker, payload bytes.
-fn write_header(s: &mut TcpStream, src: u64, bytes: u64) -> std::io::Result<()> {
-    let mut h = [0u8; 16];
+/// Wire header framing one transfer on a persistent stream: src worker,
+/// execution epoch (so a later `execute` can discard completions of a
+/// transfer that outlived a timed-out predecessor), payload bytes.
+fn write_header(
+    s: &mut TcpStream,
+    src: u64,
+    epoch: u64,
+    bytes: u64,
+) -> std::io::Result<()> {
+    let mut h = [0u8; 24];
     h[..8].copy_from_slice(&src.to_le_bytes());
-    h[8..].copy_from_slice(&bytes.to_le_bytes());
+    h[8..16].copy_from_slice(&epoch.to_le_bytes());
+    h[16..].copy_from_slice(&bytes.to_le_bytes());
     s.write_all(&h)
 }
 
-fn read_header(s: &mut TcpStream) -> std::io::Result<(u64, u64)> {
-    let mut h = [0u8; 16];
+fn read_header(s: &mut TcpStream) -> std::io::Result<(u64, u64, u64)> {
+    let mut h = [0u8; 24];
     s.read_exact(&mut h)?;
     Ok((
         u64::from_le_bytes(h[..8].try_into().unwrap()),
-        u64::from_le_bytes(h[8..].try_into().unwrap()),
+        u64::from_le_bytes(h[8..16].try_into().unwrap()),
+        u64::from_le_bytes(h[16..].try_into().unwrap()),
     ))
 }
 
-/// Execute `plan` among `n_workers` loopback workers at unlimited rate.
+type ConnMap = HashMap<(usize, usize), Arc<Mutex<TcpStream>>>;
+
+/// Everything a sender job needs, clonable into pool closures.
+#[derive(Clone)]
+struct SendCtx {
+    conns: Arc<Mutex<ConnMap>>,
+    addrs: Arc<Vec<SocketAddr>>,
+    pattern: Arc<Vec<u8>>,
+    connects: Arc<AtomicUsize>,
+}
+
+/// Fetch (or establish and cache) the persistent stream for `(src, dst)`,
+/// then frame and send one transfer through it.
+fn send_one(
+    ctx: &SendCtx,
+    pacer: &Option<Arc<Pacer>>,
+    epoch: u64,
+    src: usize,
+    dst: usize,
+    bytes: u64,
+) -> Result<()> {
+    // Fast path under the map lock; connect happens outside it so warmup
+    // connections establish concurrently and warm pairs never stall
+    // behind someone else's connect.
+    let cached = { ctx.conns.lock().unwrap().get(&(src, dst)).cloned() };
+    let stream = match cached {
+        Some(s) => s,
+        None => {
+            let sock =
+                TcpStream::connect(ctx.addrs[dst]).context("connect")?;
+            sock.set_nodelay(true).ok();
+            let fresh = Arc::new(Mutex::new(sock));
+            let mut map = ctx.conns.lock().unwrap();
+            match map.get(&(src, dst)) {
+                // Lost a connect race: use the cached one, drop ours.
+                Some(raced) => Arc::clone(raced),
+                None => {
+                    ctx.connects.fetch_add(1, Ordering::SeqCst);
+                    map.insert((src, dst), Arc::clone(&fresh));
+                    fresh
+                }
+            }
+        }
+    };
+    let mut sock = stream.lock().unwrap();
+    write_header(&mut sock, src as u64, epoch, bytes)?;
+    let mut left = bytes as usize;
+    while left > 0 {
+        let n = left.min(CHUNK);
+        maybe_acquire(pacer, n);
+        sock.write_all(&ctx.pattern[..n])?;
+        left -= n;
+    }
+    Ok(())
+}
+
+/// Completion event of one transfer: the execution epoch it belongs to
+/// plus its outcome (bytes drained, or the failure).
+type Completion = (u64, Result<u64>);
+
+/// Long-lived per-connection receive loop: drain framed transfers until
+/// the peer closes, reporting each completed transfer's byte count
+/// tagged with its execution epoch.
+fn receiver_loop(
+    mut sock: TcpStream,
+    pacer: Option<Arc<Pacer>>,
+    done: Sender<Completion>,
+) {
+    let mut buf = vec![0u8; CHUNK];
+    loop {
+        // EOF between transfers = peer (or runtime) closed; clean exit.
+        let (_src, epoch, bytes) = match read_header(&mut sock) {
+            Ok(h) => h,
+            Err(_) => break,
+        };
+        let mut left = bytes as usize;
+        let mut failed = false;
+        while left > 0 {
+            match sock.read(&mut buf[..left.min(CHUNK)]) {
+                Ok(0) => {
+                    let _ = done
+                        .send((epoch, Err(anyhow!("peer closed mid-transfer"))));
+                    failed = true;
+                    break;
+                }
+                Ok(n) => {
+                    maybe_acquire(&pacer, n);
+                    left -= n;
+                }
+                Err(e) => {
+                    let _ = done.send((epoch, Err(anyhow!("recv: {e}"))));
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if failed {
+            break;
+        }
+        if done.send((epoch, Ok(bytes))).is_err() {
+            break; // runtime dropped
+        }
+    }
+}
+
+/// Persistent loopback dispatch runtime: one logical NIC per worker,
+/// connections cached across phases and steps. Not concurrency-safe:
+/// one `execute` at a time (the pipeline's dispatch stage owns it from a
+/// single thread).
+pub struct TcpRuntime {
+    n_workers: usize,
+    ctx: SendCtx,
+    egress: Vec<Option<Arc<Pacer>>>,
+    pool: Arc<ThreadPool>,
+    /// Receiver-side completion events (one per finished transfer); the
+    /// matching senders live in the acceptor/receiver threads.
+    done_rx: Mutex<Receiver<Completion>>,
+    /// Current execution epoch; completions from older epochs (a
+    /// transfer that outlived a timed-out execute) are discarded.
+    epoch: AtomicUsize,
+    /// Tells acceptors to exit once woken by the drop-time dummy connect.
+    shutdown: Arc<AtomicBool>,
+    acceptors: Vec<std::thread::JoinHandle<()>>,
+    receivers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl TcpRuntime {
+    /// Bind one loopback listener per worker and start the persistent
+    /// acceptor threads. `nic_bytes_per_sec` emulates each worker's NIC
+    /// (e.g. `312.5e6` for a 2.5 Gbps NIC); `None` = unthrottled.
+    pub fn new(
+        n_workers: usize,
+        nic_bytes_per_sec: Option<f64>,
+        pool: Arc<ThreadPool>,
+    ) -> Result<TcpRuntime> {
+        if n_workers == 0 {
+            bail!("need at least one worker");
+        }
+        let listeners: Vec<TcpListener> = (0..n_workers)
+            .map(|_| TcpListener::bind("127.0.0.1:0").context("bind loopback"))
+            .collect::<Result<_>>()?;
+        let addrs: Vec<SocketAddr> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap())
+            .collect();
+
+        let egress: Vec<Option<Arc<Pacer>>> = (0..n_workers)
+            .map(|_| nic_bytes_per_sec.map(|r| Arc::new(Pacer::new(r))))
+            .collect();
+        let ingress: Vec<Option<Arc<Pacer>>> = (0..n_workers)
+            .map(|_| nic_bytes_per_sec.map(|r| Arc::new(Pacer::new(r))))
+            .collect();
+
+        let (done_tx, done_rx) = channel::<Completion>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let receivers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let acceptors = listeners
+            .into_iter()
+            .zip(ingress)
+            .map(|(listener, pacer)| {
+                let done_tx = done_tx.clone();
+                let shutdown = Arc::clone(&shutdown);
+                let receivers = Arc::clone(&receivers);
+                std::thread::spawn(move || loop {
+                    match listener.accept() {
+                        Ok((sock, _)) => {
+                            if shutdown.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            sock.set_nodelay(true).ok();
+                            let done_tx = done_tx.clone();
+                            let pacer = pacer.clone();
+                            let h = std::thread::spawn(move || {
+                                receiver_loop(sock, pacer, done_tx)
+                            });
+                            receivers.lock().unwrap().push(h);
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+
+        // Shared send pattern (contents don't matter, bytes do).
+        let pattern: Arc<Vec<u8>> =
+            Arc::new((0..CHUNK).map(|i| (i % 251) as u8).collect());
+
+        Ok(TcpRuntime {
+            n_workers,
+            ctx: SendCtx {
+                conns: Arc::new(Mutex::new(HashMap::new())),
+                addrs: Arc::new(addrs),
+                pattern,
+                connects: Arc::new(AtomicUsize::new(0)),
+            },
+            egress,
+            pool,
+            done_rx: Mutex::new(done_rx),
+            epoch: AtomicUsize::new(0),
+            shutdown,
+            acceptors,
+            receivers,
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Total `TcpStream::connect` calls since construction (== live cached
+    /// connections; nothing is ever torn down mid-run).
+    pub fn connections_opened(&self) -> usize {
+        self.ctx.connects.load(Ordering::SeqCst)
+    }
+
+    /// Execute a plan: per phase, enqueue one framed send per transfer on
+    /// the shared pool, then barrier on sender and receiver completions.
+    /// Plans may have any number of phases.
+    pub fn execute(&self, plan: &DispatchPlan) -> Result<TcpReport> {
+        for phase in &plan.phases {
+            for t in phase {
+                if t.src >= self.n_workers || t.dst >= self.n_workers {
+                    bail!(
+                        "transfer {}->{} outside {} workers",
+                        t.src,
+                        t.dst,
+                        self.n_workers
+                    );
+                }
+            }
+        }
+
+        let connects_before = self.connections_opened();
+        let mut phase_seconds = Vec::with_capacity(plan.phases.len());
+        let mut total_bytes = 0u64;
+        let mut total_transfers = 0usize;
+
+        // New epoch: completions of transfers that outlived an earlier
+        // timed-out execution carry an older tag and are discarded below.
+        let epoch = (self.epoch.fetch_add(1, Ordering::SeqCst) + 1) as u64;
+        let rx = self.done_rx.lock().unwrap();
+        while rx.try_recv().is_ok() {} // drain already-queued stale events
+
+        let t_all = Instant::now();
+        for phase in &plan.phases {
+            let live: Vec<(usize, usize, u64)> = phase
+                .iter()
+                .filter(|t| t.bytes > 0)
+                .map(|t| (t.src, t.dst, t.bytes))
+                .collect();
+            let expect_bytes: u64 = live.iter().map(|t| t.2).sum();
+
+            let t0 = Instant::now();
+            let (stx, srx) = channel::<Result<()>>();
+            for &(src, dst, bytes) in &live {
+                let ctx = self.ctx.clone();
+                let pacer = self.egress[src].clone();
+                let stx = stx.clone();
+                self.pool.spawn(move || {
+                    let r = send_one(&ctx, &pacer, epoch, src, dst, bytes);
+                    let _ = stx.send(r);
+                });
+            }
+            drop(stx);
+            for r in srx {
+                r?;
+            }
+            let mut got = 0u64;
+            let mut done = 0usize;
+            while done < live.len() {
+                let (ev_epoch, r) = rx
+                    .recv_timeout(PHASE_TIMEOUT)
+                    .map_err(|e| anyhow!("dispatch phase wedged: {e}"))?;
+                if ev_epoch != epoch {
+                    continue; // stale transfer from a failed execution
+                }
+                got += r?;
+                done += 1;
+            }
+            if got != expect_bytes {
+                bail!("phase received {got} of {expect_bytes} bytes");
+            }
+            phase_seconds.push(t0.elapsed().as_secs_f64());
+            total_bytes += expect_bytes;
+            total_transfers += live.len();
+        }
+
+        Ok(TcpReport {
+            seconds: t_all.elapsed().as_secs_f64(),
+            phase_seconds,
+            n_phases: plan.phases.len(),
+            bytes: total_bytes,
+            transfers: total_transfers,
+            connections_opened: self.connections_opened() - connects_before,
+        })
+    }
+}
+
+impl Drop for TcpRuntime {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Close sender streams: receivers see EOF and exit.
+        self.ctx.conns.lock().unwrap().clear();
+        // Wake each acceptor so it observes the shutdown flag.
+        for addr in self.ctx.addrs.iter() {
+            let _ = TcpStream::connect(addr);
+        }
+        for h in self.acceptors.drain(..) {
+            let _ = h.join();
+        }
+        let mut receivers = self.receivers.lock().unwrap();
+        for h in receivers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute `plan` among `n_workers` loopback workers at unlimited rate
+/// (one-shot runtime; the trainer keeps a persistent [`TcpRuntime`]).
 pub fn execute_plan_tcp(plan: &DispatchPlan, n_workers: usize) -> Result<TcpReport> {
     execute_plan_tcp_rated(plan, n_workers, None)
+}
+
+/// Thread count that lets every transfer of the plan's widest phase run
+/// concurrently (capped — beyond the cap the NIC pacers dominate anyway).
+pub fn send_pool_threads(max_phase_transfers: usize) -> usize {
+    max_phase_transfers.clamp(4, 64)
 }
 
 /// Execute `plan` with an emulated per-worker NIC of
@@ -105,157 +466,17 @@ pub fn execute_plan_tcp_rated(
     n_workers: usize,
     nic_bytes_per_sec: Option<f64>,
 ) -> Result<TcpReport> {
-    if plan.phases.len() > 4 {
-        bail!("at most 4 phases supported");
-    }
-    let listeners: Vec<Arc<TcpListener>> = (0..n_workers)
-        .map(|_| {
-            TcpListener::bind("127.0.0.1:0")
-                .map(Arc::new)
-                .context("bind loopback")
-        })
-        .collect::<Result<_>>()?;
-    let addrs: Vec<std::net::SocketAddr> = listeners
-        .iter()
-        .map(|l| l.local_addr().unwrap())
-        .collect();
-
-    // Per-worker NIC pacers (full duplex: ingress & egress metered
-    // separately).
-    let egress: Vec<Option<Arc<Pacer>>> = (0..n_workers)
-        .map(|_| nic_bytes_per_sec.map(|r| Arc::new(Pacer::new(r))))
-        .collect();
-    let ingress: Vec<Option<Arc<Pacer>>> = (0..n_workers)
-        .map(|_| nic_bytes_per_sec.map(|r| Arc::new(Pacer::new(r))))
-        .collect();
-
-    // Shared send buffer (pattern data — contents don't matter, bytes do).
-    let pattern: Arc<Vec<u8>> =
-        Arc::new((0..CHUNK).map(|i| (i % 251) as u8).collect());
-
-    let mut phase_seconds = [0.0f64; 4];
-    let mut total_bytes = 0u64;
-    let mut total_transfers = 0usize;
-    let t_all = Instant::now();
-
-    for (pi, phase) in plan.phases.iter().enumerate() {
-        let mut outgoing: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n_workers];
-        let mut inbound_count = vec![0usize; n_workers];
-        let mut inbound_bytes = vec![0u64; n_workers];
-        for t in phase {
-            if t.bytes == 0 {
-                continue;
-            }
-            outgoing[t.src].push((t.dst, t.bytes));
-            inbound_count[t.dst] += 1;
-            inbound_bytes[t.dst] += t.bytes;
-            total_bytes += t.bytes;
-            total_transfers += 1;
-        }
-
-        let t0 = Instant::now();
-        let mut recv_handles = Vec::new();
-        for w in 0..n_workers {
-            let listener = Arc::clone(&listeners[w]);
-            let expect_conns = inbound_count[w];
-            let expect_bytes = inbound_bytes[w];
-            let pacer = ingress[w].clone();
-            recv_handles.push(std::thread::spawn(move || -> Result<u64> {
-                // Accept every inbound connection, drain them in
-                // parallel; the shared ingress pacer enforces the NIC.
-                let mut drains = Vec::new();
-                for _ in 0..expect_conns {
-                    let (mut sock, _) = listener.accept().context("accept")?;
-                    sock.set_nodelay(true).ok();
-                    let pacer = pacer.clone();
-                    drains.push(std::thread::spawn(move || -> Result<u64> {
-                        let (_src, bytes) = read_header(&mut sock)?;
-                        let mut buf = vec![0u8; CHUNK];
-                        let mut left = bytes as usize;
-                        while left > 0 {
-                            let n = sock.read(&mut buf[..left.min(CHUNK)])?;
-                            if n == 0 {
-                                bail!("peer closed early");
-                            }
-                            maybe_acquire(&pacer, n);
-                            left -= n;
-                        }
-                        Ok(bytes)
-                    }));
-                }
-                let mut got = 0u64;
-                for d in drains {
-                    got += d.join().expect("drain panicked")?;
-                }
-                if got != expect_bytes {
-                    bail!("worker received {got} of {expect_bytes} bytes");
-                }
-                Ok(got)
-            }));
-        }
-
-        let mut send_handles = Vec::new();
-        for (w, outs) in outgoing.into_iter().enumerate() {
-            if outs.is_empty() {
-                continue;
-            }
-            let addrs = addrs.clone();
-            let pattern = Arc::clone(&pattern);
-            let pacer = egress[w].clone();
-            send_handles.push(std::thread::spawn(move || -> Result<()> {
-                // One egress stream per destination, all sharing this
-                // worker's NIC pacer; sends run concurrently like a
-                // multi-stream transport would.
-                let mut streams = Vec::new();
-                for (dst, bytes) in outs {
-                    let addrs = addrs.clone();
-                    let pattern = Arc::clone(&pattern);
-                    let pacer = pacer.clone();
-                    streams.push(std::thread::spawn(move || -> Result<()> {
-                        let mut sock =
-                            TcpStream::connect(addrs[dst]).context("connect")?;
-                        sock.set_nodelay(true).ok();
-                        write_header(&mut sock, 0, bytes)?;
-                        let mut left = bytes as usize;
-                        while left > 0 {
-                            let n = left.min(CHUNK);
-                            maybe_acquire(&pacer, n);
-                            sock.write_all(&pattern[..n])?;
-                            left -= n;
-                        }
-                        Ok(())
-                    }));
-                }
-                for s in streams {
-                    s.join().expect("stream panicked")?;
-                }
-                Ok(())
-            }));
-        }
-
-        for h in send_handles {
-            h.join().expect("sender panicked")?;
-        }
-        for h in recv_handles {
-            h.join().expect("receiver panicked")?;
-        }
-        phase_seconds[pi] = t0.elapsed().as_secs_f64();
-    }
-
-    Ok(TcpReport {
-        seconds: t_all.elapsed().as_secs_f64(),
-        phase_seconds,
-        n_phases: plan.phases.len(),
-        bytes: total_bytes,
-        transfers: total_transfers,
-    })
+    let widest = plan.phases.iter().map(|p| p.len()).max().unwrap_or(0);
+    let pool = Arc::new(ThreadPool::new(send_pool_threads(widest)));
+    let runtime = TcpRuntime::new(n_workers, nic_bytes_per_sec, pool)?;
+    runtime.execute(plan)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dispatch::layout::DataLayout;
-    use crate::dispatch::plan::{plan_alltoall, plan_centralized};
+    use crate::dispatch::plan::{plan_alltoall, plan_centralized, WorkerTransfer};
 
     #[test]
     fn delivers_all_bytes_alltoall() {
@@ -265,6 +486,7 @@ mod tests {
         let rep = execute_plan_tcp(&plan, 4).unwrap();
         assert_eq!(rep.bytes, plan.total_bytes());
         assert_eq!(rep.n_phases, 1);
+        assert_eq!(rep.phase_seconds.len(), 1);
         assert!(rep.seconds > 0.0);
     }
 
@@ -286,6 +508,7 @@ mod tests {
         let rep = execute_plan_tcp(&plan, 4).unwrap();
         assert_eq!(rep.bytes, 0);
         assert_eq!(rep.transfers, 0);
+        assert_eq!(rep.connections_opened, 0);
     }
 
     #[test]
@@ -297,6 +520,48 @@ mod tests {
         let dt = t0.elapsed().as_secs_f64();
         assert!(dt >= 0.15, "pacer too fast: {dt}");
         assert!(dt < 0.5, "pacer too slow: {dt}");
+    }
+
+    #[test]
+    fn runtime_reuses_connections_across_executes() {
+        let p = DataLayout::round_robin(16, 4);
+        let c = DataLayout::blocked(16, 4);
+        let plan = plan_alltoall(&p, &c, 50_000);
+        let pool = Arc::new(ThreadPool::new(4));
+        let rt = TcpRuntime::new(4, None, pool).unwrap();
+
+        let first = rt.execute(&plan).unwrap();
+        assert!(first.connections_opened > 0, "warmup must connect");
+        for _ in 0..3 {
+            let rep = rt.execute(&plan).unwrap();
+            assert_eq!(
+                rep.connections_opened, 0,
+                "steady state must reuse cached connections"
+            );
+            assert_eq!(rep.bytes, plan.total_bytes());
+        }
+        assert_eq!(rt.connections_opened(), first.connections_opened);
+    }
+
+    #[test]
+    fn executes_more_than_four_phases() {
+        // The old engine rejected >4-phase plans outright.
+        let phases: Vec<Vec<WorkerTransfer>> = (0..6)
+            .map(|i| {
+                vec![WorkerTransfer {
+                    src: i % 3,
+                    dst: (i + 1) % 3,
+                    bytes: 10_000,
+                    items: vec![],
+                }]
+            })
+            .collect();
+        let plan = DispatchPlan { phases, strategy: "test-6-phase" };
+        let rep = execute_plan_tcp(&plan, 3).unwrap();
+        assert_eq!(rep.n_phases, 6);
+        assert_eq!(rep.phase_seconds.len(), 6);
+        assert_eq!(rep.bytes, 60_000);
+        assert_eq!(rep.transfers, 6);
     }
 
     #[test]

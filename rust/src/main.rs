@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use earl::cluster::ClusterSpec;
 use earl::config::{EnvKind, OpponentKind, TrainConfig};
-use earl::coordinator::Trainer;
+use earl::coordinator::{DispatchMode, PipelineMode, Trainer};
 use earl::dispatch::{
     execute_plan_tcp, plan_alltoall, plan_centralized, simulate_plan,
     DataLayout, PayloadModel, WorkerMap, PAPER_TAB1,
@@ -104,6 +104,8 @@ fn print_help() {
              --steps N --env tictactoe|connect4 --opponent random|heuristic\n\
              --max-context N (hard limit baseline; default: dynamic buckets)\n\
              --static-buckets (disable dynamic bucket selection)\n\
+             --pipeline serial|overlapped (or bare --overlap)\n\
+             --dispatch sim|central|tcp --nic BYTES_PER_SEC (tcp shaping)\n\
              --lr F --kl F --ent F --gamma F --seed N\n\
              --artifacts DIR --metrics FILE --checkpoint FILE --config FILE\n\
            profile          measure real per-bucket decode TGS table\n\
@@ -135,6 +137,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.has("static-buckets") {
         cfg.dynamic_buckets = false;
     }
+    if let Some(p) = args.get("pipeline") {
+        cfg.pipeline = PipelineMode::from_name(p)?;
+    }
+    if args.has("overlap") {
+        cfg.pipeline = PipelineMode::Overlapped;
+    }
     if let Some(v) = args.get("lr") {
         cfg.hp.lr = v.parse()?;
     }
@@ -163,14 +171,33 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.checkpoint_path = Some(PathBuf::from(p));
     }
 
+    let dispatch_mode = match args.get("dispatch") {
+        None => None,
+        Some("sim") | Some("simulated") => Some(DispatchMode::Simulated),
+        Some("central") | Some("centralized") => {
+            Some(DispatchMode::SimulatedCentralized)
+        }
+        Some("tcp") => Some(DispatchMode::Tcp),
+        Some(other) => bail!("unknown dispatch mode {other:?}"),
+    };
+    let nic: Option<f64> = match args.get("nic") {
+        None => None,
+        Some(v) => Some(v.parse().context("--nic")?),
+    };
+
     eprintln!(
-        "training {} vs {:?} for {} steps (limit {:?})",
+        "training {} vs {:?} for {} steps (limit {:?}, {} pipeline)",
         cfg.env.name(),
         cfg.opponent,
         cfg.steps,
-        cfg.rollout.limit
+        cfg.rollout.limit,
+        cfg.pipeline.name(),
     );
     let mut trainer = Trainer::new(cfg)?;
+    if let Some(m) = dispatch_mode {
+        trainer.dispatch_mode = m;
+    }
+    trainer.dispatch_nic = nic;
     let final_return = trainer.run()?;
     println!("final rolling return (20 steps): {final_return:+.3}");
     Ok(())

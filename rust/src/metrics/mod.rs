@@ -27,8 +27,18 @@ pub struct StepRecord {
     pub selector_switched: bool,
     pub rollout_seconds: f64,
     pub exp_prep_seconds: f64,
+    /// Modeled dispatch latency: simulator makespan, or the measured
+    /// transfer window for `DispatchMode::Tcp`.
     pub dispatch_seconds: f64,
+    /// Real wall-clock seconds the dispatch stage occupied (distinct
+    /// from the modeled makespan above; for the simulated modes this is
+    /// just the planning/simulation cost).
+    pub dispatch_wall_seconds: f64,
     pub train_seconds: f64,
+    /// Wall-clock duration of the whole step. Under the overlapped
+    /// pipeline this is less than the summed stage time — the gap is the
+    /// overlap win.
+    pub step_wall_seconds: f64,
 }
 
 impl StepRecord {
@@ -49,15 +59,37 @@ impl StepRecord {
             ("rollout_seconds", Json::num(self.rollout_seconds)),
             ("exp_prep_seconds", Json::num(self.exp_prep_seconds)),
             ("dispatch_seconds", Json::num(self.dispatch_seconds)),
+            ("dispatch_wall_seconds", Json::num(self.dispatch_wall_seconds)),
             ("train_seconds", Json::num(self.train_seconds)),
+            ("step_wall_seconds", Json::num(self.step_wall_seconds)),
         ])
     }
 
+    /// Modeled step time: stage sum with dispatch at its modeled latency
+    /// (the pre-pipeline definition, kept for the figures).
     pub fn step_seconds(&self) -> f64 {
         self.rollout_seconds
             + self.exp_prep_seconds
             + self.dispatch_seconds
             + self.train_seconds
+    }
+
+    /// Summed *busy* stage time, dispatch counted at real wall time.
+    pub fn stage_seconds(&self) -> f64 {
+        self.rollout_seconds
+            + self.exp_prep_seconds
+            + self.dispatch_wall_seconds
+            + self.train_seconds
+    }
+
+    /// Overlap factor: summed stage time / wall step time. ≈1.0 when the
+    /// stages ran serially, >1.0 when the pipeline overlapped them.
+    pub fn overlap_factor(&self) -> f64 {
+        if self.step_wall_seconds > 0.0 {
+            self.stage_seconds() / self.step_wall_seconds
+        } else {
+            0.0
+        }
     }
 }
 
@@ -102,6 +134,19 @@ impl MetricsLog {
         let slice = &self.records[start..];
         slice.iter().map(|r| r.mean_return).sum::<f64>() / slice.len() as f64
     }
+
+    /// Training throughput in steps/sec over recorded wall step times,
+    /// skipping the first `skip` warmup steps (lazy executable compiles
+    /// land there).
+    pub fn steps_per_sec(&self, skip: usize) -> f64 {
+        let slice = &self.records[skip.min(self.records.len())..];
+        let wall: f64 = slice.iter().map(|r| r.step_wall_seconds).sum();
+        if wall > 0.0 {
+            slice.len() as f64 / wall
+        } else {
+            0.0
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,7 +170,9 @@ mod tests {
             rollout_seconds: 1.0,
             exp_prep_seconds: 0.5,
             dispatch_seconds: 0.1,
+            dispatch_wall_seconds: 0.2,
             train_seconds: 2.0,
+            step_wall_seconds: 2.0,
         }
     }
 
@@ -169,5 +216,30 @@ mod tests {
     #[test]
     fn step_seconds_sums_stages() {
         assert!((rec(0, 0.0).step_seconds() - 3.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_factor_reads_compression() {
+        let r = rec(0, 0.0);
+        // stage_seconds = 1.0 + 0.5 + 0.2 + 2.0 = 3.7 over 2.0s of wall.
+        assert!((r.stage_seconds() - 3.7).abs() < 1e-9);
+        assert!((r.overlap_factor() - 1.85).abs() < 1e-9);
+        let mut serial = rec(0, 0.0);
+        serial.step_wall_seconds = serial.stage_seconds();
+        assert!((serial.overlap_factor() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steps_per_sec_skips_warmup() {
+        let mut log = MetricsLog::memory();
+        let mut warm = rec(0, 0.0);
+        warm.step_wall_seconds = 10.0; // compile-heavy first step
+        log.record(warm).unwrap();
+        for i in 1..5 {
+            log.record(rec(i, 0.0)).unwrap(); // 2.0s wall each
+        }
+        assert!((log.steps_per_sec(1) - 0.5).abs() < 1e-9);
+        assert!(log.steps_per_sec(0) < 0.5);
+        assert_eq!(log.steps_per_sec(99), 0.0);
     }
 }

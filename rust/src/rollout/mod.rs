@@ -20,10 +20,11 @@ pub mod sampler;
 pub use sampler::{sample_token, SamplerCfg};
 
 use anyhow::Result;
+use xla::Literal;
 
 use crate::envs::{Game, Opponent, Outcome, Side};
 use crate::rl::episode::{Episode, EpisodeStatus, Turn};
-use crate::runtime::{Engine, ModelState, TokenBatch};
+use crate::runtime::{Engine, TokenBatch};
 use crate::tokenizer as tok;
 use crate::util::rng::Pcg64;
 
@@ -101,40 +102,68 @@ impl Slot {
 }
 
 /// Batched rollout driver.
-pub struct RolloutEngine<'a> {
-    engine: &'a Engine,
+///
+/// Constructed **once** and reused across training steps (the paper's
+/// steady-state rollout service): it owns no per-step state beyond the
+/// RNG (reset via [`RolloutEngine::reseed`]) and a persistent decode
+/// input buffer, so the per-step hot path performs no engine rebuilds
+/// and no decode-buffer allocations after warmup.
+pub struct RolloutEngine {
     cfg: RolloutCfg,
     rng: Pcg64,
+    /// Reusable decode-input buffer; `Vec` capacity is retained across
+    /// positions, batches, and steps (allocation-free steady state).
+    scratch: TokenBatch,
 }
 
-impl<'a> RolloutEngine<'a> {
-    pub fn new(engine: &'a Engine, cfg: RolloutCfg) -> Self {
+impl RolloutEngine {
+    pub fn new(cfg: RolloutCfg) -> Self {
         let rng = Pcg64::new(cfg.seed);
-        RolloutEngine { engine, cfg, rng }
+        RolloutEngine { cfg, rng, scratch: TokenBatch::new(0, 0) }
+    }
+
+    /// Reset the sampling RNG for a new step (replaces per-step engine
+    /// reconstruction).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Pcg64::new(seed);
+    }
+
+    pub fn cfg(&self) -> &RolloutCfg {
+        &self.cfg
     }
 
     /// Effective context budget: the hard limit, or the largest compiled
     /// bucket under the dynamic policy.
-    pub fn context_budget(&self) -> usize {
+    pub fn context_budget(&self, engine: &Engine) -> usize {
         match self.cfg.limit {
-            LimitPolicy::Hard(n) => n.min(self.engine.manifest.max_bucket()),
-            LimitPolicy::Buckets => self.engine.manifest.max_bucket(),
+            LimitPolicy::Hard(n) => n.min(engine.manifest.max_bucket()),
+            LimitPolicy::Buckets => engine.manifest.max_bucket(),
         }
     }
 
-    /// Play one batch of episodes with the current policy parameters.
+    /// Clear and size the persistent decode buffer for one forward.
+    fn reset_scratch(&mut self, batch: usize, seq: usize) {
+        self.scratch.data.clear();
+        self.scratch.data.resize(batch * seq, 0);
+        self.scratch.batch = batch;
+        self.scratch.seq = seq;
+    }
+
+    /// Play one batch of episodes with the given policy parameters
+    /// (live `ModelState` params or a pipeline [`crate::runtime::ParamSnapshot`]).
     ///
     /// `make_game`/`make_opponent` are factories so every slot gets fresh
     /// state; the opponent RNG is forked per slot for determinism under
     /// any scheduling.
     pub fn run_batch(
         &mut self,
-        state: &ModelState,
+        engine: &Engine,
+        params: &[Literal],
         make_game: &dyn Fn() -> Box<dyn Game>,
         make_opponent: &dyn Fn() -> Box<dyn Opponent>,
     ) -> Result<(Vec<Episode>, RolloutStats)> {
-        let batch = self.engine.manifest.batch;
-        let budget = self.context_budget();
+        let batch = engine.manifest.batch;
+        let budget = self.context_budget(engine);
 
         let mut opponents: Vec<Box<dyn Opponent>> =
             (0..batch).map(|_| make_opponent()).collect();
@@ -190,25 +219,26 @@ impl<'a> RolloutEngine<'a> {
                     .max()
                     .unwrap();
                 // Next position must fit the bucket.
-                let bucket = match self.engine.manifest.bucket_for(max_len) {
+                let bucket = match engine.manifest.bucket_for(max_len) {
                     Some(b) => b,
                     None => {
                         // Shouldn't happen: budget <= max bucket, and slots
                         // at budget are truncated in step 3.
-                        self.engine.manifest.max_bucket()
+                        engine.manifest.max_bucket()
                     }
                 };
                 stats.max_bucket_used = stats.max_bucket_used.max(bucket);
 
-                let mut tb = TokenBatch::new(batch, bucket);
+                self.reset_scratch(batch, bucket);
                 for (i, slot) in slots.iter().enumerate() {
                     if slot.live() && slot.generating {
                         let n = slot.tokens.len().min(bucket);
-                        tb.row_mut(i)[..n].copy_from_slice(&slot.tokens[..n]);
+                        self.scratch.row_mut(i)[..n]
+                            .copy_from_slice(&slot.tokens[..n]);
                     }
                 }
-                let logits = self.engine.logits(&state.params, &tb)?;
-                let vocab = self.engine.manifest.model.vocab;
+                let logits = engine.logits(params, &self.scratch)?;
+                let vocab = engine.manifest.model.vocab;
 
                 for (i, slot) in slots.iter_mut().enumerate() {
                     if !(slot.live() && slot.generating) {
@@ -419,5 +449,30 @@ mod tests {
         assert!(cfg.max_response_tokens >= 2);
         assert_eq!(cfg.limit, LimitPolicy::Buckets);
         assert!(cfg.fail_reward < 0.0);
+    }
+
+    #[test]
+    fn scratch_buffer_is_zeroed_and_reuses_capacity() {
+        let mut re = RolloutEngine::new(RolloutCfg::default());
+        re.reset_scratch(4, 8);
+        assert_eq!(re.scratch.data.len(), 32);
+        re.scratch.row_mut(1)[0] = 7;
+        let cap = re.scratch.data.capacity();
+        re.reset_scratch(4, 8);
+        assert_eq!(re.scratch.row(1)[0], 0, "scratch must be zeroed");
+        assert_eq!(re.scratch.data.capacity(), cap, "no realloc at same size");
+        re.reset_scratch(2, 4);
+        assert_eq!(re.scratch.data.len(), 8);
+        assert!(re.scratch.data.capacity() >= cap, "capacity retained");
+    }
+
+    #[test]
+    fn reseed_resets_sampling_stream() {
+        let mut a = RolloutEngine::new(RolloutCfg::default());
+        let mut b = RolloutEngine::new(RolloutCfg::default());
+        b.reseed(99);
+        b.reseed(0);
+        // Same seed -> identical RNG draws regardless of reseed history.
+        assert_eq!(a.rng.next_u64(), b.rng.next_u64());
     }
 }

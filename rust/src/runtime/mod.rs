@@ -17,4 +17,4 @@ pub use engine::{
     Engine, ExecTiming, F32Batch, TokenBatch, TrainBatch, TrainHp, TrainStats,
 };
 pub use manifest::{ArtifactEntry, Func, Manifest, ModelSpec, ParamEntry};
-pub use state::ModelState;
+pub use state::{ModelState, ParamSnapshot, SnapshotBuffer};

@@ -100,4 +100,57 @@ impl ModelState {
             .with_context(|| format!("reading {}", path.display()))?;
         Self::from_flat(manifest, &flat)
     }
+
+    /// Take an immutable parameter snapshot for the pipelined rollout
+    /// stage (see [`SnapshotBuffer`]).
+    pub fn snapshot(&self) -> Result<ParamSnapshot> {
+        Ok(ParamSnapshot { params: self.clone_params()?, step: self.step })
+    }
+}
+
+/// An immutable copy of the policy parameters, decoupled from the live
+/// [`ModelState`] so a concurrent `train_step` can mutate the latter
+/// while the rollout stage still reads a coherent set of weights.
+pub struct ParamSnapshot {
+    pub params: Vec<Literal>,
+    /// Optimizer step the snapshot was taken at (θ after `step` updates).
+    pub step: u64,
+}
+
+/// Double buffer of parameter snapshots for the pipelined step engine.
+///
+/// `publish` deep-copies the live parameters into the *back* slot and
+/// flips it to the front; the previous front slot stays intact until the
+/// publish after next. A rollout that is still reading the old front
+/// therefore never observes a torn or mid-update parameter set, even
+/// when `train_step` replaces the live `ModelState` literals while the
+/// rollout for the next step is in flight.
+#[derive(Default)]
+pub struct SnapshotBuffer {
+    slots: [Option<ParamSnapshot>; 2],
+    front: usize,
+}
+
+impl SnapshotBuffer {
+    pub fn new() -> SnapshotBuffer {
+        SnapshotBuffer::default()
+    }
+
+    /// Snapshot `state` into the back slot and make it the new front.
+    pub fn publish(&mut self, state: &ModelState) -> Result<()> {
+        let back = 1 - self.front;
+        self.slots[back] = Some(state.snapshot()?);
+        self.front = back;
+        Ok(())
+    }
+
+    /// The most recently published snapshot, if any.
+    pub fn front(&self) -> Option<&ParamSnapshot> {
+        self.slots[self.front].as_ref()
+    }
+
+    /// Optimizer step of the front snapshot (`None` before first publish).
+    pub fn front_step(&self) -> Option<u64> {
+        self.front().map(|s| s.step)
+    }
 }

@@ -1,20 +1,44 @@
 //! Minimal fixed-size thread pool (no `tokio`/`rayon` offline).
 //!
-//! Used by the coordinator for stage-parallel work and by the TCP dispatch
-//! engine for concurrent per-peer transfers. Supports fire-and-forget
-//! `spawn` and a scoped `map` that preserves input order.
+//! Used by the coordinator's pipelined step engine and by the persistent
+//! TCP dispatch runtime for concurrent per-peer transfers. Supports
+//! fire-and-forget `spawn` and a scoped `map` that preserves input order
+//! and propagates worker panics (annotated with the payload index).
+//!
+//! `wait_idle` parks on a `Condvar` instead of busy-spinning, so a pool
+//! that stays idle between pipeline phases costs nothing; a panicking job
+//! can neither kill a worker thread nor leak the in-flight count.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// In-flight job count + the condvar `wait_idle` parks on.
+struct PoolState {
+    in_flight: Mutex<usize>,
+    idle: Condvar,
+}
+
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    /// Behind a `Mutex` so the pool can be shared across threads
+    /// (`mpsc::Sender` is not `Sync` on older toolchains).
+    tx: Option<Mutex<Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,
-    in_flight: Arc<AtomicUsize>,
+    state: Arc<PoolState>,
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 impl ThreadPool {
@@ -22,11 +46,14 @@ impl ThreadPool {
         assert!(threads > 0);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(PoolState {
+            in_flight: Mutex::new(0),
+            idle: Condvar::new(),
+        });
         let workers = (0..threads)
             .map(|_| {
                 let rx = Arc::clone(&rx);
-                let in_flight = Arc::clone(&in_flight);
+                let state = Arc::clone(&state);
                 std::thread::spawn(move || loop {
                     let job = {
                         let guard = rx.lock().unwrap();
@@ -34,15 +61,23 @@ impl ThreadPool {
                     };
                     match job {
                         Ok(job) => {
-                            job();
-                            in_flight.fetch_sub(1, Ordering::Release);
+                            // A panicking job must not take the worker
+                            // down with it (that would shrink the pool and
+                            // wedge `wait_idle`). `map` re-raises panics
+                            // on the caller side.
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                            let mut n = state.in_flight.lock().unwrap();
+                            *n -= 1;
+                            if *n == 0 {
+                                state.idle.notify_all();
+                            }
                         }
                         Err(_) => break, // all senders dropped
                     }
                 })
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, in_flight }
+        ThreadPool { tx: Some(Mutex::new(tx)), workers, state }
     }
 
     pub fn threads(&self) -> usize {
@@ -51,15 +86,20 @@ impl ThreadPool {
 
     /// Fire-and-forget.
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.in_flight.fetch_add(1, Ordering::Acquire);
+        *self.state.in_flight.lock().unwrap() += 1;
         self.tx
             .as_ref()
             .expect("pool shut down")
+            .lock()
+            .unwrap()
             .send(Box::new(f))
             .expect("workers gone");
     }
 
     /// Run `f` over `items` on the pool, returning outputs in input order.
+    ///
+    /// If any job panics, the panic is re-raised here with the index of
+    /// the payload whose job failed (lowest index wins when several fail).
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -68,27 +108,45 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        type Slot<R> = (usize, std::thread::Result<R>);
+        let (tx, rx): (Sender<Slot<R>>, Receiver<Slot<R>>) = channel();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let tx = tx.clone();
             self.spawn(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
                 let _ = tx.send((i, r));
             });
         }
         drop(tx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<(usize, String)> = None;
         for (i, r) in rx {
-            out[i] = Some(r);
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    let worse =
+                        first_panic.as_ref().map_or(true, |(j, _)| i < *j);
+                    if worse {
+                        first_panic = Some((i, msg));
+                    }
+                }
+            }
         }
-        out.into_iter().map(|r| r.expect("worker panicked")).collect()
+        if let Some((i, msg)) = first_panic {
+            panic!("threadpool map: job for payload index {i} panicked: {msg}");
+        }
+        out.into_iter()
+            .map(|r| r.expect("worker dropped result"))
+            .collect()
     }
 
-    /// Block until every spawned job has finished.
+    /// Block until every spawned job has finished (condvar wait, no spin).
     pub fn wait_idle(&self) {
-        while self.in_flight.load(Ordering::Acquire) != 0 {
-            std::thread::yield_now();
+        let mut n = self.state.in_flight.lock().unwrap();
+        while *n != 0 {
+            n = self.state.idle.wait(n).unwrap();
         }
     }
 }
@@ -105,7 +163,7 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn runs_all_jobs() {
@@ -144,5 +202,36 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(5)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn map_panic_reports_payload_index() {
+        let pool = ThreadPool::new(4);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..8).collect::<Vec<usize>>(), |x| {
+                if x == 3 {
+                    panic!("boom on {x}");
+                }
+                x
+            });
+        }))
+        .expect_err("map must propagate the panic");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("payload index 3"), "got: {msg}");
+        assert!(msg.contains("boom on 3"), "got: {msg}");
+        // The pool must survive the panicking batch.
+        let out = pool.map(vec![1usize, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn wait_idle_after_panicking_job() {
+        // A panicking spawn must still decrement the in-flight count, so
+        // wait_idle returns instead of blocking forever.
+        let pool = ThreadPool::new(2);
+        pool.spawn(|| panic!("deliberate"));
+        pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        pool.wait_idle();
+        assert_eq!(pool.threads(), 2);
     }
 }

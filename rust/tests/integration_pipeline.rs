@@ -1,0 +1,177 @@
+//! Integration: the pipelined step engine — Overlapped mode must
+//! reproduce Serial-mode training metrics for a fixed seed (the overlap
+//! is a pure systems change), and the persistent TCP dispatch runtime
+//! must execute arbitrary-phase plans while reusing connections across
+//! steps.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use earl::config::TrainConfig;
+use earl::coordinator::{
+    DispatchJob, DispatchMode, DispatchWorker, PipelineMode, Trainer,
+};
+use earl::dispatch::{
+    plan_alltoall, DataLayout, DispatchPlan, TcpRuntime, WorkerTransfer,
+};
+use earl::metrics::StepRecord;
+use earl::util::threadpool::ThreadPool;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts`; skipping");
+        None
+    }
+}
+
+fn run_mode(dir: &Path, mode: PipelineMode) -> Vec<StepRecord> {
+    let cfg = TrainConfig {
+        artifacts_dir: dir.to_path_buf(),
+        steps: 5,
+        seed: 42,
+        pipeline: mode,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run().unwrap();
+    t.metrics.records.clone()
+}
+
+/// Training metrics (not timings) of a record, for cross-mode equality.
+fn metric_row(r: &StepRecord) -> (u64, f64, f64, f64, f64, f64, f64, usize, bool) {
+    (
+        r.step,
+        r.mean_return,
+        r.mean_episode_ctx,
+        r.mean_turn_ctx,
+        r.loss,
+        r.kl,
+        r.entropy,
+        r.bucket,
+        r.selector_switched,
+    )
+}
+
+#[test]
+fn overlapped_reproduces_serial_metrics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let serial = run_mode(dir, PipelineMode::Serial);
+    let overlapped = run_mode(dir, PipelineMode::Overlapped);
+    assert_eq!(serial.len(), overlapped.len());
+    for (s, o) in serial.iter().zip(&overlapped) {
+        assert_eq!(
+            metric_row(s),
+            metric_row(o),
+            "training metrics must be schedule-independent at step {}",
+            s.step
+        );
+    }
+}
+
+#[test]
+fn serial_step_api_matches_serial_run() {
+    // `Trainer::step` (the public single-step API) and `run` in Serial
+    // mode must walk the same trajectory.
+    let Some(dir) = artifacts_dir() else { return };
+    let via_run = run_mode(dir, PipelineMode::Serial);
+    let cfg = TrainConfig {
+        artifacts_dir: dir.to_path_buf(),
+        steps: 5,
+        seed: 42,
+        pipeline: PipelineMode::Serial,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(cfg).unwrap();
+    for want in &via_run {
+        let rec = t.step().unwrap();
+        assert_eq!(metric_row(&rec), metric_row(want));
+    }
+}
+
+/// A 6-phase relay plan: one item's bytes hop 0→1→2→3→0→1→2. The old
+/// TCP engine rejected any plan beyond 4 phases.
+fn relay_plan_6_phases(bytes: u64) -> DispatchPlan {
+    let hops = [(0, 1), (1, 2), (2, 3), (3, 0), (0, 1), (1, 2)];
+    DispatchPlan {
+        phases: hops
+            .iter()
+            .map(|&(src, dst)| {
+                vec![WorkerTransfer { src, dst, bytes, items: vec![0] }]
+            })
+            .collect(),
+        strategy: "relay-6",
+    }
+}
+
+#[test]
+fn tcp_executes_plan_with_more_than_four_phases() {
+    let plan = relay_plan_6_phases(64 << 10);
+    let pool = Arc::new(ThreadPool::new(4));
+    let rt = TcpRuntime::new(4, None, pool).unwrap();
+    let rep = rt.execute(&plan).unwrap();
+    assert_eq!(rep.n_phases, 6);
+    assert_eq!(rep.phase_seconds.len(), 6);
+    assert!(rep.phase_seconds.iter().all(|&s| s >= 0.0));
+    assert_eq!(rep.bytes, plan.total_bytes());
+    assert_eq!(rep.transfers, 6);
+
+    // Same plan again: every (src, dst) pair is already connected.
+    let rep2 = rt.execute(&plan).unwrap();
+    assert_eq!(rep2.connections_opened, 0);
+    assert_eq!(rep2.bytes, plan.total_bytes());
+}
+
+#[test]
+fn dispatch_worker_reuses_tcp_connections_across_steps() {
+    let p = DataLayout::round_robin(32, 8);
+    let c = DataLayout::blocked(32, 8);
+    let job = |step: u64| DispatchJob {
+        step,
+        plan: plan_alltoall(&p, &c, 25_000),
+        mode: DispatchMode::Tcp,
+        n_workers: 8,
+        nic_bytes_per_sec: None,
+    };
+    let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
+    w.submit(job(0)).unwrap();
+    let warm = w.recv().unwrap();
+    assert!(warm.connections_opened > 0);
+    for step in 1..5 {
+        w.submit(job(step)).unwrap();
+        let r = w.recv().unwrap();
+        assert_eq!(r.step, step);
+        assert_eq!(
+            r.connections_opened, 0,
+            "per-step connect after warmup at step {step}"
+        );
+    }
+}
+
+#[test]
+fn pipelined_submit_then_recv_preserves_order_across_modes() {
+    // Mixed simulated/real jobs through the same worker: results come
+    // back in submission order with the right step ids.
+    let p = DataLayout::round_robin(16, 4);
+    let c = DataLayout::blocked(16, 4);
+    let mk = |step: u64, mode: DispatchMode| DispatchJob {
+        step,
+        plan: plan_alltoall(&p, &c, 10_000),
+        mode,
+        n_workers: 4,
+        nic_bytes_per_sec: None,
+    };
+    let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));
+    w.submit(mk(1, DispatchMode::Simulated)).unwrap();
+    w.submit(mk(2, DispatchMode::Tcp)).unwrap();
+    let a = w.recv().unwrap();
+    w.submit(mk(3, DispatchMode::SimulatedCentralized)).unwrap();
+    let b = w.recv().unwrap();
+    let c2 = w.recv().unwrap();
+    assert_eq!((a.step, b.step, c2.step), (1, 2, 3));
+    assert!(a.modeled_seconds > 0.0);
+    assert!(b.wall_seconds > 0.0);
+    assert!(c2.modeled_seconds > 0.0);
+}
