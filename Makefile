@@ -1,19 +1,32 @@
 # Repo-level targets. The rust crate lives in rust/; the AOT artifacts
 # it executes are produced by the python compile path.
 
-.PHONY: check test artifacts bench-pipeline
+.PHONY: check fmt lint test artifacts bench-pipeline
 
-# Tier-1 verify + lint gate.
-check:
-	cd rust && cargo build --release && cargo test -q && cargo clippy -- -D warnings
+# Full gate: formatting, clippy (warnings are errors), tier-1 tests.
+check: fmt lint
+	cd rust && cargo build --release && cargo test -q
+
+fmt:
+	cd rust && cargo fmt --check
+
+lint:
+	cd rust && cargo clippy --all-targets -- -D warnings
 
 test:
 	cd rust && cargo test -q
 
 # AOT-lower the JAX model to HLO-text artifacts for the rust runtime.
+# Idempotent: skips when the manifest already exists (delete
+# rust/artifacts to force a rebuild).
 artifacts:
-	cd python/compile && python3 aot.py --out-dir ../../rust/artifacts
+	@if [ -f rust/artifacts/manifest.json ]; then \
+		echo "rust/artifacts already present — skipping (rm -r rust/artifacts to regenerate)"; \
+	else \
+		cd python/compile && python3 aot.py --out-dir ../../rust/artifacts; \
+	fi
 
-# Fig. 5 (ours): serial vs overlapped steps/sec; emits BENCH_pipeline.json.
+# Fig. 5 (ours): serial vs overlapped vs overlapped-async steps/sec;
+# emits BENCH_pipeline.json.
 bench-pipeline:
 	cd rust && cargo bench --bench fig5_pipeline

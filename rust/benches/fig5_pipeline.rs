@@ -1,24 +1,28 @@
-//! Bench: **Fig. 5 (ours)** — steps/sec of the pipelined step engine,
-//! `PipelineMode::Serial` vs `PipelineMode::Overlapped`, with the
-//! persistent TCP dispatch runtime carrying the exchange.
+//! Bench: **Fig. 5 (ours)** — steps/sec of the pipelined step engine
+//! across all three `PipelineMode`s (`serial`, `overlapped`,
+//! `overlapped-async`), with the persistent TCP dispatch runtime
+//! carrying the exchange.
 //!
-//! Two modes:
+//! Two engines:
 //!
 //! * **pjrt** — if `artifacts/` exists, the real end-to-end trainer on
 //!   the default TicTacToe config. A short unthrottled calibration run
 //!   measures per-step compute, the emulated NIC is then sized so the
-//!   dispatch stage costs about one compute stage, and serial vs
-//!   overlapped runs are compared for throughput *and* bit-identical
-//!   training metrics (fixed seed).
+//!   dispatch stage costs about one compute stage, and the three modes
+//!   run at the same rated NIC and seed. Serial vs overlapped are also
+//!   compared for bit-identical training metrics (fixed seed); the
+//!   async mode runs at its default one-step staleness budget, so its
+//!   trajectory may legitimately differ.
 //! * **synthetic** — otherwise, the same DispatchWorker + TcpRuntime
-//!   machinery with calibrated stand-in compute stages, exercising the
-//!   identical overlap schedule (so the bench still measures the real
-//!   dispatch/pipeline code path, just not PJRT).
+//!   machinery with calibrated stand-in compute stages (and a stand-in
+//!   update stage thread for the async schedule), exercising the
+//!   identical overlap schedules without PJRT.
 //!
-//! Emits `BENCH_pipeline.json` with serial/overlapped steps/sec for the
-//! perf trajectory.
+//! Emits `BENCH_pipeline.json`; schema documented in README.md
+//! ("Benchmarks" section).
 
 use std::path::Path;
+use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -35,6 +39,8 @@ use earl::util::threadpool::ThreadPool;
 const SEED: u64 = 17;
 const CALIB_STEPS: u64 = 4;
 const BENCH_STEPS: u64 = 10;
+/// Staleness budget the async mode is benched at.
+const ASYNC_STALENESS: u64 = 1;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -51,11 +57,12 @@ fn cfg_for(dir: &Path, steps: u64, mode: PipelineMode) -> TrainConfig {
         steps,
         seed: SEED,
         pipeline: mode,
+        max_staleness: ASYNC_STALENESS,
         ..TrainConfig::default()
     }
 }
 
-/// Training metrics that must be identical across pipeline modes.
+/// Training metrics that must be identical across deterministic modes.
 fn metric_row(r: &StepRecord) -> (u64, f64, f64, f64, f64, usize) {
     (r.step, r.mean_return, r.loss, r.kl, r.entropy, r.bucket)
 }
@@ -69,6 +76,7 @@ struct Outcome {
     engine: &'static str,
     serial_sps: f64,
     overlapped_sps: f64,
+    async_sps: f64,
     metrics_match: bool,
     steps: u64,
 }
@@ -97,25 +105,24 @@ fn run_pjrt(dir: &Path) -> anyhow::Result<Outcome> {
          -> emulated NIC {nic:.0} B/s"
     );
 
-    // 2. Serial vs overlapped at the same rated NIC and seed.
-    let mut serial = Trainer::new(cfg_for(dir, BENCH_STEPS, PipelineMode::Serial))?;
-    serial.dispatch_mode = DispatchMode::Tcp;
-    serial.dispatch_nic = Some(nic);
-    serial.run()?;
-    let serial_sps = serial.metrics.steps_per_sec(1);
+    // 2. The three modes at the same rated NIC and seed.
+    let run_one = |mode: PipelineMode| -> anyhow::Result<(f64, Vec<StepRecord>)> {
+        let mut t = Trainer::new(cfg_for(dir, BENCH_STEPS, mode))?;
+        t.dispatch_mode = DispatchMode::Tcp;
+        t.dispatch_nic = Some(nic);
+        t.run()?;
+        Ok((t.metrics.steps_per_sec(1), t.metrics.records.clone()))
+    };
+    let (serial_sps, serial_recs) = run_one(PipelineMode::Serial)?;
+    let (overlapped_sps, overlapped_recs) = run_one(PipelineMode::Overlapped)?;
+    let (async_sps, _async_recs) = run_one(PipelineMode::OverlappedAsync)?;
 
-    let mut over = Trainer::new(cfg_for(dir, BENCH_STEPS, PipelineMode::Overlapped))?;
-    over.dispatch_mode = DispatchMode::Tcp;
-    over.dispatch_nic = Some(nic);
-    over.run()?;
-    let overlapped_sps = over.metrics.steps_per_sec(1);
-
-    let metrics_match =
-        records_match(&serial.metrics.records, &over.metrics.records);
+    let metrics_match = records_match(&serial_recs, &overlapped_recs);
     Ok(Outcome {
         engine: "pjrt",
         serial_sps,
         overlapped_sps,
+        async_sps,
         metrics_match,
         steps: BENCH_STEPS,
     })
@@ -126,6 +133,10 @@ fn run_pjrt(dir: &Path) -> anyhow::Result<Outcome> {
 fn compute_stage(d: Duration) {
     std::thread::sleep(d);
 }
+
+const SYN_ROLLOUT: Duration = Duration::from_millis(40);
+const SYN_UPDATE: Duration = Duration::from_millis(40);
+const SYN_STEPS: u64 = 20;
 
 fn synthetic_plan() -> DispatchPlan {
     let p = DataLayout::round_robin(16, 4);
@@ -139,57 +150,99 @@ fn synthetic_job(step: u64) -> DispatchJob {
         plan: synthetic_plan(),
         mode: DispatchMode::Tcp,
         n_workers: 4,
-        // ~60ms on the busiest emulated NIC: comparable to one step of
-        // stand-in compute, like a well-balanced pipeline.
-        nic_bytes_per_sec: Some(12.5e6),
+        // ~36ms on the busiest emulated NIC (750 KB egress per worker):
+        // slightly cheaper than one stand-in compute stage, like a
+        // well-balanced pipeline.
+        nic_bytes_per_sec: Some(21e6),
     }
 }
 
-fn run_synthetic() -> anyhow::Result<Outcome> {
-    let rollout = Duration::from_millis(25);
-    let update = Duration::from_millis(25);
-    let steps = 20u64;
-
-    // Serial schedule: R -> D -> U, dispatch barriered inside the step.
+/// Serial schedule: R → D → U, dispatch barriered inside the step.
+fn synthetic_serial() -> anyhow::Result<f64> {
     let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
     w.submit(synthetic_job(0))?; // connection warmup outside timing
     w.recv()?;
     let t0 = Instant::now();
-    for k in 0..steps {
-        compute_stage(rollout);
+    for k in 0..SYN_STEPS {
+        compute_stage(SYN_ROLLOUT);
         w.submit(synthetic_job(k))?;
         w.recv()?;
-        compute_stage(update);
+        compute_stage(SYN_UPDATE);
     }
-    let serial_sps = steps as f64 / t0.elapsed().as_secs_f64();
+    Ok(SYN_STEPS as f64 / t0.elapsed().as_secs_f64())
+}
 
-    // Overlapped schedule: D(k) runs while U(k) and R(k+1) execute.
+/// Overlapped schedule: D(k) runs while U(k) and R(k+1) execute on the
+/// engine thread.
+fn synthetic_overlapped() -> anyhow::Result<f64> {
     let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
     w.submit(synthetic_job(0))?;
     w.recv()?;
     let t0 = Instant::now();
-    compute_stage(rollout);
-    for k in 0..steps {
+    compute_stage(SYN_ROLLOUT);
+    for k in 0..SYN_STEPS {
         w.submit(synthetic_job(k))?;
-        compute_stage(update);
-        if k + 1 < steps {
-            compute_stage(rollout);
+        compute_stage(SYN_UPDATE);
+        if k + 1 < SYN_STEPS {
+            compute_stage(SYN_ROLLOUT);
         }
         w.recv()?;
     }
-    let overlapped_sps = steps as f64 / t0.elapsed().as_secs_f64();
+    Ok(SYN_STEPS as f64 / t0.elapsed().as_secs_f64())
+}
 
+/// OverlappedAsync schedule: U(k) additionally moves to a stand-in
+/// update stage thread, so R(k+1) overlaps it — the per-step critical
+/// path drops from R+U to max(R, U).
+fn synthetic_async() -> anyhow::Result<f64> {
+    let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
+    w.submit(synthetic_job(0))?;
+    w.recv()?;
+    let (utx, urx) = sync_channel::<u64>(2);
+    let (dtx, drx) = sync_channel::<u64>(2);
+    let update_thread = std::thread::spawn(move || {
+        while let Ok(k) = urx.recv() {
+            compute_stage(SYN_UPDATE);
+            if dtx.send(k).is_err() {
+                break;
+            }
+        }
+    });
+    let t0 = Instant::now();
+    compute_stage(SYN_ROLLOUT); // R(0) off θ_0
+    for k in 0..SYN_STEPS {
+        w.submit(synthetic_job(k))?; // D(k)
+        utx.send(k)?; // U(k) on the update stage thread
+        if k + 1 < SYN_STEPS {
+            compute_stage(SYN_ROLLOUT); // R(k+1) ∥ U(k) ∥ D(k)
+        }
+        drx.recv()?; // join U(k)
+        w.recv()?; // join D(k)
+    }
+    let sps = SYN_STEPS as f64 / t0.elapsed().as_secs_f64();
+    drop(utx);
+    update_thread.join().expect("update stand-in thread panicked");
+    Ok(sps)
+}
+
+fn run_synthetic() -> anyhow::Result<Outcome> {
     Ok(Outcome {
         engine: "synthetic",
-        serial_sps,
-        overlapped_sps,
-        metrics_match: true, // same schedule-independent trajectory by construction
-        steps,
+        serial_sps: synthetic_serial()?,
+        overlapped_sps: synthetic_overlapped()?,
+        async_sps: synthetic_async()?,
+        // Serial/overlapped share the schedule-independent trajectory by
+        // construction.
+        metrics_match: true,
+        steps: SYN_STEPS,
     })
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("\n=== Fig. 5: pipelined step engine, serial vs overlapped ===");
+    println!(
+        "\n=== Fig. 5: pipelined step engine — serial vs overlapped vs \
+         overlapped-async ==="
+    );
     let outcome = match artifacts_dir() {
         Some(dir) => {
             println!("engine: real PJRT trainer ({})", dir.display());
@@ -209,19 +262,42 @@ fn main() -> anyhow::Result<()> {
     } else {
         0.0
     };
+    let async_speedup = if outcome.serial_sps > 0.0 {
+        outcome.async_sps / outcome.serial_sps
+    } else {
+        0.0
+    };
     print_table(
-        &["engine", "steps", "serial st/s", "overlapped st/s", "speedup", "metrics match"],
+        &[
+            "engine",
+            "steps",
+            "serial st/s",
+            "overlapped st/s",
+            "async st/s",
+            "overlap x",
+            "async x",
+            "metrics match",
+        ],
         &[vec![
             outcome.engine.to_string(),
             format!("{}", outcome.steps),
             format!("{:.3}", outcome.serial_sps),
             format!("{:.3}", outcome.overlapped_sps),
+            format!("{:.3}", outcome.async_sps),
             format!("{speedup:.2}x"),
+            format!("{async_speedup:.2}x"),
             format!("{}", outcome.metrics_match),
         ]],
     );
     if speedup < 1.3 {
         println!("WARNING: overlap speedup {speedup:.2}x below the 1.3x target");
+    }
+    if outcome.async_sps < outcome.overlapped_sps {
+        println!(
+            "WARNING: overlapped-async ({:.3} st/s) slower than overlapped \
+             ({:.3} st/s)",
+            outcome.async_sps, outcome.overlapped_sps
+        );
     }
     if !outcome.metrics_match {
         println!("WARNING: overlapped metrics diverged from serial");
@@ -233,7 +309,13 @@ fn main() -> anyhow::Result<()> {
         ("steps", Json::num(outcome.steps as f64)),
         ("serial_steps_per_sec", Json::num(outcome.serial_sps)),
         ("overlapped_steps_per_sec", Json::num(outcome.overlapped_sps)),
+        (
+            "overlapped_async_steps_per_sec",
+            Json::num(outcome.async_sps),
+        ),
         ("speedup", Json::num(speedup)),
+        ("async_speedup", Json::num(async_speedup)),
+        ("max_staleness", Json::num(ASYNC_STALENESS as f64)),
         ("metrics_match", Json::Bool(outcome.metrics_match)),
     ]);
     std::fs::write("BENCH_pipeline.json", format!("{json}\n"))?;

@@ -70,10 +70,21 @@ pub struct TrainConfig {
     /// Disable the selector (always use the largest bucket) — the
     /// ablation baseline.
     pub dynamic_buckets: bool,
-    /// Stage scheduling: serial (seed-identical order) or overlapped
+    /// Stage scheduling: serial (seed-identical order), overlapped
     /// (dispatch runs concurrently with update + next-step rollout;
-    /// training metrics are identical for a fixed seed).
+    /// training metrics are identical for a fixed seed), or
+    /// overlapped-async (update on its own stage thread; rollout may
+    /// sample a bounded-stale snapshot with off-policy correction).
     pub pipeline: PipelineMode,
+    /// `OverlappedAsync` staleness budget: rollout refuses parameter
+    /// snapshots more than this many optimizer steps behind. 0 forces
+    /// the serial dataflow (bit-identical metrics, two threads); the
+    /// pipeline keeps at most one update in flight, so values ≥ 1 all
+    /// behave as one-step-stale.
+    pub max_staleness: u64,
+    /// Half-width ε of the clipped importance ratio applied to
+    /// advantages of stale-rollout batches.
+    pub off_policy_clip: f32,
     pub metrics_path: Option<PathBuf>,
     pub checkpoint_path: Option<PathBuf>,
     pub seed: u64,
@@ -94,6 +105,8 @@ impl Default for TrainConfig {
             selector_alpha: 0.3,
             dynamic_buckets: true,
             pipeline: PipelineMode::Serial,
+            max_staleness: 1,
+            off_policy_clip: 0.2,
             metrics_path: None,
             checkpoint_path: None,
             seed: 0,
@@ -117,6 +130,9 @@ impl TrainConfig {
         }
         if self.rollout.max_response_tokens < 1 {
             bail!("max_response_tokens must be >= 1");
+        }
+        if !(self.off_policy_clip > 0.0 && self.off_policy_clip <= 1.0) {
+            bail!("off_policy_clip must be in (0,1]");
         }
         Ok(())
     }
@@ -189,6 +205,12 @@ impl TrainConfig {
         if let Some(s) = j.at(&["pipeline"]).as_str() {
             c.pipeline = PipelineMode::from_name(s)?;
         }
+        if let Some(n) = j.at(&["max_staleness"]).as_usize() {
+            c.max_staleness = n as u64;
+        }
+        if let Some(v) = j.at(&["off_policy_clip"]).as_f64() {
+            c.off_policy_clip = v as f32;
+        }
         if let Some(s) = j.at(&["metrics_path"]).as_str() {
             c.metrics_path = Some(PathBuf::from(s));
         }
@@ -217,7 +239,8 @@ mod tests {
               "rollout": {"max_context": 256, "max_response_tokens": 3,
                           "temperature": 0.7},
               "hp": {"lr": 0.001, "kl_coef": 0.2},
-              "gamma": 0.95, "seed": 9, "pipeline": "overlapped"
+              "gamma": 0.95, "seed": 9, "pipeline": "overlapped",
+              "max_staleness": 0, "off_policy_clip": 0.1
             }"#,
         )
         .unwrap();
@@ -232,6 +255,22 @@ mod tests {
         assert!((c.gamma - 0.95).abs() < 1e-6);
         assert_eq!(c.seed, 9);
         assert_eq!(c.pipeline, PipelineMode::Overlapped);
+        assert_eq!(c.max_staleness, 0);
+        assert!((c.off_policy_clip - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn async_pipeline_parses() {
+        let c = TrainConfig::from_json_str(
+            r#"{"pipeline": "overlapped-async", "max_staleness": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(c.pipeline, PipelineMode::OverlappedAsync);
+        assert_eq!(c.max_staleness, 2);
+        // Defaults: one-step-stale budget, 0.2 clip.
+        let d = TrainConfig::default();
+        assert_eq!(d.max_staleness, 1);
+        assert!((d.off_policy_clip - 0.2).abs() < 1e-6);
     }
 
     #[test]
@@ -240,6 +279,8 @@ mod tests {
         assert!(TrainConfig::from_json_str(r#"{"gamma": 1.5}"#).is_err());
         assert!(TrainConfig::from_json_str(r#"{"env": "chess"}"#).is_err());
         assert!(TrainConfig::from_json_str(r#"{"pipeline": "warp"}"#).is_err());
+        assert!(TrainConfig::from_json_str(r#"{"off_policy_clip": 0.0}"#).is_err());
+        assert!(TrainConfig::from_json_str(r#"{"off_policy_clip": 1.5}"#).is_err());
         assert!(TrainConfig::from_json_str("not json").is_err());
     }
 

@@ -37,27 +37,24 @@ pub fn train_bucket(
     needed.max(suggested)
 }
 
-/// Pack episodes (one per batch row) into padded tensors with per-token
-/// advantages broadcast over each episode's generated positions.
-pub fn pack_episodes(
+/// Pack episode tokens and action masks (one episode per row) into
+/// padded `(batch, bucket)` tensors — shared by [`pack_episodes`] and
+/// the off-policy scoring pass, which needs the token view before
+/// advantages exist.
+fn pack_tokens(
     batch: &ExperienceBatch,
     batch_size: usize,
     bucket: usize,
-) -> Result<PackedBatch> {
+) -> Result<(TokenBatch, F32Batch, usize)> {
     if batch.episodes.len() != batch_size {
         bail!(
             "need exactly {batch_size} episodes, got {}",
             batch.episodes.len()
         );
     }
-    if batch.advantages.len() != batch.episodes.len() {
-        bail!("advantages not computed");
-    }
     let mut tokens = TokenBatch::new(batch_size, bucket);
     let mut mask = F32Batch::new(batch_size, bucket);
-    let mut advantages = F32Batch::new(batch_size, bucket);
     let mut clipped = 0;
-
     for (row, ep) in batch.episodes.iter().enumerate() {
         let n = ep.tokens.len().min(bucket);
         if ep.tokens.len() > bucket {
@@ -65,6 +62,23 @@ pub fn pack_episodes(
         }
         tokens.row_mut(row)[..n].copy_from_slice(&ep.tokens[..n]);
         mask.row_mut(row)[..n].copy_from_slice(&ep.action_mask[..n]);
+    }
+    Ok((tokens, mask, clipped))
+}
+
+/// Broadcast each episode's (already computed) advantage over its
+/// generated positions in a padded `(batch, bucket)` tensor.
+fn advantage_tensor(
+    batch: &ExperienceBatch,
+    batch_size: usize,
+    bucket: usize,
+) -> Result<F32Batch> {
+    if batch.advantages.len() != batch.episodes.len() {
+        bail!("advantages not computed");
+    }
+    let mut advantages = F32Batch::new(batch_size, bucket);
+    for (row, ep) in batch.episodes.iter().enumerate() {
+        let n = ep.tokens.len().min(bucket);
         let adv = batch.advantages[row];
         for (t, m) in ep.action_mask[..n].iter().enumerate() {
             if *m > 0.0 {
@@ -72,39 +86,87 @@ pub fn pack_episodes(
             }
         }
     }
+    Ok(advantages)
+}
+
+/// Pack episodes (one per batch row) into padded tensors with per-token
+/// advantages broadcast over each episode's generated positions.
+pub fn pack_episodes(
+    batch: &ExperienceBatch,
+    batch_size: usize,
+    bucket: usize,
+) -> Result<PackedBatch> {
+    let (tokens, mask, clipped) = pack_tokens(batch, batch_size, bucket)?;
+    let advantages = advantage_tensor(batch, batch_size, bucket)?;
     Ok(PackedBatch { tokens, mask, advantages, bucket, clipped })
 }
 
 /// Full ExpPrep: advantages + reference logprobs → a ready TrainBatch.
 /// Returns (train batch, dispatched ref-logprob bytes) — the byte count
 /// is what the Data Dispatcher moves in a multi-worker deployment.
+///
+/// `policy_params`, when given, are the *update-target* policy (fresher
+/// than the snapshot the rollout sampled from): the batch is re-scored
+/// under it, the per-episode masked logprob sums land in
+/// `batch.target_logprobs`, and [`reinforce_advantages`] turns the
+/// target/behavior pair into a clipped importance correction. Pass
+/// `None` for on-policy batches — the scoring pass (one extra logprobs
+/// execution) is skipped and advantages are bit-identical to the
+/// pre-correction path.
 pub fn prepare(
     engine: &Engine,
     ref_params: &[Literal],
+    policy_params: Option<&[Literal]>,
     batch: &mut ExperienceBatch,
     bucket: usize,
     adv_cfg: AdvantageCfg,
 ) -> Result<(TrainBatch, u64)> {
+    // One packing pass serves target scoring, reference scoring, and
+    // the final train batch.
+    let (tokens, mask, _clipped) =
+        pack_tokens(batch, engine.manifest.batch, bucket)?;
+    match policy_params {
+        Some(policy) => {
+            let lp = engine.logprobs(policy, &tokens)?;
+            // Per-episode sum over generated positions, mirroring the
+            // behavior sums recorded at rollout. (Episodes clipped past
+            // the largest bucket lose their tail on the target side
+            // only — the clipped ratio bounds the resulting skew.)
+            batch.target_logprobs = (0..tokens.batch)
+                .map(|b| {
+                    let row_lp = &lp[b * tokens.seq..(b + 1) * tokens.seq];
+                    let mut sum = 0.0f32;
+                    for (l, m) in row_lp.iter().zip(mask.row(b).iter()) {
+                        if *m > 0.0 {
+                            sum += *l;
+                        }
+                    }
+                    sum
+                })
+                .collect();
+        }
+        None => batch.target_logprobs.clear(),
+    }
     reinforce_advantages(batch, adv_cfg);
-    let packed = pack_episodes(batch, engine.manifest.batch, bucket)?;
+    let advantages = advantage_tensor(batch, engine.manifest.batch, bucket)?;
 
     // Reference-model scoring (the paper's ExpPrep-stage model).
-    let ref_lp = engine.logprobs(ref_params, &packed.tokens)?;
+    let ref_lp = engine.logprobs(ref_params, &tokens)?;
     let ref_logprobs = F32Batch {
         data: ref_lp,
-        batch: packed.tokens.batch,
-        seq: packed.tokens.seq,
+        batch: tokens.batch,
+        seq: tokens.seq,
     };
     let bytes = (ref_logprobs.data.len() * 4) as u64;
-    batch.ref_logprobs = (0..packed.tokens.batch)
+    batch.ref_logprobs = (0..tokens.batch)
         .map(|b| ref_logprobs.row(b).to_vec())
         .collect();
 
     Ok((
         TrainBatch {
-            tokens: packed.tokens,
-            mask: packed.mask,
-            advantages: packed.advantages,
+            tokens,
+            mask,
+            advantages,
             ref_logprobs,
         },
         bytes,
@@ -133,6 +195,7 @@ mod tests {
                 response_start,
                 response_end: tokens.len(),
                 action: None,
+                behavior_logprob: -2.0,
             }],
             status: EpisodeStatus::Finished,
             reward,
@@ -151,7 +214,8 @@ mod tests {
     #[test]
     fn pack_pads_and_broadcasts_advantage() {
         let mut b = ExperienceBatch::new(vec![make(10, 1.0), make(6, -1.0)]);
-        reinforce_advantages(&mut b, AdvantageCfg { gamma: 1.0, whiten: false });
+        let cfg = AdvantageCfg { whiten: false, ..AdvantageCfg::default() };
+        reinforce_advantages(&mut b, cfg);
         let packed = pack_episodes(&b, 2, 16).unwrap();
         assert_eq!(packed.tokens.seq, 16);
         assert_eq!(packed.clipped, 0);

@@ -9,6 +9,7 @@ pub mod trainer;
 
 pub use exp_prep::{pack_episodes, prepare, train_bucket, PackedBatch};
 pub use pipeline::{
-    DispatchJob, DispatchResult, DispatchWorker, PipelineMode, PIPELINE_DEPTH,
+    DispatchJob, DispatchResult, DispatchWorker, PipelineMode, UpdateJob,
+    UpdateResult, UpdateWorker, PIPELINE_DEPTH,
 };
 pub use trainer::{DispatchMode, Trainer};

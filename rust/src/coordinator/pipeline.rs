@@ -23,29 +23,48 @@
 //! [`ThreadPool`]. Simulated dispatch modes run on the same worker so the
 //! Serial/Overlapped knob is engine-independent.
 //!
-//! ## Why Rollout(k+1) does not overlap with itself against Update(k)'s
-//! *output* — the determinism argument
+//! ## The three-mode overlap ladder
 //!
-//! Rollout for step *k+1* must read θ_{k+1}, which only exists once
-//! Update(*k*) finished; overlapping the two would force rollout onto
-//! stale θ_k (one-step off-policy) and change every training metric.
-//! `PipelineMode::Overlapped` therefore overlaps the stages whose data
-//! dependencies allow it *without* changing the dataflow: Dispatch(k)
-//! (whose only consumer is the metrics record) runs concurrently with
-//! Update(k) **and** with Rollout/ExpPrep(k+1). The result is that
-//! Overlapped mode reproduces Serial-mode training metrics bit-for-bit
-//! for a fixed seed — the ablation isolates the systems win.
+//! In `PipelineMode::Overlapped`, rollout for step *k+1* still reads
+//! θ_{k+1}, which only exists once Update(*k*) finished: the mode
+//! overlaps only the stages whose data dependencies allow it *without*
+//! changing the dataflow — Dispatch(k) (whose only consumer is the
+//! metrics record) runs concurrently with Update(k) **and** with
+//! Rollout/ExpPrep(k+1). Overlapped mode therefore reproduces
+//! Serial-mode training metrics bit-for-bit for a fixed seed — the
+//! ablation isolates the systems win.
+//!
+//! `PipelineMode::OverlappedAsync` completes the ladder: Update(k)
+//! moves onto its own long-lived stage thread ([`UpdateWorker`]) and
+//! Rollout(k+1) is allowed to sample from the *stale* snapshot θ_k
+//! while Update(k) is still producing θ_{k+1}:
+//!
+//! ```text
+//!  engine thread:   R(k)──E(k)  R(k+1)──E(k+1)  R(k+2) …
+//!  update worker:         U(k)═══════╗ U(k+1)═══════╗
+//!  dispatch worker:       D(k)═══════╩═D(k+1)═══════╩ …
+//! ```
+//!
+//! This is where the remaining wall-clock hides (rollout and update are
+//! the two long stages), at the price of one step of off-policy drift —
+//! bounded by the [`crate::runtime::SnapshotBuffer`] staleness guard
+//! (rollout refuses snapshots older than `max_staleness` steps) and
+//! corrected by the clipped importance ratio applied in
+//! `rl::advantage::reinforce_advantages` from the behavior logprobs
+//! recorded per turn at rollout. With `max_staleness = 0` the guard
+//! forces the serial dataflow and the mode degenerates to a
+//! (bit-identical) two-thread `Overlapped`.
 //!
 //! ## Double-buffered parameter snapshots
 //!
-//! In Overlapped mode the rollout stage reads a
+//! In the pipelined modes the rollout stage reads a
 //! [`crate::runtime::SnapshotBuffer`] front snapshot (published right
-//! after each update) instead of the live `ModelState`. Values are
-//! identical — the snapshot is a deep copy of θ_{k+1} — but the buffer
-//! decouples the rollout's reads from in-place mutation of the live
-//! literals, which is what will let Update(k+1) move off the critical
-//! path onto its own stage thread without changing this module's
-//! contract.
+//! after each update — by the engine thread in `Overlapped`, by the
+//! update stage thread in `OverlappedAsync`) instead of the live
+//! `ModelState`. Values are identical — the snapshot is a deep copy —
+//! but the buffer decouples the rollout's reads from in-place mutation
+//! of the live literals, so a concurrent `train_step` can never tear
+//! the weights out from under a rollout.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -57,6 +76,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::cluster::ClusterSpec;
 use crate::coordinator::trainer::DispatchMode;
 use crate::dispatch::{simulate_plan, DispatchPlan, TcpRuntime, WorkerMap};
+use crate::runtime::{
+    Engine, ModelState, ParamSnapshot, SnapshotBuffer, TrainBatch, TrainHp,
+    TrainStats,
+};
 use crate::util::threadpool::ThreadPool;
 
 /// Stage-channel depth: one step in flight plus one being staged.
@@ -71,6 +94,12 @@ pub enum PipelineMode {
     /// Dispatch(k) overlaps Update(k) and Rollout/ExpPrep(k+1); training
     /// metrics are identical to `Serial` for a fixed seed.
     Overlapped,
+    /// Three-stage engine: Update(k) runs on its own stage thread
+    /// ([`UpdateWorker`]) while Rollout(k+1) samples from a
+    /// bounded-stale snapshot, with a clipped importance-ratio
+    /// off-policy correction. Metrics match `Serial` only at
+    /// `max_staleness = 0`.
+    OverlappedAsync,
 }
 
 impl PipelineMode {
@@ -78,6 +107,9 @@ impl PipelineMode {
         Ok(match s {
             "serial" => PipelineMode::Serial,
             "overlapped" | "overlap" | "pipelined" => PipelineMode::Overlapped,
+            "overlapped-async" | "overlapped_async" | "async" => {
+                PipelineMode::OverlappedAsync
+            }
             other => bail!("unknown pipeline mode {other:?}"),
         })
     }
@@ -86,6 +118,7 @@ impl PipelineMode {
         match self {
             PipelineMode::Serial => "serial",
             PipelineMode::Overlapped => "overlapped",
+            PipelineMode::OverlappedAsync => "overlapped-async",
         }
     }
 }
@@ -268,6 +301,168 @@ impl Drop for DispatchWorker {
     }
 }
 
+/// Work order for the persistent update stage (`OverlappedAsync`).
+pub struct UpdateJob {
+    /// Optimizer step this update will produce (== the step record's id).
+    pub step: u64,
+    pub batch: TrainBatch,
+    pub hp: TrainHp,
+}
+
+/// Completion record of one model update.
+pub struct UpdateResult {
+    /// Optimizer step after the update (== `UpdateJob::step`).
+    pub step: u64,
+    pub stats: TrainStats,
+    /// Real wall-clock seconds the update occupied on the stage thread.
+    pub train_seconds: f64,
+    /// Deep copy of the refreshed reference parameters when the policy
+    /// crossed a `ref_refresh_every` boundary at this step.
+    pub new_ref_params: Option<ParamSnapshot>,
+}
+
+fn run_update(
+    engine: &Engine,
+    state: &mut ModelState,
+    snapshots: &SnapshotBuffer,
+    ref_refresh_every: u64,
+    job: UpdateJob,
+) -> Result<UpdateResult> {
+    let t0 = Instant::now();
+    let stats = engine.train_step(state, &job.batch, job.hp)?;
+    if state.step != job.step {
+        bail!(
+            "update produced step {} but the job expected {}",
+            state.step,
+            job.step
+        );
+    }
+    let new_ref_params = if ref_refresh_every > 0 && state.step % ref_refresh_every == 0
+    {
+        Some(state.snapshot()?)
+    } else {
+        None
+    };
+    // Publish θ_{k+1} *before* reporting completion, so any consumer
+    // that observed the result can rely on the snapshot being visible
+    // (the engine thread's ExpPrep target scoring depends on this).
+    snapshots.publish(state)?;
+    Ok(UpdateResult {
+        step: state.step,
+        stats,
+        train_seconds: t0.elapsed().as_secs_f64(),
+        new_ref_params,
+    })
+}
+
+/// Persistent update stage of the `OverlappedAsync` pipeline: one
+/// long-lived thread that **owns the live [`ModelState`]**, consumes
+/// [`UpdateJob`]s from a bounded channel, runs the fused train step,
+/// and publishes each new θ into the shared [`SnapshotBuffer`] — which
+/// is what lets the engine thread's next rollout proceed off the stale
+/// front snapshot while this thread is still updating.
+pub struct UpdateWorker {
+    tx: Option<SyncSender<UpdateJob>>,
+    rx: Receiver<Result<UpdateResult>>,
+    handle: Option<JoinHandle<ModelState>>,
+    pending: usize,
+}
+
+impl UpdateWorker {
+    /// Start the stage thread, transferring ownership of the live model
+    /// state into it. Every completed update is published to
+    /// `snapshots` before its result is delivered.
+    pub fn spawn(
+        engine: Arc<Engine>,
+        state: ModelState,
+        snapshots: Arc<SnapshotBuffer>,
+        ref_refresh_every: u64,
+    ) -> UpdateWorker {
+        let (jtx, jrx) = sync_channel::<UpdateJob>(PIPELINE_DEPTH);
+        let (rtx, rrx) = sync_channel::<Result<UpdateResult>>(PIPELINE_DEPTH);
+        let handle = std::thread::spawn(move || {
+            let mut state = state;
+            while let Ok(job) = jrx.recv() {
+                let out = run_update(
+                    &engine,
+                    &mut state,
+                    &snapshots,
+                    ref_refresh_every,
+                    job,
+                );
+                let failed = out.is_err();
+                if rtx.send(out).is_err() || failed {
+                    // A failed train step may leave θ partially advanced;
+                    // stop consuming jobs and hand the state back as-is.
+                    break;
+                }
+            }
+            state
+        });
+        UpdateWorker {
+            tx: Some(jtx),
+            rx: rrx,
+            handle: Some(handle),
+            pending: 0,
+        }
+    }
+
+    /// Enqueue an update; blocks only if [`PIPELINE_DEPTH`] jobs are
+    /// already in flight.
+    pub fn submit(&mut self, job: UpdateJob) -> Result<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("update worker shut down"))?
+            .send(job)
+            .map_err(|_| anyhow!("update worker died"))?;
+        self.pending += 1;
+        Ok(())
+    }
+
+    /// Await the oldest in-flight update.
+    pub fn recv(&mut self) -> Result<UpdateResult> {
+        if self.pending == 0 {
+            bail!("no update in flight");
+        }
+        let r = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("update worker died"))?;
+        self.pending -= 1;
+        r
+    }
+
+    /// Jobs submitted but not yet received.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Stop the stage thread and take back the model state (any
+    /// still-queued jobs are completed first; their results are
+    /// discarded).
+    pub fn finish(mut self) -> Result<ModelState> {
+        drop(self.tx.take());
+        while self.rx.recv().is_ok() {}
+        let handle = self
+            .handle
+            .take()
+            .ok_or_else(|| anyhow!("update worker already joined"))?;
+        handle
+            .join()
+            .map_err(|_| anyhow!("update stage thread panicked"))
+    }
+}
+
+impl Drop for UpdateWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        while self.rx.recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join(); // state (θ) is dropped with the thread
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,9 +482,17 @@ mod tests {
 
     #[test]
     fn mode_names_roundtrip() {
-        for m in [PipelineMode::Serial, PipelineMode::Overlapped] {
+        for m in [
+            PipelineMode::Serial,
+            PipelineMode::Overlapped,
+            PipelineMode::OverlappedAsync,
+        ] {
             assert_eq!(PipelineMode::from_name(m.name()).unwrap(), m);
         }
+        assert_eq!(
+            PipelineMode::from_name("async").unwrap(),
+            PipelineMode::OverlappedAsync
+        );
         assert!(PipelineMode::from_name("bogus").is_err());
     }
 

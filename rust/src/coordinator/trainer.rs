@@ -17,31 +17,43 @@
 //! over loopback TCP with `DispatchMode::Tcp`).
 //!
 //! The step is decomposed into explicit stage tasks
-//! (`stage_rollout_exp_prep` → `submit_dispatch` → `stage_update` →
-//! `finalize`) driven either serially ([`Trainer::step`]) or by the
-//! overlapped pipeline of [`crate::coordinator::pipeline`], which runs
-//! Dispatch(k) concurrently with Update(k) and Rollout/ExpPrep(k+1) on a
-//! persistent dispatch worker. Rollout, the dispatch worker, and (for
-//! `DispatchMode::Tcp`) every TCP connection are constructed once in
-//! [`Trainer::new`] and reused every step.
+//! (`stage_rollout` → `stage_exp_prep` → `submit_dispatch` →
+//! `stage_update` → `finalize`) driven three ways:
+//!
+//! * [`Trainer::step`] — the seed-identical serial order;
+//! * `run_overlapped` — Dispatch(k) overlaps Update(k) and
+//!   Rollout/ExpPrep(k+1) on a persistent dispatch worker
+//!   (metric-identical to serial for a fixed seed);
+//! * `run_overlapped_async` — additionally moves Update(k) onto a
+//!   long-lived [`UpdateWorker`] stage thread; Rollout(k+1) samples
+//!   from a bounded-stale snapshot (`cfg.max_staleness`) and ExpPrep
+//!   re-scores stale batches under the fresh policy for the clipped
+//!   importance correction. At `max_staleness = 0` the staleness guard
+//!   degenerates the schedule to the serial dataflow, reproducing
+//!   serial metrics bit-for-bit.
+//!
+//! Rollout, the dispatch worker, and (for `DispatchMode::Tcp`) every TCP
+//! connection are constructed once in [`Trainer::new`] and reused every
+//! step.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use crate::config::{EnvKind, OpponentKind, TrainConfig};
 use crate::coordinator::exp_prep;
 use crate::coordinator::pipeline::{
-    DispatchJob, DispatchResult, DispatchWorker, PipelineMode,
+    DispatchJob, DispatchResult, DispatchWorker, PipelineMode, UpdateJob,
+    UpdateWorker,
 };
 use crate::dispatch::{plan_alltoall, plan_centralized, DataLayout};
 use crate::envs::{ConnectFour, Game, HeuristicOpponent, Opponent, RandomOpponent, TicTacToe};
 use crate::metrics::{MetricsLog, StepRecord};
 use crate::parallelism::{ProfilePoint, RangeTable, Selector};
 use crate::rl::advantage::AdvantageCfg;
-use crate::rl::episode::{EpisodeStatus, ExperienceBatch};
+use crate::rl::episode::{Episode, EpisodeStatus, ExperienceBatch};
 use crate::rollout::{RolloutEngine, RolloutStats};
 use crate::runtime::{Engine, ModelState, SnapshotBuffer, TrainBatch};
 use crate::util::threadpool::ThreadPool;
@@ -57,6 +69,25 @@ pub enum DispatchMode {
     SimulatedCentralized,
 }
 
+/// Upper bound on how long the rollout stage may wait for the update
+/// stage to publish a fresh-enough snapshot before the run is declared
+/// wedged (generous: the first update lazily compiles its executable).
+const SNAPSHOT_TIMEOUT: Duration = Duration::from_secs(180);
+
+/// Rollout outputs of one step, before ExpPrep.
+struct RolledOut {
+    switched: bool,
+    episodes: Vec<Episode>,
+    rstats: RolloutStats,
+    rollout_seconds: f64,
+    /// Optimizer steps the rollout policy lagged behind the freshest
+    /// parameters (0 in serial/overlapped modes).
+    param_staleness: u64,
+    /// Seconds the rollout stage blocked in the bounded-staleness
+    /// snapshot acquire (0 outside `OverlappedAsync`).
+    snapshot_wait_seconds: f64,
+}
+
 /// Rollout + ExpPrep outputs of one step, in flight between stages.
 struct StagedStep {
     switched: bool,
@@ -68,6 +99,8 @@ struct StagedStep {
     n_eps: f64,
     rollout_seconds: f64,
     exp_prep_seconds: f64,
+    param_staleness: u64,
+    snapshot_wait_seconds: f64,
 }
 
 /// A step that has been updated but whose dispatch is still in flight:
@@ -76,10 +109,24 @@ struct PendingStep {
     rec: StepRecord,
 }
 
+fn game_factory(env: EnvKind) -> Box<dyn Fn() -> Box<dyn Game>> {
+    match env {
+        EnvKind::TicTacToe => Box::new(|| Box::new(TicTacToe::new())),
+        EnvKind::ConnectFour => Box::new(|| Box::new(ConnectFour::new())),
+    }
+}
+
+fn opponent_factory(kind: OpponentKind) -> Box<dyn Fn() -> Box<dyn Opponent>> {
+    match kind {
+        OpponentKind::Random => Box::new(|| Box::new(RandomOpponent)),
+        OpponentKind::Heuristic => Box::new(|| Box::new(HeuristicOpponent)),
+    }
+}
+
 /// The end-to-end trainer.
 pub struct Trainer {
     pub cfg: TrainConfig,
-    pub engine: Engine,
+    pub engine: Arc<Engine>,
     pub state: ModelState,
     /// Frozen reference model parameters (KL anchor; ExpPrep scoring).
     pub ref_params: Vec<Literal>,
@@ -93,8 +140,9 @@ pub struct Trainer {
     pub dispatch_nic: Option<f64>,
     /// Persistent rollout driver (decode buffers survive across steps).
     rollout: RolloutEngine,
-    /// Double-buffered parameter snapshots for the overlapped pipeline.
-    snapshots: SnapshotBuffer,
+    /// Shared parameter-snapshot buffer: published by whichever thread
+    /// runs the update stage, read by the rollout stage.
+    snapshots: Arc<SnapshotBuffer>,
     /// Persistent dispatch stage worker (owns the TCP runtime).
     dispatcher: DispatchWorker,
     rollout_seed: u64,
@@ -105,8 +153,10 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
-        let engine = Engine::load(&cfg.artifacts_dir)
-            .context("loading AOT artifacts (run `make artifacts`)")?;
+        let engine = Arc::new(
+            Engine::load(&cfg.artifacts_dir)
+                .context("loading AOT artifacts (run `make artifacts`)")?,
+        );
         let state = engine.initial_state()?;
         let ref_params = state.clone_params()?;
 
@@ -154,66 +204,65 @@ impl Trainer {
             dispatch_workers: 8,
             dispatch_nic: None,
             rollout,
-            snapshots: SnapshotBuffer::new(),
+            snapshots: Arc::new(SnapshotBuffer::new()),
             dispatcher,
             rollout_seed,
             step_t0: Instant::now(),
         })
     }
 
-    fn make_game(&self) -> Box<dyn Fn() -> Box<dyn Game>> {
-        match self.cfg.env {
-            EnvKind::TicTacToe => Box::new(|| Box::new(TicTacToe::new())),
-            EnvKind::ConnectFour => Box::new(|| Box::new(ConnectFour::new())),
-        }
-    }
-
-    fn make_opponent(&self) -> Box<dyn Fn() -> Box<dyn Opponent>> {
-        match self.cfg.opponent {
-            OpponentKind::Random => Box::new(|| Box::new(RandomOpponent)),
-            OpponentKind::Heuristic => Box::new(|| Box::new(HeuristicOpponent)),
-        }
-    }
-
-    /// Stage 1+2: ① selector decision, Rollout, monitor feedback,
-    /// ② ExpPrep at the (escalated) selected bucket.
-    fn stage_rollout_exp_prep(&mut self) -> Result<StagedStep> {
-        let step_idx = self.state.step;
-
+    /// Stage 1: ① selector decision, Rollout off `params`, monitor
+    /// feedback. An associated fn over split borrows so callers can pass
+    /// parameters owned by `self` (live state) or by a snapshot `Arc`.
+    /// Staleness bookkeeping (zeroed here) is filled in by the async
+    /// driver, the only schedule where it is nonzero.
+    fn stage_rollout(
+        rollout: &mut RolloutEngine,
+        selector: &mut Selector<usize>,
+        engine: &Engine,
+        cfg: &TrainConfig,
+        rollout_seed: u64,
+        step_idx: u64,
+        params: &[Literal],
+    ) -> Result<RolledOut> {
         // ① Parallelism Selector before Rollout.
-        let decision = self.selector.decide();
+        let decision = selector.decide();
         let switched = decision.switched();
 
-        // Rollout off the front parameter snapshot when pipelining (a
-        // value-identical deep copy of θ, decoupled from the live state
-        // the concurrent-update future mutates); off the live state in
-        // serial mode (seed-identical path, no copy).
         let t0 = Instant::now();
-        self.rollout.reseed(self.rollout_seed.wrapping_add(step_idx));
-        let make_game = self.make_game();
-        let make_opponent = self.make_opponent();
-        let use_snapshot = self.cfg.pipeline == PipelineMode::Overlapped;
-        let (episodes, rstats) = match (use_snapshot, self.snapshots.front()) {
-            (true, Some(snap)) => self.rollout.run_batch(
-                &self.engine,
-                &snap.params,
-                make_game.as_ref(),
-                make_opponent.as_ref(),
-            )?,
-            _ => self.rollout.run_batch(
-                &self.engine,
-                &self.state.params,
-                make_game.as_ref(),
-                make_opponent.as_ref(),
-            )?,
-        };
+        rollout.reseed(rollout_seed.wrapping_add(step_idx));
+        let make_game = game_factory(cfg.env);
+        let make_opponent = opponent_factory(cfg.opponent);
+        let (episodes, rstats) = rollout.run_batch(
+            engine,
+            params,
+            make_game.as_ref(),
+            make_opponent.as_ref(),
+        )?;
         let rollout_seconds = t0.elapsed().as_secs_f64();
 
         // Feed the context monitor (paper: averaged context length).
-        self.selector.observe(rstats.mean_episode_context);
+        selector.observe(rstats.mean_episode_context);
 
-        // ② ExpPrep (reference scoring + advantages) at the selected
-        // bucket (escalated to fit).
+        Ok(RolledOut {
+            switched,
+            episodes,
+            rstats,
+            rollout_seconds,
+            param_staleness: 0,
+            snapshot_wait_seconds: 0.0,
+        })
+    }
+
+    /// Stage 2: ② ExpPrep (reference scoring + advantages) at the
+    /// selected bucket (escalated to fit). `policy` is the update-target
+    /// parameters for off-policy re-scoring of stale rollouts (`None`
+    /// when the rollout was on-policy).
+    fn stage_exp_prep(
+        &mut self,
+        rolled: RolledOut,
+        policy: Option<&[Literal]>,
+    ) -> Result<StagedStep> {
         let t1 = Instant::now();
         let suggested = if self.cfg.dynamic_buckets {
             self.selector.current()
@@ -221,18 +270,20 @@ impl Trainer {
             self.engine.manifest.max_bucket()
         };
         let bucket = exp_prep::train_bucket(
-            &episodes,
+            &rolled.episodes,
             &self.engine.manifest.buckets,
             suggested,
         );
-        let mut batch = ExperienceBatch::new(episodes);
+        let mut batch = ExperienceBatch::new(rolled.episodes);
         let adv_cfg = AdvantageCfg {
             gamma: self.cfg.gamma,
             whiten: self.cfg.whiten_advantages,
+            is_clip: self.cfg.off_policy_clip,
         };
         let (train_batch, dispatch_bytes) = exp_prep::prepare(
             &self.engine,
             &self.ref_params,
+            policy,
             &mut batch,
             bucket,
             adv_cfg,
@@ -240,22 +291,57 @@ impl Trainer {
         let exp_prep_seconds = t1.elapsed().as_secs_f64();
 
         Ok(StagedStep {
-            switched,
+            switched: rolled.switched,
             bucket,
             train_batch,
             dispatch_bytes,
             mean_return: batch.mean_reward(),
             n_eps: batch.episodes.len().max(1) as f64,
-            rstats,
-            rollout_seconds,
+            rstats: rolled.rstats,
+            rollout_seconds: rolled.rollout_seconds,
             exp_prep_seconds,
+            param_staleness: rolled.param_staleness,
+            snapshot_wait_seconds: rolled.snapshot_wait_seconds,
         })
+    }
+
+    /// Stages 1+2 for the serial/overlapped drivers (rollout always
+    /// on-policy there).
+    fn stage_rollout_exp_prep(&mut self) -> Result<StagedStep> {
+        let step_idx = self.state.step;
+        // Rollout off the front parameter snapshot when pipelining (a
+        // value-identical deep copy of θ, decoupled from the live state)
+        // and off the live state in serial mode (seed-identical path,
+        // no copy).
+        let use_snapshot = self.cfg.pipeline == PipelineMode::Overlapped;
+        let rolled = match (use_snapshot, self.snapshots.front()) {
+            (true, Some(snap)) => Self::stage_rollout(
+                &mut self.rollout,
+                &mut self.selector,
+                &self.engine,
+                &self.cfg,
+                self.rollout_seed,
+                step_idx,
+                &snap.params,
+            )?,
+            _ => Self::stage_rollout(
+                &mut self.rollout,
+                &mut self.selector,
+                &self.engine,
+                &self.cfg,
+                self.rollout_seed,
+                step_idx,
+                &self.state.params,
+            )?,
+        };
+        self.stage_exp_prep(rolled, None)
     }
 
     /// Stage ③–⑤: plan the ref-logprob exchange between the conceptual
     /// ExpPrep workers and trainer workers, and hand it to the persistent
-    /// dispatch worker (non-blocking).
-    fn submit_dispatch(&mut self, staged: &StagedStep) -> Result<()> {
+    /// dispatch worker (non-blocking). `step` is the post-update record
+    /// id the exchange belongs to.
+    fn submit_dispatch(&mut self, staged: &StagedStep, step: u64) -> Result<()> {
         let n_items = self.engine.manifest.batch;
         let producer = DataLayout::round_robin(n_items, self.dispatch_workers);
         let consumer = DataLayout::blocked(n_items, self.dispatch_workers);
@@ -269,8 +355,7 @@ impl Trainer {
             }
         };
         self.dispatcher.submit(DispatchJob {
-            // Post-update numbering, matching the StepRecord.
-            step: self.state.step + 1,
+            step,
             plan,
             mode: self.dispatch_mode,
             n_workers: self.dispatch_workers,
@@ -278,7 +363,35 @@ impl Trainer {
         })
     }
 
-    /// Stage: Model Update (+ reference refresh and snapshot publish).
+    /// Everything a [`StepRecord`] needs from Rollout/ExpPrep; the
+    /// update and dispatch fields are joined in later.
+    fn partial_record(&self, staged: &StagedStep, step: u64) -> StepRecord {
+        StepRecord {
+            step,
+            mean_return: staged.mean_return,
+            mean_turn_ctx: staged.rstats.mean_turn_context,
+            mean_episode_ctx: staged.rstats.mean_episode_context,
+            truncation_rate: staged.rstats.truncated as f64 / staged.n_eps,
+            illegal_rate: staged.rstats.illegal as f64 / staged.n_eps,
+            loss: 0.0,
+            kl: 0.0,
+            entropy: 0.0,
+            tgs: staged.rstats.tgs,
+            bucket: staged.bucket,
+            selector_switched: staged.switched,
+            rollout_seconds: staged.rollout_seconds,
+            exp_prep_seconds: staged.exp_prep_seconds,
+            dispatch_seconds: 0.0,
+            dispatch_wall_seconds: 0.0,
+            train_seconds: 0.0,
+            step_wall_seconds: 0.0,
+            param_staleness: staged.param_staleness,
+            snapshot_wait_seconds: staged.snapshot_wait_seconds,
+        }
+    }
+
+    /// Stage: Model Update (+ reference refresh and snapshot publish) on
+    /// the engine thread — the serial/overlapped path.
     fn stage_update(&mut self, staged: StagedStep) -> Result<PendingStep> {
         let t3 = Instant::now();
         let tstats =
@@ -298,26 +411,11 @@ impl Trainer {
             self.snapshots.publish(&self.state)?;
         }
 
-        let rec = StepRecord {
-            step: self.state.step,
-            mean_return: staged.mean_return,
-            mean_turn_ctx: staged.rstats.mean_turn_context,
-            mean_episode_ctx: staged.rstats.mean_episode_context,
-            truncation_rate: staged.rstats.truncated as f64 / staged.n_eps,
-            illegal_rate: staged.rstats.illegal as f64 / staged.n_eps,
-            loss: tstats.loss as f64,
-            kl: tstats.kl as f64,
-            entropy: tstats.entropy as f64,
-            tgs: staged.rstats.tgs,
-            bucket: staged.bucket,
-            selector_switched: staged.switched,
-            rollout_seconds: staged.rollout_seconds,
-            exp_prep_seconds: staged.exp_prep_seconds,
-            dispatch_seconds: 0.0,
-            dispatch_wall_seconds: 0.0,
-            train_seconds,
-            step_wall_seconds: 0.0,
-        };
+        let mut rec = self.partial_record(&staged, self.state.step);
+        rec.loss = tstats.loss as f64;
+        rec.kl = tstats.kl as f64;
+        rec.entropy = tstats.entropy as f64;
+        rec.train_seconds = train_seconds;
         Ok(PendingStep { rec })
     }
 
@@ -341,7 +439,7 @@ impl Trainer {
     pub fn step(&mut self) -> Result<StepRecord> {
         self.step_t0 = Instant::now();
         let staged = self.stage_rollout_exp_prep()?;
-        self.submit_dispatch(&staged)?;
+        self.submit_dispatch(&staged, self.state.step + 1)?;
         // Serial barrier: the exchange completes before the update runs.
         let d = self.dispatcher.recv()?;
         let pend = self.stage_update(staged)?;
@@ -356,7 +454,7 @@ impl Trainer {
         self.snapshots.publish(&self.state)?;
         let mut staged = self.stage_rollout_exp_prep()?;
         for k in 0..self.cfg.steps {
-            self.submit_dispatch(&staged)?;
+            self.submit_dispatch(&staged, self.state.step + 1)?;
             let pend = self.stage_update(staged)?;
             // Prefetch the next step's rollout while Dispatch(k) drains.
             let next = if k + 1 < self.cfg.steps {
@@ -375,10 +473,145 @@ impl Trainer {
         Ok(())
     }
 
+    /// Join one async step: U(k) stats (installing any refreshed
+    /// reference parameters) plus D(k) timings → committed record.
+    fn join_async_step(
+        &mut self,
+        updates: &mut UpdateWorker,
+        mut rec: StepRecord,
+    ) -> Result<()> {
+        let u = updates.recv()?;
+        if u.step != rec.step {
+            bail!(
+                "update stage returned step {} for record {}",
+                u.step,
+                rec.step
+            );
+        }
+        if let Some(snap) = u.new_ref_params {
+            self.ref_params = snap.params;
+        }
+        rec.loss = u.stats.loss as f64;
+        rec.kl = u.stats.kl as f64;
+        rec.entropy = u.stats.entropy as f64;
+        rec.train_seconds = u.train_seconds;
+        let d = self.dispatcher.recv()?;
+        rec.dispatch_seconds = d.modeled_seconds;
+        rec.dispatch_wall_seconds = d.wall_seconds;
+        rec.step_wall_seconds = self.step_t0.elapsed().as_secs_f64();
+        self.step_t0 = Instant::now();
+        self.metrics.record(rec.clone())?;
+        Self::print_step(&rec);
+        Ok(())
+    }
+
+    /// Engine-thread loop of the three-stage async pipeline. `base` is
+    /// the optimizer step the run started from (so a second `run()` on
+    /// the same trainer keeps numbering where serial mode would).
+    /// Iteration *k* (absolute step index `i = base + k`, producing
+    /// record *i+1*):
+    ///
+    /// 1. acquire a snapshot no older than `i − max_staleness`
+    ///    (θ_{i−1} or θ_i — never blocks for `max_staleness ≥ 1`);
+    /// 2. Rollout(i) off it, concurrent with Update(i−1) on the stage
+    ///    thread and Dispatch(i−1) on the dispatch worker;
+    /// 3. join Update(i−1) + Dispatch(i−1) → record i;
+    /// 4. ExpPrep(i), re-scoring under the now-fresh θ_i iff the
+    ///    rollout was stale;
+    /// 5. submit Dispatch(i), submit Update(i); continue.
+    fn drive_async(&mut self, updates: &mut UpdateWorker, base: u64) -> Result<()> {
+        let max_staleness = self.cfg.max_staleness;
+        let mut pending: Option<StepRecord> = None;
+        for k in 0..self.cfg.steps {
+            let idx = base + k;
+            // At a zero staleness budget the acquire below would block
+            // exactly until U(i−1) publishes θ_i — join it first so an
+            // update-stage failure surfaces as its error, not a timeout.
+            if max_staleness == 0 {
+                if let Some(rec) = pending.take() {
+                    self.join_async_step(updates, rec)?;
+                }
+            }
+            let wait_t0 = Instant::now();
+            let snap = self
+                .snapshots
+                .acquire(idx.saturating_sub(max_staleness), SNAPSHOT_TIMEOUT)
+                .context("rollout stage waiting on the update stage")?;
+            let snapshot_wait_seconds = wait_t0.elapsed().as_secs_f64();
+            let param_staleness = idx.saturating_sub(snap.step);
+            let mut rolled = Self::stage_rollout(
+                &mut self.rollout,
+                &mut self.selector,
+                &self.engine,
+                &self.cfg,
+                self.rollout_seed,
+                idx,
+                &snap.params,
+            )?;
+            rolled.param_staleness = param_staleness;
+            rolled.snapshot_wait_seconds = snapshot_wait_seconds;
+            if let Some(rec) = pending.take() {
+                self.join_async_step(updates, rec)?;
+            }
+            // ExpPrep: after joining U(i−1), the front snapshot is θ_i;
+            // a stale rollout is re-scored under it so the importance
+            // ratio compares the update-target policy to the behavior
+            // policy. On-policy rollouts skip the extra scoring pass.
+            let target = if param_staleness > 0 {
+                self.snapshots.front()
+            } else {
+                None
+            };
+            let staged = self.stage_exp_prep(
+                rolled,
+                target.as_ref().map(|s| s.params.as_slice()),
+            )?;
+            self.submit_dispatch(&staged, idx + 1)?;
+            let rec = self.partial_record(&staged, idx + 1);
+            updates.submit(UpdateJob {
+                step: idx + 1,
+                batch: staged.train_batch,
+                hp: self.cfg.hp,
+            })?;
+            pending = Some(rec);
+        }
+        if let Some(rec) = pending.take() {
+            self.join_async_step(updates, rec)?;
+        }
+        Ok(())
+    }
+
+    /// Three-stage async driver: spawn the update stage thread (handing
+    /// it the live model state), run the engine loop, then always take
+    /// the state back — even when the loop failed.
+    fn run_overlapped_async(&mut self) -> Result<()> {
+        self.step_t0 = Instant::now();
+        // θ_base for the first rollout (base > 0 when run() is invoked
+        // again on an already-trained state).
+        let base = self.state.step;
+        self.snapshots.publish(&self.state)?;
+        let state = std::mem::replace(&mut self.state, ModelState::empty());
+        let mut updates = UpdateWorker::spawn(
+            Arc::clone(&self.engine),
+            state,
+            Arc::clone(&self.snapshots),
+            self.cfg.ref_refresh_every,
+        );
+        let drove = self.drive_async(&mut updates, base);
+        match updates.finish() {
+            Ok(state) => self.state = state,
+            Err(join_err) => {
+                drove?; // prefer the driver's error when both failed
+                return Err(join_err);
+            }
+        }
+        drove
+    }
+
     fn print_step(rec: &StepRecord) {
         eprintln!(
             "[step {:>4}] return {:+.3} ctx(ep) {:>5.1} ctx(turn) {:>5.1} \
-             trunc {:>4.1}% loss {:+.4} ent {:.3} bucket {} tgs {:.1}{}",
+             trunc {:>4.1}% loss {:+.4} ent {:.3} bucket {} tgs {:.1}{}{}",
             rec.step,
             rec.mean_return,
             rec.mean_episode_ctx,
@@ -388,6 +621,11 @@ impl Trainer {
             rec.entropy,
             rec.bucket,
             rec.tgs,
+            if rec.param_staleness > 0 {
+                format!(" stale={}", rec.param_staleness)
+            } else {
+                String::new()
+            },
             if rec.selector_switched { " [switch]" } else { "" },
         );
     }
@@ -402,6 +640,7 @@ impl Trainer {
                 }
             }
             PipelineMode::Overlapped => self.run_overlapped()?,
+            PipelineMode::OverlappedAsync => self.run_overlapped_async()?,
         }
         if let Some(p) = &self.cfg.checkpoint_path {
             self.state.save_params(p)?;

@@ -22,4 +22,7 @@ pub use plan::{
     WorkerTransfer,
 };
 pub use sim::{simulate_plan, WorkerMap};
-pub use tcp::{execute_plan_tcp, execute_plan_tcp_rated, TcpReport, TcpRuntime};
+pub use tcp::{
+    execute_plan_tcp, execute_plan_tcp_rated, FrameHeader, TcpReport,
+    TcpRuntime, FRAME_HEADER_LEN,
+};

@@ -102,30 +102,70 @@ fn maybe_acquire(p: &Option<Arc<Pacer>>, bytes: usize) {
     }
 }
 
+/// Encoded size of a [`FrameHeader`] on the wire.
+pub const FRAME_HEADER_LEN: usize = 24;
+
 /// Wire header framing one transfer on a persistent stream: src worker,
 /// execution epoch (so a later `execute` can discard completions of a
 /// transfer that outlived a timed-out predecessor), payload bytes.
+/// Fixed 24-byte little-endian layout: `src | epoch | bytes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Sending worker id.
+    pub src: u64,
+    /// Execution epoch of the `execute` call that produced the frame.
+    pub epoch: u64,
+    /// Payload bytes following the header on the stream.
+    pub bytes: u64,
+}
+
+impl FrameHeader {
+    pub fn encode(&self) -> [u8; FRAME_HEADER_LEN] {
+        let mut h = [0u8; FRAME_HEADER_LEN];
+        h[..8].copy_from_slice(&self.src.to_le_bytes());
+        h[8..16].copy_from_slice(&self.epoch.to_le_bytes());
+        h[16..].copy_from_slice(&self.bytes.to_le_bytes());
+        h
+    }
+
+    /// Decode from the first [`FRAME_HEADER_LEN`] bytes of `buf`;
+    /// a truncated buffer is a framing error, not a panic.
+    pub fn decode(buf: &[u8]) -> Result<FrameHeader> {
+        if buf.len() < FRAME_HEADER_LEN {
+            bail!(
+                "truncated frame header: {} of {FRAME_HEADER_LEN} bytes",
+                buf.len()
+            );
+        }
+        Ok(FrameHeader {
+            src: u64::from_le_bytes(buf[..8].try_into().unwrap()),
+            epoch: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            bytes: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+        })
+    }
+
+    /// Whether a completion carrying this header belongs to the given
+    /// execution epoch. The receive path drops frames whose epoch does
+    /// not match the current execution (stale transfers that outlived a
+    /// timed-out predecessor).
+    pub fn matches_epoch(&self, epoch: u64) -> bool {
+        self.epoch == epoch
+    }
+}
+
 fn write_header(
     s: &mut TcpStream,
     src: u64,
     epoch: u64,
     bytes: u64,
 ) -> std::io::Result<()> {
-    let mut h = [0u8; 24];
-    h[..8].copy_from_slice(&src.to_le_bytes());
-    h[8..16].copy_from_slice(&epoch.to_le_bytes());
-    h[16..].copy_from_slice(&bytes.to_le_bytes());
-    s.write_all(&h)
+    s.write_all(&FrameHeader { src, epoch, bytes }.encode())
 }
 
-fn read_header(s: &mut TcpStream) -> std::io::Result<(u64, u64, u64)> {
-    let mut h = [0u8; 24];
+fn read_header(s: &mut TcpStream) -> std::io::Result<FrameHeader> {
+    let mut h = [0u8; FRAME_HEADER_LEN];
     s.read_exact(&mut h)?;
-    Ok((
-        u64::from_le_bytes(h[..8].try_into().unwrap()),
-        u64::from_le_bytes(h[8..16].try_into().unwrap()),
-        u64::from_le_bytes(h[16..].try_into().unwrap()),
-    ))
+    Ok(FrameHeader::decode(&h).expect("full buffer always decodes"))
 }
 
 type ConnMap = HashMap<(usize, usize), Arc<Mutex<TcpStream>>>;
@@ -184,13 +224,14 @@ fn send_one(
     Ok(())
 }
 
-/// Completion event of one transfer: the execution epoch it belongs to
-/// plus its outcome (bytes drained, or the failure).
-type Completion = (u64, Result<u64>);
+/// Completion event of one transfer: the frame header it arrived under
+/// (carrying the execution epoch) plus its outcome (bytes drained, or
+/// the failure).
+type Completion = (FrameHeader, Result<u64>);
 
 /// Long-lived per-connection receive loop: drain framed transfers until
 /// the peer closes, reporting each completed transfer's byte count
-/// tagged with its execution epoch.
+/// tagged with its frame header.
 fn receiver_loop(
     mut sock: TcpStream,
     pacer: Option<Arc<Pacer>>,
@@ -199,17 +240,17 @@ fn receiver_loop(
     let mut buf = vec![0u8; CHUNK];
     loop {
         // EOF between transfers = peer (or runtime) closed; clean exit.
-        let (_src, epoch, bytes) = match read_header(&mut sock) {
+        let header = match read_header(&mut sock) {
             Ok(h) => h,
             Err(_) => break,
         };
-        let mut left = bytes as usize;
+        let mut left = header.bytes as usize;
         let mut failed = false;
         while left > 0 {
             match sock.read(&mut buf[..left.min(CHUNK)]) {
                 Ok(0) => {
                     let _ = done
-                        .send((epoch, Err(anyhow!("peer closed mid-transfer"))));
+                        .send((header, Err(anyhow!("peer closed mid-transfer"))));
                     failed = true;
                     break;
                 }
@@ -218,7 +259,7 @@ fn receiver_loop(
                     left -= n;
                 }
                 Err(e) => {
-                    let _ = done.send((epoch, Err(anyhow!("recv: {e}"))));
+                    let _ = done.send((header, Err(anyhow!("recv: {e}"))));
                     failed = true;
                     break;
                 }
@@ -227,7 +268,7 @@ fn receiver_loop(
         if failed {
             break;
         }
-        if done.send((epoch, Ok(bytes))).is_err() {
+        if done.send((header, Ok(header.bytes))).is_err() {
             break; // runtime dropped
         }
     }
@@ -400,10 +441,10 @@ impl TcpRuntime {
             let mut got = 0u64;
             let mut done = 0usize;
             while done < live.len() {
-                let (ev_epoch, r) = rx
+                let (hdr, r) = rx
                     .recv_timeout(PHASE_TIMEOUT)
                     .map_err(|e| anyhow!("dispatch phase wedged: {e}"))?;
-                if ev_epoch != epoch {
+                if !hdr.matches_epoch(epoch) {
                     continue; // stale transfer from a failed execution
                 }
                 got += r?;

@@ -104,7 +104,9 @@ fn print_help() {
              --steps N --env tictactoe|connect4 --opponent random|heuristic\n\
              --max-context N (hard limit baseline; default: dynamic buckets)\n\
              --static-buckets (disable dynamic bucket selection)\n\
-             --pipeline serial|overlapped (or bare --overlap)\n\
+             --pipeline serial|overlapped|overlapped-async (or bare --overlap)\n\
+             --max-staleness N (async rollout staleness budget; 0 = serial\n\
+               dataflow, bit-identical metrics) --off-policy-clip F\n\
              --dispatch sim|central|tcp --nic BYTES_PER_SEC (tcp shaping)\n\
              --lr F --kl F --ent F --gamma F --seed N\n\
              --artifacts DIR --metrics FILE --checkpoint FILE --config FILE\n\
@@ -142,6 +144,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.has("overlap") {
         cfg.pipeline = PipelineMode::Overlapped;
+    }
+    if let Some(n) = args.get_usize("max-staleness")? {
+        cfg.max_staleness = n as u64;
+    }
+    if let Some(v) = args.get("off-policy-clip") {
+        cfg.off_policy_clip = v.parse().context("--off-policy-clip")?;
     }
     if let Some(v) = args.get("lr") {
         cfg.hp.lr = v.parse()?;

@@ -39,6 +39,13 @@ pub struct StepRecord {
     /// pipeline this is less than the summed stage time — the gap is the
     /// overlap win.
     pub step_wall_seconds: f64,
+    /// Optimizer steps the rollout policy lagged behind the freshest
+    /// parameters (0 in serial/overlapped; ≤ `max_staleness` in the
+    /// async pipeline, enforced by the `SnapshotBuffer` guard).
+    pub param_staleness: u64,
+    /// Seconds the rollout stage blocked in the bounded-staleness
+    /// snapshot acquire (async pipeline only).
+    pub snapshot_wait_seconds: f64,
 }
 
 impl StepRecord {
@@ -62,6 +69,11 @@ impl StepRecord {
             ("dispatch_wall_seconds", Json::num(self.dispatch_wall_seconds)),
             ("train_seconds", Json::num(self.train_seconds)),
             ("step_wall_seconds", Json::num(self.step_wall_seconds)),
+            ("param_staleness", Json::num(self.param_staleness as f64)),
+            (
+                "snapshot_wait_seconds",
+                Json::num(self.snapshot_wait_seconds),
+            ),
         ])
     }
 
@@ -173,6 +185,8 @@ mod tests {
             dispatch_wall_seconds: 0.2,
             train_seconds: 2.0,
             step_wall_seconds: 2.0,
+            param_staleness: 0,
+            snapshot_wait_seconds: 0.0,
         }
     }
 

@@ -2,6 +2,13 @@
 //! REINFORCE (§3.1, citing REINFORCE++): the episode's (optionally
 //! discounted) return, whitened across the batch, broadcast over the
 //! episode's generated tokens.
+//!
+//! For the one-step-stale `OverlappedAsync` pipeline the batch was
+//! generated under θ_k while the update trains θ_{k+1}'s predecessor: a
+//! clipped per-episode importance ratio π_target/π_behavior re-weights
+//! each advantage so the off-policy gradient stays (approximately)
+//! unbiased without exploding variance — the standard guard of
+//! asynchronous agentic-RL trainers.
 
 use crate::rl::episode::ExperienceBatch;
 
@@ -11,12 +18,41 @@ pub struct AdvantageCfg {
     pub gamma: f32,
     /// Whiten advantages across the batch (zero mean, unit variance).
     pub whiten: bool,
+    /// Half-width ε of the clipped importance ratio: off-policy batches
+    /// have their per-episode advantage scaled by
+    /// `clamp(π_target/π_behavior, 1−ε, 1+ε)`. Inert when the batch
+    /// carries no target logprobs (on-policy).
+    pub is_clip: f32,
 }
 
 impl Default for AdvantageCfg {
     fn default() -> Self {
-        AdvantageCfg { gamma: 1.0, whiten: true }
+        AdvantageCfg { gamma: 1.0, whiten: true, is_clip: 0.2 }
     }
+}
+
+/// Bound on |log ratio| before exponentiation; anything past this is a
+/// numerical pathology, not a usable importance weight.
+const LOG_RATIO_BOUND: f32 = 16.0;
+
+/// Clipped per-episode importance ratio for the off-policy correction:
+/// `exp(target_lp − behavior_lp)` clamped to `[1−clip, 1+clip]`.
+///
+/// Total functions only: a non-finite logprob gap (±inf/NaN inputs)
+/// yields the neutral ratio 1.0 rather than poisoning the batch, and
+/// the pre-exp clamp keeps extreme-but-finite gaps from overflowing —
+/// the result is always finite.
+pub fn clipped_importance_ratio(
+    target_lp: f32,
+    behavior_lp: f32,
+    clip: f32,
+) -> f32 {
+    let mut delta = target_lp - behavior_lp;
+    if !delta.is_finite() {
+        delta = 0.0;
+    }
+    let ratio = delta.clamp(-LOG_RATIO_BOUND, LOG_RATIO_BOUND).exp();
+    ratio.clamp((1.0 - clip).max(0.0), 1.0 + clip)
 }
 
 /// Discounted return per turn for a terminal-reward episode of `n_turns`
@@ -52,7 +88,9 @@ pub fn whiten(xs: &mut [f32]) {
 }
 
 /// Compute per-episode REINFORCE advantages for a batch and store them in
-/// `batch.advantages`. Returns the raw (pre-whitening) mean return.
+/// `batch.advantages`, applying the clipped importance correction when
+/// the batch carries update-target logprobs (stale-rollout pipeline).
+/// Returns the raw (pre-whitening, pre-correction) mean return.
 pub fn reinforce_advantages(batch: &mut ExperienceBatch, cfg: AdvantageCfg) -> f64 {
     let mut adv: Vec<f32> = batch
         .episodes
@@ -71,6 +109,18 @@ pub fn reinforce_advantages(batch: &mut ExperienceBatch, cfg: AdvantageCfg) -> f
         .collect();
     let raw_mean = adv.iter().map(|&a| a as f64).sum::<f64>()
         / adv.len().max(1) as f64;
+    // Off-policy correction: only when ExpPrep scored the batch under
+    // the update-target policy (i.e. the rollout snapshot was stale).
+    let n = batch.episodes.len();
+    if batch.target_logprobs.len() == n && batch.behavior_logprobs.len() == n {
+        for i in 0..n {
+            adv[i] *= clipped_importance_ratio(
+                batch.target_logprobs[i],
+                batch.behavior_logprobs[i],
+                cfg.is_clip,
+            );
+        }
+    }
     if cfg.whiten {
         whiten(&mut adv);
     }
@@ -100,6 +150,7 @@ mod tests {
                 response_start,
                 response_end: tokens.len(),
                 action: Some(0),
+                behavior_logprob: -1.0,
             });
         }
         Episode {
@@ -161,10 +212,79 @@ mod tests {
     #[test]
     fn gamma_discounts_long_episodes() {
         let mut b = ExperienceBatch::new(vec![ep(1, 1.0), ep(3, 1.0)]);
-        let cfg = AdvantageCfg { gamma: 0.9, whiten: false };
+        let cfg = AdvantageCfg { gamma: 0.9, whiten: false, ..AdvantageCfg::default() };
         reinforce_advantages(&mut b, cfg);
         assert!(b.advantages[0] > b.advantages[1]);
         assert!((b.advantages[0] - 1.0).abs() < 1e-6);
         assert!((b.advantages[1] - 0.81).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unit_ratio_reduces_to_reinforce() {
+        // target == behavior (ratio 1) must leave every advantage equal
+        // to the plain on-policy REINFORCE result.
+        let eps = vec![ep(2, 1.0), ep(2, -1.0), ep(1, 0.0)];
+        let cfg = AdvantageCfg { whiten: false, ..AdvantageCfg::default() };
+
+        let mut plain = ExperienceBatch::new(eps.clone());
+        reinforce_advantages(&mut plain, cfg);
+
+        let mut corrected = ExperienceBatch::new(eps);
+        corrected.target_logprobs = corrected.behavior_logprobs.clone();
+        let raw = reinforce_advantages(&mut corrected, cfg);
+        assert_eq!(plain.advantages, corrected.advantages);
+        assert!((raw - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratio_clipped_within_band() {
+        // A moderate gap inside the clip band passes through as exp(Δ);
+        // gaps outside it saturate at 1±ε.
+        let eps = 0.2;
+        let inside = 0.1f32; // exp(0.1) ≈ 1.105 < 1.2
+        let r = clipped_importance_ratio(-1.0 + inside, -1.0, eps);
+        assert!((r - inside.exp()).abs() < 1e-6);
+        assert_eq!(clipped_importance_ratio(5.0, -5.0, eps), 1.0 + eps);
+        assert_eq!(clipped_importance_ratio(-5.0, 5.0, eps), 1.0 - eps);
+    }
+
+    #[test]
+    fn extreme_logprob_gaps_never_produce_nan_or_inf() {
+        for (t, b) in [
+            (f32::NEG_INFINITY, -1.0),
+            (-1.0, f32::NEG_INFINITY),
+            (f32::NEG_INFINITY, f32::NEG_INFINITY),
+            (f32::INFINITY, f32::NEG_INFINITY),
+            (f32::NAN, -1.0),
+            (-1e30, 1e30),
+            (1e30, -1e30),
+            (-3.4e38, 3.4e38),
+        ] {
+            let r = clipped_importance_ratio(t, b, 0.2);
+            assert!(r.is_finite(), "ratio not finite for ({t}, {b}): {r}");
+            assert!((0.8..=1.2).contains(&r), "ratio out of band: {r}");
+        }
+        // End to end: a batch with pathological scores still yields
+        // finite advantages.
+        let mut b = ExperienceBatch::new(vec![ep(2, 1.0), ep(2, -1.0)]);
+        b.behavior_logprobs = vec![f32::NEG_INFINITY, 1e30];
+        b.target_logprobs = vec![0.0, f32::NEG_INFINITY];
+        reinforce_advantages(&mut b, AdvantageCfg::default());
+        assert!(b.advantages.iter().all(|a| a.is_finite()));
+    }
+
+    #[test]
+    fn correction_scales_stale_advantages() {
+        // behavior says the episode was likelier than the target policy
+        // does → down-weight; and vice versa.
+        let cfg = AdvantageCfg { whiten: false, ..AdvantageCfg::default() };
+        let mut b = ExperienceBatch::new(vec![ep(1, 1.0), ep(1, 1.0)]);
+        b.behavior_logprobs = vec![-1.0, -1.15];
+        b.target_logprobs = vec![-1.1, -1.05];
+        reinforce_advantages(&mut b, cfg);
+        assert!(b.advantages[0] < 1.0, "down-weighted: {}", b.advantages[0]);
+        assert!(b.advantages[1] > 1.0, "up-weighted: {}", b.advantages[1]);
+        assert!((b.advantages[0] - (-0.1f32).exp()).abs() < 1e-6);
+        assert!((b.advantages[1] - 0.1f32.exp()).abs() < 1e-6);
     }
 }

@@ -5,5 +5,8 @@
 pub mod advantage;
 pub mod episode;
 
-pub use advantage::{discounted_returns, reinforce_advantages, whiten, AdvantageCfg};
+pub use advantage::{
+    clipped_importance_ratio, discounted_returns, reinforce_advantages, whiten,
+    AdvantageCfg,
+};
 pub use episode::{Episode, EpisodeStatus, ExperienceBatch, Turn};

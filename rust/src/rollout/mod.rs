@@ -17,7 +17,7 @@
 
 pub mod sampler;
 
-pub use sampler::{sample_token, SamplerCfg};
+pub use sampler::{model_logprob, sample_token, SamplerCfg};
 
 use anyhow::Result;
 use xla::Literal;
@@ -93,6 +93,9 @@ struct Slot {
     response_start: usize,
     prompt_start: usize,
     generating: bool,
+    /// Behavior-policy logprob accumulated over the current turn's
+    /// generated tokens (recorded into [`Turn::behavior_logprob`]).
+    turn_logprob: f32,
 }
 
 impl Slot {
@@ -184,6 +187,7 @@ impl RolloutEngine {
                     response_start: 0,
                     prompt_start: 0,
                     generating: false,
+                    turn_logprob: 0.0,
                 }
             })
             .collect();
@@ -262,6 +266,9 @@ impl RolloutEngine {
                     );
                     slot.tokens.push(token);
                     slot.mask.push(1.0);
+                    // Behavior-policy record for the off-policy
+                    // correction of the stale-rollout pipeline.
+                    slot.turn_logprob += sampler::model_logprob(row, token);
                     stats.generated_tokens += 1;
 
                     if let Some(action) = tok::decode_move(token) {
@@ -380,6 +387,7 @@ impl RolloutEngine {
         slot.mask.extend(std::iter::repeat(0.0).take(prompt.len()));
         slot.prompt_start = prompt_start;
         slot.response_start = slot.tokens.len();
+        slot.turn_logprob = 0.0;
         Ok(())
     }
 
@@ -389,6 +397,7 @@ impl RolloutEngine {
             response_start: slot.response_start,
             response_end: slot.tokens.len(),
             action,
+            behavior_logprob: slot.turn_logprob,
         });
     }
 

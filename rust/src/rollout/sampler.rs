@@ -42,6 +42,24 @@ pub fn candidates(
     c
 }
 
+/// The model's log-probability of `token` under the full-vocab
+/// temperature-1 softmax of `logits` — the behavior-policy record the
+/// rollout keeps per generated token. Deliberately matches the
+/// `token_logprobs` convention of the AOT logprobs artifact (full
+/// log-softmax, no sampling constraints), so a stale-rollout batch can
+/// be re-scored under a newer policy and the two sums form a
+/// like-for-like importance ratio.
+pub fn model_logprob(logits: &[f32], token: i32) -> f32 {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = logits
+        .iter()
+        .map(|&l| (l - max).exp())
+        .sum::<f32>()
+        .ln()
+        + max;
+    logits[token as usize] - lse
+}
+
 /// Sample the next token given the `vocab`-sized logits slice for the
 /// current position.
 pub fn sample_token(
@@ -171,6 +189,23 @@ mod tests {
         let logits = logits_with(tok::EOS, 9.0); // EOS is never a candidate when constrained
         let t = sample_token(&logits, &[0], cfg, false, &mut rng);
         assert_eq!(t, tok::EOS);
+    }
+
+    #[test]
+    fn model_logprob_is_log_softmax() {
+        let mut logits = vec![0.0f32; tok::VOCAB];
+        logits[3] = 1.0;
+        // Normalization: probabilities over the vocab sum to 1.
+        let total: f32 = (0..tok::VOCAB as i32)
+            .map(|t| model_logprob(&logits, t).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-4, "sum {total}");
+        // The hot token is more likely than a cold one, by exactly the
+        // logit gap.
+        let hot = model_logprob(&logits, 3);
+        let cold = model_logprob(&logits, 4);
+        assert!((hot - cold - 1.0).abs() < 1e-5);
+        assert!(hot < 0.0 && cold < 0.0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! executable-level analogue of the paper's dynamic parallelism switch.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -108,14 +108,23 @@ pub struct ExecTiming {
     pub seconds: f64,
 }
 
-/// The PJRT engine. One per process; `Send` but used single-threaded from
-/// the coordinator (a single simulated "device").
+/// The PJRT engine. One per process; shared across the coordinator's
+/// stage threads (the `OverlappedAsync` pipeline runs rollout scoring
+/// and the model update on different threads against the same engine).
 pub struct Engine {
     pub manifest: Manifest,
     client: PjRtClient,
-    cache: Mutex<HashMap<(Func, usize), PjRtLoadedExecutable>>,
+    cache: Mutex<HashMap<(Func, usize), Arc<PjRtLoadedExecutable>>>,
     timings: Mutex<Vec<ExecTiming>>,
 }
+
+// SAFETY: the PJRT C API requires clients and loaded executables to be
+// thread-safe (concurrent `Execute` calls are part of its contract),
+// and all mutable engine state (executable cache, timing log) is behind
+// `Mutex`es. The xla FFI wrappers hold raw pointers and are therefore
+// not auto-`Send`/`Sync`, but carry no actual thread affinity.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Create an engine over an artifact directory (compiles lazily).
@@ -166,7 +175,7 @@ impl Engine {
             func.name(),
             t0.elapsed().as_secs_f64()
         );
-        cache.insert((func, bucket), exe);
+        cache.insert((func, bucket), Arc::new(exe));
         Ok(())
     }
 
@@ -186,8 +195,13 @@ impl Engine {
 
     fn run(&self, func: Func, bucket: usize, args: &[&Literal]) -> Result<Vec<Literal>> {
         self.executable(func, bucket)?;
-        let cache = self.cache.lock().unwrap();
-        let exe = cache.get(&(func, bucket)).unwrap();
+        // Clone the executable handle out so the cache lock is not held
+        // across execution — concurrent stage threads (rollout scoring
+        // vs. model update) would otherwise serialize here.
+        let exe = {
+            let cache = self.cache.lock().unwrap();
+            Arc::clone(cache.get(&(func, bucket)).unwrap())
+        };
         let t0 = Instant::now();
         let result = exe
             .execute::<&Literal>(args)

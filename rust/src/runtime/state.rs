@@ -2,6 +2,8 @@
 //! literals, marshalled positionally per the manifest's `param_spec` ABI.
 
 use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
@@ -19,6 +21,13 @@ pub struct ModelState {
     /// off `step + 1` at call time).
     pub step: u64,
 }
+
+// SAFETY: `Literal` owns a heap-allocated host `xla::Literal` with no
+// thread affinity (plain memory, no TLS, no client handle); the FFI
+// wrapper just never marks it `Send`. Moving a whole `ModelState`
+// between threads — which the `OverlappedAsync` pipeline's update stage
+// thread does — transfers exclusive ownership of those buffers.
+unsafe impl Send for ModelState {}
 
 impl ModelState {
     /// Load initial parameters from the manifest's `params.bin` blob
@@ -60,6 +69,18 @@ impl ModelState {
             off += n;
         }
         Ok(ModelState { params, adam_m, adam_v, step: 0 })
+    }
+
+    /// Placeholder with no parameters — stands in for the live state
+    /// while the real one is owned by the update stage thread of the
+    /// `OverlappedAsync` pipeline.
+    pub fn empty() -> ModelState {
+        ModelState {
+            params: Vec::new(),
+            adam_m: Vec::new(),
+            adam_v: Vec::new(),
+            step: 0,
+        }
     }
 
     /// Flatten current parameters back to one f32 vector (for
@@ -117,18 +138,40 @@ pub struct ParamSnapshot {
     pub step: u64,
 }
 
-/// Double buffer of parameter snapshots for the pipelined step engine.
+// SAFETY: see `ModelState` — the snapshot is plain host memory. It is
+// additionally `Sync`: after construction a snapshot is never mutated
+// (the buffer below only hands out `Arc`s), so shared `&ParamSnapshot`
+// reads from the rollout and update threads are data-race free.
+unsafe impl Send for ParamSnapshot {}
+unsafe impl Sync for ParamSnapshot {}
+
+#[derive(Default)]
+struct SnapshotSlots {
+    /// Two-deep history of published snapshots behind `Arc`s — the
+    /// double-buffer shape of the original design, now with `Arc` hand-out
+    /// so a rollout that out-lives two publishes still reads its copy.
+    slots: [Option<Arc<ParamSnapshot>>; 2],
+    front: usize,
+}
+
+/// Thread-safe double buffer of parameter snapshots for the pipelined
+/// step engines.
 ///
 /// `publish` deep-copies the live parameters into the *back* slot and
-/// flips it to the front; the previous front slot stays intact until the
-/// publish after next. A rollout that is still reading the old front
-/// therefore never observes a torn or mid-update parameter set, even
-/// when `train_step` replaces the live `ModelState` literals while the
-/// rollout for the next step is in flight.
+/// flips it to the front; readers receive `Arc` clones, so a rollout
+/// never observes a torn or mid-update parameter set even when the
+/// `OverlappedAsync` update stage thread publishes concurrently.
+///
+/// Publishes are **monotone** in `ModelState::step`: a publish that
+/// would move the front snapshot backwards is rejected. Consumers that
+/// must bound how stale their parameters are use
+/// [`SnapshotBuffer::acquire`], which blocks until the front snapshot
+/// is at least `min_step` — the bounded-staleness guard of the
+/// one-step-stale rollout mode.
 #[derive(Default)]
 pub struct SnapshotBuffer {
-    slots: [Option<ParamSnapshot>; 2],
-    front: usize,
+    inner: Mutex<SnapshotSlots>,
+    published: Condvar,
 }
 
 impl SnapshotBuffer {
@@ -137,20 +180,71 @@ impl SnapshotBuffer {
     }
 
     /// Snapshot `state` into the back slot and make it the new front.
-    pub fn publish(&mut self, state: &ModelState) -> Result<()> {
-        let back = 1 - self.front;
-        self.slots[back] = Some(state.snapshot()?);
-        self.front = back;
+    /// Fails if the publish would regress the front snapshot's step.
+    pub fn publish(&self, state: &ModelState) -> Result<()> {
+        // Deep copy outside the lock: readers stay unblocked during the
+        // (comparatively slow) literal copy.
+        let snap = Arc::new(state.snapshot()?);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(cur) = inner.slots[inner.front].as_ref() {
+            if snap.step < cur.step {
+                bail!(
+                    "snapshot publish would regress: step {} behind \
+                     published front {}",
+                    snap.step,
+                    cur.step
+                );
+            }
+        }
+        let back = 1 - inner.front;
+        inner.slots[back] = Some(snap);
+        inner.front = back;
+        self.published.notify_all();
         Ok(())
     }
 
     /// The most recently published snapshot, if any.
-    pub fn front(&self) -> Option<&ParamSnapshot> {
-        self.slots[self.front].as_ref()
+    pub fn front(&self) -> Option<Arc<ParamSnapshot>> {
+        let inner = self.inner.lock().unwrap();
+        inner.slots[inner.front].clone()
     }
 
     /// Optimizer step of the front snapshot (`None` before first publish).
     pub fn front_step(&self) -> Option<u64> {
-        self.front().map(|s| s.step)
+        let inner = self.inner.lock().unwrap();
+        inner.slots[inner.front].as_ref().map(|s| s.step)
+    }
+
+    /// Bounded-staleness acquire: block until the front snapshot is at
+    /// least `min_step` (i.e. refuse any snapshot older than the
+    /// caller's staleness budget), failing after `timeout` so a wedged
+    /// update stage surfaces as an error instead of a silent hang.
+    pub fn acquire(
+        &self,
+        min_step: u64,
+        timeout: Duration,
+    ) -> Result<Arc<ParamSnapshot>> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(s) = inner.slots[inner.front].as_ref() {
+                if s.step >= min_step {
+                    return Ok(Arc::clone(s));
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "snapshot acquire timed out waiting for step >= \
+                     {min_step} (front: {:?})",
+                    inner.slots[inner.front].as_ref().map(|s| s.step)
+                );
+            }
+            let (guard, _timed_out) = self
+                .published
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+        }
     }
 }

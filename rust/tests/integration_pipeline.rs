@@ -1,11 +1,16 @@
 //! Integration: the pipelined step engine — Overlapped mode must
 //! reproduce Serial-mode training metrics for a fixed seed (the overlap
-//! is a pure systems change), and the persistent TCP dispatch runtime
-//! must execute arbitrary-phase plans while reusing connections across
-//! steps.
+//! is a pure systems change), the three-stage `OverlappedAsync` engine
+//! must reproduce them at `max_staleness = 0` and stay within its
+//! staleness bound otherwise, the shared `SnapshotBuffer` must stay
+//! monotone under concurrent publishing, and the persistent TCP
+//! dispatch runtime must execute arbitrary-phase plans while reusing
+//! connections across steps.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use earl::config::TrainConfig;
 use earl::coordinator::{
@@ -15,7 +20,9 @@ use earl::dispatch::{
     plan_alltoall, DataLayout, DispatchPlan, TcpRuntime, WorkerTransfer,
 };
 use earl::metrics::StepRecord;
+use earl::runtime::{ModelState, SnapshotBuffer};
 use earl::util::threadpool::ThreadPool;
+use xla::Literal;
 
 fn artifacts_dir() -> Option<&'static Path> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -27,17 +34,26 @@ fn artifacts_dir() -> Option<&'static Path> {
     }
 }
 
-fn run_mode(dir: &Path, mode: PipelineMode) -> Vec<StepRecord> {
+fn run_mode_stale(
+    dir: &Path,
+    mode: PipelineMode,
+    max_staleness: u64,
+) -> Vec<StepRecord> {
     let cfg = TrainConfig {
         artifacts_dir: dir.to_path_buf(),
         steps: 5,
         seed: 42,
         pipeline: mode,
+        max_staleness,
         ..TrainConfig::default()
     };
     let mut t = Trainer::new(cfg).unwrap();
     t.run().unwrap();
     t.metrics.records.clone()
+}
+
+fn run_mode(dir: &Path, mode: PipelineMode) -> Vec<StepRecord> {
+    run_mode_stale(dir, mode, 1)
 }
 
 /// Training metrics (not timings) of a record, for cross-mode equality.
@@ -69,6 +85,47 @@ fn overlapped_reproduces_serial_metrics() {
             s.step
         );
     }
+}
+
+#[test]
+fn overlapped_async_at_zero_staleness_reproduces_serial() {
+    // With a zero staleness budget the bounded-staleness guard forces
+    // the rollout to wait for every update — the serial dataflow on two
+    // threads. Training metrics must be bit-identical.
+    let Some(dir) = artifacts_dir() else { return };
+    let serial = run_mode(dir, PipelineMode::Serial);
+    let async0 = run_mode_stale(dir, PipelineMode::OverlappedAsync, 0);
+    assert_eq!(serial.len(), async0.len());
+    for (s, a) in serial.iter().zip(&async0) {
+        assert_eq!(
+            metric_row(s),
+            metric_row(a),
+            "async@staleness=0 diverged from serial at step {}",
+            s.step
+        );
+        assert_eq!(a.param_staleness, 0, "guard must pin staleness to 0");
+    }
+}
+
+#[test]
+fn overlapped_async_staleness_stays_within_budget() {
+    // One-step-stale mode: the run completes, every record's staleness
+    // respects the budget, and the one-in-flight pipeline can never lag
+    // more than a single step anyway.
+    let Some(dir) = artifacts_dir() else { return };
+    let recs = run_mode_stale(dir, PipelineMode::OverlappedAsync, 1);
+    assert_eq!(recs.len(), 5);
+    for r in &recs {
+        assert!(
+            r.param_staleness <= 1,
+            "step {} exceeded staleness budget: {}",
+            r.step,
+            r.param_staleness
+        );
+        assert!(r.loss.is_finite() && r.entropy.is_finite());
+    }
+    // Step 1's rollout ran before any update existed: θ_0 is fresh.
+    assert_eq!(recs[0].param_staleness, 0);
 }
 
 #[test]
@@ -148,6 +205,106 @@ fn dispatch_worker_reuses_tcp_connections_across_steps() {
             "per-step connect after warmup at step {step}"
         );
     }
+}
+
+/// A minimal host-only model state (no PJRT client needed): one 2-elem
+/// parameter tensor, step counter set explicitly.
+fn tiny_state(step: u64) -> ModelState {
+    let lit = |v: f32| Literal::vec1(&[v, -v]);
+    ModelState {
+        params: vec![lit(step as f32)],
+        adam_m: vec![lit(0.0)],
+        adam_v: vec![lit(0.0)],
+        step,
+    }
+}
+
+#[test]
+fn snapshot_front_step_is_monotone_and_bounded_by_publisher() {
+    // Concurrent-publisher invariant of the async pipeline: however the
+    // engine thread's reads interleave with the update thread's
+    // publishes, `front_step` must be monotone non-decreasing and never
+    // exceed the publisher's completed-update counter.
+    const STEPS: u64 = 200;
+    let buf = Arc::new(SnapshotBuffer::new());
+    let completed = Arc::new(AtomicU64::new(0));
+
+    let pub_buf = Arc::clone(&buf);
+    let pub_completed = Arc::clone(&completed);
+    let publisher = std::thread::spawn(move || {
+        for step in 1..=STEPS {
+            // The trainer finishes update `step` before publishing θ_step.
+            pub_completed.store(step, Ordering::SeqCst);
+            pub_buf.publish(&tiny_state(step)).unwrap();
+        }
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut last_seen = 0u64;
+    loop {
+        // Read order matters: front first, then the completed counter —
+        // `completed` is bumped before the publish, so any front we
+        // observe must be covered by the counter we read afterwards.
+        let front = buf.front_step().unwrap_or(0);
+        let done = completed.load(Ordering::SeqCst);
+        assert!(
+            front >= last_seen,
+            "front_step regressed: {front} after {last_seen}"
+        );
+        assert!(
+            front <= done,
+            "front_step {front} exceeds completed updates {done}"
+        );
+        last_seen = front;
+        if front == STEPS {
+            break;
+        }
+        assert!(Instant::now() < deadline, "publisher stalled at {front}");
+        std::thread::yield_now();
+    }
+    publisher.join().unwrap();
+    assert_eq!(buf.front_step(), Some(STEPS));
+}
+
+#[test]
+fn snapshot_publish_rejects_step_regression() {
+    let buf = SnapshotBuffer::new();
+    buf.publish(&tiny_state(5)).unwrap();
+    assert!(buf.publish(&tiny_state(3)).is_err(), "regression accepted");
+    assert_eq!(buf.front_step(), Some(5));
+    // Equal and newer steps are fine (re-publish after a no-op).
+    buf.publish(&tiny_state(5)).unwrap();
+    buf.publish(&tiny_state(6)).unwrap();
+    assert_eq!(buf.front_step(), Some(6));
+}
+
+#[test]
+fn snapshot_acquire_enforces_staleness_bound() {
+    let buf = Arc::new(SnapshotBuffer::new());
+    // Nothing published: acquire must time out, not hang.
+    assert!(buf.acquire(0, Duration::from_millis(50)).is_err());
+
+    buf.publish(&tiny_state(4)).unwrap();
+    // Within budget: returns immediately with the front snapshot.
+    let snap = buf.acquire(4, Duration::from_millis(50)).unwrap();
+    assert_eq!(snap.step, 4);
+    // Too stale for the requested bound: refused (by timeout).
+    assert!(buf.acquire(5, Duration::from_millis(50)).is_err());
+
+    // A publisher catching up unblocks a waiting acquire.
+    let pub_buf = Arc::clone(&buf);
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(50));
+        pub_buf.publish(&tiny_state(5)).unwrap();
+    });
+    let fresh = buf.acquire(5, Duration::from_secs(10)).unwrap();
+    assert_eq!(fresh.step, 5);
+    h.join().unwrap();
+
+    // An old Arc handed out earlier stays readable after later
+    // publishes (the reader's copy is never torn out from under it).
+    assert_eq!(snap.step, 4);
+    assert_eq!(snap.params.len(), 1);
 }
 
 #[test]

@@ -4,7 +4,10 @@
 use std::collections::BTreeMap;
 
 use earl::cluster::ClusterSpec;
-use earl::dispatch::{plan_alltoall, plan_centralized, satisfies, DataLayout};
+use earl::dispatch::{
+    plan_alltoall, plan_centralized, satisfies, DataLayout, FrameHeader,
+    FRAME_HEADER_LEN,
+};
 use earl::envs::{ConnectFour, Game, Outcome, TicTacToe};
 use earl::parallelism::{
     decode_estimate, rollout_memory, ModelShape, ParallelismConfig,
@@ -78,6 +81,70 @@ fn prop_plan_transfers_coalesced_per_pair() {
             assert_ne!(t.src, t.dst, "self-transfer planned");
             assert!(seen.insert((t.src, t.dst), ()).is_none(), "dup pair");
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch wire-framing invariants (per-transfer header of dispatch/tcp.rs)
+// ---------------------------------------------------------------------------
+
+fn random_header(rng: &mut Pcg64) -> FrameHeader {
+    // Mix uniform values with the corner cases that bit-packing bugs
+    // love (0, 1, u64::MAX, single-byte boundaries).
+    let pick = |rng: &mut Pcg64| match rng.below(4) {
+        0 => *rng.choose(&[0u64, 1, 255, 256, u64::MAX, u64::MAX - 1]),
+        _ => rng.next_u64(),
+    };
+    FrameHeader {
+        src: pick(rng),
+        epoch: pick(rng),
+        bytes: pick(rng),
+    }
+}
+
+#[test]
+fn prop_frame_header_roundtrips() {
+    check_default("frame_header_roundtrip", |rng| {
+        let h = random_header(rng);
+        let wire = h.encode();
+        assert_eq!(wire.len(), FRAME_HEADER_LEN);
+        assert_eq!(FrameHeader::decode(&wire).unwrap(), h);
+        // Decoding reads only the header prefix: trailing payload bytes
+        // (the receiver's buffer is header + payload) must not matter.
+        let mut with_payload = wire.to_vec();
+        with_payload.extend((0..rng.below(64)).map(|i| i as u8));
+        assert_eq!(FrameHeader::decode(&with_payload).unwrap(), h);
+    });
+}
+
+#[test]
+fn prop_truncated_frame_header_is_rejected() {
+    check_default("frame_header_truncated", |rng| {
+        let wire = random_header(rng).encode();
+        let cut = rng.below(FRAME_HEADER_LEN); // strictly short
+        assert!(
+            FrameHeader::decode(&wire[..cut]).is_err(),
+            "decode must reject {cut}-byte header"
+        );
+    });
+}
+
+#[test]
+fn prop_stale_epoch_frames_are_rejected() {
+    check_default("frame_header_stale_epoch", |rng| {
+        let current = rng.next_u64();
+        let h = random_header(rng);
+        // The receive path keeps a completion iff its epoch matches the
+        // current execution exactly — older (timed-out predecessor) and
+        // newer (impossible, but never trust the wire) epochs both drop.
+        assert_eq!(h.matches_epoch(current), h.epoch == current);
+        let live = FrameHeader { epoch: current, ..h };
+        assert!(live.matches_epoch(current));
+        let stale = FrameHeader { epoch: current.wrapping_sub(1 + rng.below(1000) as u64), ..h };
+        assert!(!stale.matches_epoch(current));
+        // Roundtrip does not disturb the epoch check.
+        let decoded = FrameHeader::decode(&stale.encode()).unwrap();
+        assert!(!decoded.matches_epoch(current));
     });
 }
 
@@ -272,6 +339,7 @@ fn synth_episode(rng: &mut Pcg64, n_turns: usize, reward: f32) -> Episode {
             response_start,
             response_end: tokens.len(),
             action: None,
+            behavior_logprob: -(rng.f64() as f32),
         });
     }
     Episode {
@@ -331,7 +399,7 @@ fn prop_advantages_rank_by_outcome() {
         let mut batch = ExperienceBatch::new(eps);
         reinforce_advantages(
             &mut batch,
-            AdvantageCfg { gamma: 1.0, whiten: true },
+            AdvantageCfg { gamma: 1.0, whiten: true, ..AdvantageCfg::default() },
         );
         for i in 0..n {
             for j in 0..n {
