@@ -1,11 +1,20 @@
 # Repo-level targets. The rust crate lives in rust/; the AOT artifacts
 # it executes are produced by the python compile path.
 
-.PHONY: check fmt lint test artifacts bench-pipeline
+.PHONY: check check-core fmt lint test artifacts bench-pipeline
 
-# Full gate: formatting, clippy (warnings are errors), tier-1 tests.
-check: fmt lint
+# Full gate: formatting, clippy (warnings are errors), tier-1 tests,
+# plus the XLA-free core build (dispatch/selector/metrics, no
+# XLA_EXTENSION_DIR needed).
+check: fmt lint check-core
 	cd rust && cargo build --release && cargo test -q
+
+# The `--no-default-features` core: proves the dispatcher (real-payload
+# wire format, TCP runtime, `earl worker`), selector, and metrics build
+# and pass without the xla toolchain.
+check-core:
+	cd rust && cargo build --release --no-default-features
+	cd rust && cargo test -q --no-default-features
 
 fmt:
 	cd rust && cargo fmt --check

@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Multi-process data dispatcher demo: spawn two `earl worker` receive-side
+# processes, then drive the Fig. 4 dispatch benchmark against them over
+# real sockets — checksummed frames carrying real bytes, per-frame acks,
+# and a per-NIC in-flight budget.
+#
+# Works with the XLA-free core build too:
+#   cd rust && cargo build --release --no-default-features
+#
+# Usage: examples/multi_process_dispatch.sh [budget_bytes]
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BUDGET="${1:-1048576}"   # 1 MiB per-NIC in-flight budget by default
+EARL=rust/target/release/earl
+
+if [ ! -x "$EARL" ]; then
+    echo "building earl (release)..."
+    (cd rust && cargo build --release)
+fi
+
+cleanup() {
+    [ -n "${W1_PID:-}" ] && kill "$W1_PID" 2>/dev/null || true
+    [ -n "${W2_PID:-}" ] && kill "$W2_PID" 2>/dev/null || true
+}
+trap cleanup EXIT
+
+# Each worker binds an ephemeral port and prints it on stdout.
+mkfifo_out1=$(mktemp)
+mkfifo_out2=$(mktemp)
+"$EARL" worker --listen 127.0.0.1:0 --quiet >"$mkfifo_out1" &
+W1_PID=$!
+"$EARL" worker --listen 127.0.0.1:0 --quiet >"$mkfifo_out2" &
+W2_PID=$!
+
+addr_of() {
+    local f=$1
+    for _ in $(seq 1 50); do
+        if grep -q "listening on" "$f" 2>/dev/null; then
+            awk '{print $NF}' "$f"
+            return 0
+        fi
+        sleep 0.1
+    done
+    echo "worker failed to report an address" >&2
+    exit 1
+}
+
+A1=$(addr_of "$mkfifo_out1")
+A2=$(addr_of "$mkfifo_out2")
+echo "workers: $A1 $A2 (budget ${BUDGET}B per NIC)"
+
+"$EARL" dispatch-bench --connect "$A1,$A2" --scale 0.02 --budget "$BUDGET"
+
+rm -f "$mkfifo_out1" "$mkfifo_out2"
+echo "done — every frame above was checksummed and acked by the workers."

@@ -154,6 +154,9 @@ fn synthetic_job(step: u64) -> DispatchJob {
         // slightly cheaper than one stand-in compute stage, like a
         // well-balanced pipeline.
         nic_bytes_per_sec: Some(21e6),
+        payload: None,
+        inflight_budget: None,
+        remote: None,
     }
 }
 

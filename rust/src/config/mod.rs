@@ -85,6 +85,10 @@ pub struct TrainConfig {
     /// Half-width ε of the clipped importance ratio applied to
     /// advantages of stale-rollout batches.
     pub off_policy_clip: f32,
+    /// Per-NIC in-flight-bytes budget for the dispatcher's
+    /// backpressure-aware scheduler (`None` = unlimited; transfers
+    /// larger than the budget run solo on their endpoints).
+    pub dispatch_inflight_budget: Option<u64>,
     pub metrics_path: Option<PathBuf>,
     pub checkpoint_path: Option<PathBuf>,
     pub seed: u64,
@@ -107,6 +111,7 @@ impl Default for TrainConfig {
             pipeline: PipelineMode::Serial,
             max_staleness: 1,
             off_policy_clip: 0.2,
+            dispatch_inflight_budget: None,
             metrics_path: None,
             checkpoint_path: None,
             seed: 0,
@@ -211,6 +216,9 @@ impl TrainConfig {
         if let Some(v) = j.at(&["off_policy_clip"]).as_f64() {
             c.off_policy_clip = v as f32;
         }
+        if let Some(n) = j.at(&["dispatch_inflight_budget"]).as_usize() {
+            c.dispatch_inflight_budget = Some(n as u64);
+        }
         if let Some(s) = j.at(&["metrics_path"]).as_str() {
             c.metrics_path = Some(PathBuf::from(s));
         }
@@ -257,6 +265,16 @@ mod tests {
         assert_eq!(c.pipeline, PipelineMode::Overlapped);
         assert_eq!(c.max_staleness, 0);
         assert!((c.off_policy_clip - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dispatch_budget_parses() {
+        let c = TrainConfig::from_json_str(
+            r#"{"dispatch_inflight_budget": 1048576}"#,
+        )
+        .unwrap();
+        assert_eq!(c.dispatch_inflight_budget, Some(1 << 20));
+        assert_eq!(TrainConfig::default().dispatch_inflight_budget, None);
     }
 
     #[test]

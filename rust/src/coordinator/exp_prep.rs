@@ -4,11 +4,16 @@
 //! Data Dispatcher ships to the trainers (paper Fig. 2, steps ②–⑤).
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use xla::Literal;
 
+use crate::dispatch::wire::{DispatchTensor, StepPayload, WireTensorId};
+#[cfg(feature = "xla")]
 use crate::rl::advantage::{reinforce_advantages, AdvantageCfg};
 use crate::rl::episode::{Episode, ExperienceBatch};
-use crate::runtime::{Engine, F32Batch, TokenBatch, TrainBatch};
+#[cfg(feature = "xla")]
+use crate::runtime::Engine;
+use crate::runtime::{F32Batch, TokenBatch, TrainBatch};
 
 /// Padded per-token tensors before reference scoring.
 pub struct PackedBatch {
@@ -101,9 +106,62 @@ pub fn pack_episodes(
     Ok(PackedBatch { tokens, mask, advantages, bucket, clipped })
 }
 
-/// Full ExpPrep: advantages + reference logprobs → a ready TrainBatch.
-/// Returns (train batch, dispatched ref-logprob bytes) — the byte count
-/// is what the Data Dispatcher moves in a multi-worker deployment.
+/// Serialized bytes of one batch row across the four dispatched
+/// tensors — the per-item shard size the transfer planners use.
+/// Matches [`dispatch_payload`]'s `StepPayload::item_bytes` exactly
+/// without staging anything (simulated dispatch modes plan with real
+/// byte counts but never serialize).
+pub fn payload_item_bytes(batch: &TrainBatch) -> u64 {
+    (batch.tokens.seq * 4
+        + batch.mask.seq * 4
+        + batch.advantages.seq * 4
+        + batch.ref_logprobs.seq * 4) as u64
+}
+
+/// Serialize the tensors of a ready [`TrainBatch`] into the staged,
+/// `Arc`-backed form the Data Dispatcher ships: one little-endian
+/// encode per tensor, zero-copy row slices thereafter.
+pub fn dispatch_payload(batch: &TrainBatch) -> Result<StepPayload> {
+    let (b, s) = (batch.tokens.batch, batch.tokens.seq);
+    StepPayload::new(vec![
+        DispatchTensor::from_i32(WireTensorId::Tokens, b, s, &batch.tokens.data)?,
+        DispatchTensor::from_f32(WireTensorId::Mask, b, s, &batch.mask.data)?,
+        DispatchTensor::from_f32(
+            WireTensorId::Advantages,
+            b,
+            s,
+            &batch.advantages.data,
+        )?,
+        DispatchTensor::from_f32(
+            WireTensorId::RefLogprobs,
+            b,
+            s,
+            &batch.ref_logprobs.data,
+        )?,
+    ])
+}
+
+/// Stage a [`PackedBatch`] (no reference scoring yet) for dispatch —
+/// tokens, mask, and advantages. Used where the reference model is not
+/// in play (tests, the `--no-default-features` build).
+pub fn packed_payload(packed: &PackedBatch) -> Result<StepPayload> {
+    let (b, s) = (packed.tokens.batch, packed.tokens.seq);
+    StepPayload::new(vec![
+        DispatchTensor::from_i32(WireTensorId::Tokens, b, s, &packed.tokens.data)?,
+        DispatchTensor::from_f32(WireTensorId::Mask, b, s, &packed.mask.data)?,
+        DispatchTensor::from_f32(
+            WireTensorId::Advantages,
+            b,
+            s,
+            &packed.advantages.data,
+        )?,
+    ])
+}
+
+/// Full ExpPrep: advantages + reference logprobs → a ready TrainBatch
+/// (whose tensors the Data Dispatcher ships byte-for-byte in a
+/// multi-worker deployment — see [`dispatch_payload`], staged by the
+/// trainer only when the dispatch mode actually moves bytes).
 ///
 /// `policy_params`, when given, are the *update-target* policy (fresher
 /// than the snapshot the rollout sampled from): the batch is re-scored
@@ -113,6 +171,7 @@ pub fn pack_episodes(
 /// `None` for on-policy batches — the scoring pass (one extra logprobs
 /// execution) is skipped and advantages are bit-identical to the
 /// pre-correction path.
+#[cfg(feature = "xla")]
 pub fn prepare(
     engine: &Engine,
     ref_params: &[Literal],
@@ -120,7 +179,7 @@ pub fn prepare(
     batch: &mut ExperienceBatch,
     bucket: usize,
     adv_cfg: AdvantageCfg,
-) -> Result<(TrainBatch, u64)> {
+) -> Result<TrainBatch> {
     // One packing pass serves target scoring, reference scoring, and
     // the final train batch.
     let (tokens, mask, _clipped) =
@@ -157,25 +216,22 @@ pub fn prepare(
         batch: tokens.batch,
         seq: tokens.seq,
     };
-    let bytes = (ref_logprobs.data.len() * 4) as u64;
     batch.ref_logprobs = (0..tokens.batch)
         .map(|b| ref_logprobs.row(b).to_vec())
         .collect();
 
-    Ok((
-        TrainBatch {
-            tokens,
-            mask,
-            advantages,
-            ref_logprobs,
-        },
-        bytes,
-    ))
+    Ok(TrainBatch {
+        tokens,
+        mask,
+        advantages,
+        ref_logprobs,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rl::advantage::{reinforce_advantages, AdvantageCfg};
     use crate::rl::episode::{EpisodeStatus, Turn};
     use crate::tokenizer as tok;
 
@@ -252,5 +308,44 @@ mod tests {
     fn pack_requires_advantages() {
         let b = ExperienceBatch::new(vec![make(5, 0.0), make(5, 0.0)]);
         assert!(pack_episodes(&b, 2, 16).is_err());
+    }
+
+    #[test]
+    fn payload_item_bytes_matches_staged_payload() {
+        // The plan-sizing shortcut must agree byte-for-byte with what
+        // dispatch_payload actually serializes.
+        let tb = TrainBatch {
+            tokens: TokenBatch::new(2, 16),
+            mask: F32Batch::new(2, 16),
+            advantages: F32Batch::new(2, 16),
+            ref_logprobs: F32Batch::new(2, 16),
+        };
+        let staged = dispatch_payload(&tb).unwrap();
+        assert_eq!(payload_item_bytes(&tb), staged.item_bytes());
+        assert_eq!(payload_item_bytes(&tb), 4 * 16 * 4);
+        assert_eq!(staged.total_bytes(), 2 * 4 * 16 * 4);
+    }
+
+    #[test]
+    fn packed_payload_stages_real_tensor_bytes() {
+        let mut b = ExperienceBatch::new(vec![make(10, 1.0), make(6, -1.0)]);
+        let cfg = AdvantageCfg { whiten: false, ..AdvantageCfg::default() };
+        reinforce_advantages(&mut b, cfg);
+        let packed = pack_episodes(&b, 2, 16).unwrap();
+        let payload = packed_payload(&packed).unwrap();
+        assert_eq!(payload.rows(), 2);
+        // tokens (i32) + mask + advantages (f32) at 16 cols = 3 * 64 B.
+        assert_eq!(payload.item_bytes(), 3 * 16 * 4);
+        // The staged bytes are the packed tensors, byte for byte.
+        let tokens = &payload.tensors()[0];
+        assert_eq!(
+            tokens.row(0)[..4],
+            packed.tokens.row(0)[0].to_le_bytes()[..]
+        );
+        let adv = &payload.tensors()[2];
+        assert_eq!(
+            adv.row(0)[3 * 4..4 * 4],
+            packed.advantages.row(0)[3].to_le_bytes()[..]
+        );
     }
 }

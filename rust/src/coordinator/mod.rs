@@ -2,14 +2,27 @@
 //! ModelUpdate) with the Parallelism Selector and Data Dispatcher wired
 //! in as first-class stages (paper Fig. 2), schedulable either serially
 //! or through the overlapped step pipeline ([`pipeline`]).
+//!
+//! The trainer and the PJRT-backed stages need the `xla` feature; the
+//! dispatch stage (worker, plans, real payloads) and batch packing are
+//! available to `--no-default-features` builds.
 
 pub mod exp_prep;
 pub mod pipeline;
+#[cfg(feature = "xla")]
 pub mod trainer;
 
-pub use exp_prep::{pack_episodes, prepare, train_bucket, PackedBatch};
-pub use pipeline::{
-    DispatchJob, DispatchResult, DispatchWorker, PipelineMode, UpdateJob,
-    UpdateResult, UpdateWorker, PIPELINE_DEPTH,
+pub use exp_prep::{
+    dispatch_payload, pack_episodes, packed_payload, payload_item_bytes,
+    train_bucket, PackedBatch,
 };
-pub use trainer::{DispatchMode, Trainer};
+#[cfg(feature = "xla")]
+pub use exp_prep::prepare;
+pub use pipeline::{
+    DispatchJob, DispatchMode, DispatchResult, DispatchWorker, PipelineMode,
+    PIPELINE_DEPTH,
+};
+#[cfg(feature = "xla")]
+pub use pipeline::{UpdateJob, UpdateResult, UpdateWorker};
+#[cfg(feature = "xla")]
+pub use trainer::Trainer;

@@ -66,6 +66,7 @@
 //! of the live literals, so a concurrent `train_step` can never tear
 //! the weights out from under a rollout.
 
+use std::net::SocketAddr;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -74,8 +75,11 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::cluster::ClusterSpec;
-use crate::coordinator::trainer::DispatchMode;
-use crate::dispatch::{simulate_plan, DispatchPlan, TcpRuntime, WorkerMap};
+use crate::dispatch::{
+    simulate_plan, DispatchPlan, ExecOptions, StepPayload, TcpRuntime,
+    WorkerMap,
+};
+#[cfg(feature = "xla")]
 use crate::runtime::{
     Engine, ModelState, ParamSnapshot, SnapshotBuffer, TrainBatch, TrainHp,
     TrainStats,
@@ -84,6 +88,18 @@ use crate::util::threadpool::ThreadPool;
 
 /// Stage-channel depth: one step in flight plus one being staged.
 pub const PIPELINE_DEPTH: usize = 2;
+
+/// How the dispatch stage is executed/timed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Plan + network-simulator timing (default; adds no wall-clock).
+    Simulated,
+    /// Plan + real TCP execution (slower, real bytes): loopback by
+    /// default, or standalone worker processes via [`DispatchJob::remote`].
+    Tcp,
+    /// EARL all-to-all disabled → single-controller baseline plan.
+    SimulatedCentralized,
+}
 
 /// How the four training stages are scheduled.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -133,6 +149,15 @@ pub struct DispatchJob {
     /// Emulated per-worker NIC rate for `DispatchMode::Tcp`
     /// (`None` = unthrottled loopback).
     pub nic_bytes_per_sec: Option<f64>,
+    /// The staged ExpPrep tensors the plan's items slice. `None` falls
+    /// back to deterministic generated bytes (traffic-model plans).
+    pub payload: Option<Arc<StepPayload>>,
+    /// Per-NIC in-flight-bytes budget for the backpressure scheduler
+    /// (`None` = unlimited).
+    pub inflight_budget: Option<u64>,
+    /// Standalone worker-process addresses (one per worker) for
+    /// `DispatchMode::Tcp`; `None` = in-process loopback workers.
+    pub remote: Option<Arc<Vec<SocketAddr>>>,
 }
 
 /// Completion record of one dispatch stage execution.
@@ -144,17 +169,25 @@ pub struct DispatchResult {
     pub modeled_seconds: f64,
     /// Real wall-clock seconds the stage occupied on the worker.
     pub wall_seconds: f64,
+    /// Payload bytes moved — for payload-backed TCP jobs, the serialized
+    /// size of every shipped (and checksum-verified) tensor shard.
     pub bytes: u64,
     pub transfers: usize,
     /// New TCP connections opened while executing (0 after warmup;
     /// always 0 for the simulated modes).
     pub connections_opened: usize,
+    /// Peak total in-flight payload bytes (TCP mode; 0 simulated).
+    pub inflight_peak_bytes: u64,
+    /// Seconds completions were awaited while ready transfers sat
+    /// budget-blocked (TCP mode; 0 simulated).
+    pub stall_seconds: f64,
 }
 
 /// Cached TCP runtime keyed by the job shape that created it.
 struct TcpCache {
     n_workers: usize,
     nic_bytes_per_sec: Option<f64>,
+    remote: Option<Arc<Vec<SocketAddr>>>,
     runtime: TcpRuntime,
 }
 
@@ -176,6 +209,8 @@ fn run_job(
                 bytes: job.plan.total_bytes(),
                 transfers: job.plan.n_transfers(),
                 connections_opened: 0,
+                inflight_peak_bytes: 0,
+                stall_seconds: 0.0,
             })
         }
         DispatchMode::Tcp => {
@@ -183,6 +218,7 @@ fn run_job(
                 Some(c) => {
                     c.n_workers != job.n_workers
                         || c.nic_bytes_per_sec != job.nic_bytes_per_sec
+                        || c.remote != job.remote
                 }
                 None => true,
             };
@@ -199,18 +235,34 @@ fn run_job(
                 } else {
                     Arc::new(ThreadPool::new(fan_out))
                 };
-                *tcp = Some(TcpCache {
-                    n_workers: job.n_workers,
-                    nic_bytes_per_sec: job.nic_bytes_per_sec,
-                    runtime: TcpRuntime::new(
+                let runtime = match &job.remote {
+                    Some(addrs) => TcpRuntime::connect_remote(
+                        addrs.as_ref().clone(),
+                        job.nic_bytes_per_sec,
+                        send_pool,
+                    )?,
+                    None => TcpRuntime::new(
                         job.n_workers,
                         job.nic_bytes_per_sec,
                         send_pool,
                     )?,
+                };
+                *tcp = Some(TcpCache {
+                    n_workers: job.n_workers,
+                    nic_bytes_per_sec: job.nic_bytes_per_sec,
+                    remote: job.remote.clone(),
+                    runtime,
                 });
             }
             let runtime = &tcp.as_ref().unwrap().runtime;
-            let report = runtime.execute(&job.plan)?;
+            let outcome = runtime.execute_opts(
+                &job.plan,
+                ExecOptions {
+                    payload: job.payload.as_deref(),
+                    inflight_budget: job.inflight_budget,
+                },
+            )?;
+            let report = outcome.report;
             Ok(DispatchResult {
                 step: job.step,
                 modeled_seconds: report.seconds,
@@ -218,6 +270,8 @@ fn run_job(
                 bytes: report.bytes,
                 transfers: report.transfers,
                 connections_opened: report.connections_opened,
+                inflight_peak_bytes: report.inflight_peak_bytes,
+                stall_seconds: report.stall_seconds,
             })
         }
     }
@@ -302,6 +356,7 @@ impl Drop for DispatchWorker {
 }
 
 /// Work order for the persistent update stage (`OverlappedAsync`).
+#[cfg(feature = "xla")]
 pub struct UpdateJob {
     /// Optimizer step this update will produce (== the step record's id).
     pub step: u64,
@@ -310,6 +365,7 @@ pub struct UpdateJob {
 }
 
 /// Completion record of one model update.
+#[cfg(feature = "xla")]
 pub struct UpdateResult {
     /// Optimizer step after the update (== `UpdateJob::step`).
     pub step: u64,
@@ -321,6 +377,7 @@ pub struct UpdateResult {
     pub new_ref_params: Option<ParamSnapshot>,
 }
 
+#[cfg(feature = "xla")]
 fn run_update(
     engine: &Engine,
     state: &mut ModelState,
@@ -361,6 +418,7 @@ fn run_update(
 /// and publishes each new θ into the shared [`SnapshotBuffer`] — which
 /// is what lets the engine thread's next rollout proceed off the stale
 /// front snapshot while this thread is still updating.
+#[cfg(feature = "xla")]
 pub struct UpdateWorker {
     tx: Option<SyncSender<UpdateJob>>,
     rx: Receiver<Result<UpdateResult>>,
@@ -368,6 +426,7 @@ pub struct UpdateWorker {
     pending: usize,
 }
 
+#[cfg(feature = "xla")]
 impl UpdateWorker {
     /// Start the stage thread, transferring ownership of the live model
     /// state into it. Every completed update is published to
@@ -453,6 +512,7 @@ impl UpdateWorker {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Drop for UpdateWorker {
     fn drop(&mut self) {
         drop(self.tx.take());
@@ -477,6 +537,9 @@ mod tests {
             mode,
             n_workers: 4,
             nic_bytes_per_sec: None,
+            payload: None,
+            inflight_budget: None,
+            remote: None,
         }
     }
 
@@ -551,6 +614,9 @@ mod tests {
             mode: DispatchMode::Tcp,
             n_workers: 4,
             nic_bytes_per_sec: nic,
+            payload: None,
+            inflight_budget: None,
+            remote: None,
         })
         .unwrap();
         let warm = w.recv().unwrap();
@@ -563,6 +629,9 @@ mod tests {
             mode: DispatchMode::Tcp,
             n_workers: 4,
             nic_bytes_per_sec: nic,
+            payload: None,
+            inflight_budget: None,
+            remote: None,
         })
         .unwrap();
         let submit_secs = t0.elapsed().as_secs_f64();

@@ -36,6 +36,7 @@
 //! connection are constructed once in [`Trainer::new`] and reused every
 //! step.
 
+use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -45,8 +46,8 @@ use xla::Literal;
 use crate::config::{EnvKind, OpponentKind, TrainConfig};
 use crate::coordinator::exp_prep;
 use crate::coordinator::pipeline::{
-    DispatchJob, DispatchResult, DispatchWorker, PipelineMode, UpdateJob,
-    UpdateWorker,
+    DispatchJob, DispatchMode, DispatchResult, DispatchWorker, PipelineMode,
+    UpdateJob, UpdateWorker,
 };
 use crate::dispatch::{plan_alltoall, plan_centralized, DataLayout};
 use crate::envs::{ConnectFour, Game, HeuristicOpponent, Opponent, RandomOpponent, TicTacToe};
@@ -57,17 +58,6 @@ use crate::rl::episode::{Episode, EpisodeStatus, ExperienceBatch};
 use crate::rollout::{RolloutEngine, RolloutStats};
 use crate::runtime::{Engine, ModelState, SnapshotBuffer, TrainBatch};
 use crate::util::threadpool::ThreadPool;
-
-/// How the dispatch stage is executed/timed.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DispatchMode {
-    /// Plan + network-simulator timing (default; adds no wall-clock).
-    Simulated,
-    /// Plan + real loopback TCP execution (slower, real bytes).
-    Tcp,
-    /// EARL all-to-all disabled → single-controller baseline plan.
-    SimulatedCentralized,
-}
 
 /// Upper bound on how long the rollout stage may wait for the update
 /// stage to publish a fresh-enough snapshot before the run is declared
@@ -93,7 +83,6 @@ struct StagedStep {
     switched: bool,
     bucket: usize,
     train_batch: TrainBatch,
-    dispatch_bytes: u64,
     mean_return: f64,
     rstats: RolloutStats,
     n_eps: f64,
@@ -138,6 +127,12 @@ pub struct Trainer {
     /// Emulated per-worker NIC for `DispatchMode::Tcp` (`None` =
     /// unthrottled loopback).
     pub dispatch_nic: Option<f64>,
+    /// Per-NIC in-flight-bytes budget for the dispatcher's backpressure
+    /// scheduler (`None` = unlimited).
+    pub dispatch_inflight_budget: Option<u64>,
+    /// Standalone worker-process addresses for `DispatchMode::Tcp`
+    /// (`earl worker --listen ...`); `None` = in-process loopback.
+    pub dispatch_remote: Option<Arc<Vec<SocketAddr>>>,
     /// Persistent rollout driver (decode buffers survive across steps).
     rollout: RolloutEngine,
     /// Shared parameter-snapshot buffer: published by whichever thread
@@ -193,6 +188,7 @@ impl Trainer {
         let rollout = RolloutEngine::new(cfg.rollout.clone());
         // Shared pool: TCP send jobs of the persistent dispatch runtime.
         let dispatcher = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
+        let cfg_budget = cfg.dispatch_inflight_budget;
         Ok(Trainer {
             cfg,
             engine,
@@ -203,6 +199,8 @@ impl Trainer {
             dispatch_mode: DispatchMode::Simulated,
             dispatch_workers: 8,
             dispatch_nic: None,
+            dispatch_inflight_budget: cfg_budget,
+            dispatch_remote: None,
             rollout,
             snapshots: Arc::new(SnapshotBuffer::new()),
             dispatcher,
@@ -280,7 +278,7 @@ impl Trainer {
             whiten: self.cfg.whiten_advantages,
             is_clip: self.cfg.off_policy_clip,
         };
-        let (train_batch, dispatch_bytes) = exp_prep::prepare(
+        let train_batch = exp_prep::prepare(
             &self.engine,
             &self.ref_params,
             policy,
@@ -294,7 +292,6 @@ impl Trainer {
             switched: rolled.switched,
             bucket,
             train_batch,
-            dispatch_bytes,
             mean_return: batch.mean_reward(),
             n_eps: batch.episodes.len().max(1) as f64,
             rstats: rolled.rstats,
@@ -337,15 +334,20 @@ impl Trainer {
         self.stage_exp_prep(rolled, None)
     }
 
-    /// Stage ③–⑤: plan the ref-logprob exchange between the conceptual
-    /// ExpPrep workers and trainer workers, and hand it to the persistent
-    /// dispatch worker (non-blocking). `step` is the post-update record
-    /// id the exchange belongs to.
+    /// Stage ③–⑤: plan the exchange of the ExpPrep output tensors
+    /// between the conceptual ExpPrep workers and trainer workers, and
+    /// hand plan + payload to the persistent dispatch worker
+    /// (non-blocking). `step` is the post-update record id the exchange
+    /// belongs to. The payload is serialized here — and only for the
+    /// TCP mode, which actually moves bytes; the simulated modes plan
+    /// with the same byte counts but never stage.
     fn submit_dispatch(&mut self, staged: &StagedStep, step: u64) -> Result<()> {
-        let n_items = self.engine.manifest.batch;
+        let n_items = staged.train_batch.tokens.batch;
         let producer = DataLayout::round_robin(n_items, self.dispatch_workers);
         let consumer = DataLayout::blocked(n_items, self.dispatch_workers);
-        let shard = staged.dispatch_bytes / n_items as u64;
+        // Shard size == serialized row size, so the plan's byte
+        // accounting is exactly what the wire carries in TCP mode.
+        let shard = exp_prep::payload_item_bytes(&staged.train_batch);
         let plan = match self.dispatch_mode {
             DispatchMode::Simulated | DispatchMode::Tcp => {
                 plan_alltoall(&producer, &consumer, shard)
@@ -354,12 +356,21 @@ impl Trainer {
                 plan_centralized(&producer, &consumer, shard, 0)
             }
         };
+        let payload = match self.dispatch_mode {
+            DispatchMode::Tcp => Some(Arc::new(exp_prep::dispatch_payload(
+                &staged.train_batch,
+            )?)),
+            _ => None,
+        };
         self.dispatcher.submit(DispatchJob {
             step,
             plan,
             mode: self.dispatch_mode,
             n_workers: self.dispatch_workers,
             nic_bytes_per_sec: self.dispatch_nic,
+            payload,
+            inflight_budget: self.dispatch_inflight_budget,
+            remote: self.dispatch_remote.clone(),
         })
     }
 
@@ -383,6 +394,9 @@ impl Trainer {
             exp_prep_seconds: staged.exp_prep_seconds,
             dispatch_seconds: 0.0,
             dispatch_wall_seconds: 0.0,
+            dispatch_bytes: 0,
+            dispatch_inflight_peak_bytes: 0,
+            dispatch_stall_seconds: 0.0,
             train_seconds: 0.0,
             step_wall_seconds: 0.0,
             param_staleness: staged.param_staleness,
@@ -428,6 +442,9 @@ impl Trainer {
         let mut rec = pend.rec;
         rec.dispatch_seconds = d.modeled_seconds;
         rec.dispatch_wall_seconds = d.wall_seconds;
+        rec.dispatch_bytes = d.bytes;
+        rec.dispatch_inflight_peak_bytes = d.inflight_peak_bytes;
+        rec.dispatch_stall_seconds = d.stall_seconds;
         rec.step_wall_seconds = self.step_t0.elapsed().as_secs_f64();
         self.step_t0 = Instant::now();
         self.metrics.record(rec.clone())?;
@@ -498,6 +515,9 @@ impl Trainer {
         let d = self.dispatcher.recv()?;
         rec.dispatch_seconds = d.modeled_seconds;
         rec.dispatch_wall_seconds = d.wall_seconds;
+        rec.dispatch_bytes = d.bytes;
+        rec.dispatch_inflight_peak_bytes = d.inflight_peak_bytes;
+        rec.dispatch_stall_seconds = d.stall_seconds;
         rec.step_wall_seconds = self.step_t0.elapsed().as_secs_f64();
         self.step_t0 = Instant::now();
         self.metrics.record(rec.clone())?;

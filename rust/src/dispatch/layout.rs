@@ -109,6 +109,20 @@ impl DataLayout {
         self.owner.len()
     }
 
+    /// The same layout with every owner shifted by `k` workers (mod
+    /// `n_workers`). With `k % n_workers != 0` every item changes
+    /// owner — handy for tests that need a plan where *all* rows move.
+    pub fn rotated(&self, k: usize) -> DataLayout {
+        DataLayout {
+            n_workers: self.n_workers,
+            owner: self
+                .owner
+                .iter()
+                .map(|&w| (w + k) % self.n_workers)
+                .collect(),
+        }
+    }
+
     pub fn items_of(&self, worker: usize) -> Vec<ItemId> {
         (0..self.owner.len())
             .filter(|&i| self.owner[i] == worker)
@@ -176,5 +190,15 @@ mod tests {
     fn validate_rejects_ghost_workers() {
         let l = DataLayout { n_workers: 2, owner: vec![0, 1, 2] };
         assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn rotated_moves_every_item() {
+        let l = DataLayout::blocked(10, 4);
+        let r = l.rotated(1);
+        r.validate().unwrap();
+        assert!((0..10).all(|i| l.owner[i] != r.owner[i]));
+        // Full rotation is the identity.
+        assert_eq!(l.rotated(4), l);
     }
 }

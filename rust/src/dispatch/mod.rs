@@ -5,8 +5,11 @@
 //!
 //! * [`layout`] — tensor kinds + item→worker layouts.
 //! * [`plan`] — centralized-baseline and all-to-all planners.
+//! * [`wire`] — payload staging, checksummed frame format, reassembly.
 //! * [`sim`] — execute plans on the cluster network simulator.
-//! * [`tcp`] — execute plans on real loopback sockets.
+//! * [`tcp`] — execute plans on real sockets (loopback or multi-process
+//!   workers), carrying the real ExpPrep tensors with backpressure-aware
+//!   scheduling.
 //! * [`payload`] — the Tab. 1 batch-size model.
 
 pub mod layout;
@@ -14,6 +17,7 @@ pub mod payload;
 pub mod plan;
 pub mod sim;
 pub mod tcp;
+pub mod wire;
 
 pub use layout::{payload_bytes_per_token, DataLayout, TensorKind};
 pub use payload::{PayloadModel, PAPER_TAB1};
@@ -23,6 +27,12 @@ pub use plan::{
 };
 pub use sim::{simulate_plan, WorkerMap};
 pub use tcp::{
-    execute_plan_tcp, execute_plan_tcp_rated, FrameHeader, TcpReport,
-    TcpRuntime, FRAME_HEADER_LEN,
+    execute_plan_tcp, execute_plan_tcp_rated, serve_worker, Ack, ExecOptions,
+    ExecOutcome, TcpReport, TcpRuntime, WorkerOpts, ACK_LEN,
+};
+pub use wire::{
+    contiguous_runs, decode_frame, encode_frame, fnv1a64, ByteView,
+    DispatchTensor, Fnv64, FrameHeader, ReceivedBatch, ShardDesc, StepPayload,
+    TransferPayload, WireDtype, WireTensorId, FRAME_HEADER_LEN,
+    SHARD_DESC_LEN,
 };

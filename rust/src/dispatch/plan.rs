@@ -13,7 +13,10 @@ pub struct WorkerTransfer {
     pub src: usize,
     pub dst: usize,
     pub bytes: u64,
-    /// Which items ride this transfer (for content-equivalence checks).
+    /// Which items ride this transfer. The TCP engine slices the staged
+    /// ExpPrep tensors by these row indices (split into contiguous runs
+    /// by `dispatch::wire::contiguous_runs`), so they determine the
+    /// actual payload, not just equivalence checks.
     pub items: Vec<ItemId>,
 }
 
@@ -229,6 +232,24 @@ mod tests {
         let plan = plan_alltoall(&p, &c, 1234);
         for t in &plan.phases[0] {
             assert_eq!(t.bytes, 1234 * t.items.len() as u64);
+        }
+    }
+
+    #[test]
+    fn item_runs_cover_all_items_in_order() {
+        // The wire format slices transfers into contiguous item runs;
+        // the runs of every planned transfer must cover its items.
+        let (p, c) = layouts();
+        let plan = plan_alltoall(&p, &c, 10);
+        for t in &plan.phases[0] {
+            let runs = crate::dispatch::wire::contiguous_runs(&t.items);
+            let covered: Vec<usize> = runs
+                .iter()
+                .flat_map(|&(start, len)| start..start + len)
+                .collect();
+            let mut want = t.items.clone();
+            want.sort_unstable();
+            assert_eq!(covered, want, "{}->{}", t.src, t.dst);
         }
     }
 }

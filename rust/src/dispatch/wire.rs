@@ -1,0 +1,927 @@
+//! Wire format of the data dispatcher: real ExpPrep payloads, framed,
+//! checksummed, and reassembled.
+//!
+//! The TCP engine used to ship a shared dummy byte pattern ("contents
+//! don't matter, bytes do"). This module makes the transport carry the
+//! **actual training tensors**: each dispatched item is one batch row's
+//! slice of the ExpPrep output tensors (tokens, loss mask, advantages,
+//! reference logprobs), staged once as little-endian bytes behind an
+//! `Arc` ([`DispatchTensor`]) so every transfer is a zero-copy view
+//! ([`ByteView`]) into the staged buffer.
+//!
+//! On the wire, one transfer is one frame:
+//!
+//! ```text
+//! FrameHeader (40 B): magic | n_shards | src | epoch | bytes | checksum
+//! n_shards × ShardDesc (16 B): tensor id | dtype | row_start | rows | row_bytes
+//! payload: shard payloads concatenated in descriptor order
+//! ```
+//!
+//! The checksum is FNV-1a 64 over the descriptor table plus the payload
+//! bytes; the receiver recomputes it as it drains the stream and
+//! rejects mismatching frames in its acknowledgement. Receivers
+//! reassemble shards into a [`ReceivedBatch`], which tests assert is
+//! byte-identical to the sender's staged tensors.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dispatch::layout::ItemId;
+
+/// First field of every frame; a mismatch means the stream desynced.
+pub const WIRE_MAGIC: u32 = 0xEA71_D157;
+
+/// Encoded size of a [`FrameHeader`] on the wire.
+pub const FRAME_HEADER_LEN: usize = 40;
+
+/// Encoded size of a [`ShardDesc`] on the wire.
+pub const SHARD_DESC_LEN: usize = 16;
+
+/// Largest tensor buffer (`(row_start + rows) * row_bytes`) the receive
+/// side will allocate during reassembly — guards the allocator against
+/// a corrupt or hostile descriptor *before* the checksum is verified
+/// (a bit-flipped `row_start` must yield `ACK_MALFORMED`, not an OOM).
+pub const MAX_SHARD_BYTES: u64 = 1 << 32;
+
+/// Largest descriptor table the receive side will read.
+pub const MAX_FRAME_SHARDS: u32 = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// Checksum
+// ---------------------------------------------------------------------------
+
+/// Streaming FNV-1a 64-bit checksum (dependency-free; collision
+/// resistance is not a goal — this guards against transport and
+/// reassembly bugs, not adversaries).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self.0 = h;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a 64.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut f = Fnv64::new();
+    f.update(bytes);
+    f.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Shard descriptors
+// ---------------------------------------------------------------------------
+
+/// Element type of a dispatched tensor shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireDtype {
+    I32,
+    F32,
+}
+
+impl WireDtype {
+    pub fn size(self) -> usize {
+        4
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            WireDtype::I32 => 0,
+            WireDtype::F32 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<WireDtype> {
+        Ok(match c {
+            0 => WireDtype::I32,
+            1 => WireDtype::F32,
+            other => bail!("unknown wire dtype code {other}"),
+        })
+    }
+}
+
+/// Which tensor of the dispatched batch a shard slices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WireTensorId {
+    Tokens,
+    Mask,
+    Advantages,
+    RefLogprobs,
+    /// Byte-count-only transfers (benches / traffic models) with no
+    /// backing tensor; drained and checksummed but never reassembled.
+    Synthetic,
+}
+
+impl WireTensorId {
+    pub fn code(self) -> u16 {
+        match self {
+            WireTensorId::Tokens => 0,
+            WireTensorId::Mask => 1,
+            WireTensorId::Advantages => 2,
+            WireTensorId::RefLogprobs => 3,
+            WireTensorId::Synthetic => 0xFFFF,
+        }
+    }
+
+    pub fn from_code(c: u16) -> Result<WireTensorId> {
+        Ok(match c {
+            0 => WireTensorId::Tokens,
+            1 => WireTensorId::Mask,
+            2 => WireTensorId::Advantages,
+            3 => WireTensorId::RefLogprobs,
+            0xFFFF => WireTensorId::Synthetic,
+            other => bail!("unknown wire tensor id {other}"),
+        })
+    }
+}
+
+/// Descriptor of one contiguous row range of one tensor inside a frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardDesc {
+    pub tensor: WireTensorId,
+    pub dtype: WireDtype,
+    /// First batch row of the slice.
+    pub row_start: u32,
+    /// Number of consecutive rows.
+    pub rows: u32,
+    /// Bytes per row (`cols * dtype.size()`).
+    pub row_bytes: u32,
+}
+
+impl ShardDesc {
+    pub fn payload_bytes(&self) -> u64 {
+        self.rows as u64 * self.row_bytes as u64
+    }
+
+    /// Fixed 16-byte little-endian layout:
+    /// `tensor u16 | dtype u8 | pad u8 | row_start u32 | rows u32 | row_bytes u32`.
+    pub fn encode(&self) -> [u8; SHARD_DESC_LEN] {
+        let mut b = [0u8; SHARD_DESC_LEN];
+        b[..2].copy_from_slice(&self.tensor.code().to_le_bytes());
+        b[2] = self.dtype.code();
+        b[4..8].copy_from_slice(&self.row_start.to_le_bytes());
+        b[8..12].copy_from_slice(&self.rows.to_le_bytes());
+        b[12..16].copy_from_slice(&self.row_bytes.to_le_bytes());
+        b
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ShardDesc> {
+        if buf.len() < SHARD_DESC_LEN {
+            bail!(
+                "truncated shard descriptor: {} of {SHARD_DESC_LEN} bytes",
+                buf.len()
+            );
+        }
+        Ok(ShardDesc {
+            tensor: WireTensorId::from_code(u16::from_le_bytes(
+                buf[..2].try_into().unwrap(),
+            ))?,
+            dtype: WireDtype::from_code(buf[2])?,
+            row_start: u32::from_le_bytes(buf[4..8].try_into().unwrap()),
+            rows: u32::from_le_bytes(buf[8..12].try_into().unwrap()),
+            row_bytes: u32::from_le_bytes(buf[12..16].try_into().unwrap()),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame header
+// ---------------------------------------------------------------------------
+
+/// Wire header framing one transfer on a persistent stream. Fixed
+/// 40-byte little-endian layout:
+/// `magic u32 | n_shards u32 | src u64 | epoch u64 | bytes u64 | checksum u64`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Sending worker id.
+    pub src: u64,
+    /// Execution epoch of the `execute` call that produced the frame
+    /// (stale completions of a timed-out predecessor are discarded).
+    pub epoch: u64,
+    /// Payload bytes following the descriptor table on the stream
+    /// (descriptor table itself not counted).
+    pub bytes: u64,
+    /// Shard descriptors following this header.
+    pub n_shards: u32,
+    /// FNV-1a 64 over the descriptor table + payload bytes, in stream
+    /// order. The receiver recomputes and rejects mismatches.
+    pub checksum: u64,
+}
+
+impl FrameHeader {
+    pub fn encode(&self) -> [u8; FRAME_HEADER_LEN] {
+        let mut h = [0u8; FRAME_HEADER_LEN];
+        h[..4].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+        h[4..8].copy_from_slice(&self.n_shards.to_le_bytes());
+        h[8..16].copy_from_slice(&self.src.to_le_bytes());
+        h[16..24].copy_from_slice(&self.epoch.to_le_bytes());
+        h[24..32].copy_from_slice(&self.bytes.to_le_bytes());
+        h[32..40].copy_from_slice(&self.checksum.to_le_bytes());
+        h
+    }
+
+    /// Decode from the first [`FRAME_HEADER_LEN`] bytes of `buf`;
+    /// truncation or a magic mismatch is a framing error, not a panic.
+    pub fn decode(buf: &[u8]) -> Result<FrameHeader> {
+        if buf.len() < FRAME_HEADER_LEN {
+            bail!(
+                "truncated frame header: {} of {FRAME_HEADER_LEN} bytes",
+                buf.len()
+            );
+        }
+        let magic = u32::from_le_bytes(buf[..4].try_into().unwrap());
+        if magic != WIRE_MAGIC {
+            bail!("bad frame magic {magic:#x} (stream desynced?)");
+        }
+        Ok(FrameHeader {
+            n_shards: u32::from_le_bytes(buf[4..8].try_into().unwrap()),
+            src: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            epoch: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            bytes: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+            checksum: u64::from_le_bytes(buf[32..40].try_into().unwrap()),
+        })
+    }
+
+    /// Whether a completion carrying this header belongs to the given
+    /// execution epoch.
+    pub fn matches_epoch(&self, epoch: u64) -> bool {
+        self.epoch == epoch
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Staged payloads (send side)
+// ---------------------------------------------------------------------------
+
+/// Zero-copy view into an `Arc`'d byte buffer.
+#[derive(Debug, Clone)]
+pub struct ByteView {
+    buf: Arc<[u8]>,
+    start: usize,
+    len: usize,
+}
+
+impl ByteView {
+    pub fn whole(buf: Arc<[u8]>) -> ByteView {
+        let len = buf.len();
+        ByteView { buf, start: 0, len }
+    }
+
+    pub fn slice(buf: Arc<[u8]>, start: usize, len: usize) -> ByteView {
+        assert!(start + len <= buf.len(), "view out of bounds");
+        ByteView { buf, start, len }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.start..self.start + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// A full tensor staged for dispatch: row-major little-endian bytes
+/// behind an `Arc`, so row-range shards are zero-copy views.
+#[derive(Debug, Clone)]
+pub struct DispatchTensor {
+    pub id: WireTensorId,
+    pub dtype: WireDtype,
+    pub rows: usize,
+    pub cols: usize,
+    data: Arc<[u8]>,
+}
+
+impl DispatchTensor {
+    pub fn from_raw(
+        id: WireTensorId,
+        dtype: WireDtype,
+        rows: usize,
+        cols: usize,
+        data: Arc<[u8]>,
+    ) -> Result<DispatchTensor> {
+        if data.len() != rows * cols * dtype.size() {
+            bail!(
+                "tensor {id:?}: {} bytes for {rows}x{cols} {dtype:?}",
+                data.len()
+            );
+        }
+        Ok(DispatchTensor { id, dtype, rows, cols, data })
+    }
+
+    /// Stage an i32 matrix (one little-endian encode; zero-copy after).
+    pub fn from_i32(
+        id: WireTensorId,
+        rows: usize,
+        cols: usize,
+        values: &[i32],
+    ) -> Result<DispatchTensor> {
+        if values.len() != rows * cols {
+            bail!("tensor {id:?}: {} values for {rows}x{cols}", values.len());
+        }
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::from_raw(id, WireDtype::I32, rows, cols, bytes.into())
+    }
+
+    /// Stage an f32 matrix.
+    pub fn from_f32(
+        id: WireTensorId,
+        rows: usize,
+        cols: usize,
+        values: &[f32],
+    ) -> Result<DispatchTensor> {
+        if values.len() != rows * cols {
+            bail!("tensor {id:?}: {} values for {rows}x{cols}", values.len());
+        }
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::from_raw(id, WireDtype::F32, rows, cols, bytes.into())
+    }
+
+    pub fn row_bytes(&self) -> usize {
+        self.cols * self.dtype.size()
+    }
+
+    /// The staged bytes of the whole tensor (row-major).
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// The staged bytes of one row.
+    pub fn row(&self, row: usize) -> &[u8] {
+        let rb = self.row_bytes();
+        &self.data[row * rb..(row + 1) * rb]
+    }
+
+    /// Zero-copy shard over a contiguous row range.
+    pub fn row_slice(&self, row_start: usize, rows: usize) -> (ShardDesc, ByteView) {
+        assert!(row_start + rows <= self.rows, "row slice out of bounds");
+        let rb = self.row_bytes();
+        (
+            ShardDesc {
+                tensor: self.id,
+                dtype: self.dtype,
+                row_start: row_start as u32,
+                rows: rows as u32,
+                row_bytes: rb as u32,
+            },
+            ByteView::slice(Arc::clone(&self.data), row_start * rb, rows * rb),
+        )
+    }
+}
+
+/// The ExpPrep output of one step, staged for dispatch: the tensors
+/// every plan item (batch row) slices. All tensors share the same row
+/// count — an item is one row across all of them.
+#[derive(Debug, Clone)]
+pub struct StepPayload {
+    tensors: Vec<DispatchTensor>,
+}
+
+impl StepPayload {
+    pub fn new(tensors: Vec<DispatchTensor>) -> Result<StepPayload> {
+        let Some(first) = tensors.first() else {
+            bail!("step payload needs at least one tensor");
+        };
+        let rows = first.rows;
+        for t in &tensors {
+            if t.rows != rows {
+                bail!(
+                    "payload tensors disagree on rows: {:?} has {} vs {}",
+                    t.id,
+                    t.rows,
+                    rows
+                );
+            }
+        }
+        Ok(StepPayload { tensors })
+    }
+
+    pub fn tensors(&self) -> &[DispatchTensor] {
+        &self.tensors
+    }
+
+    /// Batch rows (== plan items).
+    pub fn rows(&self) -> usize {
+        self.tensors[0].rows
+    }
+
+    /// Serialized bytes of one item's shard across all tensors — the
+    /// per-item shard size the transfer planners use.
+    pub fn item_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.row_bytes() as u64).sum()
+    }
+
+    /// Serialized bytes of the whole staged batch.
+    pub fn total_bytes(&self) -> u64 {
+        self.item_bytes() * self.rows() as u64
+    }
+}
+
+/// Split an item set into maximal contiguous ascending runs
+/// (`(start, len)` pairs). Items are deduplicated and sorted first, so
+/// arbitrary row splits serialize deterministically.
+pub fn contiguous_runs(items: &[ItemId]) -> Vec<(usize, usize)> {
+    let mut sorted: Vec<ItemId> = items.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut runs = Vec::new();
+    let mut iter = sorted.into_iter();
+    let Some(first) = iter.next() else {
+        return runs;
+    };
+    let (mut start, mut len) = (first, 1usize);
+    for item in iter {
+        if item == start + len {
+            len += 1;
+        } else {
+            runs.push((start, len));
+            start = item;
+            len = 1;
+        }
+    }
+    runs.push((start, len));
+    runs
+}
+
+/// One transfer's serialized form: a descriptor table plus zero-copy
+/// payload views, in wire order.
+#[derive(Debug, Clone)]
+pub struct TransferPayload {
+    pub shards: Vec<(ShardDesc, ByteView)>,
+}
+
+impl TransferPayload {
+    /// Layout-aware slicing: one shard per (contiguous item run ×
+    /// tensor), referencing the staged buffers without copying.
+    pub fn for_items(payload: &StepPayload, items: &[ItemId]) -> Result<TransferPayload> {
+        let rows = payload.rows();
+        let mut shards = Vec::new();
+        for (start, len) in contiguous_runs(items) {
+            if start + len > rows {
+                bail!(
+                    "transfer items {start}..{} exceed payload rows {rows}",
+                    start + len
+                );
+            }
+            for t in payload.tensors() {
+                shards.push(t.row_slice(start, len));
+            }
+        }
+        Ok(TransferPayload { shards })
+    }
+
+    /// Byte-count-only transfer for plans that carry no tensors
+    /// (benches, traffic models): deterministic generated content,
+    /// chunked so memory stays bounded, still checksummed end to end.
+    pub fn synthetic(bytes: u64, seed: u64) -> TransferPayload {
+        const SYNTH_CHUNK: u64 = 1 << 20;
+        if bytes == 0 {
+            return TransferPayload { shards: Vec::new() };
+        }
+        let chunk = bytes.min(SYNTH_CHUNK);
+        // One deterministic chunk buffer; every shard views into it, so
+        // a multi-hundred-MB transfer stages at most 1 MiB.
+        let mut buf = Vec::with_capacity(chunk as usize);
+        let mut x = seed | 1;
+        for i in 0..chunk {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            buf.push(((x >> 32) as u8) ^ (i as u8));
+        }
+        let arc: Arc<[u8]> = buf.into();
+        let mut shards = Vec::new();
+        let mut left = bytes;
+        let mut row = 0u32;
+        while left > 0 {
+            let n = left.min(chunk);
+            shards.push((
+                ShardDesc {
+                    tensor: WireTensorId::Synthetic,
+                    dtype: WireDtype::F32,
+                    row_start: row,
+                    rows: 1,
+                    row_bytes: n as u32,
+                },
+                ByteView::slice(Arc::clone(&arc), 0, n as usize),
+            ));
+            left -= n;
+            row += 1;
+        }
+        TransferPayload { shards }
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.shards.iter().map(|(d, _)| d.payload_bytes()).sum()
+    }
+
+    /// FNV-1a 64 over the descriptor table then the payload bytes, in
+    /// wire order — exactly what the receiver recomputes from the
+    /// stream.
+    pub fn checksum(&self) -> u64 {
+        let mut f = Fnv64::new();
+        for (desc, _) in &self.shards {
+            f.update(&desc.encode());
+        }
+        for (_, view) in &self.shards {
+            f.update(view.as_slice());
+        }
+        f.finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame encode/decode (buffer form — used by tests, dumps, and the
+// worker's dump files; the socket path streams the same layout)
+// ---------------------------------------------------------------------------
+
+/// Serialize one transfer into a standalone frame buffer.
+pub fn encode_frame(src: u64, epoch: u64, payload: &TransferPayload) -> Vec<u8> {
+    let header = FrameHeader {
+        src,
+        epoch,
+        bytes: payload.payload_bytes(),
+        n_shards: payload.shards.len() as u32,
+        checksum: payload.checksum(),
+    };
+    let mut out = Vec::with_capacity(
+        FRAME_HEADER_LEN
+            + payload.shards.len() * SHARD_DESC_LEN
+            + header.bytes as usize,
+    );
+    out.extend_from_slice(&header.encode());
+    for (desc, _) in &payload.shards {
+        out.extend_from_slice(&desc.encode());
+    }
+    for (_, view) in &payload.shards {
+        out.extend_from_slice(view.as_slice());
+    }
+    out
+}
+
+/// Parse and checksum-verify one frame buffer, returning the header and
+/// each shard's descriptor + payload bytes. Truncated or corrupt
+/// buffers are errors.
+pub fn decode_frame(buf: &[u8]) -> Result<(FrameHeader, Vec<(ShardDesc, Vec<u8>)>)> {
+    let header = FrameHeader::decode(buf)?;
+    if header.n_shards > MAX_FRAME_SHARDS {
+        bail!("frame claims {} shards", header.n_shards);
+    }
+    let desc_len = header.n_shards as usize * SHARD_DESC_LEN;
+    let body_end = FRAME_HEADER_LEN + desc_len + header.bytes as usize;
+    if buf.len() < body_end {
+        bail!("truncated frame: {} of {body_end} bytes", buf.len());
+    }
+    let desc_bytes = &buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + desc_len];
+    let mut f = Fnv64::new();
+    f.update(desc_bytes);
+    let mut descs = Vec::with_capacity(header.n_shards as usize);
+    for i in 0..header.n_shards as usize {
+        descs.push(ShardDesc::decode(
+            &desc_bytes[i * SHARD_DESC_LEN..(i + 1) * SHARD_DESC_LEN],
+        )?);
+    }
+    let declared: u64 = descs.iter().map(|d| d.payload_bytes()).sum();
+    if declared != header.bytes {
+        bail!(
+            "descriptor table declares {declared} payload bytes, header {}",
+            header.bytes
+        );
+    }
+    let mut shards = Vec::with_capacity(descs.len());
+    let mut off = FRAME_HEADER_LEN + desc_len;
+    for desc in descs {
+        let n = desc.payload_bytes() as usize;
+        let bytes = buf[off..off + n].to_vec();
+        f.update(&bytes);
+        off += n;
+        shards.push((desc, bytes));
+    }
+    if f.finish() != header.checksum {
+        bail!(
+            "frame checksum mismatch: header {:#x}, computed {:#x}",
+            header.checksum,
+            f.finish()
+        );
+    }
+    Ok((header, shards))
+}
+
+// ---------------------------------------------------------------------------
+// Reassembly (receive side)
+// ---------------------------------------------------------------------------
+
+/// One tensor being reassembled from shards.
+#[derive(Debug)]
+pub struct RecvTensor {
+    pub tensor: WireTensorId,
+    pub dtype: WireDtype,
+    pub row_bytes: usize,
+    /// Row-major buffer sized to the highest row seen so far.
+    pub data: Vec<u8>,
+    /// Which rows have actually arrived.
+    pub present: Vec<bool>,
+}
+
+impl RecvTensor {
+    /// The reassembled bytes of one row, if it arrived.
+    pub fn row(&self, row: usize) -> Option<&[u8]> {
+        if *self.present.get(row)? {
+            Some(&self.data[row * self.row_bytes..(row + 1) * self.row_bytes])
+        } else {
+            None
+        }
+    }
+
+    pub fn rows_present(&self) -> usize {
+        self.present.iter().filter(|p| **p).count()
+    }
+}
+
+/// Tensors reassembled on a receive side from one or more frames.
+#[derive(Debug, Default)]
+pub struct ReceivedBatch {
+    tensors: BTreeMap<u16, RecvTensor>,
+}
+
+impl ReceivedBatch {
+    pub fn new() -> ReceivedBatch {
+        ReceivedBatch::default()
+    }
+
+    /// Reserve (and mark present) the destination buffer for a shard,
+    /// returning the mutable region its payload bytes land in.
+    pub fn reserve(&mut self, desc: &ShardDesc) -> Result<&mut [u8]> {
+        // Bound the whole tensor buffer the shard implies, not just the
+        // shard's own payload: row_start is attacker/corruption
+        // controlled and sizes the allocation below.
+        let total = (desc.row_start as u64 + desc.rows as u64)
+            * desc.row_bytes as u64;
+        if total > MAX_SHARD_BYTES {
+            bail!(
+                "shard rows {}..{} x {} B/row implies a {total}-byte \
+                 tensor, over the reassembly cap",
+                desc.row_start,
+                desc.row_start as u64 + desc.rows as u64,
+                desc.row_bytes
+            );
+        }
+        let rb = desc.row_bytes as usize;
+        let entry = self.tensors.entry(desc.tensor.code()).or_insert_with(|| {
+            RecvTensor {
+                tensor: desc.tensor,
+                dtype: desc.dtype,
+                row_bytes: rb,
+                data: Vec::new(),
+                present: Vec::new(),
+            }
+        });
+        if entry.dtype != desc.dtype || entry.row_bytes != rb {
+            bail!(
+                "shard shape disagrees with earlier shards of {:?}: \
+                 {:?}/{} vs {:?}/{}",
+                desc.tensor,
+                desc.dtype,
+                rb,
+                entry.dtype,
+                entry.row_bytes
+            );
+        }
+        let start = desc.row_start as usize;
+        let end = start + desc.rows as usize;
+        if entry.present.len() < end {
+            entry.present.resize(end, false);
+            entry.data.resize(end * rb, 0);
+        }
+        for r in start..end {
+            entry.present[r] = true;
+        }
+        Ok(&mut entry.data[start * rb..end * rb])
+    }
+
+    /// Insert a fully-materialized shard (the buffer-decode path).
+    pub fn insert(&mut self, desc: &ShardDesc, bytes: &[u8]) -> Result<()> {
+        if bytes.len() as u64 != desc.payload_bytes() {
+            bail!(
+                "shard payload is {} bytes, descriptor says {}",
+                bytes.len(),
+                desc.payload_bytes()
+            );
+        }
+        self.reserve(desc)?.copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Fold another batch's shards into this one (multi-frame /
+    /// multi-connection reassembly).
+    pub fn merge(&mut self, other: ReceivedBatch) -> Result<()> {
+        for (_, t) in other.tensors {
+            for row in 0..t.present.len() {
+                if let Some(bytes) = t.row(row) {
+                    let desc = ShardDesc {
+                        tensor: t.tensor,
+                        dtype: t.dtype,
+                        row_start: row as u32,
+                        rows: 1,
+                        row_bytes: t.row_bytes as u32,
+                    };
+                    self.insert(&desc, bytes)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn tensor(&self, id: WireTensorId) -> Option<&RecvTensor> {
+        self.tensors.get(&id.code())
+    }
+
+    pub fn tensors(&self) -> impl Iterator<Item = &RecvTensor> {
+        self.tensors.values()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Assert that every `(item, tensor)` pair of `items` matches the
+    /// staged source bytes exactly. Returns the compared byte count.
+    pub fn assert_matches(
+        &self,
+        payload: &StepPayload,
+        items: &[ItemId],
+    ) -> Result<u64> {
+        let mut compared = 0u64;
+        for &item in items {
+            for t in payload.tensors() {
+                let got = self
+                    .tensor(t.id)
+                    .and_then(|rt| rt.row(item))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("row {item} of {:?} never arrived", t.id)
+                    })?;
+                if got != t.row(item) {
+                    bail!("row {item} of {:?} differs from source", t.id);
+                }
+                compared += got.len() as u64;
+            }
+        }
+        Ok(compared)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensors() -> StepPayload {
+        StepPayload::new(vec![
+            DispatchTensor::from_i32(
+                WireTensorId::Tokens,
+                4,
+                3,
+                &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12],
+            )
+            .unwrap(),
+            DispatchTensor::from_f32(
+                WireTensorId::Mask,
+                4,
+                2,
+                &[0.0, 1.0, 1.0, 0.0, 0.5, 0.25, -1.0, 2.0],
+            )
+            .unwrap(),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn contiguous_runs_split_arbitrary_items() {
+        assert_eq!(contiguous_runs(&[]), vec![]);
+        assert_eq!(contiguous_runs(&[3]), vec![(3, 1)]);
+        assert_eq!(contiguous_runs(&[0, 1, 2]), vec![(0, 3)]);
+        assert_eq!(contiguous_runs(&[5, 1, 2, 7]), vec![(1, 2), (5, 1), (7, 1)]);
+        assert_eq!(contiguous_runs(&[4, 4, 5]), vec![(4, 2)]);
+    }
+
+    #[test]
+    fn payload_sizes_are_consistent() {
+        let p = tensors();
+        assert_eq!(p.rows(), 4);
+        assert_eq!(p.item_bytes(), (3 * 4 + 2 * 4) as u64);
+        assert_eq!(p.total_bytes(), 4 * p.item_bytes());
+        let tp = TransferPayload::for_items(&p, &[1, 2]).unwrap();
+        assert_eq!(tp.payload_bytes(), 2 * p.item_bytes());
+        // One run × two tensors.
+        assert_eq!(tp.shards.len(), 2);
+    }
+
+    #[test]
+    fn frame_roundtrips_byte_identical() {
+        let p = tensors();
+        let tp = TransferPayload::for_items(&p, &[0, 2, 3]).unwrap();
+        let frame = encode_frame(7, 42, &tp);
+        let (header, shards) = decode_frame(&frame).unwrap();
+        assert_eq!(header.src, 7);
+        assert_eq!(header.epoch, 42);
+        assert_eq!(header.bytes, tp.payload_bytes());
+        let mut batch = ReceivedBatch::new();
+        for (desc, bytes) in &shards {
+            batch.insert(desc, bytes).unwrap();
+        }
+        assert_eq!(batch.assert_matches(&p, &[0, 2, 3]).unwrap(), tp.payload_bytes());
+        // Row 1 never shipped.
+        assert!(batch.tensor(WireTensorId::Tokens).unwrap().row(1).is_none());
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected() {
+        let p = tensors();
+        let tp = TransferPayload::for_items(&p, &[0, 1]).unwrap();
+        let mut frame = encode_frame(0, 1, &tp);
+        let last = frame.len() - 1;
+        frame[last] ^= 0xFF;
+        assert!(decode_frame(&frame).is_err(), "corrupt frame must fail");
+        assert!(decode_frame(&frame[..frame.len() - 3]).is_err(), "truncated");
+    }
+
+    #[test]
+    fn synthetic_payload_matches_requested_bytes() {
+        for bytes in [0u64, 1, 100, (1 << 20) + 17] {
+            let tp = TransferPayload::synthetic(bytes, 99);
+            assert_eq!(tp.payload_bytes(), bytes);
+            // Deterministic under the same seed.
+            assert_eq!(tp.checksum(), TransferPayload::synthetic(bytes, 99).checksum());
+        }
+        // Different seeds produce different content.
+        assert_ne!(
+            TransferPayload::synthetic(1000, 1).checksum(),
+            TransferPayload::synthetic(1000, 2).checksum()
+        );
+    }
+
+    #[test]
+    fn reserve_rejects_absurd_row_start_before_allocating() {
+        // A bit-flipped row_start must be rejected as malformed (the
+        // checksum only runs after the payload streams), not turned
+        // into a multi-gigabyte allocation.
+        let mut batch = ReceivedBatch::new();
+        let desc = ShardDesc {
+            tensor: WireTensorId::Tokens,
+            dtype: WireDtype::I32,
+            row_start: u32::MAX,
+            rows: 1,
+            row_bytes: 64,
+        };
+        assert!(batch.reserve(&desc).is_err());
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn merge_combines_disjoint_rows() {
+        let p = tensors();
+        let mut a = ReceivedBatch::new();
+        let mut b = ReceivedBatch::new();
+        let ta = TransferPayload::for_items(&p, &[0]).unwrap();
+        let tb = TransferPayload::for_items(&p, &[2, 3]).unwrap();
+        for (desc, bytes) in decode_frame(&encode_frame(0, 0, &ta)).unwrap().1 {
+            a.insert(&desc, &bytes).unwrap();
+        }
+        for (desc, bytes) in decode_frame(&encode_frame(1, 0, &tb)).unwrap().1 {
+            b.insert(&desc, &bytes).unwrap();
+        }
+        a.merge(b).unwrap();
+        a.assert_matches(&p, &[0, 2, 3]).unwrap();
+    }
+}

@@ -18,8 +18,14 @@
 //! ([`envs`]), cluster/memory/network simulator ([`cluster`]) — is rust
 //! (L3). See DESIGN.md for the full inventory and the per-experiment
 //! index mapping every paper table/figure to a bench target.
+//!
+//! The `xla` cargo feature (on by default) pulls in the PJRT bindings;
+//! `--no-default-features` builds the dispatch / selector / metrics
+//! core — including the real-payload wire format, the TCP runtime, and
+//! the `earl worker` receive-side process — without `XLA_EXTENSION_DIR`.
 
 pub mod cluster;
+#[cfg(feature = "xla")]
 pub mod config;
 pub mod coordinator;
 pub mod dispatch;
@@ -27,6 +33,7 @@ pub mod envs;
 pub mod metrics;
 pub mod parallelism;
 pub mod rl;
+#[cfg(feature = "xla")]
 pub mod rollout;
 pub mod runtime;
 pub mod testkit;

@@ -5,25 +5,36 @@
 //!   profile        measure the real per-bucket throughput table
 //!   figures        regenerate the paper's tables/figures on the simulator
 //!   dispatch-bench run the Fig. 4 dispatch comparison on real TCP sockets
+//!   worker         serve the dispatcher's receive side (multi-process mode)
+//!
+//! `train` and `profile` need the `xla` feature (on by default); the
+//! dispatcher commands work in `--no-default-features` builds too.
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
 use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use earl::cluster::ClusterSpec;
+#[cfg(feature = "xla")]
 use earl::config::{EnvKind, OpponentKind, TrainConfig};
+#[cfg(feature = "xla")]
 use earl::coordinator::{DispatchMode, PipelineMode, Trainer};
 use earl::dispatch::{
-    execute_plan_tcp, plan_alltoall, plan_centralized, simulate_plan,
-    DataLayout, PayloadModel, WorkerMap, PAPER_TAB1,
+    plan_alltoall, plan_centralized, serve_worker, simulate_plan, DataLayout,
+    ExecOptions, PayloadModel, TcpRuntime, WorkerMap, WorkerOpts, PAPER_TAB1,
 };
 use earl::parallelism::{speedup_pct, ModelShape, ThroughputCfg};
+#[cfg(feature = "xla")]
 use earl::rollout::LimitPolicy;
+#[cfg(feature = "xla")]
 use earl::runtime::{Engine, TokenBatch};
 use earl::util::bytes::{human_bytes, human_duration};
+use earl::util::threadpool::ThreadPool;
 use earl::workload::{fig3_grid, fig4_shards, tab1_contexts};
 
 /// Tiny flag parser: `--key value` and bare `--flag` supported.
@@ -82,6 +93,7 @@ fn main() -> Result<()> {
         "profile" => cmd_profile(&args),
         "figures" => cmd_figures(&args),
         "dispatch-bench" => cmd_dispatch_bench(&args),
+        "worker" => cmd_worker(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -108,17 +120,80 @@ fn print_help() {
              --max-staleness N (async rollout staleness budget; 0 = serial\n\
                dataflow, bit-identical metrics) --off-policy-clip F\n\
              --dispatch sim|central|tcp --nic BYTES_PER_SEC (tcp shaping)\n\
+             --dispatch-budget BYTES (per-NIC in-flight budget)\n\
+             --connect A1,A2,... (remote `earl worker` addresses for tcp)\n\
              --lr F --kl F --ent F --gamma F --seed N\n\
              --artifacts DIR --metrics FILE --checkpoint FILE --config FILE\n\
            profile          measure real per-bucket decode TGS table\n\
              --artifacts DIR\n\
            figures          print paper tables/figures from the simulator\n\
              --tab1 --fig3 --fig4 --all\n\
-           dispatch-bench   Fig. 4 on real TCP loopback sockets\n\
-             --workers N --scale F (shard-size scale, default 0.125)"
+           dispatch-bench   Fig. 4 on real TCP sockets\n\
+             --workers N --scale F (shard-size scale, default 0.125)\n\
+             --budget BYTES (per-NIC in-flight budget)\n\
+             --connect A1,A2,... (remote `earl worker` addresses)\n\
+           worker           serve the dispatcher's receive side\n\
+             --listen ADDR (default 127.0.0.1:0; bound address printed)\n\
+             --nic BYTES_PER_SEC --dump DIR (write received frames)\n\
+             --quiet"
     );
 }
 
+/// Parse a `--connect a,b,c` list of worker addresses.
+fn parse_connect(v: &str) -> Result<Vec<SocketAddr>> {
+    v.split(',')
+        .map(|a| {
+            a.trim()
+                .parse::<SocketAddr>()
+                .with_context(|| format!("bad worker address {a:?}"))
+        })
+        .collect()
+}
+
+/// Serve the dispatcher's receive side: bind `--listen`, print the
+/// bound address (port 0 = ephemeral), and accept sender connections
+/// until killed. Pairs with `--dispatch tcp --connect` on the trainer
+/// or `dispatch-bench --connect`.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let listener = TcpListener::bind(listen)
+        .with_context(|| format!("binding {listen}"))?;
+    let addr = listener.local_addr()?;
+    // Machine-readable line for spawners (tests, scripts) to parse.
+    println!("earl-worker listening on {addr}");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    let nic: Option<f64> = match args.get("nic") {
+        None => None,
+        Some(v) => Some(v.parse().context("--nic")?),
+    };
+    serve_worker(
+        listener,
+        WorkerOpts {
+            nic_bytes_per_sec: nic,
+            dump_dir: args.get("dump").map(PathBuf::from),
+            quiet: args.has("quiet"),
+        },
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    bail!(
+        "this binary was built without the `xla` feature; rebuild with \
+         default features to run `train`"
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_profile(_args: &Args) -> Result<()> {
+    bail!(
+        "this binary was built without the `xla` feature; rebuild with \
+         default features to run `profile`"
+    )
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = match args.get("config") {
         Some(p) => TrainConfig::from_json_file(&PathBuf::from(p))?,
@@ -178,6 +253,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(p) = args.get("checkpoint") {
         cfg.checkpoint_path = Some(PathBuf::from(p));
     }
+    if let Some(n) = args.get_usize("dispatch-budget")? {
+        cfg.dispatch_inflight_budget = Some(n as u64);
+    }
 
     let dispatch_mode = match args.get("dispatch") {
         None => None,
@@ -206,6 +284,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.dispatch_mode = m;
     }
     trainer.dispatch_nic = nic;
+    if let Some(v) = args.get("connect") {
+        if trainer.dispatch_mode != DispatchMode::Tcp {
+            bail!("--connect requires --dispatch tcp");
+        }
+        let addrs = parse_connect(v)?;
+        trainer.dispatch_workers = addrs.len();
+        trainer.dispatch_remote = Some(Arc::new(addrs));
+    }
     let final_return = trainer.run()?;
     println!("final rolling return (20 steps): {final_return:+.3}");
     Ok(())
@@ -213,6 +299,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 /// Measure the real throughput table the Parallelism Selector would use:
 /// decode TGS per context bucket on the local PJRT device.
+#[cfg(feature = "xla")]
 fn cmd_profile(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let engine = Engine::load(&dir)?;
@@ -344,18 +431,43 @@ fn figures_fig4() {
 }
 
 fn cmd_dispatch_bench(args: &Args) -> Result<()> {
-    let n = args.get_usize("workers")?.unwrap_or(8);
+    let remote = match args.get("connect") {
+        Some(v) => Some(parse_connect(v)?),
+        None => None,
+    };
+    let n = match &remote {
+        Some(addrs) => addrs.len(),
+        None => args.get_usize("workers")?.unwrap_or(8),
+    };
     let scale: f64 = args
         .get("scale")
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(0.125);
+    let budget: Option<u64> =
+        args.get_usize("budget")?.map(|b| b as u64);
+    let pool = Arc::new(ThreadPool::new(
+        earl::dispatch::tcp::send_pool_threads(n * n.saturating_sub(1)),
+    ));
+    let runtime = match remote {
+        Some(addrs) => {
+            println!(
+                "== Fig. 4 on real TCP, {n} remote workers, shard scale \
+                 {scale} =="
+            );
+            TcpRuntime::connect_remote(addrs, None, pool)?
+        }
+        None => {
+            println!(
+                "== Fig. 4 on real TCP loopback: {n} workers, shard scale \
+                 {scale} =="
+            );
+            TcpRuntime::new(n, None, pool)?
+        }
+    };
     println!(
-        "== Fig. 4 on real TCP loopback: {n} workers, shard scale {scale} =="
-    );
-    println!(
-        "{:>8} {:>12} {:>14} {:>14} {:>10}",
-        "ctx", "bytes/worker", "baseline", "EARL", "reduction"
+        "{:>8} {:>12} {:>14} {:>14} {:>10} {:>12}",
+        "ctx", "bytes/worker", "baseline", "EARL", "reduction", "peak-inflight"
     );
     for (ctx, mib) in fig4_shards() {
         let shard_bytes = ((mib * (1 << 20)) as f64 * scale) as u64;
@@ -365,14 +477,16 @@ fn cmd_dispatch_bench(args: &Args) -> Result<()> {
         let item_bytes = shard_bytes / n as u64;
         let base = plan_centralized(&producer, &consumer, item_bytes, 0);
         let earl = plan_alltoall(&producer, &consumer, item_bytes);
-        let tb = execute_plan_tcp(&base, n)?.seconds;
-        let te = execute_plan_tcp(&earl, n)?.seconds;
+        let opts = ExecOptions { payload: None, inflight_budget: budget };
+        let rb = runtime.execute_opts(&base, opts)?.report;
+        let re = runtime.execute_opts(&earl, opts)?.report;
         println!(
-            "{ctx:>8} {:>12} {:>14} {:>14} {:>9.1}x",
+            "{ctx:>8} {:>12} {:>14} {:>14} {:>9.1}x {:>12}",
             human_bytes(shard_bytes),
-            human_duration(tb),
-            human_duration(te),
-            tb / te
+            human_duration(rb.seconds),
+            human_duration(re.seconds),
+            rb.seconds / re.seconds,
+            human_bytes(re.inflight_peak_bytes),
         );
     }
     Ok(())

@@ -34,6 +34,16 @@ pub struct StepRecord {
     /// from the modeled makespan above; for the simulated modes this is
     /// just the planning/simulation cost).
     pub dispatch_wall_seconds: f64,
+    /// Payload bytes the dispatcher moved — for TCP mode, the
+    /// serialized size of every shipped (checksum-verified) ExpPrep
+    /// tensor shard.
+    pub dispatch_bytes: u64,
+    /// Peak total in-flight payload bytes inside the dispatch stage
+    /// (TCP mode; 0 simulated).
+    pub dispatch_inflight_peak_bytes: u64,
+    /// Seconds the dispatch scheduler awaited completions while ready
+    /// transfers sat blocked on the in-flight budget.
+    pub dispatch_stall_seconds: f64,
     pub train_seconds: f64,
     /// Wall-clock duration of the whole step. Under the overlapped
     /// pipeline this is less than the summed stage time — the gap is the
@@ -67,6 +77,15 @@ impl StepRecord {
             ("exp_prep_seconds", Json::num(self.exp_prep_seconds)),
             ("dispatch_seconds", Json::num(self.dispatch_seconds)),
             ("dispatch_wall_seconds", Json::num(self.dispatch_wall_seconds)),
+            ("dispatch_bytes", Json::num(self.dispatch_bytes as f64)),
+            (
+                "dispatch_inflight_peak_bytes",
+                Json::num(self.dispatch_inflight_peak_bytes as f64),
+            ),
+            (
+                "dispatch_stall_seconds",
+                Json::num(self.dispatch_stall_seconds),
+            ),
             ("train_seconds", Json::num(self.train_seconds)),
             ("step_wall_seconds", Json::num(self.step_wall_seconds)),
             ("param_staleness", Json::num(self.param_staleness as f64)),
@@ -183,6 +202,9 @@ mod tests {
             exp_prep_seconds: 0.5,
             dispatch_seconds: 0.1,
             dispatch_wall_seconds: 0.2,
+            dispatch_bytes: 4096,
+            dispatch_inflight_peak_bytes: 2048,
+            dispatch_stall_seconds: 0.05,
             train_seconds: 2.0,
             step_wall_seconds: 2.0,
             param_staleness: 0,
@@ -198,6 +220,12 @@ mod tests {
         assert_eq!(j.at(&["mean_return"]).as_f64(), Some(0.25));
         assert_eq!(j.at(&["bucket"]).as_usize(), Some(128));
         assert_eq!(j.at(&["selector_switched"]).as_bool(), Some(false));
+        assert_eq!(j.at(&["dispatch_bytes"]).as_usize(), Some(4096));
+        assert_eq!(
+            j.at(&["dispatch_inflight_peak_bytes"]).as_usize(),
+            Some(2048)
+        );
+        assert_eq!(j.at(&["dispatch_stall_seconds"]).as_f64(), Some(0.05));
     }
 
     #[test]

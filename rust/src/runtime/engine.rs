@@ -13,91 +13,7 @@ use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::runtime::manifest::{Func, Manifest};
 use crate::runtime::state::ModelState;
-
-/// A `(batch, seq)` i32 token matrix, padded to a bucket width.
-#[derive(Debug, Clone)]
-pub struct TokenBatch {
-    pub data: Vec<i32>,
-    pub batch: usize,
-    pub seq: usize,
-}
-
-impl TokenBatch {
-    pub fn new(batch: usize, seq: usize) -> Self {
-        TokenBatch { data: vec![0; batch * seq], batch, seq }
-    }
-
-    pub fn row_mut(&mut self, b: usize) -> &mut [i32] {
-        &mut self.data[b * self.seq..(b + 1) * self.seq]
-    }
-
-    pub fn row(&self, b: usize) -> &[i32] {
-        &self.data[b * self.seq..(b + 1) * self.seq]
-    }
-
-    fn literal(&self) -> Result<Literal> {
-        Ok(Literal::vec1(&self.data)
-            .reshape(&[self.batch as i64, self.seq as i64])?)
-    }
-}
-
-/// A `(batch, seq)` f32 matrix (masks, advantages, ref logprobs).
-#[derive(Debug, Clone)]
-pub struct F32Batch {
-    pub data: Vec<f32>,
-    pub batch: usize,
-    pub seq: usize,
-}
-
-impl F32Batch {
-    pub fn new(batch: usize, seq: usize) -> Self {
-        F32Batch { data: vec![0.0; batch * seq], batch, seq }
-    }
-
-    pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
-        &mut self.data[b * self.seq..(b + 1) * self.seq]
-    }
-
-    pub fn row(&self, b: usize) -> &[f32] {
-        &self.data[b * self.seq..(b + 1) * self.seq]
-    }
-
-    fn literal(&self) -> Result<Literal> {
-        Ok(Literal::vec1(&self.data)
-            .reshape(&[self.batch as i64, self.seq as i64])?)
-    }
-}
-
-/// Training hyper-parameters fed to the fused train_step artifact.
-#[derive(Debug, Clone, Copy)]
-pub struct TrainHp {
-    pub lr: f32,
-    pub ent_coef: f32,
-    pub kl_coef: f32,
-}
-
-impl Default for TrainHp {
-    fn default() -> Self {
-        TrainHp { lr: 3e-4, ent_coef: 0.01, kl_coef: 0.05 }
-    }
-}
-
-/// Scalars returned by one train step.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct TrainStats {
-    pub loss: f32,
-    pub pg: f32,
-    pub kl: f32,
-    pub entropy: f32,
-}
-
-/// Inputs to one train step (already padded to a bucket).
-pub struct TrainBatch {
-    pub tokens: TokenBatch,
-    pub mask: F32Batch,
-    pub advantages: F32Batch,
-    pub ref_logprobs: F32Batch,
-}
+use crate::runtime::tensor::{TokenBatch, TrainBatch, TrainHp, TrainStats};
 
 /// Timing of a single artifact execution (fed to the metrics layer and to
 /// the Parallelism Selector's profiling pass).
@@ -318,34 +234,5 @@ impl Engine {
     pub fn initial_state(&self) -> Result<ModelState> {
         ModelState::load_initial(&self.manifest)
             .context("loading initial model state")
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn token_batch_rows() {
-        let mut tb = TokenBatch::new(2, 4);
-        tb.row_mut(1).copy_from_slice(&[1, 2, 3, 4]);
-        assert_eq!(tb.row(0), &[0, 0, 0, 0]);
-        assert_eq!(tb.row(1), &[1, 2, 3, 4]);
-        assert_eq!(tb.data, vec![0, 0, 0, 0, 1, 2, 3, 4]);
-    }
-
-    #[test]
-    fn f32_batch_rows() {
-        let mut fb = F32Batch::new(2, 3);
-        fb.row_mut(0)[2] = 5.0;
-        assert_eq!(fb.row(0), &[0.0, 0.0, 5.0]);
-        assert_eq!(fb.row(1), &[0.0, 0.0, 0.0]);
-    }
-
-    #[test]
-    fn default_hp_sane() {
-        let hp = TrainHp::default();
-        assert!(hp.lr > 0.0 && hp.lr < 1.0);
-        assert!(hp.ent_coef >= 0.0 && hp.kl_coef >= 0.0);
     }
 }

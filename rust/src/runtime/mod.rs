@@ -4,17 +4,25 @@
 //! once `make artifacts` has been run.
 //!
 //! * [`manifest`] — the python↔rust ABI (`manifest.json`).
-//! * [`state`] — model parameters + Adam moments as XLA literals.
+//! * [`tensor`] — host-side batch containers (xla-free; available to
+//!   `--no-default-features` builds so the dispatch payload layer can
+//!   serialize real training tensors without PJRT).
+//! * [`state`] — model parameters + Adam moments as XLA literals
+//!   (`xla` feature).
 //! * [`engine`] — lazy-compiling executable cache + typed entry points
 //!   (`logits`, `logprobs`, `train_step`), one executable per
-//!   (function, context bucket).
+//!   (function, context bucket) (`xla` feature).
 
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
+#[cfg(feature = "xla")]
 pub mod state;
+pub mod tensor;
 
-pub use engine::{
-    Engine, ExecTiming, F32Batch, TokenBatch, TrainBatch, TrainHp, TrainStats,
-};
+#[cfg(feature = "xla")]
+pub use engine::{Engine, ExecTiming};
 pub use manifest::{ArtifactEntry, Func, Manifest, ModelSpec, ParamEntry};
+#[cfg(feature = "xla")]
 pub use state::{ModelState, ParamSnapshot, SnapshotBuffer};
+pub use tensor::{F32Batch, TokenBatch, TrainBatch, TrainHp, TrainStats};

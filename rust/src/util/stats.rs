@@ -2,13 +2,22 @@
 //! the selector's profiling pass, and the bench harness.
 
 /// Welford online mean/variance accumulator.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// `Default` must agree with [`Welford::new`]: a derived impl would
+/// zero-init min/max, silently misreporting extrema for any sample set
+/// that never crosses zero.
+impl Default for Welford {
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -54,21 +63,25 @@ impl Welford {
     }
 }
 
-/// Exact percentile over a sample (sorts a copy; fine for metric volumes).
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
+/// Exact percentile over a sample (sorts a copy; fine for metric
+/// volumes). Returns `None` for an empty sample — summarizing a
+/// zero-record run is an answerable question, not a panic.
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
     assert!((0.0..=100.0).contains(&p));
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Some(if lo == hi {
         v[lo]
     } else {
         let w = rank - lo as f64;
         v[lo] * (1.0 - w) + v[hi] * w
-    }
+    })
 }
 
 /// Exponential moving average — the selector's context-length monitor.
@@ -148,7 +161,10 @@ impl Histogram {
         if self.total == 0 {
             return 0.0;
         }
-        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        // Clamp to ≥ 1 sample: at p = 0 the raw target is 0 and the
+        // `cum >= target` scan would accept the first bucket even when
+        // it is empty, returning `bounds[0]` regardless of the data.
+        let target = ((p / 100.0 * self.total as f64).ceil() as u64).max(1);
         let mut cum = 0;
         for (i, &c) in self.counts.iter().enumerate() {
             cum += c;
@@ -188,10 +204,42 @@ mod tests {
     #[test]
     fn percentile_basics() {
         let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 50.0), 3.0);
-        assert_eq!(percentile(&xs, 100.0), 5.0);
-        assert_eq!(percentile(&xs, 25.0), 2.0);
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 50.0), Some(3.0));
+        assert_eq!(percentile(&xs, 100.0), Some(5.0));
+        assert_eq!(percentile(&xs, 25.0), Some(2.0));
+    }
+
+    #[test]
+    fn percentile_empty_is_none_not_panic() {
+        // Reachable from metrics summarization on a zero-record run.
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile(&[], 0.0), None);
+        assert_eq!(percentile(&[], 100.0), None);
+    }
+
+    #[test]
+    fn welford_default_matches_new() {
+        // Regression: a derived Default zero-inits min/max, so an
+        // all-positive sample would report min = 0.0 (and all-negative
+        // max = 0.0). Default must delegate to new()'s ±∞ init.
+        let mut d = Welford::default();
+        for x in [3.0, 5.0, 9.0] {
+            d.add(x);
+        }
+        assert_eq!(d.min(), 3.0);
+        assert_eq!(d.max(), 9.0);
+        let mut neg = Welford::default();
+        for x in [-7.0, -2.0] {
+            neg.add(x);
+        }
+        assert_eq!(neg.min(), -7.0);
+        assert_eq!(neg.max(), -2.0);
+        // Untouched accumulators agree field-for-field with new().
+        let (d, n) = (Welford::default(), Welford::new());
+        assert_eq!(d.count(), n.count());
+        assert_eq!(d.min(), n.min());
+        assert_eq!(d.max(), n.max());
     }
 
     #[test]
@@ -223,5 +271,19 @@ mod tests {
         }
         let p99 = h.percentile(99.0);
         assert!(p99 >= 99.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn histogram_p0_skips_empty_leading_buckets() {
+        // Regression: p = 0 used to compute target = 0, so the first
+        // bucket satisfied `cum >= target` even with zero count and
+        // percentile(0.0) returned bounds[0] regardless of the data.
+        let mut h = Histogram::new(vec![1.0, 10.0, 100.0]);
+        h.add(50.0); // only the (10, 100] bucket is populated
+        assert_eq!(h.percentile(0.0), 100.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        // A populated first bucket still reports its own edge at p = 0.
+        h.add(0.5);
+        assert_eq!(h.percentile(0.0), 1.0);
     }
 }

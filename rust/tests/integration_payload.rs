@@ -1,0 +1,274 @@
+//! Integration: the Data Dispatcher carries **real ExpPrep tensors**.
+//! A `PackedBatch` built from actual episodes is staged, shipped through
+//! `TcpRuntime` (single-process loopback AND across spawned `earl
+//! worker` processes), and the reassembled tensors are asserted
+//! byte-identical to the source; `dispatch_bytes` equals the serialized
+//! payload size (no pattern fill anywhere on the send path) and
+//! checksum failures are rejected.
+//!
+//! Runs without the `xla` feature: packing and dispatch are PJRT-free.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use earl::coordinator::{
+    packed_payload, DispatchJob, DispatchMode, DispatchWorker,
+};
+use earl::dispatch::{
+    decode_frame, plan_alltoall, DataLayout, ExecOptions, ReceivedBatch,
+    StepPayload, TcpRuntime, TransferPayload,
+};
+use earl::rl::advantage::{reinforce_advantages, AdvantageCfg};
+use earl::rl::episode::{Episode, EpisodeStatus, ExperienceBatch, Turn};
+use earl::tokenizer as tok;
+use earl::util::threadpool::ThreadPool;
+
+/// A real multi-turn episode (same shape the rollout engine emits).
+fn episode(len: usize, reward: f32) -> Episode {
+    let mut tokens = vec![tok::BOS, tok::ENV, tok::AGENT];
+    let mut mask = vec![0.0, 0.0, 0.0];
+    let response_start = 3;
+    while tokens.len() < len {
+        tokens.push(tok::THINK_BASE + (tokens.len() % 5) as i32);
+        mask.push(1.0);
+    }
+    Episode {
+        tokens: tokens.clone(),
+        action_mask: mask,
+        turns: vec![Turn {
+            prompt_start: 1,
+            response_start,
+            response_end: tokens.len(),
+            action: None,
+            behavior_logprob: -2.0,
+        }],
+        status: EpisodeStatus::Finished,
+        reward,
+    }
+}
+
+/// Stage a real 4-episode PackedBatch for dispatch.
+fn real_payload() -> StepPayload {
+    let eps = vec![
+        episode(10, 1.0),
+        episode(7, -1.0),
+        episode(12, 0.0),
+        episode(5, 1.0),
+    ];
+    let mut batch = ExperienceBatch::new(eps);
+    let cfg = AdvantageCfg { whiten: true, ..AdvantageCfg::default() };
+    reinforce_advantages(&mut batch, cfg);
+    let packed = earl::coordinator::pack_episodes(&batch, 4, 16).unwrap();
+    packed_payload(&packed).unwrap()
+}
+
+/// Layouts where every item changes owner, so the union of receive-side
+/// batches covers the whole payload.
+fn all_move_layouts(n_items: usize, n_workers: usize) -> (DataLayout, DataLayout) {
+    let p = DataLayout::blocked(n_items, n_workers);
+    let c = p.rotated(1);
+    (p, c)
+}
+
+#[test]
+fn real_packed_batch_roundtrips_single_process() {
+    let payload = real_payload();
+    let (producer, consumer) = all_move_layouts(payload.rows(), 2);
+    let plan = plan_alltoall(&producer, &consumer, payload.item_bytes());
+    // Every row moves: wire bytes == serialized payload bytes.
+    assert_eq!(plan.total_bytes(), payload.total_bytes());
+
+    let pool = Arc::new(ThreadPool::new(4));
+    let rt = TcpRuntime::new(2, None, pool).unwrap();
+    let out = rt
+        .execute_opts(
+            &plan,
+            ExecOptions { payload: Some(&payload), inflight_budget: None },
+        )
+        .unwrap();
+    assert_eq!(out.report.bytes, payload.total_bytes());
+
+    // Reassemble across destinations and compare byte-for-byte.
+    let mut all = ReceivedBatch::new();
+    let mut per_dst = 0;
+    for (dst, batch) in out.received {
+        let items: Vec<usize> = (0..payload.rows())
+            .filter(|&i| consumer.owner[i] == dst)
+            .collect();
+        batch.assert_matches(&payload, &items).unwrap();
+        all.merge(batch).unwrap();
+        per_dst += 1;
+    }
+    assert_eq!(per_dst, 2);
+    let every: Vec<usize> = (0..payload.rows()).collect();
+    let compared = all.assert_matches(&payload, &every).unwrap();
+    assert_eq!(compared, payload.total_bytes());
+}
+
+#[test]
+fn dispatch_worker_ships_real_payload() {
+    // The pipeline-facing path: DispatchWorker with an attached payload
+    // and an in-flight budget reports the serialized byte count.
+    let payload = Arc::new(real_payload());
+    let (producer, consumer) = all_move_layouts(payload.rows(), 2);
+    let plan = plan_alltoall(&producer, &consumer, payload.item_bytes());
+    let expect = plan.total_bytes();
+    let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));
+    for step in 0..3 {
+        w.submit(DispatchJob {
+            step,
+            plan: plan.clone(),
+            mode: DispatchMode::Tcp,
+            n_workers: 2,
+            nic_bytes_per_sec: None,
+            payload: Some(Arc::clone(&payload)),
+            inflight_budget: Some(payload.item_bytes()),
+            remote: None,
+        })
+        .unwrap();
+        let r = w.recv().unwrap();
+        assert_eq!(r.step, step);
+        assert_eq!(r.bytes, expect, "dispatch_bytes == serialized payload");
+        assert!(r.inflight_peak_bytes > 0);
+        assert!(r.inflight_peak_bytes <= 2 * payload.item_bytes());
+        if step > 0 {
+            assert_eq!(r.connections_opened, 0);
+        }
+    }
+}
+
+/// A spawned `earl worker` process, killed on drop even if the test
+/// panics first.
+struct WorkerProc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_worker(dump: &std::path::Path) -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_earl"))
+        .args([
+            "worker",
+            "--listen",
+            "127.0.0.1:0",
+            "--quiet",
+            "--dump",
+            dump.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning earl worker");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .and_then(|a| a.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable worker banner {line:?}"));
+    WorkerProc { child, addr }
+}
+
+#[test]
+fn real_packed_batch_roundtrips_across_processes() {
+    let tmp = std::env::temp_dir().join(format!(
+        "earl_payload_mp_{}",
+        std::process::id()
+    ));
+    let dumps = [tmp.join("w0"), tmp.join("w1")];
+    for d in &dumps {
+        std::fs::create_dir_all(d).unwrap();
+    }
+    let workers: Vec<WorkerProc> =
+        dumps.iter().map(|d| spawn_worker(d)).collect();
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr).collect();
+
+    let payload = real_payload();
+    let (producer, consumer) = all_move_layouts(payload.rows(), 2);
+    let plan = plan_alltoall(&producer, &consumer, payload.item_bytes());
+
+    let pool = Arc::new(ThreadPool::new(4));
+    let rt = TcpRuntime::connect_remote(addrs, None, pool).unwrap();
+    let out = rt
+        .execute_opts(
+            &plan,
+            ExecOptions { payload: Some(&payload), inflight_budget: None },
+        )
+        .unwrap();
+    assert_eq!(out.report.bytes, payload.total_bytes());
+    // Reassembly lives in the worker processes, not the sender.
+    assert!(out.received.is_empty());
+
+    // The workers dumped every verified frame; reassemble from disk and
+    // assert byte-identical delivery per destination.
+    for (dst, dump) in dumps.iter().enumerate() {
+        let mut batch = ReceivedBatch::new();
+        let mut frames = 0;
+        for entry in std::fs::read_dir(dump).unwrap() {
+            let bytes = std::fs::read(entry.unwrap().path()).unwrap();
+            let (_, shards) = decode_frame(&bytes).unwrap();
+            for (desc, payload_bytes) in &shards {
+                batch.insert(desc, payload_bytes).unwrap();
+            }
+            frames += 1;
+        }
+        assert!(frames > 0, "worker {dst} dumped no frames");
+        let items: Vec<usize> = (0..payload.rows())
+            .filter(|&i| consumer.owner[i] == dst)
+            .collect();
+        batch.assert_matches(&payload, &items).unwrap();
+    }
+    drop(rt);
+    drop(workers);
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn checksum_failure_rejects_transfer_end_to_end() {
+    // Hand-corrupt a frame against a live worker process and confirm
+    // the receive side rejects it in its ack.
+    let tmp = std::env::temp_dir().join(format!(
+        "earl_payload_ck_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let worker = spawn_worker(&tmp);
+
+    let payload = real_payload();
+    let items: Vec<usize> = (0..payload.rows()).collect();
+    let tp = TransferPayload::for_items(&payload, &items).unwrap();
+    let mut frame = earl::dispatch::encode_frame(0, 1, &tp);
+    let last = frame.len() - 1;
+    frame[last] ^= 0xA5;
+
+    let mut sock = TcpStream::connect(worker.addr).unwrap();
+    sock.write_all(&frame).unwrap();
+    let mut ack = [0u8; earl::dispatch::ACK_LEN];
+    sock.read_exact(&mut ack).unwrap();
+    let ack = earl::dispatch::Ack::decode(&ack);
+    assert_eq!(ack.status, earl::dispatch::tcp::ACK_CHECKSUM_MISMATCH);
+    assert_ne!(ack.checksum, tp.checksum());
+
+    // Rejected frames are not dumped as verified data... but the dump
+    // records the raw frame regardless; what matters end-to-end is the
+    // rejection: a sender driving this connection fails its execute.
+    let good = earl::dispatch::encode_frame(0, 2, &tp);
+    sock.write_all(&good).unwrap();
+    let mut ack2 = [0u8; earl::dispatch::ACK_LEN];
+    sock.read_exact(&mut ack2).unwrap();
+    let ack2 = earl::dispatch::Ack::decode(&ack2);
+    assert_eq!(ack2.status, earl::dispatch::tcp::ACK_OK);
+    assert_eq!(ack2.checksum, tp.checksum());
+    drop(worker);
+    let _ = std::fs::remove_dir_all(&tmp);
+}

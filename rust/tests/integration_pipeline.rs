@@ -7,6 +7,8 @@
 //! dispatch runtime must execute arbitrary-phase plans while reusing
 //! connections across steps.
 
+#![cfg(feature = "xla")]
+
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -191,6 +193,9 @@ fn dispatch_worker_reuses_tcp_connections_across_steps() {
         mode: DispatchMode::Tcp,
         n_workers: 8,
         nic_bytes_per_sec: None,
+        payload: None,
+        inflight_budget: None,
+        remote: None,
     };
     let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
     w.submit(job(0)).unwrap();
@@ -319,6 +324,9 @@ fn pipelined_submit_then_recv_preserves_order_across_modes() {
         mode,
         n_workers: 4,
         nic_bytes_per_sec: None,
+        payload: None,
+        inflight_budget: None,
+        remote: None,
     };
     let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));
     w.submit(mk(1, DispatchMode::Simulated)).unwrap();

@@ -6,6 +6,8 @@
 //! (a different HLO module) — i.e. the python→HLO→PJRT→rust path
 //! round-trips numerics, not just shapes.
 
+#![cfg(feature = "xla")]
+
 use std::path::Path;
 
 use earl::runtime::{Engine, TokenBatch};

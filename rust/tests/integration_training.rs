@@ -1,6 +1,8 @@
 //! Integration: the fused train_step artifact — Adam state threading,
 //! learning behaviour, and numerical health through the PJRT path.
 
+#![cfg(feature = "xla")]
+
 use std::path::Path;
 
 use earl::runtime::{Engine, F32Batch, TokenBatch, TrainBatch, TrainHp};

@@ -5,7 +5,9 @@ use std::collections::BTreeMap;
 
 use earl::cluster::ClusterSpec;
 use earl::dispatch::{
-    plan_alltoall, plan_centralized, satisfies, DataLayout, FrameHeader,
+    contiguous_runs, decode_frame, encode_frame, plan_alltoall,
+    plan_centralized, satisfies, DataLayout, DispatchTensor, FrameHeader,
+    ReceivedBatch, StepPayload, TransferPayload, WireTensorId,
     FRAME_HEADER_LEN,
 };
 use earl::envs::{ConnectFour, Game, Outcome, TicTacToe};
@@ -99,6 +101,8 @@ fn random_header(rng: &mut Pcg64) -> FrameHeader {
         src: pick(rng),
         epoch: pick(rng),
         bytes: pick(rng),
+        n_shards: (pick(rng) & 0xFFFF_FFFF) as u32,
+        checksum: pick(rng),
     }
 }
 
@@ -126,6 +130,101 @@ fn prop_truncated_frame_header_is_rejected() {
             FrameHeader::decode(&wire[..cut]).is_err(),
             "decode must reject {cut}-byte header"
         );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Shard serialization: serialize → frame → reassemble is byte-identical
+// and checksum-stable under arbitrary row splits; truncation and
+// corruption are rejected.
+// ---------------------------------------------------------------------------
+
+fn random_payload(rng: &mut Pcg64) -> StepPayload {
+    let rows = gen::usize_in(rng, 1, 12);
+    let cols = gen::usize_in(rng, 1, 24);
+    let tokens: Vec<i32> = (0..rows * cols)
+        .map(|_| (rng.next_u64() & 0xFFFF) as i32 - 0x8000)
+        .collect();
+    let mask: Vec<f32> = (0..rows * cols).map(|_| rng.f32()).collect();
+    let adv: Vec<f32> =
+        (0..rows * cols).map(|_| rng.gaussian() as f32).collect();
+    StepPayload::new(vec![
+        DispatchTensor::from_i32(WireTensorId::Tokens, rows, cols, &tokens)
+            .unwrap(),
+        DispatchTensor::from_f32(WireTensorId::Mask, rows, cols, &mask)
+            .unwrap(),
+        DispatchTensor::from_f32(WireTensorId::Advantages, rows, cols, &adv)
+            .unwrap(),
+    ])
+    .unwrap()
+}
+
+#[test]
+fn prop_shard_serialization_roundtrips() {
+    check_default("shard_roundtrip", |rng| {
+        let payload = random_payload(rng);
+        let rows = payload.rows();
+        // Arbitrary row split: a random nonempty subset, shuffled (the
+        // serializer must sort/dedup into contiguous runs itself).
+        let mut items: Vec<usize> =
+            (0..rows).filter(|_| rng.below(2) == 0).collect();
+        if items.is_empty() {
+            items.push(rng.below(rows));
+        }
+        rng.shuffle(&mut items);
+
+        let tp = TransferPayload::for_items(&payload, &items).unwrap();
+        assert_eq!(
+            tp.payload_bytes(),
+            payload.item_bytes()
+                * {
+                    let mut uniq = items.clone();
+                    uniq.sort_unstable();
+                    uniq.dedup();
+                    uniq.len() as u64
+                }
+        );
+        // Shard table is exactly runs × tensors.
+        assert_eq!(tp.shards.len(), contiguous_runs(&items).len() * 3);
+
+        // Checksum is stable across re-serialization.
+        let again = TransferPayload::for_items(&payload, &items).unwrap();
+        assert_eq!(tp.checksum(), again.checksum());
+
+        // Frame → decode → reassemble → byte-identical to the source.
+        let frame = encode_frame(3, 17, &tp);
+        assert_eq!(frame, encode_frame(3, 17, &again));
+        let (header, shards) = decode_frame(&frame).unwrap();
+        assert_eq!(header.bytes, tp.payload_bytes());
+        assert_eq!(header.checksum, tp.checksum());
+        let mut batch = ReceivedBatch::new();
+        for (desc, bytes) in &shards {
+            batch.insert(desc, bytes).unwrap();
+        }
+        batch.assert_matches(&payload, &items).unwrap();
+    });
+}
+
+#[test]
+fn prop_truncated_or_corrupt_frames_rejected() {
+    check_default("frame_truncation", |rng| {
+        let payload = random_payload(rng);
+        let items: Vec<usize> = (0..payload.rows()).collect();
+        let tp = TransferPayload::for_items(&payload, &items).unwrap();
+        let frame = encode_frame(0, 1, &tp);
+        // Any strict prefix must fail to decode.
+        let cut = rng.below(frame.len());
+        assert!(
+            decode_frame(&frame[..cut]).is_err(),
+            "decode must reject {cut}-byte prefix of {}",
+            frame.len()
+        );
+        // Flipping any payload byte must break the checksum.
+        let body_start = frame.len() - tp.payload_bytes() as usize;
+        let mut corrupt = frame.clone();
+        let idx = body_start + rng.below(tp.payload_bytes() as usize);
+        corrupt[idx] ^= 1 + rng.below(255) as u8;
+        assert!(decode_frame(&corrupt).is_err(), "bit flip at {idx}");
     });
 }
 
