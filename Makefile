@@ -11,10 +11,15 @@ check: fmt lint check-core
 
 # The `--no-default-features` core: proves the dispatcher (real-payload
 # wire format, TCP runtime, `earl worker`), selector, and metrics build
-# and pass without the xla toolchain.
+# and pass without the xla toolchain. The remote-ingest integration
+# test (2 `earl worker --ingest` processes reproducing the serial
+# learning curve + failure injection) runs here by construction — it is
+# re-run explicitly so a feature-gating regression cannot silently
+# filter it out of the suite.
 check-core:
 	cd rust && cargo build --release --no-default-features
 	cd rust && cargo test -q --no-default-features
+	cd rust && cargo test -q --no-default-features --test integration_remote_ingest
 
 fmt:
 	cd rust && cargo fmt --check

@@ -2,7 +2,11 @@
 # Multi-process data dispatcher demo: spawn two `earl worker` receive-side
 # processes, then drive the Fig. 4 dispatch benchmark against them over
 # real sockets — checksummed frames carrying real bytes, per-frame acks,
-# and a per-NIC in-flight budget.
+# and a per-NIC in-flight budget. A second leg spawns two `earl worker
+# --ingest` processes and runs distributed update steps through them
+# (remote ingestion, paper 3.3): the workers consume the dispatched
+# shards into worker-local updates and the coordinator merges their
+# results — printing the same learning curve a serial run produces.
 #
 # Works with the XLA-free core build too:
 #   cd rust && cargo build --release --no-default-features
@@ -23,6 +27,8 @@ fi
 cleanup() {
     [ -n "${W1_PID:-}" ] && kill "$W1_PID" 2>/dev/null || true
     [ -n "${W2_PID:-}" ] && kill "$W2_PID" 2>/dev/null || true
+    [ -n "${I1_PID:-}" ] && kill "$I1_PID" 2>/dev/null || true
+    [ -n "${I2_PID:-}" ] && kill "$I2_PID" 2>/dev/null || true
 }
 trap cleanup EXIT
 
@@ -55,3 +61,27 @@ echo "workers: $A1 $A2 (budget ${BUDGET}B per NIC)"
 
 rm -f "$mkfifo_out1" "$mkfifo_out2"
 echo "done — every frame above was checksummed and acked by the workers."
+
+# ---------------------------------------------------------------------------
+# Remote ingestion: workers that *consume* what the dispatcher ships.
+# ---------------------------------------------------------------------------
+echo
+echo "== remote ingestion demo: 2 x 'earl worker --ingest' =="
+
+ingest_out1=$(mktemp)
+ingest_out2=$(mktemp)
+"$EARL" worker --listen 127.0.0.1:0 --ingest --quiet >"$ingest_out1" &
+I1_PID=$!
+"$EARL" worker --listen 127.0.0.1:0 --ingest --quiet >"$ingest_out2" &
+I2_PID=$!
+B1=$(addr_of "$ingest_out1")
+B2=$(addr_of "$ingest_out2")
+echo "ingest workers: $B1 $B2"
+
+# The serial reference, then the same seed through the two processes —
+# the training rows (loss, grad_norm) and final params line must match.
+"$EARL" ingest-demo --steps 5 --seed 42 --workers 2
+"$EARL" ingest-demo --steps 5 --seed 42 --connect "$B1,$B2" --budget "$BUDGET"
+
+rm -f "$ingest_out1" "$ingest_out2"
+echo "done — the workers ran the update steps; the coordinator only merged."

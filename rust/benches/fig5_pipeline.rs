@@ -156,6 +156,8 @@ fn synthetic_job(step: u64) -> DispatchJob {
         nic_bytes_per_sec: Some(21e6),
         payload: None,
         inflight_budget: None,
+        adaptive_budget: false,
+        controller_bytes: 0,
         remote: None,
     }
 }

@@ -89,6 +89,17 @@ pub struct TrainConfig {
     /// backpressure-aware scheduler (`None` = unlimited; transfers
     /// larger than the budget run solo on their endpoints).
     pub dispatch_inflight_budget: Option<u64>,
+    /// Adapt the in-flight budget across steps with an AIMD controller
+    /// fed by the observed `dispatch_stall_seconds` (multiplicative
+    /// decrease on stall, additive recovery). Needs a seed budget;
+    /// inert otherwise.
+    pub dispatch_budget_adaptive: bool,
+    /// Aggregation-aware dispatch planning (paper §3.3, on by default):
+    /// ship only tensors with no cross-rank aggregation dependency
+    /// (tokens, mask, reference logprobs); the aggregated advantages
+    /// stay on the controller and are reported as
+    /// `dispatch_controller_bytes`.
+    pub dispatch_aggregation_aware: bool,
     pub metrics_path: Option<PathBuf>,
     pub checkpoint_path: Option<PathBuf>,
     pub seed: u64,
@@ -112,6 +123,8 @@ impl Default for TrainConfig {
             max_staleness: 1,
             off_policy_clip: 0.2,
             dispatch_inflight_budget: None,
+            dispatch_budget_adaptive: false,
+            dispatch_aggregation_aware: true,
             metrics_path: None,
             checkpoint_path: None,
             seed: 0,
@@ -219,6 +232,12 @@ impl TrainConfig {
         if let Some(n) = j.at(&["dispatch_inflight_budget"]).as_usize() {
             c.dispatch_inflight_budget = Some(n as u64);
         }
+        if let Some(b) = j.at(&["dispatch_budget_adaptive"]).as_bool() {
+            c.dispatch_budget_adaptive = b;
+        }
+        if let Some(b) = j.at(&["dispatch_aggregation_aware"]).as_bool() {
+            c.dispatch_aggregation_aware = b;
+        }
         if let Some(s) = j.at(&["metrics_path"]).as_str() {
             c.metrics_path = Some(PathBuf::from(s));
         }
@@ -270,11 +289,19 @@ mod tests {
     #[test]
     fn dispatch_budget_parses() {
         let c = TrainConfig::from_json_str(
-            r#"{"dispatch_inflight_budget": 1048576}"#,
+            r#"{"dispatch_inflight_budget": 1048576,
+                "dispatch_budget_adaptive": true,
+                "dispatch_aggregation_aware": false}"#,
         )
         .unwrap();
         assert_eq!(c.dispatch_inflight_budget, Some(1 << 20));
-        assert_eq!(TrainConfig::default().dispatch_inflight_budget, None);
+        assert!(c.dispatch_budget_adaptive);
+        assert!(!c.dispatch_aggregation_aware);
+        let d = TrainConfig::default();
+        assert_eq!(d.dispatch_inflight_budget, None);
+        assert!(!d.dispatch_budget_adaptive);
+        // Aggregation-aware planning is the paper-faithful default.
+        assert!(d.dispatch_aggregation_aware);
     }
 
     #[test]

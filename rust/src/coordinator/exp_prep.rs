@@ -106,16 +106,49 @@ pub fn pack_episodes(
     Ok(PackedBatch { tokens, mask, advantages, bucket, clipped })
 }
 
+/// Per-row serialized bytes of the tensors [`dispatch_payload`] stages,
+/// filtered by tensor id — the single definition the planners size
+/// shards from, so the byte accounting can never drift from the
+/// aggregation partition ([`WireTensorId::needs_aggregation`]) the
+/// staged payload is split by.
+fn item_bytes_where(
+    batch: &TrainBatch,
+    keep: impl Fn(WireTensorId) -> bool,
+) -> u64 {
+    [
+        (WireTensorId::Tokens, batch.tokens.seq),
+        (WireTensorId::Mask, batch.mask.seq),
+        (WireTensorId::Advantages, batch.advantages.seq),
+        (WireTensorId::RefLogprobs, batch.ref_logprobs.seq),
+    ]
+    .iter()
+    .filter(|(id, _)| keep(*id))
+    .map(|(_, seq)| (seq * 4) as u64)
+    .sum()
+}
+
 /// Serialized bytes of one batch row across the four dispatched
 /// tensors — the per-item shard size the transfer planners use.
 /// Matches [`dispatch_payload`]'s `StepPayload::item_bytes` exactly
 /// without staging anything (simulated dispatch modes plan with real
 /// byte counts but never serialize).
 pub fn payload_item_bytes(batch: &TrainBatch) -> u64 {
-    (batch.tokens.seq * 4
-        + batch.mask.seq * 4
-        + batch.advantages.seq * 4
-        + batch.ref_logprobs.seq * 4) as u64
+    item_bytes_where(batch, |_| true)
+}
+
+/// Serialized bytes of one batch row across the **wire** tensors only —
+/// aggregation-aware planning (paper §3.3) keeps the aggregated
+/// tensors on the controller. Matches
+/// `dispatch_payload(batch)?.wire_subset()` byte for byte without
+/// staging, by construction: both filter on `needs_aggregation()`.
+pub fn wire_item_bytes(batch: &TrainBatch) -> u64 {
+    item_bytes_where(batch, |id| !id.needs_aggregation())
+}
+
+/// Per-row bytes that stay on the controller under aggregation-aware
+/// planning (the aggregated tensors).
+pub fn controller_item_bytes(batch: &TrainBatch) -> u64 {
+    item_bytes_where(batch, |id| id.needs_aggregation())
 }
 
 /// Serialize the tensors of a ready [`TrainBatch`] into the staged,
@@ -324,6 +357,24 @@ mod tests {
         assert_eq!(payload_item_bytes(&tb), staged.item_bytes());
         assert_eq!(payload_item_bytes(&tb), 4 * 16 * 4);
         assert_eq!(staged.total_bytes(), 2 * 4 * 16 * 4);
+    }
+
+    #[test]
+    fn wire_item_bytes_matches_aggregation_aware_subset() {
+        let tb = TrainBatch {
+            tokens: TokenBatch::new(2, 16),
+            mask: F32Batch::new(2, 16),
+            advantages: F32Batch::new(2, 16),
+            ref_logprobs: F32Batch::new(2, 16),
+        };
+        let wire = dispatch_payload(&tb).unwrap().wire_subset().unwrap();
+        assert_eq!(wire_item_bytes(&tb), wire.item_bytes());
+        // Exactly the advantages row stays behind.
+        assert_eq!(controller_item_bytes(&tb), 16 * 4);
+        assert_eq!(
+            wire_item_bytes(&tb) + controller_item_bytes(&tb),
+            payload_item_bytes(&tb)
+        );
     }
 
     #[test]

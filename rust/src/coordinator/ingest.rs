@@ -1,0 +1,507 @@
+//! The remote-ingestion coordinator: drives training steps whose update
+//! work happens **inside the dispatch workers** (paper §3.3's receivers
+//! actually consume what the dispatcher ships).
+//!
+//! One step:
+//!
+//! 1. stage the step's tensors; under aggregation-aware planning only
+//!    the `!needs_aggregation()` tensors (tokens, mask, reference
+//!    logprobs) are dispatched — the aggregated advantages are computed
+//!    and whitened here, on the controller;
+//! 2. scatter each row's wire shard to its consuming worker
+//!    ([`plan_ingest`]) through the checksummed TCP runtime, under the
+//!    (optionally AIMD-adapted) in-flight budget;
+//! 3. commit: send every worker an [`IngestRequest`] naming its rows,
+//!    carrying its advantages and the broadcast parameters θ_step;
+//! 4. collect one [`WorkerReport`] per worker off the ack streams,
+//!    merge them **in worker order**, and apply the merged update to
+//!    the live [`IngestModel`] — all-or-nothing, so a dead or failing
+//!    worker yields a deterministic error and an untouched model.
+//!
+//! [`IngestCoordinator::local`] runs the identical math without sockets
+//! (same wire slicing via [`local_batch`], same per-worker partials,
+//! same merge order): the serial reference a multi-process run must
+//! reproduce **bit-for-bit** — integration-tested in
+//! `tests/integration_remote_ingest.rs`.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dispatch::ingest::{
+    local_batch, merge_reports, worker_update, IngestModel,
+};
+use crate::dispatch::plan::plan_ingest;
+use crate::dispatch::tcp::{send_pool_threads, AimdBudget, ExecOptions, TcpRuntime};
+use crate::dispatch::wire::{
+    DispatchTensor, IngestHp, IngestRequest, StepPayload, WireTensorId,
+    WorkerReport,
+};
+use crate::dispatch::DataLayout;
+use crate::metrics::{MetricsLog, WorkerStepMetrics};
+use crate::rl::advantage::whiten;
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::ThreadPool;
+
+/// Configuration of a remote-ingestion training run.
+#[derive(Debug, Clone)]
+pub struct IngestCfg {
+    /// Consumer-layout worker count (must equal the worker-address
+    /// count in remote mode).
+    pub n_workers: usize,
+    /// Batch rows per step.
+    pub rows: usize,
+    /// Padded sequence length of the staged tensors.
+    pub seq: usize,
+    /// Host-model vocabulary (token ids are generated in `[0, vocab)`).
+    pub vocab: usize,
+    pub hp: IngestHp,
+    pub seed: u64,
+    /// Dispatch only `!needs_aggregation()` tensors (paper §3.3); the
+    /// advantages ride the commit frames instead of the wire.
+    pub aggregation_aware: bool,
+    /// Per-NIC in-flight budget for the scatter (`None` = unlimited).
+    pub inflight_budget: Option<u64>,
+    /// Adapt the budget across steps with AIMD from observed stall.
+    pub adaptive_budget: bool,
+    /// How long a step may await worker acks + reports before failing.
+    pub commit_timeout: Duration,
+}
+
+impl Default for IngestCfg {
+    fn default() -> Self {
+        IngestCfg {
+            n_workers: 2,
+            rows: 8,
+            seq: 32,
+            vocab: 32,
+            hp: IngestHp::default(),
+            seed: 0,
+            aggregation_aware: true,
+            inflight_budget: None,
+            adaptive_budget: false,
+            commit_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl IngestCfg {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_workers == 0 {
+            bail!("need at least one worker");
+        }
+        if self.rows == 0 {
+            bail!("rows must be > 0");
+        }
+        if self.seq < 3 {
+            bail!("seq must be >= 3 (prompt + at least one generated token)");
+        }
+        if self.vocab == 0 {
+            bail!("vocab must be > 0");
+        }
+        Ok(())
+    }
+}
+
+/// Deterministically synthesize one step's staged tensors and its
+/// controller-side per-row advantages. The batch has the shape the real
+/// ExpPrep output has — tokens, loss mask, broadcast advantages,
+/// reference logprobs — seeded by `(cfg.seed, step)` so every run of
+/// the same config walks the same data.
+pub fn synthetic_step(
+    cfg: &IngestCfg,
+    step: u64,
+) -> Result<(StepPayload, Vec<f32>)> {
+    let mut rng = Pcg64::new(
+        cfg.seed ^ step.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1),
+    );
+    let (rows, seq, vocab) = (cfg.rows, cfg.seq, cfg.vocab);
+    let mut tokens = vec![0i32; rows * seq];
+    let mut mask = vec![0.0f32; rows * seq];
+    let mut refs = vec![0.0f32; rows * seq];
+    let mut rewards = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let prompt = 2usize;
+        let gen = 1 + rng.below(seq - prompt);
+        for t in 0..seq {
+            let o = r * seq + t;
+            refs[o] = -(0.25 + rng.f32());
+            if t < prompt + gen {
+                tokens[o] = rng.below(vocab) as i32;
+            }
+            if t >= prompt && t < prompt + gen {
+                mask[o] = 1.0;
+            }
+        }
+        rewards.push(*rng.choose(&[-1.0f32, 0.0, 1.0]));
+    }
+    // The aggregation step the paper routes through the controller:
+    // advantages are whitened across the *whole* batch — no single
+    // worker could compute them from its shard alone.
+    let mut advantages = rewards;
+    whiten(&mut advantages);
+    // Broadcast over each row's generated positions (the dispatched
+    // tensor form, staged for aggregation-unaware comparison runs).
+    let mut adv_tensor = vec![0.0f32; rows * seq];
+    for r in 0..rows {
+        for t in 0..seq {
+            let o = r * seq + t;
+            if mask[o] > 0.0 {
+                adv_tensor[o] = advantages[r];
+            }
+        }
+    }
+    let payload = StepPayload::new(vec![
+        DispatchTensor::from_i32(WireTensorId::Tokens, rows, seq, &tokens)?,
+        DispatchTensor::from_f32(WireTensorId::Mask, rows, seq, &mask)?,
+        DispatchTensor::from_f32(
+            WireTensorId::Advantages,
+            rows,
+            seq,
+            &adv_tensor,
+        )?,
+        DispatchTensor::from_f32(WireTensorId::RefLogprobs, rows, seq, &refs)?,
+    ])?;
+    Ok((payload, advantages))
+}
+
+/// One ingestion step's record.
+#[derive(Debug, Clone)]
+pub struct IngestStepRecord {
+    /// Optimizer step after the update.
+    pub step: u64,
+    /// Mean loss per generated token (deterministic across deployments).
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub rows: u64,
+    pub gen_tokens: u64,
+    /// Payload bytes the dispatcher moved (0 in local mode).
+    pub dispatch_bytes: u64,
+    /// Bytes kept on the controller by aggregation-aware planning.
+    pub controller_bytes: u64,
+    /// Measured scatter window (0 in local mode).
+    pub dispatch_seconds: f64,
+    pub stall_seconds: f64,
+    /// Budget the scatter ran under (after AIMD); 0 = unlimited.
+    pub budget_bytes: u64,
+}
+
+impl IngestStepRecord {
+    /// The deployment-independent fields — what a multi-process run
+    /// must reproduce from the serial reference, step for step.
+    pub fn training_row(&self) -> (u64, f64, f64, u64, u64) {
+        (self.step, self.loss, self.grad_norm, self.rows, self.gen_tokens)
+    }
+}
+
+/// Coordinator of a remote-ingestion run; see the module docs for the
+/// step anatomy.
+pub struct IngestCoordinator {
+    pub cfg: IngestCfg,
+    pub model: IngestModel,
+    /// Worker-reported per-step metrics merge here (never overwrite).
+    pub metrics: MetricsLog,
+    pub records: Vec<IngestStepRecord>,
+    runtime: Option<TcpRuntime>,
+    budget: Option<AimdBudget>,
+}
+
+impl IngestCoordinator {
+    /// Serial reference deployment: the coordinator computes every
+    /// worker's partial update itself — no sockets, identical math.
+    pub fn local(cfg: IngestCfg) -> Result<IngestCoordinator> {
+        cfg.validate()?;
+        Ok(Self::assemble(cfg, None))
+    }
+
+    /// Multi-process deployment: one `earl worker --ingest` address per
+    /// consumer-layout worker.
+    pub fn connect(
+        cfg: IngestCfg,
+        addrs: Vec<SocketAddr>,
+    ) -> Result<IngestCoordinator> {
+        cfg.validate()?;
+        if addrs.len() != cfg.n_workers {
+            bail!(
+                "{} worker addresses for {} workers",
+                addrs.len(),
+                cfg.n_workers
+            );
+        }
+        let pool =
+            Arc::new(ThreadPool::new(send_pool_threads(cfg.n_workers.max(2))));
+        let runtime = TcpRuntime::connect_remote(addrs, None, pool)
+            .context("connecting to ingest workers")?;
+        Ok(Self::assemble(cfg, Some(runtime)))
+    }
+
+    fn assemble(cfg: IngestCfg, runtime: Option<TcpRuntime>) -> IngestCoordinator {
+        let budget = match (cfg.adaptive_budget, cfg.inflight_budget) {
+            (true, Some(seed)) => Some(AimdBudget::new(seed)),
+            _ => None,
+        };
+        IngestCoordinator {
+            model: IngestModel::new(cfg.vocab),
+            metrics: MetricsLog::memory(),
+            records: Vec::new(),
+            runtime,
+            budget,
+            cfg,
+        }
+    }
+
+    /// Whether steps go over real sockets.
+    pub fn is_remote(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Run one training step; see the module docs. The model advances
+    /// only after every worker reported and the merge validated — on
+    /// any error (dead worker, missing rows, timeout) the model is
+    /// untouched and the error is surfaced.
+    pub fn step(&mut self) -> Result<IngestStepRecord> {
+        let step = self.model.step;
+        let (full, row_advs) = synthetic_step(&self.cfg, step)?;
+        let consumer = DataLayout::blocked(self.cfg.rows, self.cfg.n_workers);
+        let ship = if self.cfg.aggregation_aware {
+            full.wire_subset()?
+        } else {
+            full.clone()
+        };
+        let controller_bytes = full.total_bytes() - ship.total_bytes();
+
+        let mut requests: Vec<(usize, IngestRequest)> = Vec::new();
+        for dst in 0..self.cfg.n_workers {
+            let rows: Vec<u32> =
+                consumer.items_of(dst).into_iter().map(|i| i as u32).collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let advantages =
+                rows.iter().map(|&r| row_advs[r as usize]).collect();
+            requests.push((
+                dst,
+                IngestRequest {
+                    step,
+                    worker: dst as u32,
+                    vocab: self.cfg.vocab as u32,
+                    hp: self.cfg.hp,
+                    rows,
+                    advantages,
+                    params: self.model.w.clone(),
+                },
+            ));
+        }
+
+        let mut rec = IngestStepRecord {
+            step: step + 1,
+            loss: 0.0,
+            grad_norm: 0.0,
+            rows: 0,
+            gen_tokens: 0,
+            dispatch_bytes: 0,
+            controller_bytes,
+            dispatch_seconds: 0.0,
+            stall_seconds: 0.0,
+            budget_bytes: 0,
+        };
+
+        let reports: Vec<WorkerReport> = match &self.runtime {
+            Some(rt) => {
+                let plan = plan_ingest(&consumer, ship.item_bytes());
+                let budget_now = match &self.budget {
+                    Some(b) => Some(b.current()),
+                    None => self.cfg.inflight_budget,
+                };
+                let out = rt
+                    .execute_opts(
+                        &plan,
+                        ExecOptions {
+                            payload: Some(&ship),
+                            inflight_budget: budget_now,
+                        },
+                    )
+                    .context("dispatching step shards")?;
+                if let Some(b) = self.budget.as_mut() {
+                    b.observe(out.report.stall_seconds);
+                }
+                rec.dispatch_bytes = out.report.bytes;
+                rec.dispatch_seconds = out.report.seconds;
+                rec.stall_seconds = out.report.stall_seconds;
+                rec.budget_bytes = budget_now.unwrap_or(0);
+                rt.ingest_commit(out.epoch, &requests, self.cfg.commit_timeout)
+                    .context("committing step on ingest workers")?
+            }
+            None => {
+                // Serial reference: per-worker partials over the same
+                // wire slicing, in the same worker order.
+                let mut reps = Vec::with_capacity(requests.len());
+                for (_, req) in &requests {
+                    let batch = local_batch(&ship, &req.rows)?;
+                    reps.push(worker_update(req, &batch)?);
+                }
+                reps
+            }
+        };
+
+        let merged = merge_reports(
+            &reports,
+            self.cfg.vocab,
+            self.cfg.hp,
+            self.cfg.rows as u64,
+        )?;
+        // Validate everything fallible — including the worker metrics,
+        // whose histogram arity is content the frame checksum cannot
+        // vouch for — *before* touching the model, so an error anywhere
+        // in this step leaves it untouched.
+        let worker_metrics: Vec<WorkerStepMetrics> = reports
+            .iter()
+            .map(|rep| {
+                WorkerStepMetrics::from_counts(
+                    rep.rows,
+                    rep.gen_tokens,
+                    rep.loss_sum,
+                    rep.update_seconds,
+                    &rep.hist_counts,
+                )
+            })
+            .collect::<Result<_>>()?;
+        // The single mutation site — reached only with a complete,
+        // validated merge.
+        let stats = self.model.apply(&merged)?;
+
+        for m in worker_metrics {
+            // Infallible in practice: every entry above shares the same
+            // bounds and each step key is fresh.
+            self.metrics.record_worker(stats.step, m)?;
+        }
+
+        rec.loss = stats.loss;
+        rec.grad_norm = stats.grad_norm;
+        rec.rows = stats.rows;
+        rec.gen_tokens = stats.gen_tokens;
+        self.records.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Run `steps` consecutive steps, returning the last record.
+    pub fn run(&mut self, steps: u64) -> Result<IngestStepRecord> {
+        let mut last = None;
+        for _ in 0..steps {
+            last = Some(self.step()?);
+        }
+        last.ok_or_else(|| anyhow::anyhow!("run of zero steps"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_steps_are_deterministic_and_vary_by_step() {
+        let cfg = IngestCfg::default();
+        let (a, adv_a) = synthetic_step(&cfg, 3).unwrap();
+        let (b, adv_b) = synthetic_step(&cfg, 3).unwrap();
+        assert_eq!(adv_a, adv_b);
+        assert_eq!(a.total_bytes(), b.total_bytes());
+        for (ta, tb) in a.tensors().iter().zip(b.tensors()) {
+            assert_eq!(ta.bytes(), tb.bytes());
+        }
+        let (c, _) = synthetic_step(&cfg, 4).unwrap();
+        assert!(
+            a.tensors()[0].bytes() != c.tensors()[0].bytes(),
+            "different steps must draw different batches"
+        );
+    }
+
+    #[test]
+    fn local_run_learns_and_is_reproducible() {
+        let cfg = IngestCfg { rows: 8, ..IngestCfg::default() };
+        let mut a = IngestCoordinator::local(cfg.clone()).unwrap();
+        let mut b = IngestCoordinator::local(cfg).unwrap();
+        for _ in 0..4 {
+            let ra = a.step().unwrap();
+            let rb = b.step().unwrap();
+            assert_eq!(ra.training_row(), rb.training_row());
+            assert!(ra.loss.is_finite() && ra.grad_norm.is_finite());
+            assert_eq!(ra.rows, 8);
+        }
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.model.step, 4);
+        assert!(
+            a.model.w.iter().any(|&w| w != 0.0),
+            "four updates must move the parameters"
+        );
+        // Worker metrics merged per step: all rows accounted for.
+        for m in a.metrics.worker_steps.values() {
+            assert_eq!(m.rows, 8);
+            assert_eq!(m.row_tokens.total(), 8);
+        }
+    }
+
+    #[test]
+    fn aggregation_aware_controller_bytes_accounting() {
+        let cfg = IngestCfg::default();
+        let mut aware = IngestCoordinator::local(cfg.clone()).unwrap();
+        let mut unaware = IngestCoordinator::local(IngestCfg {
+            aggregation_aware: false,
+            ..cfg
+        })
+        .unwrap();
+        let ra = aware.step().unwrap();
+        let ru = unaware.step().unwrap();
+        // The advantages tensor stays behind: rows × seq × 4 bytes.
+        assert_eq!(
+            ra.controller_bytes,
+            (aware.cfg.rows * aware.cfg.seq * 4) as u64
+        );
+        assert_eq!(ru.controller_bytes, 0);
+        // Identical learning either way — the advantages reach the
+        // workers through the commit frame regardless.
+        assert_eq!(ra.training_row(), ru.training_row());
+        assert_eq!(aware.model, unaware.model);
+    }
+
+    #[test]
+    fn worker_split_changes_fold_order_but_stays_deterministic() {
+        // 1-worker and 2-worker layouts fold partial gradients in a
+        // different order; each must be internally reproducible.
+        let one = IngestCfg { n_workers: 1, ..IngestCfg::default() };
+        let two = IngestCfg { n_workers: 2, ..IngestCfg::default() };
+        let mut a1 = IngestCoordinator::local(one.clone()).unwrap();
+        let mut b1 = IngestCoordinator::local(one).unwrap();
+        let mut a2 = IngestCoordinator::local(two).unwrap();
+        for _ in 0..3 {
+            a1.step().unwrap();
+            b1.step().unwrap();
+            a2.step().unwrap();
+        }
+        assert_eq!(a1.model, b1.model);
+        assert_eq!(a1.model.step, a2.model.step);
+    }
+
+    #[test]
+    fn cfg_validation_rejects_degenerate_shapes() {
+        assert!(IngestCfg { rows: 0, ..IngestCfg::default() }
+            .validate()
+            .is_err());
+        assert!(IngestCfg { seq: 2, ..IngestCfg::default() }
+            .validate()
+            .is_err());
+        assert!(IngestCfg { n_workers: 0, ..IngestCfg::default() }
+            .validate()
+            .is_err());
+        assert!(IngestCfg { vocab: 0, ..IngestCfg::default() }
+            .validate()
+            .is_err());
+        // connect() insists on one address per worker.
+        assert!(IngestCoordinator::connect(
+            IngestCfg::default(),
+            vec!["127.0.0.1:1".parse().unwrap()],
+        )
+        .is_err());
+    }
+}

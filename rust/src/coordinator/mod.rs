@@ -4,17 +4,22 @@
 //! or through the overlapped step pipeline ([`pipeline`]).
 //!
 //! The trainer and the PJRT-backed stages need the `xla` feature; the
-//! dispatch stage (worker, plans, real payloads) and batch packing are
-//! available to `--no-default-features` builds.
+//! dispatch stage (worker, plans, real payloads), batch packing, and
+//! the remote-ingestion coordinator ([`ingest`]) are available to
+//! `--no-default-features` builds.
 
 pub mod exp_prep;
+pub mod ingest;
 pub mod pipeline;
 #[cfg(feature = "xla")]
 pub mod trainer;
 
 pub use exp_prep::{
-    dispatch_payload, pack_episodes, packed_payload, payload_item_bytes,
-    train_bucket, PackedBatch,
+    controller_item_bytes, dispatch_payload, pack_episodes, packed_payload,
+    payload_item_bytes, train_bucket, wire_item_bytes, PackedBatch,
+};
+pub use ingest::{
+    synthetic_step, IngestCfg, IngestCoordinator, IngestStepRecord,
 };
 #[cfg(feature = "xla")]
 pub use exp_prep::prepare;

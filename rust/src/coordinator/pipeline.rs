@@ -155,6 +155,15 @@ pub struct DispatchJob {
     /// Per-NIC in-flight-bytes budget for the backpressure scheduler
     /// (`None` = unlimited).
     pub inflight_budget: Option<u64>,
+    /// Adapt the in-flight budget across steps with the dispatch
+    /// worker's AIMD controller, seeded from `inflight_budget` and fed
+    /// the observed `stall_seconds` of every TCP execute. Inert without
+    /// a seed budget or for the simulated modes.
+    pub adaptive_budget: bool,
+    /// Bytes of this step's batch that aggregation-aware planning kept
+    /// on the controller instead of dispatching (0 when the whole
+    /// payload ships) — passed through to the result for metrics.
+    pub controller_bytes: u64,
     /// Standalone worker-process addresses (one per worker) for
     /// `DispatchMode::Tcp`; `None` = in-process loopback workers.
     pub remote: Option<Arc<Vec<SocketAddr>>>,
@@ -181,6 +190,12 @@ pub struct DispatchResult {
     /// Seconds completions were awaited while ready transfers sat
     /// budget-blocked (TCP mode; 0 simulated).
     pub stall_seconds: f64,
+    /// Bytes aggregation-aware planning kept on the controller (echo of
+    /// [`DispatchJob::controller_bytes`]).
+    pub controller_bytes: u64,
+    /// The per-NIC in-flight budget this execute actually ran under
+    /// (after AIMD adaptation); 0 = unlimited.
+    pub inflight_budget_bytes: u64,
 }
 
 /// Cached TCP runtime keyed by the job shape that created it.
@@ -189,6 +204,9 @@ struct TcpCache {
     nic_bytes_per_sec: Option<f64>,
     remote: Option<Arc<Vec<SocketAddr>>>,
     runtime: TcpRuntime,
+    /// AIMD state of the adaptive in-flight budget, seeded lazily from
+    /// the first adaptive job's `inflight_budget`.
+    aimd: Option<crate::dispatch::tcp::AimdBudget>,
 }
 
 fn run_job(
@@ -211,6 +229,8 @@ fn run_job(
                 connections_opened: 0,
                 inflight_peak_bytes: 0,
                 stall_seconds: 0.0,
+                controller_bytes: job.controller_bytes,
+                inflight_budget_bytes: 0,
             })
         }
         DispatchMode::Tcp => {
@@ -252,17 +272,37 @@ fn run_job(
                     nic_bytes_per_sec: job.nic_bytes_per_sec,
                     remote: job.remote.clone(),
                     runtime,
+                    aimd: None,
                 });
             }
-            let runtime = &tcp.as_ref().unwrap().runtime;
-            let outcome = runtime.execute_opts(
+            // Resolve the effective budget: the AIMD controller adapts a
+            // seeded budget across steps from each execute's observed
+            // stall; non-adaptive jobs pass their budget through.
+            let effective = {
+                let cache = tcp.as_mut().unwrap();
+                match (job.adaptive_budget, job.inflight_budget) {
+                    (true, Some(seed)) => {
+                        let aimd = cache.aimd.get_or_insert_with(|| {
+                            crate::dispatch::tcp::AimdBudget::new(seed)
+                        });
+                        Some(aimd.current())
+                    }
+                    (_, budget) => budget,
+                }
+            };
+            let outcome = tcp.as_ref().unwrap().runtime.execute_opts(
                 &job.plan,
                 ExecOptions {
                     payload: job.payload.as_deref(),
-                    inflight_budget: job.inflight_budget,
+                    inflight_budget: effective,
                 },
             )?;
             let report = outcome.report;
+            if job.adaptive_budget {
+                if let Some(aimd) = tcp.as_mut().unwrap().aimd.as_mut() {
+                    aimd.observe(report.stall_seconds);
+                }
+            }
             Ok(DispatchResult {
                 step: job.step,
                 modeled_seconds: report.seconds,
@@ -272,6 +312,8 @@ fn run_job(
                 connections_opened: report.connections_opened,
                 inflight_peak_bytes: report.inflight_peak_bytes,
                 stall_seconds: report.stall_seconds,
+                controller_bytes: job.controller_bytes,
+                inflight_budget_bytes: effective.unwrap_or(0),
             })
         }
     }
@@ -539,6 +581,8 @@ mod tests {
             nic_bytes_per_sec: None,
             payload: None,
             inflight_budget: None,
+            adaptive_budget: false,
+            controller_bytes: 0,
             remote: None,
         }
     }
@@ -598,6 +642,31 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_budget_threads_through_tcp_jobs() {
+        let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));
+        let seed = 1u64 << 20;
+        let mk = |step: u64| {
+            let mut j = job(step, DispatchMode::Tcp);
+            j.inflight_budget = Some(seed);
+            j.adaptive_budget = true;
+            j
+        };
+        w.submit(mk(0)).unwrap();
+        let first = w.recv().unwrap();
+        // The first adaptive execute runs under the seeded budget.
+        assert_eq!(first.inflight_budget_bytes, seed);
+        w.submit(mk(1)).unwrap();
+        let second = w.recv().unwrap();
+        // A roomy budget over tiny transfers never stalls, so AIMD can
+        // only have grown (additive increase) between steps.
+        assert!(
+            second.inflight_budget_bytes >= seed,
+            "budget shrank without a stall: {}",
+            second.inflight_budget_bytes
+        );
+    }
+
+    #[test]
     fn dispatch_overlaps_caller_work() {
         // A paced TCP job takes ~>100ms; the caller does its own work
         // meanwhile. If the worker were synchronous the elapsed time
@@ -616,6 +685,8 @@ mod tests {
             nic_bytes_per_sec: nic,
             payload: None,
             inflight_budget: None,
+            adaptive_budget: false,
+            controller_bytes: 0,
             remote: None,
         })
         .unwrap();
@@ -631,6 +702,8 @@ mod tests {
             nic_bytes_per_sec: nic,
             payload: None,
             inflight_budget: None,
+            adaptive_budget: false,
+            controller_bytes: 0,
             remote: None,
         })
         .unwrap();

@@ -341,13 +341,30 @@ impl Trainer {
     /// belongs to. The payload is serialized here — and only for the
     /// TCP mode, which actually moves bytes; the simulated modes plan
     /// with the same byte counts but never stage.
+    ///
+    /// With `cfg.dispatch_aggregation_aware` (on by default, paper
+    /// §3.3) only the tensors with no cross-rank aggregation dependency
+    /// — tokens, loss mask, reference logprobs — are planned and
+    /// staged; the aggregated advantages stay on the controller and are
+    /// accounted as `controller_bytes` in the step record.
     fn submit_dispatch(&mut self, staged: &StagedStep, step: u64) -> Result<()> {
         let n_items = staged.train_batch.tokens.batch;
         let producer = DataLayout::round_robin(n_items, self.dispatch_workers);
         let consumer = DataLayout::blocked(n_items, self.dispatch_workers);
+        let aware = self.cfg.dispatch_aggregation_aware;
         // Shard size == serialized row size, so the plan's byte
         // accounting is exactly what the wire carries in TCP mode.
-        let shard = exp_prep::payload_item_bytes(&staged.train_batch);
+        let shard = if aware {
+            exp_prep::wire_item_bytes(&staged.train_batch)
+        } else {
+            exp_prep::payload_item_bytes(&staged.train_batch)
+        };
+        let controller_bytes = if aware {
+            exp_prep::controller_item_bytes(&staged.train_batch)
+                * n_items as u64
+        } else {
+            0
+        };
         let plan = match self.dispatch_mode {
             DispatchMode::Simulated | DispatchMode::Tcp => {
                 plan_alltoall(&producer, &consumer, shard)
@@ -357,9 +374,12 @@ impl Trainer {
             }
         };
         let payload = match self.dispatch_mode {
-            DispatchMode::Tcp => Some(Arc::new(exp_prep::dispatch_payload(
-                &staged.train_batch,
-            )?)),
+            DispatchMode::Tcp => {
+                let full = exp_prep::dispatch_payload(&staged.train_batch)?;
+                let staged_payload =
+                    if aware { full.wire_subset()? } else { full };
+                Some(Arc::new(staged_payload))
+            }
             _ => None,
         };
         self.dispatcher.submit(DispatchJob {
@@ -370,6 +390,8 @@ impl Trainer {
             nic_bytes_per_sec: self.dispatch_nic,
             payload,
             inflight_budget: self.dispatch_inflight_budget,
+            adaptive_budget: self.cfg.dispatch_budget_adaptive,
+            controller_bytes,
             remote: self.dispatch_remote.clone(),
         })
     }
@@ -395,8 +417,10 @@ impl Trainer {
             dispatch_seconds: 0.0,
             dispatch_wall_seconds: 0.0,
             dispatch_bytes: 0,
+            dispatch_controller_bytes: 0,
             dispatch_inflight_peak_bytes: 0,
             dispatch_stall_seconds: 0.0,
+            dispatch_budget_bytes: 0,
             train_seconds: 0.0,
             step_wall_seconds: 0.0,
             param_staleness: staged.param_staleness,
@@ -433,6 +457,20 @@ impl Trainer {
         Ok(PendingStep { rec })
     }
 
+    /// Copy a dispatch result's metrics into a step record — the single
+    /// definition both the serial/overlapped and async join paths use,
+    /// so a new `DispatchResult` field cannot be recorded in one path
+    /// and silently zeroed in the other.
+    fn apply_dispatch(rec: &mut StepRecord, d: &DispatchResult) {
+        rec.dispatch_seconds = d.modeled_seconds;
+        rec.dispatch_wall_seconds = d.wall_seconds;
+        rec.dispatch_bytes = d.bytes;
+        rec.dispatch_controller_bytes = d.controller_bytes;
+        rec.dispatch_inflight_peak_bytes = d.inflight_peak_bytes;
+        rec.dispatch_stall_seconds = d.stall_seconds;
+        rec.dispatch_budget_bytes = d.inflight_budget_bytes;
+    }
+
     /// Join the dispatch result into the step record and commit it.
     fn finalize(
         &mut self,
@@ -440,11 +478,7 @@ impl Trainer {
         d: DispatchResult,
     ) -> Result<StepRecord> {
         let mut rec = pend.rec;
-        rec.dispatch_seconds = d.modeled_seconds;
-        rec.dispatch_wall_seconds = d.wall_seconds;
-        rec.dispatch_bytes = d.bytes;
-        rec.dispatch_inflight_peak_bytes = d.inflight_peak_bytes;
-        rec.dispatch_stall_seconds = d.stall_seconds;
+        Self::apply_dispatch(&mut rec, &d);
         rec.step_wall_seconds = self.step_t0.elapsed().as_secs_f64();
         self.step_t0 = Instant::now();
         self.metrics.record(rec.clone())?;
@@ -513,11 +547,7 @@ impl Trainer {
         rec.entropy = u.stats.entropy as f64;
         rec.train_seconds = u.train_seconds;
         let d = self.dispatcher.recv()?;
-        rec.dispatch_seconds = d.modeled_seconds;
-        rec.dispatch_wall_seconds = d.wall_seconds;
-        rec.dispatch_bytes = d.bytes;
-        rec.dispatch_inflight_peak_bytes = d.inflight_peak_bytes;
-        rec.dispatch_stall_seconds = d.stall_seconds;
+        Self::apply_dispatch(&mut rec, &d);
         rec.step_wall_seconds = self.step_t0.elapsed().as_secs_f64();
         self.step_t0 = Instant::now();
         self.metrics.record(rec.clone())?;

@@ -1,0 +1,464 @@
+//! Remote worker ingestion: turn a reassembled [`ReceivedBatch`] into a
+//! **worker-local update step** — the consuming half of the paper §3.3
+//! dispatcher, where receivers *do work* instead of merely verifying
+//! bytes.
+//!
+//! ## The host update model
+//!
+//! Multi-process workers run without the XLA toolchain (the `earl
+//! worker` binary builds `--no-default-features`), so the distributed
+//! update step operates on a deterministic **host model**: one weight
+//! per vocabulary token (`IngestModel`), trained with the same
+//! REINFORCE-shaped surrogate the dispatched tensors describe. For a
+//! generated position with token `v`, mask `m > 0`, advantage `A`
+//! (aggregated on the controller) and reference logprob `r`:
+//!
+//! ```text
+//! loss += −A·w[v] + ½·l2·(w[v] − r)²        (policy-gradient + KL-anchor pull)
+//! grad[v] += −A + l2·(w[v] − r)
+//! ```
+//!
+//! The gradient of a batch is the sum of its workers' partial
+//! gradients, so a data-parallel run merges partials **in worker
+//! order** and is bit-identical to the serial reference that computes
+//! the same partials locally ([`local_batch`] serializes through the
+//! exact same wire slicing the TCP path uses).
+//!
+//! ## Aggregation-aware routing (paper §3.3)
+//!
+//! Only tensors with no cross-rank aggregation dependency (tokens, loss
+//! mask, reference logprobs) ride the peer-to-peer dispatch; the
+//! aggregated per-row advantages — whitened across the *whole* batch —
+//! stay on the controller and reach each worker inside its
+//! [`IngestRequest`] commit frame, together with the broadcast
+//! parameters and hyperparameters. `dispatch_bytes` shrinks by exactly
+//! the advantages tensor.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dispatch::layout::ItemId;
+use crate::dispatch::wire::{
+    IngestHp, IngestRequest, ReceivedBatch, StepPayload, TransferPayload,
+    WireTensorId, WorkerReport,
+};
+use crate::metrics::INGEST_ROW_TOKENS_BOUNDS;
+use crate::util::stats::Histogram;
+
+/// The coordinator-side host model the distributed update steps train:
+/// one f32 weight per vocabulary token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IngestModel {
+    /// Weight vector, length == vocab.
+    pub w: Vec<f32>,
+    /// Optimizer steps applied.
+    pub step: u64,
+}
+
+impl IngestModel {
+    pub fn new(vocab: usize) -> IngestModel {
+        IngestModel { w: vec![0.0; vocab], step: 0 }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Apply a fully-merged update: one SGD step normalized by the
+    /// batch's generated-token count (a single division site keeps the
+    /// arithmetic order identical between serial and distributed runs).
+    pub fn apply(&mut self, merged: &MergedUpdate) -> Result<IngestStats> {
+        if merged.grad.len() != self.w.len() {
+            bail!(
+                "merged gradient has {} entries for a {}-token model",
+                merged.grad.len(),
+                self.w.len()
+            );
+        }
+        if merged.step != self.step {
+            bail!(
+                "merged update is for step {}, model is at step {}",
+                merged.step,
+                self.step
+            );
+        }
+        let denom = merged.gen_tokens.max(1) as f32;
+        let scale = merged.hp.lr / denom;
+        let mut norm_sq = 0.0f64;
+        for (w, g) in self.w.iter_mut().zip(&merged.grad) {
+            norm_sq += (*g as f64) * (*g as f64);
+            *w -= scale * *g;
+        }
+        self.step += 1;
+        Ok(IngestStats {
+            step: self.step,
+            loss: merged.loss_sum / merged.gen_tokens.max(1) as f64,
+            grad_norm: norm_sq.sqrt(),
+            rows: merged.rows,
+            gen_tokens: merged.gen_tokens,
+        })
+    }
+}
+
+/// Scalars of one applied distributed update.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IngestStats {
+    /// Optimizer step after the update.
+    pub step: u64,
+    /// Mean loss per generated token.
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub rows: u64,
+    pub gen_tokens: u64,
+}
+
+/// All worker partials of one step, merged in worker order and
+/// validated for completeness — the only thing [`IngestModel::apply`]
+/// accepts, so a missing or duplicate worker can never half-apply.
+#[derive(Debug, Clone)]
+pub struct MergedUpdate {
+    pub step: u64,
+    pub hp: IngestHp,
+    pub rows: u64,
+    pub gen_tokens: u64,
+    pub loss_sum: f64,
+    pub grad: Vec<f32>,
+}
+
+fn le_f32(b: &[u8], i: usize) -> f32 {
+    f32::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap())
+}
+
+fn le_i32(b: &[u8], i: usize) -> i32 {
+    i32::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap())
+}
+
+/// Run the worker-local update step over a reassembled batch: exactly
+/// the rows the request names, in request order. Total function over
+/// hostile input — a missing row, shape mismatch, or out-of-vocab token
+/// is a deterministic error (the coordinator surfaces it; nothing is
+/// half-consumed).
+pub fn worker_update(
+    req: &IngestRequest,
+    batch: &ReceivedBatch,
+) -> Result<WorkerReport> {
+    let t0 = Instant::now();
+    let vocab = req.vocab as usize;
+    if req.params.len() != vocab {
+        bail!(
+            "request carries {} params for vocab {vocab}",
+            req.params.len()
+        );
+    }
+    if req.advantages.len() != req.rows.len() {
+        bail!(
+            "request has {} advantages for {} rows",
+            req.advantages.len(),
+            req.rows.len()
+        );
+    }
+    let tokens = batch
+        .tensor(WireTensorId::Tokens)
+        .ok_or_else(|| anyhow!("no tokens tensor arrived"))?;
+    let mask = batch
+        .tensor(WireTensorId::Mask)
+        .ok_or_else(|| anyhow!("no mask tensor arrived"))?;
+    // Reference logprobs are optional (payloads staged without a
+    // reference model anchor to w = 0 via rlp = 0).
+    let refs = batch.tensor(WireTensorId::RefLogprobs);
+
+    let mut grad = vec![0.0f32; vocab];
+    let mut loss_sum = 0.0f64;
+    let mut gen_tokens = 0u64;
+    let mut hist = Histogram::new(INGEST_ROW_TOKENS_BOUNDS.to_vec());
+
+    for (i, &row) in req.rows.iter().enumerate() {
+        let r = row as usize;
+        let tok = tokens
+            .row(r)
+            .ok_or_else(|| anyhow!("row {r} of tokens never arrived"))?;
+        let msk = mask
+            .row(r)
+            .ok_or_else(|| anyhow!("row {r} of mask never arrived"))?;
+        if tok.len() != msk.len() {
+            bail!(
+                "row {r}: tokens are {} bytes but mask is {}",
+                tok.len(),
+                msk.len()
+            );
+        }
+        let rlp = match refs {
+            Some(t) => Some(
+                t.row(r)
+                    .ok_or_else(|| anyhow!("row {r} of ref logprobs never arrived"))?,
+            ),
+            None => None,
+        };
+        if let Some(rl) = rlp {
+            if rl.len() != tok.len() {
+                bail!(
+                    "row {r}: tokens are {} bytes but ref logprobs are {}",
+                    tok.len(),
+                    rl.len()
+                );
+            }
+        }
+        let adv = req.advantages[i];
+        let seq = tok.len() / 4;
+        let mut row_gen = 0u64;
+        for t in 0..seq {
+            if le_f32(msk, t) <= 0.0 {
+                continue;
+            }
+            let id = le_i32(tok, t);
+            if id < 0 || id as usize >= vocab {
+                bail!("row {r} position {t}: token {id} outside vocab {vocab}");
+            }
+            let v = id as usize;
+            let r_lp = rlp.map(|b| le_f32(b, t)).unwrap_or(0.0);
+            let w = req.params[v];
+            grad[v] += -adv + req.hp.l2 * (w - r_lp);
+            let l = -adv * w + 0.5 * req.hp.l2 * (w - r_lp) * (w - r_lp);
+            loss_sum += l as f64;
+            row_gen += 1;
+        }
+        gen_tokens += row_gen;
+        hist.add(row_gen as f64);
+    }
+
+    Ok(WorkerReport {
+        worker: req.worker,
+        step: req.step,
+        rows: req.rows.len() as u64,
+        gen_tokens,
+        loss_sum,
+        update_seconds: t0.elapsed().as_secs_f64(),
+        grad,
+        hist_counts: hist.counts().to_vec(),
+    })
+}
+
+/// Merge worker partials into one applicable update. Validation is the
+/// no-partial-merge guarantee: reports must come from distinct workers,
+/// agree on the step, carry full-vocab gradients, and together cover
+/// exactly `expect_rows` rows — anything else is an error and the model
+/// stays untouched. Callers pass reports sorted ascending by worker id;
+/// the fold order is part of the determinism contract.
+pub fn merge_reports(
+    reports: &[WorkerReport],
+    vocab: usize,
+    hp: IngestHp,
+    expect_rows: u64,
+) -> Result<MergedUpdate> {
+    let Some(first) = reports.first() else {
+        bail!("no worker reports to merge");
+    };
+    let step = first.step;
+    let mut grad = vec![0.0f32; vocab];
+    let mut rows = 0u64;
+    let mut gen_tokens = 0u64;
+    let mut loss_sum = 0.0f64;
+    let mut last_worker: Option<u32> = None;
+    for rep in reports {
+        if rep.step != step {
+            bail!("report from worker {} is for step {}, expected {step}", rep.worker, rep.step);
+        }
+        if let Some(prev) = last_worker {
+            if rep.worker <= prev {
+                bail!(
+                    "reports out of worker order: {} after {prev}",
+                    rep.worker
+                );
+            }
+        }
+        last_worker = Some(rep.worker);
+        if rep.grad.len() != vocab {
+            bail!(
+                "worker {} reported a {}-entry gradient for vocab {vocab}",
+                rep.worker,
+                rep.grad.len()
+            );
+        }
+        for (g, d) in grad.iter_mut().zip(&rep.grad) {
+            *g += *d;
+        }
+        rows += rep.rows;
+        gen_tokens += rep.gen_tokens;
+        loss_sum += rep.loss_sum;
+    }
+    if rows != expect_rows {
+        bail!("reports cover {rows} rows, step dispatched {expect_rows}");
+    }
+    Ok(MergedUpdate { step, hp, rows, gen_tokens, loss_sum, grad })
+}
+
+/// Build the exact [`ReceivedBatch`] a remote worker would reassemble
+/// for `rows` — serialized through the same [`TransferPayload`] slicing
+/// the TCP path uses, so the serial reference consumes byte-identical
+/// input to the multi-process run.
+pub fn local_batch(payload: &StepPayload, rows: &[u32]) -> Result<ReceivedBatch> {
+    let items: Vec<ItemId> = rows.iter().map(|&r| r as usize).collect();
+    let tp = TransferPayload::for_items(payload, &items)?;
+    let mut batch = ReceivedBatch::new();
+    for (desc, view) in &tp.shards {
+        batch.insert(desc, view.as_slice())?;
+    }
+    Ok(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::wire::DispatchTensor;
+
+    /// 4 rows × 4 cols; tokens = row index everywhere; row r has r+1
+    /// generated positions; ref logprobs are a constant −0.5.
+    fn payload(vocab: usize) -> StepPayload {
+        let (rows, cols) = (4usize, 4usize);
+        let tokens: Vec<i32> = (0..rows * cols)
+            .map(|i| ((i / cols) % vocab) as i32)
+            .collect();
+        let mask: Vec<f32> = (0..rows * cols)
+            .map(|i| if (i % cols) <= (i / cols) { 1.0 } else { 0.0 })
+            .collect();
+        let refs = vec![-0.5f32; rows * cols];
+        StepPayload::new(vec![
+            DispatchTensor::from_i32(WireTensorId::Tokens, rows, cols, &tokens)
+                .unwrap(),
+            DispatchTensor::from_f32(WireTensorId::Mask, rows, cols, &mask)
+                .unwrap(),
+            DispatchTensor::from_f32(WireTensorId::RefLogprobs, rows, cols, &refs)
+                .unwrap(),
+        ])
+        .unwrap()
+    }
+
+    fn request(worker: u32, rows: Vec<u32>, vocab: usize) -> IngestRequest {
+        let advantages = rows.iter().map(|&r| 1.0 - r as f32).collect();
+        IngestRequest {
+            step: 0,
+            worker,
+            vocab: vocab as u32,
+            hp: IngestHp { lr: 0.5, l2: 0.0 },
+            rows,
+            advantages,
+            params: vec![0.0; vocab],
+        }
+    }
+
+    #[test]
+    fn worker_update_computes_the_surrogate_gradient() {
+        let p = payload(4);
+        let req = request(0, vec![0, 1], 4);
+        let batch = local_batch(&p, &req.rows).unwrap();
+        let rep = worker_update(&req, &batch).unwrap();
+        // Row 0: token 0, 1 generated position, adv 1.0 → grad[0] = −1.
+        // Row 1: token 1, 2 generated positions, adv 0.0 → grad[1] = 0.
+        assert_eq!(rep.grad, vec![-1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(rep.rows, 2);
+        assert_eq!(rep.gen_tokens, 3);
+        // At w = 0, l2 = 0 the loss is exactly 0.
+        assert_eq!(rep.loss_sum, 0.0);
+        // Histogram: one row with 1 generated token, one with 2.
+        let total: u64 = rep.hist_counts.iter().sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn l2_term_pulls_toward_reference() {
+        let p = payload(4);
+        let mut req = request(0, vec![0], 4);
+        req.hp.l2 = 2.0;
+        req.params = vec![1.0; 4];
+        let batch = local_batch(&p, &req.rows).unwrap();
+        let rep = worker_update(&req, &batch).unwrap();
+        // grad[0] = −adv + l2·(w − r) = −1 + 2·(1 − (−0.5)) = 2.
+        assert_eq!(rep.grad[0], 2.0);
+        // loss = −1·1 + ½·2·1.5² = 1.25.
+        assert!((rep.loss_sum - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_workers_merge_to_the_single_worker_result() {
+        let p = payload(4);
+        let vocab = 4;
+        let hp = IngestHp { lr: 0.5, l2: 0.0 };
+
+        // One worker over all four rows.
+        let all = request(0, vec![0, 1, 2, 3], vocab);
+        let whole =
+            worker_update(&all, &local_batch(&p, &all.rows).unwrap()).unwrap();
+
+        // Two workers over a 2+2 split (integer-valued grads → the f32
+        // fold order cannot matter here).
+        let a = request(0, vec![0, 1], vocab);
+        let b = request(1, vec![2, 3], vocab);
+        let ra = worker_update(&a, &local_batch(&p, &a.rows).unwrap()).unwrap();
+        let rb = worker_update(&b, &local_batch(&p, &b.rows).unwrap()).unwrap();
+        let merged = merge_reports(&[ra, rb], vocab, hp, 4).unwrap();
+        assert_eq!(merged.grad, whole.grad);
+        assert_eq!(merged.gen_tokens, whole.gen_tokens);
+        assert_eq!(merged.loss_sum, whole.loss_sum);
+
+        // Applying advances the model deterministically.
+        let mut m1 = IngestModel::new(vocab);
+        let mut m2 = IngestModel::new(vocab);
+        let one = merge_reports(&[whole], vocab, hp, 4).unwrap();
+        m1.apply(&one).unwrap();
+        m2.apply(&merged).unwrap();
+        assert_eq!(m1, m2);
+        assert_eq!(m1.step, 1);
+    }
+
+    #[test]
+    fn missing_rows_and_bad_tokens_are_deterministic_errors() {
+        let p = payload(4);
+        let req = request(0, vec![0, 3], 4);
+        // Batch only carries row 0 → row 3 must fail, not half-apply.
+        let batch = local_batch(&p, &[0]).unwrap();
+        assert!(worker_update(&req, &batch).is_err());
+
+        // Token id outside the declared vocab.
+        let tight = request(0, vec![3], 2); // row 3 carries token id 3
+        let batch = local_batch(&p, &tight.rows).unwrap();
+        assert!(worker_update(&tight, &batch).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_partial_and_disordered_reports() {
+        let p = payload(4);
+        let vocab = 4;
+        let hp = IngestHp::default();
+        let a = request(0, vec![0, 1], vocab);
+        let ra = worker_update(&a, &local_batch(&p, &a.rows).unwrap()).unwrap();
+        // Covers 2 of 4 rows → partial merge refused.
+        assert!(merge_reports(&[ra.clone()], vocab, hp, 4).is_err());
+        // Duplicate / out-of-order workers refused.
+        assert!(merge_reports(&[ra.clone(), ra.clone()], vocab, hp, 4).is_err());
+        // Wrong-vocab gradient refused.
+        assert!(merge_reports(&[ra], vocab + 1, hp, 2).is_err());
+        // Empty refused.
+        assert!(merge_reports(&[], vocab, hp, 0).is_err());
+    }
+
+    #[test]
+    fn apply_guards_step_and_shape() {
+        let hp = IngestHp::default();
+        let mut m = IngestModel::new(2);
+        let upd = MergedUpdate {
+            step: 0,
+            hp,
+            rows: 1,
+            gen_tokens: 1,
+            loss_sum: 0.0,
+            grad: vec![1.0, 0.0],
+        };
+        m.apply(&upd).unwrap();
+        // Stale step refused.
+        assert!(m.apply(&upd).is_err());
+        // Wrong-shape gradient refused.
+        let bad = MergedUpdate { grad: vec![0.0; 3], step: 1, ..upd };
+        assert!(m.apply(&bad).is_err());
+    }
+}

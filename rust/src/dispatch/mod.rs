@@ -3,15 +3,21 @@
 //! stages, replacing the single-controller gather-and-scatter (paper §2,
 //! evaluated in §3.3 / Fig. 4; volumes modelled in Tab. 1).
 //!
-//! * [`layout`] — tensor kinds + item→worker layouts.
-//! * [`plan`] — centralized-baseline and all-to-all planners.
-//! * [`wire`] — payload staging, checksummed frame format, reassembly.
+//! * [`layout`] — tensor kinds + item→worker layouts + the §3.3
+//!   aggregation partition.
+//! * [`plan`] — centralized-baseline, all-to-all, and ingest-scatter
+//!   planners.
+//! * [`wire`] — payload staging, checksummed frame format, reassembly,
+//!   ingest commit/result frames.
 //! * [`sim`] — execute plans on the cluster network simulator.
 //! * [`tcp`] — execute plans on real sockets (loopback or multi-process
 //!   workers), carrying the real ExpPrep tensors with backpressure-aware
-//!   scheduling.
+//!   scheduling and worker-side ingestion.
+//! * [`ingest`] — the worker-local update step remote workers run over
+//!   dispatched shards, and its deterministic merge/apply.
 //! * [`payload`] — the Tab. 1 batch-size model.
 
+pub mod ingest;
 pub mod layout;
 pub mod payload;
 pub mod plan;
@@ -19,20 +25,24 @@ pub mod sim;
 pub mod tcp;
 pub mod wire;
 
+pub use ingest::{
+    local_batch, merge_reports, worker_update, IngestModel, IngestStats,
+    MergedUpdate,
+};
 pub use layout::{payload_bytes_per_token, DataLayout, TensorKind};
 pub use payload::{PayloadModel, PAPER_TAB1};
 pub use plan::{
-    item_bytes, plan_alltoall, plan_centralized, satisfies, DispatchPlan,
-    WorkerTransfer,
+    item_bytes, plan_alltoall, plan_centralized, plan_ingest, satisfies,
+    DispatchPlan, WorkerTransfer,
 };
 pub use sim::{simulate_plan, WorkerMap};
 pub use tcp::{
-    execute_plan_tcp, execute_plan_tcp_rated, serve_worker, Ack, ExecOptions,
-    ExecOutcome, TcpReport, TcpRuntime, WorkerOpts, ACK_LEN,
+    execute_plan_tcp, execute_plan_tcp_rated, serve_worker, Ack, AimdBudget,
+    ExecOptions, ExecOutcome, TcpReport, TcpRuntime, WorkerOpts, ACK_LEN,
 };
 pub use wire::{
     contiguous_runs, decode_frame, encode_frame, fnv1a64, ByteView,
-    DispatchTensor, Fnv64, FrameHeader, ReceivedBatch, ShardDesc, StepPayload,
-    TransferPayload, WireDtype, WireTensorId, FRAME_HEADER_LEN,
-    SHARD_DESC_LEN,
+    DispatchTensor, Fnv64, FrameHeader, IngestHp, IngestRequest,
+    ReceivedBatch, ShardDesc, StepPayload, TransferPayload, WireDtype,
+    WireTensorId, WorkerReport, FRAME_HEADER_LEN, SHARD_DESC_LEN,
 };

@@ -142,6 +142,31 @@ pub fn plan_alltoall(
     DispatchPlan { phases: vec![phase], strategy: "alltoall" }
 }
 
+/// Remote-ingestion scatter: the coordinator holds every row and ships
+/// each to its consuming worker — one coalesced transfer per
+/// destination, all out of the coordinator's NIC slot (worker 0), in
+/// one phase. Unlike [`plan_alltoall`], items whose consumer is worker
+/// 0 still move: in a multi-process deployment *every* consumer is a
+/// remote process, so nothing is "already in place".
+pub fn plan_ingest(consumer: &DataLayout, shard_bytes: u64) -> DispatchPlan {
+    let phase: Vec<WorkerTransfer> = (0..consumer.n_workers)
+        .filter_map(|dst| {
+            let items = consumer.items_of(dst);
+            if items.is_empty() {
+                None
+            } else {
+                Some(WorkerTransfer {
+                    src: 0,
+                    dst,
+                    bytes: shard_bytes * items.len() as u64,
+                    items,
+                })
+            }
+        })
+        .collect();
+    DispatchPlan { phases: vec![phase], strategy: "ingest-scatter" }
+}
+
 /// Does a plan leave every item at its consumer-required worker?
 pub fn satisfies(
     plan: &DispatchPlan,
@@ -233,6 +258,29 @@ mod tests {
         for t in &plan.phases[0] {
             assert_eq!(t.bytes, 1234 * t.items.len() as u64);
         }
+    }
+
+    #[test]
+    fn ingest_scatter_covers_every_item_once() {
+        let c = DataLayout::blocked(10, 4);
+        let plan = plan_ingest(&c, 100);
+        assert_eq!(plan.phases.len(), 1);
+        // Every row ships exactly once, to its consumer, from slot 0.
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &plan.phases[0] {
+            assert_eq!(t.src, 0);
+            assert_eq!(t.bytes, 100 * t.items.len() as u64);
+            for &i in &t.items {
+                assert_eq!(c.owner[i], t.dst);
+                assert!(seen.insert(i), "item {i} shipped twice");
+            }
+        }
+        assert_eq!(seen.len(), 10);
+        assert_eq!(plan.total_bytes(), 1000);
+        // A worker with no rows gets no transfer.
+        let sparse = DataLayout { n_workers: 3, owner: vec![0, 0, 2] };
+        let plan = plan_ingest(&sparse, 7);
+        assert_eq!(plan.phases[0].len(), 2);
     }
 
     #[test]

@@ -129,18 +129,34 @@ pub enum WireTensorId {
     Mask,
     Advantages,
     RefLogprobs,
+    /// Control shard carrying a serialized [`IngestRequest`] — the
+    /// coordinator's "everything for this step has arrived; run your
+    /// update" commit, routed through the controller channel together
+    /// with the aggregated quantities (advantages) per paper §3.3.
+    IngestCommit,
     /// Byte-count-only transfers (benches / traffic models) with no
     /// backing tensor; drained and checksummed but never reassembled.
     Synthetic,
 }
 
 impl WireTensorId {
+    /// Every id that can appear on the wire (tests iterate this).
+    pub const ALL: [WireTensorId; 6] = [
+        WireTensorId::Tokens,
+        WireTensorId::Mask,
+        WireTensorId::Advantages,
+        WireTensorId::RefLogprobs,
+        WireTensorId::IngestCommit,
+        WireTensorId::Synthetic,
+    ];
+
     pub fn code(self) -> u16 {
         match self {
             WireTensorId::Tokens => 0,
             WireTensorId::Mask => 1,
             WireTensorId::Advantages => 2,
             WireTensorId::RefLogprobs => 3,
+            WireTensorId::IngestCommit => 0xFFFE,
             WireTensorId::Synthetic => 0xFFFF,
         }
     }
@@ -151,9 +167,20 @@ impl WireTensorId {
             1 => WireTensorId::Mask,
             2 => WireTensorId::Advantages,
             3 => WireTensorId::RefLogprobs,
+            0xFFFE => WireTensorId::IngestCommit,
             0xFFFF => WireTensorId::Synthetic,
             other => bail!("unknown wire tensor id {other}"),
         })
+    }
+
+    /// Whether this tensor participates in *cross-rank aggregation*
+    /// during advantage estimation (paper §3.3): aggregated quantities
+    /// (advantages — derived from rewards/returns whitened across the
+    /// whole batch) route through the controller; everything else is
+    /// exchanged peer-to-peer by the dispatcher. Mirrors
+    /// [`crate::dispatch::layout::TensorKind::needs_aggregation`].
+    pub fn needs_aggregation(self) -> bool {
+        matches!(self, WireTensorId::Advantages)
     }
 }
 
@@ -446,6 +473,34 @@ impl StepPayload {
     /// Serialized bytes of the whole staged batch.
     pub fn total_bytes(&self) -> u64 {
         self.item_bytes() * self.rows() as u64
+    }
+
+    /// Partition the staged tensors by aggregation dependency (paper
+    /// §3.3): `(wire, controller)` — the wire half goes peer-to-peer
+    /// through the dispatcher, the controller half stays with the
+    /// coordinator. Every tensor lands in exactly one half.
+    pub fn partition_aggregation(&self) -> (Vec<DispatchTensor>, Vec<DispatchTensor>) {
+        let mut wire = Vec::new();
+        let mut controller = Vec::new();
+        for t in &self.tensors {
+            if t.id.needs_aggregation() {
+                controller.push(t.clone());
+            } else {
+                wire.push(t.clone());
+            }
+        }
+        (wire, controller)
+    }
+
+    /// The subset of this payload the dispatcher ships over TCP under
+    /// aggregation-aware planning (`!needs_aggregation()` tensors only).
+    /// Fails if no tensor is dispatchable.
+    pub fn wire_subset(&self) -> Result<StepPayload> {
+        let (wire, _) = self.partition_aggregation();
+        if wire.is_empty() {
+            bail!("payload has no dispatchable (non-aggregation) tensors");
+        }
+        StepPayload::new(wire)
     }
 }
 
@@ -802,6 +857,304 @@ impl ReceivedBatch {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Ingest control frames: commit request (coordinator → worker) and
+// result frame (worker → coordinator, on the ack stream)
+// ---------------------------------------------------------------------------
+
+/// First field of every ingest result frame on the ack stream.
+pub const RESULT_MAGIC: u32 = 0xEA71_0D0E;
+
+/// Fixed body prefix of a serialized [`WorkerReport`].
+pub const RESULT_FIXED_LEN: usize = 56;
+
+/// Largest result-frame body the coordinator will allocate while
+/// decoding — guards against a corrupt length field.
+pub const MAX_RESULT_BYTES: usize = 1 << 24;
+
+/// Fixed prefix of a serialized [`IngestRequest`].
+pub const INGEST_REQ_FIXED_LEN: usize = 32;
+
+/// Hyperparameters of the worker-local update step, shipped inside the
+/// commit frame so coordinator and workers can never disagree on them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IngestHp {
+    /// Learning rate of the coordinator-side parameter update.
+    pub lr: f32,
+    /// L2 pull of each touched weight toward its reference logprob (the
+    /// host model's stand-in for the KL anchor).
+    pub l2: f32,
+}
+
+impl Default for IngestHp {
+    fn default() -> Self {
+        IngestHp { lr: 0.05, l2: 0.1 }
+    }
+}
+
+/// The controller-channel half of one dispatched step, addressed to one
+/// worker: which rows it must have received, the aggregated per-row
+/// advantages (computed on the controller — paper §3.3 keeps aggregated
+/// quantities out of the peer-to-peer exchange), the current model
+/// parameters, and the update hyperparameters. Serialized into the
+/// payload of an [`WireTensorId::IngestCommit`] shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IngestRequest {
+    /// Trainer step this update belongs to.
+    pub step: u64,
+    /// Consumer-layout worker index the request is addressed to (echoed
+    /// in the result so the coordinator can match replies).
+    pub worker: u32,
+    /// Vocabulary size — the length of the host model's weight vector;
+    /// any dispatched token id outside `[0, vocab)` fails the update.
+    pub vocab: u32,
+    pub hp: IngestHp,
+    /// Batch rows this worker must have received (ascending).
+    pub rows: Vec<u32>,
+    /// Aggregated advantage per row of `rows`, in the same order.
+    pub advantages: Vec<f32>,
+    /// Current model parameters θ_step (broadcast each step).
+    pub params: Vec<f32>,
+}
+
+impl IngestRequest {
+    /// Serialize: `step u64 | worker u32 | vocab u32 | lr f32 | l2 f32 |
+    /// n_rows u32 | n_params u32 | rows u32× | advantages f32× |
+    /// params f32×`, little-endian throughout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            INGEST_REQ_FIXED_LEN + self.rows.len() * 8 + self.params.len() * 4,
+        );
+        b.extend_from_slice(&self.step.to_le_bytes());
+        b.extend_from_slice(&self.worker.to_le_bytes());
+        b.extend_from_slice(&self.vocab.to_le_bytes());
+        b.extend_from_slice(&self.hp.lr.to_le_bytes());
+        b.extend_from_slice(&self.hp.l2.to_le_bytes());
+        b.extend_from_slice(&(self.rows.len() as u32).to_le_bytes());
+        b.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for r in &self.rows {
+            b.extend_from_slice(&r.to_le_bytes());
+        }
+        for a in &self.advantages {
+            b.extend_from_slice(&a.to_le_bytes());
+        }
+        for p in &self.params {
+            b.extend_from_slice(&p.to_le_bytes());
+        }
+        b
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<IngestRequest> {
+        if buf.len() < INGEST_REQ_FIXED_LEN {
+            bail!(
+                "truncated ingest request: {} of {INGEST_REQ_FIXED_LEN}+ bytes",
+                buf.len()
+            );
+        }
+        let u32_at = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+        let f32_at = |o: usize| f32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+        let step = u64::from_le_bytes(buf[..8].try_into().unwrap());
+        let worker = u32_at(8);
+        let vocab = u32_at(12);
+        let hp = IngestHp { lr: f32_at(16), l2: f32_at(20) };
+        let n_rows = u32_at(24) as usize;
+        let n_params = u32_at(28) as usize;
+        let need = INGEST_REQ_FIXED_LEN + n_rows * 8 + n_params * 4;
+        if need > MAX_RESULT_BYTES {
+            bail!("ingest request claims {need} bytes");
+        }
+        if buf.len() != need {
+            bail!("ingest request is {} bytes, layout wants {need}", buf.len());
+        }
+        let mut off = INGEST_REQ_FIXED_LEN;
+        let mut rows = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            rows.push(u32_at(off));
+            off += 4;
+        }
+        let mut advantages = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            advantages.push(f32_at(off));
+            off += 4;
+        }
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            params.push(f32_at(off));
+            off += 4;
+        }
+        Ok(IngestRequest { step, worker, vocab, hp, rows, advantages, params })
+    }
+
+    /// Wrap the serialized request into a single-shard transfer payload
+    /// (the commit frame the coordinator sends after the data shards).
+    pub fn commit_payload(&self) -> TransferPayload {
+        let bytes: Arc<[u8]> = self.encode().into();
+        let desc = ShardDesc {
+            tensor: WireTensorId::IngestCommit,
+            dtype: WireDtype::F32,
+            row_start: 0,
+            rows: 1,
+            row_bytes: bytes.len() as u32,
+        };
+        let view = ByteView::whole(bytes);
+        TransferPayload { shards: vec![(desc, view)] }
+    }
+}
+
+/// One worker's reply to an ingest commit: the partial update it
+/// computed from its received shard. Replies ride the ack stream as a
+/// checksummed result frame; the coordinator merges them **in worker
+/// order** so a multi-process run reproduces the serial reference
+/// bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerReport {
+    /// Echo of [`IngestRequest::worker`].
+    pub worker: u32,
+    /// Echo of [`IngestRequest::step`].
+    pub step: u64,
+    /// Rows the update consumed.
+    pub rows: u64,
+    /// Generated (mask > 0) token positions processed.
+    pub gen_tokens: u64,
+    /// Summed loss over the worker's rows (merged by addition).
+    pub loss_sum: f64,
+    /// Wall seconds the worker-local update took.
+    pub update_seconds: f64,
+    /// Dense parameter-gradient contribution (length == vocab).
+    pub grad: Vec<f32>,
+    /// Per-row generated-token-count histogram counts over
+    /// [`crate::metrics::INGEST_ROW_TOKENS_BOUNDS`] (merged by
+    /// summation, never overwrite).
+    pub hist_counts: Vec<u64>,
+}
+
+impl WorkerReport {
+    /// Serialize body: `worker u32 | n_grad u32 | step u64 | rows u64 |
+    /// gen_tokens u64 | loss_sum f64 | update_seconds f64 | n_hist u32 |
+    /// pad u32 | grad f32× | hist u64×`.
+    fn encode_body(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            RESULT_FIXED_LEN + self.grad.len() * 4 + self.hist_counts.len() * 8,
+        );
+        b.extend_from_slice(&self.worker.to_le_bytes());
+        b.extend_from_slice(&(self.grad.len() as u32).to_le_bytes());
+        b.extend_from_slice(&self.step.to_le_bytes());
+        b.extend_from_slice(&self.rows.to_le_bytes());
+        b.extend_from_slice(&self.gen_tokens.to_le_bytes());
+        b.extend_from_slice(&self.loss_sum.to_le_bytes());
+        b.extend_from_slice(&self.update_seconds.to_le_bytes());
+        b.extend_from_slice(&(self.hist_counts.len() as u32).to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        for g in &self.grad {
+            b.extend_from_slice(&g.to_le_bytes());
+        }
+        for h in &self.hist_counts {
+            b.extend_from_slice(&h.to_le_bytes());
+        }
+        b
+    }
+
+    /// Serialize the full result frame:
+    /// `RESULT_MAGIC u32 | body_len u32 | body | fnv1a64(body) u64`.
+    pub fn encode_frame(&self) -> Vec<u8> {
+        let body = self.encode_body();
+        let mut out = Vec::with_capacity(8 + body.len() + 8);
+        out.extend_from_slice(&RESULT_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        let sum = fnv1a64(&body);
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    fn decode_body(body: &[u8]) -> Result<WorkerReport> {
+        if body.len() < RESULT_FIXED_LEN {
+            bail!(
+                "truncated worker report: {} of {RESULT_FIXED_LEN}+ bytes",
+                body.len()
+            );
+        }
+        let u32_at =
+            |o: usize| u32::from_le_bytes(body[o..o + 4].try_into().unwrap());
+        let u64_at =
+            |o: usize| u64::from_le_bytes(body[o..o + 8].try_into().unwrap());
+        let f64_at =
+            |o: usize| f64::from_le_bytes(body[o..o + 8].try_into().unwrap());
+        let worker = u32_at(0);
+        let n_grad = u32_at(4) as usize;
+        let step = u64_at(8);
+        let rows = u64_at(16);
+        let gen_tokens = u64_at(24);
+        let loss_sum = f64_at(32);
+        let update_seconds = f64_at(40);
+        let n_hist = u32_at(48) as usize;
+        let need = RESULT_FIXED_LEN + n_grad * 4 + n_hist * 8;
+        if body.len() != need {
+            bail!("worker report is {} bytes, layout wants {need}", body.len());
+        }
+        let mut off = RESULT_FIXED_LEN;
+        let mut grad = Vec::with_capacity(n_grad);
+        for _ in 0..n_grad {
+            grad.push(f32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        let mut hist_counts = Vec::with_capacity(n_hist);
+        for _ in 0..n_hist {
+            hist_counts.push(u64_at(off));
+            off += 8;
+        }
+        Ok(WorkerReport {
+            worker,
+            step,
+            rows,
+            gen_tokens,
+            loss_sum,
+            update_seconds,
+            grad,
+            hist_counts,
+        })
+    }
+
+    /// Checksum-verify and decode a result-frame *body* (the part after
+    /// `magic | body_len`) against the transmitted checksum — shared by
+    /// [`Self::decode_frame`] and the streaming ack-reader path, which
+    /// consumes the magic/length while framing the stream.
+    pub fn decode_checked(body: &[u8], want: u64) -> Result<WorkerReport> {
+        let got = fnv1a64(body);
+        if got != want {
+            bail!("result frame checksum mismatch: {want:#x} vs {got:#x}");
+        }
+        Self::decode_body(body)
+    }
+
+    /// Parse and checksum-verify a standalone result-frame buffer.
+    /// Truncation, a bad magic, a hostile length, and corruption are all
+    /// rejected.
+    pub fn decode_frame(buf: &[u8]) -> Result<WorkerReport> {
+        if buf.len() < 16 {
+            bail!("truncated result frame: {} of 16+ bytes", buf.len());
+        }
+        let magic = u32::from_le_bytes(buf[..4].try_into().unwrap());
+        if magic != RESULT_MAGIC {
+            bail!("bad result magic {magic:#x} (ack stream desynced?)");
+        }
+        let body_len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        if body_len > MAX_RESULT_BYTES {
+            bail!("result frame claims {body_len}-byte body");
+        }
+        if buf.len() != 8 + body_len + 8 {
+            bail!(
+                "result frame is {} bytes, header wants {}",
+                buf.len(),
+                8 + body_len + 8
+            );
+        }
+        let want =
+            u64::from_le_bytes(buf[8 + body_len..].try_into().unwrap());
+        Self::decode_checked(&buf[8..8 + body_len], want)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -906,6 +1259,120 @@ mod tests {
         };
         assert!(batch.reserve(&desc).is_err());
         assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn aggregation_partition_routes_each_tensor_once() {
+        let p = StepPayload::new(vec![
+            DispatchTensor::from_i32(WireTensorId::Tokens, 2, 3, &[0; 6]).unwrap(),
+            DispatchTensor::from_f32(WireTensorId::Mask, 2, 3, &[0.0; 6]).unwrap(),
+            DispatchTensor::from_f32(WireTensorId::Advantages, 2, 3, &[0.0; 6])
+                .unwrap(),
+            DispatchTensor::from_f32(WireTensorId::RefLogprobs, 2, 3, &[0.0; 6])
+                .unwrap(),
+        ])
+        .unwrap();
+        let (wire, controller) = p.partition_aggregation();
+        assert_eq!(wire.len() + controller.len(), 4);
+        assert!(wire.iter().all(|t| !t.id.needs_aggregation()));
+        assert!(controller.iter().all(|t| t.id.needs_aggregation()));
+        assert_eq!(controller.len(), 1);
+        assert_eq!(controller[0].id, WireTensorId::Advantages);
+
+        let sub = p.wire_subset().unwrap();
+        assert_eq!(sub.rows(), p.rows());
+        // item_bytes shrinks by exactly the advantages row.
+        assert_eq!(sub.item_bytes(), p.item_bytes() - 3 * 4);
+
+        // An all-aggregation payload has nothing to dispatch.
+        let agg_only = StepPayload::new(vec![DispatchTensor::from_f32(
+            WireTensorId::Advantages,
+            2,
+            3,
+            &[0.0; 6],
+        )
+        .unwrap()])
+        .unwrap();
+        assert!(agg_only.wire_subset().is_err());
+    }
+
+    fn sample_request() -> IngestRequest {
+        IngestRequest {
+            step: 12,
+            worker: 1,
+            vocab: 4,
+            hp: IngestHp { lr: 0.25, l2: 0.5 },
+            rows: vec![2, 3, 5],
+            advantages: vec![0.5, -1.0, 0.25],
+            params: vec![0.0, 0.1, -0.2, 0.3],
+        }
+    }
+
+    #[test]
+    fn ingest_request_roundtrips() {
+        let req = sample_request();
+        let wire = req.encode();
+        assert_eq!(IngestRequest::decode(&wire).unwrap(), req);
+        // Truncation and padding both rejected.
+        assert!(IngestRequest::decode(&wire[..wire.len() - 1]).is_err());
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(IngestRequest::decode(&padded).is_err());
+    }
+
+    #[test]
+    fn ingest_commit_rides_a_normal_frame() {
+        let req = sample_request();
+        let tp = req.commit_payload();
+        assert_eq!(tp.shards.len(), 1);
+        assert_eq!(tp.shards[0].0.tensor, WireTensorId::IngestCommit);
+        let frame = encode_frame(0, 7, &tp);
+        let (header, shards) = decode_frame(&frame).unwrap();
+        assert_eq!(header.epoch, 7);
+        assert_eq!(shards.len(), 1);
+        let back = IngestRequest::decode(&shards[0].1).unwrap();
+        assert_eq!(back, req);
+    }
+
+    fn sample_report() -> WorkerReport {
+        WorkerReport {
+            worker: 1,
+            step: 12,
+            rows: 3,
+            gen_tokens: 17,
+            loss_sum: -2.5,
+            update_seconds: 0.001,
+            grad: vec![0.5, -0.25, 0.0, 1.5],
+            hist_counts: vec![0, 2, 1, 0, 0, 0, 0],
+        }
+    }
+
+    #[test]
+    fn result_frame_roundtrips_byte_identical() {
+        let rep = sample_report();
+        let frame = rep.encode_frame();
+        assert_eq!(frame, sample_report().encode_frame());
+        assert_eq!(WorkerReport::decode_frame(&frame).unwrap(), rep);
+    }
+
+    #[test]
+    fn result_frame_rejects_corruption_and_truncation() {
+        let frame = sample_report().encode_frame();
+        for cut in [0, 7, 15, frame.len() - 1] {
+            assert!(WorkerReport::decode_frame(&frame[..cut]).is_err());
+        }
+        // Flip one body byte → checksum failure.
+        let mut corrupt = frame.clone();
+        corrupt[20] ^= 0x40;
+        assert!(WorkerReport::decode_frame(&corrupt).is_err());
+        // Bad magic.
+        let mut bad = frame.clone();
+        bad[0] ^= 0xFF;
+        assert!(WorkerReport::decode_frame(&bad).is_err());
+        // Hostile length field must not allocate.
+        let mut huge = frame;
+        huge[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(WorkerReport::decode_frame(&huge).is_err());
     }
 
     #[test]

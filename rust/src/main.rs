@@ -6,9 +6,12 @@
 //!   figures        regenerate the paper's tables/figures on the simulator
 //!   dispatch-bench run the Fig. 4 dispatch comparison on real TCP sockets
 //!   worker         serve the dispatcher's receive side (multi-process mode)
+//!   ingest-demo    distributed update steps on `earl worker --ingest`
+//!                  processes (or the serial reference without --connect)
 //!
 //! `train` and `profile` need the `xla` feature (on by default); the
-//! dispatcher commands work in `--no-default-features` builds too.
+//! dispatcher commands — `worker` and `ingest-demo` included — work in
+//! `--no-default-features` builds too.
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
@@ -22,11 +25,13 @@ use anyhow::{bail, Context, Result};
 use earl::cluster::ClusterSpec;
 #[cfg(feature = "xla")]
 use earl::config::{EnvKind, OpponentKind, TrainConfig};
+use earl::coordinator::{IngestCfg, IngestCoordinator};
 #[cfg(feature = "xla")]
 use earl::coordinator::{DispatchMode, PipelineMode, Trainer};
 use earl::dispatch::{
     plan_alltoall, plan_centralized, serve_worker, simulate_plan, DataLayout,
-    ExecOptions, PayloadModel, TcpRuntime, WorkerMap, WorkerOpts, PAPER_TAB1,
+    ExecOptions, IngestHp, PayloadModel, TcpRuntime, WorkerMap, WorkerOpts,
+    PAPER_TAB1,
 };
 use earl::parallelism::{speedup_pct, ModelShape, ThroughputCfg};
 #[cfg(feature = "xla")]
@@ -94,6 +99,7 @@ fn main() -> Result<()> {
         "figures" => cmd_figures(&args),
         "dispatch-bench" => cmd_dispatch_bench(&args),
         "worker" => cmd_worker(&args),
+        "ingest-demo" => cmd_ingest_demo(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -121,6 +127,9 @@ fn print_help() {
                dataflow, bit-identical metrics) --off-policy-clip F\n\
              --dispatch sim|central|tcp --nic BYTES_PER_SEC (tcp shaping)\n\
              --dispatch-budget BYTES (per-NIC in-flight budget)\n\
+             --dispatch-budget-adaptive (AIMD-adapt the budget from stall)\n\
+             --agg-unaware (ship ALL tensors; default routes aggregated\n\
+               advantages via the controller per paper 3.3)\n\
              --connect A1,A2,... (remote `earl worker` addresses for tcp)\n\
              --lr F --kl F --ent F --gamma F --seed N\n\
              --artifacts DIR --metrics FILE --checkpoint FILE --config FILE\n\
@@ -135,7 +144,14 @@ fn print_help() {
            worker           serve the dispatcher's receive side\n\
              --listen ADDR (default 127.0.0.1:0; bound address printed)\n\
              --nic BYTES_PER_SEC --dump DIR (write received frames)\n\
-             --quiet"
+             --ingest (consume shards into worker-local update steps)\n\
+             --quiet\n\
+           ingest-demo      distributed update steps over real sockets\n\
+             --connect A1,A2,... (ingesting workers; omit = serial\n\
+               reference) --workers N (serial-mode worker split)\n\
+             --steps N --rows N --seq N --vocab N\n\
+             --lr F --l2 F --seed N --budget BYTES --adaptive\n\
+             --agg-unaware"
     );
 }
 
@@ -172,9 +188,96 @@ fn cmd_worker(args: &Args) -> Result<()> {
         WorkerOpts {
             nic_bytes_per_sec: nic,
             dump_dir: args.get("dump").map(PathBuf::from),
+            ingest: args.has("ingest"),
             quiet: args.has("quiet"),
         },
     )
+}
+
+/// Distributed update steps: dispatch shards to `earl worker --ingest`
+/// processes, commit, merge their partial updates into the host model —
+/// or run the serial reference locally when `--connect` is absent. The
+/// two print identical training rows for the same seed.
+fn cmd_ingest_demo(args: &Args) -> Result<()> {
+    let mut cfg = IngestCfg::default();
+    if let Some(n) = args.get_usize("rows")? {
+        cfg.rows = n;
+    }
+    if let Some(n) = args.get_usize("seq")? {
+        cfg.seq = n;
+    }
+    if let Some(n) = args.get_usize("vocab")? {
+        cfg.vocab = n;
+    }
+    if let Some(n) = args.get_usize("seed")? {
+        cfg.seed = n as u64;
+    }
+    if let Some(v) = args.get("lr") {
+        cfg.hp = IngestHp { lr: v.parse().context("--lr")?, ..cfg.hp };
+    }
+    if let Some(v) = args.get("l2") {
+        cfg.hp = IngestHp { l2: v.parse().context("--l2")?, ..cfg.hp };
+    }
+    if let Some(n) = args.get_usize("budget")? {
+        cfg.inflight_budget = Some(n as u64);
+    }
+    cfg.adaptive_budget = args.has("adaptive");
+    cfg.aggregation_aware = !args.has("agg-unaware");
+    let steps = args.get_usize("steps")?.unwrap_or(5) as u64;
+
+    let mut coord = match args.get("connect") {
+        Some(v) => {
+            let addrs = parse_connect(v)?;
+            cfg.n_workers = addrs.len();
+            println!(
+                "== remote ingestion: {} workers, {} rows/step, {} ==",
+                cfg.n_workers,
+                cfg.rows,
+                if cfg.aggregation_aware {
+                    "aggregation-aware"
+                } else {
+                    "all tensors on the wire"
+                }
+            );
+            IngestCoordinator::connect(cfg, addrs)?
+        }
+        None => {
+            if let Some(n) = args.get_usize("workers")? {
+                cfg.n_workers = n;
+            }
+            println!(
+                "== serial ingestion reference: {} conceptual workers, {} \
+                 rows/step ==",
+                cfg.n_workers, cfg.rows
+            );
+            IngestCoordinator::local(cfg)?
+        }
+    };
+    println!(
+        "{:>5} {:>12} {:>12} {:>6} {:>8} {:>12} {:>12}",
+        "step", "loss", "grad_norm", "rows", "gen_tok", "wire_bytes", "ctrl_bytes"
+    );
+    for _ in 0..steps {
+        let r = coord.step()?;
+        println!(
+            "{:>5} {:>12.6} {:>12.6} {:>6} {:>8} {:>12} {:>12}",
+            r.step,
+            r.loss,
+            r.grad_norm,
+            r.rows,
+            r.gen_tokens,
+            r.dispatch_bytes,
+            r.controller_bytes,
+        );
+    }
+    // A compact fingerprint of θ so deployments can be diffed by eye.
+    let sum: f64 = coord.model.w.iter().map(|&w| w as f64).sum();
+    println!(
+        "final params: step={} sum={:.6} (identical across serial and \
+         multi-process runs of the same seed)",
+        coord.model.step, sum
+    );
+    Ok(())
 }
 
 #[cfg(not(feature = "xla"))]
@@ -255,6 +358,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(n) = args.get_usize("dispatch-budget")? {
         cfg.dispatch_inflight_budget = Some(n as u64);
+    }
+    if args.has("dispatch-budget-adaptive") {
+        cfg.dispatch_budget_adaptive = true;
+    }
+    if args.has("agg-unaware") {
+        cfg.dispatch_aggregation_aware = false;
     }
 
     let dispatch_mode = match args.get("dispatch") {

@@ -1,12 +1,21 @@
 //! Metrics: per-step training records and a JSONL emitter (the paper's
-//! Fig. 1 curves are plots of exactly these records).
+//! Fig. 1 curves are plots of exactly these records), plus the
+//! merge-not-overwrite aggregation of worker-reported ingest metrics.
 
+use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+/// Bucket upper edges of the per-row generated-token-count histogram
+/// ingesting workers report (shared wire contract: workers serialize
+/// counts over exactly these bounds, the coordinator merges them).
+pub const INGEST_ROW_TOKENS_BOUNDS: [f64; 6] =
+    [4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
 
 /// One training step's record — everything needed to re-plot Fig. 1
 /// (a: turn-level ctx, b: episode-level ctx, c: average return) plus the
@@ -38,12 +47,19 @@ pub struct StepRecord {
     /// serialized size of every shipped (checksum-verified) ExpPrep
     /// tensor shard.
     pub dispatch_bytes: u64,
+    /// Bytes aggregation-aware planning (paper §3.3) kept on the
+    /// controller instead of dispatching (the aggregated advantages);
+    /// 0 when the whole payload ships.
+    pub dispatch_controller_bytes: u64,
     /// Peak total in-flight payload bytes inside the dispatch stage
     /// (TCP mode; 0 simulated).
     pub dispatch_inflight_peak_bytes: u64,
     /// Seconds the dispatch scheduler awaited completions while ready
     /// transfers sat blocked on the in-flight budget.
     pub dispatch_stall_seconds: f64,
+    /// Per-NIC in-flight budget the dispatch stage ran under (after
+    /// AIMD adaptation); 0 = unlimited.
+    pub dispatch_budget_bytes: u64,
     pub train_seconds: f64,
     /// Wall-clock duration of the whole step. Under the overlapped
     /// pipeline this is less than the summed stage time — the gap is the
@@ -79,12 +95,20 @@ impl StepRecord {
             ("dispatch_wall_seconds", Json::num(self.dispatch_wall_seconds)),
             ("dispatch_bytes", Json::num(self.dispatch_bytes as f64)),
             (
+                "dispatch_controller_bytes",
+                Json::num(self.dispatch_controller_bytes as f64),
+            ),
+            (
                 "dispatch_inflight_peak_bytes",
                 Json::num(self.dispatch_inflight_peak_bytes as f64),
             ),
             (
                 "dispatch_stall_seconds",
                 Json::num(self.dispatch_stall_seconds),
+            ),
+            (
+                "dispatch_budget_bytes",
+                Json::num(self.dispatch_budget_bytes as f64),
             ),
             ("train_seconds", Json::num(self.train_seconds)),
             ("step_wall_seconds", Json::num(self.step_wall_seconds)),
@@ -124,16 +148,75 @@ impl StepRecord {
     }
 }
 
+/// Per-step metrics one ingesting worker reported — folded into the
+/// coordinator's [`MetricsLog`] by **summing/merging** with whatever
+/// other workers already reported for the step, never overwriting.
+#[derive(Debug, Clone)]
+pub struct WorkerStepMetrics {
+    /// Batch rows the worker consumed (sums across workers).
+    pub rows: u64,
+    /// Generated token positions processed (sums).
+    pub gen_tokens: u64,
+    /// Worker-local loss contribution (sums).
+    pub loss_sum: f64,
+    /// Worker-local update wall time (max across workers: they run in
+    /// parallel, so the step pays the slowest).
+    pub update_seconds: f64,
+    /// Per-row generated-token-count distribution over
+    /// [`INGEST_ROW_TOKENS_BOUNDS`] (bucket counts merge by summation).
+    pub row_tokens: Histogram,
+}
+
+impl WorkerStepMetrics {
+    /// Build from a worker's reported histogram counts.
+    pub fn from_counts(
+        rows: u64,
+        gen_tokens: u64,
+        loss_sum: f64,
+        update_seconds: f64,
+        hist_counts: &[u64],
+    ) -> Result<WorkerStepMetrics> {
+        let row_tokens =
+            Histogram::from_counts(INGEST_ROW_TOKENS_BOUNDS.to_vec(), hist_counts)
+                .map_err(|e| anyhow!("worker histogram: {e}"))?;
+        Ok(WorkerStepMetrics {
+            rows,
+            gen_tokens,
+            loss_sum,
+            update_seconds,
+            row_tokens,
+        })
+    }
+
+    /// Fold another worker's report for the same step into this one.
+    pub fn merge(&mut self, other: &WorkerStepMetrics) -> Result<()> {
+        self.rows += other.rows;
+        self.gen_tokens += other.gen_tokens;
+        self.loss_sum += other.loss_sum;
+        self.update_seconds = self.update_seconds.max(other.update_seconds);
+        self.row_tokens
+            .merge(&other.row_tokens)
+            .map_err(|e| anyhow!("merging worker histograms: {e}"))?;
+        Ok(())
+    }
+}
+
 /// Append-only JSONL metrics sink.
 pub struct MetricsLog {
     out: Option<std::io::BufWriter<std::fs::File>>,
     pub records: Vec<StepRecord>,
+    /// Merged worker-reported ingest metrics, keyed by step.
+    pub worker_steps: BTreeMap<u64, WorkerStepMetrics>,
 }
 
 impl MetricsLog {
     /// In-memory only.
     pub fn memory() -> MetricsLog {
-        MetricsLog { out: None, records: Vec::new() }
+        MetricsLog {
+            out: None,
+            records: Vec::new(),
+            worker_steps: BTreeMap::new(),
+        }
     }
 
     /// Backed by a JSONL file (created/truncated).
@@ -143,6 +226,7 @@ impl MetricsLog {
         Ok(MetricsLog {
             out: Some(std::io::BufWriter::new(f)),
             records: Vec::new(),
+            worker_steps: BTreeMap::new(),
         })
     }
 
@@ -152,6 +236,23 @@ impl MetricsLog {
             out.flush().ok();
         }
         self.records.push(rec);
+        Ok(())
+    }
+
+    /// Fold one worker's per-step report into the log. Multiple workers
+    /// report the same step; their fields **sum/merge** — a second
+    /// report must never overwrite the first.
+    pub fn record_worker(
+        &mut self,
+        step: u64,
+        m: WorkerStepMetrics,
+    ) -> Result<()> {
+        match self.worker_steps.get_mut(&step) {
+            Some(existing) => existing.merge(&m)?,
+            None => {
+                self.worker_steps.insert(step, m);
+            }
+        }
         Ok(())
     }
 
@@ -203,8 +304,10 @@ mod tests {
             dispatch_seconds: 0.1,
             dispatch_wall_seconds: 0.2,
             dispatch_bytes: 4096,
+            dispatch_controller_bytes: 1024,
             dispatch_inflight_peak_bytes: 2048,
             dispatch_stall_seconds: 0.05,
+            dispatch_budget_bytes: 0,
             train_seconds: 2.0,
             step_wall_seconds: 2.0,
             param_staleness: 0,
@@ -222,10 +325,68 @@ mod tests {
         assert_eq!(j.at(&["selector_switched"]).as_bool(), Some(false));
         assert_eq!(j.at(&["dispatch_bytes"]).as_usize(), Some(4096));
         assert_eq!(
+            j.at(&["dispatch_controller_bytes"]).as_usize(),
+            Some(1024)
+        );
+        assert_eq!(
             j.at(&["dispatch_inflight_peak_bytes"]).as_usize(),
             Some(2048)
         );
         assert_eq!(j.at(&["dispatch_stall_seconds"]).as_f64(), Some(0.05));
+        assert_eq!(j.at(&["dispatch_budget_bytes"]).as_usize(), Some(0));
+    }
+
+    fn worker_metrics(rows: u64, tokens_per_row: f64) -> WorkerStepMetrics {
+        let mut hist = Histogram::new(INGEST_ROW_TOKENS_BOUNDS.to_vec());
+        for _ in 0..rows {
+            hist.add(tokens_per_row);
+        }
+        WorkerStepMetrics {
+            rows,
+            gen_tokens: rows * tokens_per_row as u64,
+            loss_sum: rows as f64 * 0.5,
+            update_seconds: 0.01 * rows as f64,
+            row_tokens: hist,
+        }
+    }
+
+    #[test]
+    fn worker_reports_merge_not_overwrite() {
+        let mut log = MetricsLog::memory();
+        log.record_worker(3, worker_metrics(2, 5.0)).unwrap();
+        log.record_worker(3, worker_metrics(3, 100.0)).unwrap();
+        let m = &log.worker_steps[&3];
+        // Summed, not replaced by the second report.
+        assert_eq!(m.rows, 5);
+        assert_eq!(m.gen_tokens, 2 * 5 + 3 * 100);
+        assert!((m.loss_sum - 2.5).abs() < 1e-12);
+        // max across workers (parallel stage pays the slowest).
+        assert!((m.update_seconds - 0.03).abs() < 1e-12);
+        // Histogram counts merged by summation across both reports.
+        assert_eq!(m.row_tokens.total(), 5);
+        // 5.0 lands in the ≤8 bucket (idx 1), 100.0 in ≤128 (idx 5).
+        assert_eq!(m.row_tokens.counts()[1], 2);
+        assert_eq!(m.row_tokens.counts()[5], 3);
+        // A different step stays separate.
+        log.record_worker(4, worker_metrics(1, 5.0)).unwrap();
+        assert_eq!(log.worker_steps[&3].rows, 5);
+        assert_eq!(log.worker_steps[&4].rows, 1);
+    }
+
+    #[test]
+    fn worker_metrics_from_wire_counts_roundtrip() {
+        let m = worker_metrics(2, 5.0);
+        let back = WorkerStepMetrics::from_counts(
+            m.rows,
+            m.gen_tokens,
+            m.loss_sum,
+            m.update_seconds,
+            m.row_tokens.counts(),
+        )
+        .unwrap();
+        assert_eq!(back.row_tokens.counts(), m.row_tokens.counts());
+        // Wrong-arity counts (wire corruption) are rejected.
+        assert!(WorkerStepMetrics::from_counts(1, 1, 0.0, 0.0, &[1, 2]).is_err());
     }
 
     #[test]

@@ -148,12 +148,49 @@ impl Histogram {
         self.total += 1;
     }
 
+    /// Rebuild a histogram from serialized bucket counts (the wire form
+    /// worker-reported metrics travel as). `counts` must have exactly
+    /// `bounds.len() + 1` entries (the trailing +inf bucket included).
+    pub fn from_counts(bounds: Vec<f64>, counts: &[u64]) -> Result<Histogram, String> {
+        if counts.len() != bounds.len() + 1 {
+            return Err(format!(
+                "{} counts for {} bounds (want bounds + 1)",
+                counts.len(),
+                bounds.len()
+            ));
+        }
+        let total = counts.iter().sum();
+        Ok(Histogram { bounds, counts: counts.to_vec(), total })
+    }
+
     pub fn total(&self) -> u64 {
         self.total
     }
 
     pub fn counts(&self) -> &[u64] {
         &self.counts
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Fold another histogram over the *same* bucket edges into this
+    /// one: bucket counts **sum** (never overwrite). Mismatched edges
+    /// are an error — silently merging differently-bucketed data would
+    /// fabricate a distribution.
+    pub fn merge(&mut self, other: &Histogram) -> Result<(), String> {
+        if self.bounds != other.bounds {
+            return Err(format!(
+                "histogram bounds differ: {:?} vs {:?}",
+                self.bounds, other.bounds
+            ));
+        }
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += *o;
+        }
+        self.total += other.total;
+        Ok(())
     }
 
     /// Upper-bound estimate of percentile from bucket edges.
@@ -271,6 +308,41 @@ mod tests {
         }
         let p99 = h.percentile(99.0);
         assert!(p99 >= 99.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn histogram_merge_sums_counts() {
+        let mut a = Histogram::new(vec![1.0, 10.0, 100.0]);
+        let mut b = Histogram::new(vec![1.0, 10.0, 100.0]);
+        for x in [0.5, 5.0, 50.0] {
+            a.add(x);
+        }
+        for x in [5.0, 500.0] {
+            b.add(x);
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.counts(), &[1, 2, 1, 1]);
+        assert_eq!(a.total(), 5);
+        // b untouched.
+        assert_eq!(b.total(), 2);
+        // Mismatched edges refused (not silently merged).
+        let c = Histogram::new(vec![2.0, 20.0]);
+        assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn histogram_from_counts_roundtrips() {
+        let mut h = Histogram::exponential(1.0, 2.0, 4);
+        for x in [0.5, 3.0, 9.0, 100.0] {
+            h.add(x);
+        }
+        let back =
+            Histogram::from_counts(h.bounds().to_vec(), h.counts()).unwrap();
+        assert_eq!(back.counts(), h.counts());
+        assert_eq!(back.total(), h.total());
+        assert_eq!(back.percentile(50.0), h.percentile(50.0));
+        // Arity mismatch rejected.
+        assert!(Histogram::from_counts(vec![1.0], &[1, 2, 3]).is_err());
     }
 
     #[test]

@@ -125,6 +125,8 @@ fn dispatch_worker_ships_real_payload() {
             nic_bytes_per_sec: None,
             payload: Some(Arc::clone(&payload)),
             inflight_budget: Some(payload.item_bytes()),
+            adaptive_budget: false,
+            controller_bytes: 0,
             remote: None,
         })
         .unwrap();

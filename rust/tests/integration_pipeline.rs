@@ -195,6 +195,8 @@ fn dispatch_worker_reuses_tcp_connections_across_steps() {
         nic_bytes_per_sec: None,
         payload: None,
         inflight_budget: None,
+        adaptive_budget: false,
+        controller_bytes: 0,
         remote: None,
     };
     let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
@@ -326,6 +328,8 @@ fn pipelined_submit_then_recv_preserves_order_across_modes() {
         nic_bytes_per_sec: None,
         payload: None,
         inflight_budget: None,
+        adaptive_budget: false,
+        controller_bytes: 0,
         remote: None,
     };
     let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));

@@ -1,0 +1,180 @@
+//! Integration: **remote worker ingestion** — spawned `earl worker
+//! --ingest` processes consume dispatched shards into real update
+//! steps, and the coordinator merges their results into the live model.
+//!
+//! * A 2-process run must reproduce the local serial reference
+//!   **step for step** (same equality pattern as the
+//!   `integration_pipeline.rs` determinism tests: the deployment is a
+//!   systems change, not a training change).
+//! * Aggregation-aware planning (paper §3.3) must measurably shrink
+//!   `dispatch_bytes`: the whitened advantages route through the
+//!   controller's commit frames, not the peer-to-peer wire.
+//! * Failure injection: killing a worker mid-run must surface a
+//!   deterministic error — no hang, no partial merge (the model is
+//!   untouched).
+//!
+//! Runs without the `xla` feature (CI job `core-no-xla`,
+//! `make check-core`): ingestion is PJRT-free by construction.
+
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use earl::coordinator::{IngestCfg, IngestCoordinator};
+
+/// A spawned `earl worker --ingest` process, killed on drop even if the
+/// test panics first.
+struct WorkerProc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_ingest_worker() -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_earl"))
+        .args(["worker", "--listen", "127.0.0.1:0", "--ingest", "--quiet"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning earl worker --ingest");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .and_then(|a| a.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable worker banner {line:?}"));
+    WorkerProc { child, addr }
+}
+
+fn cfg() -> IngestCfg {
+    IngestCfg {
+        n_workers: 2,
+        rows: 8,
+        seq: 24,
+        vocab: 16,
+        seed: 7,
+        commit_timeout: Duration::from_secs(60),
+        ..IngestCfg::default()
+    }
+}
+
+#[test]
+fn two_process_run_reproduces_local_serial_learning_curve() {
+    const STEPS: usize = 4;
+    let cfg = cfg();
+    let full_bytes = (cfg.rows * cfg.seq * 4 * 4) as u64; // 4 tensors
+    let wire_bytes = (cfg.rows * cfg.seq * 4 * 3) as u64; // − advantages
+
+    // Local serial reference: per-worker partials computed in-process,
+    // identical math, no sockets.
+    let mut serial = IngestCoordinator::local(cfg.clone()).unwrap();
+    let mut reference = Vec::new();
+    for _ in 0..STEPS {
+        reference.push(serial.step().unwrap());
+    }
+
+    // The same trajectory through two real worker processes.
+    let workers: Vec<WorkerProc> =
+        (0..2).map(|_| spawn_ingest_worker()).collect();
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr).collect();
+    let mut remote =
+        IngestCoordinator::connect(cfg.clone(), addrs.clone()).unwrap();
+    assert!(remote.is_remote());
+    for (k, want) in reference.iter().enumerate() {
+        let got = remote.step().unwrap();
+        assert_eq!(
+            got.training_row(),
+            want.training_row(),
+            "multi-process run diverged from serial at step {k}"
+        );
+        // Aggregation-aware planning ships only the wire tensors.
+        assert_eq!(got.dispatch_bytes, wire_bytes);
+        assert_eq!(got.controller_bytes, full_bytes - wire_bytes);
+        assert!(
+            got.dispatch_bytes < full_bytes,
+            "aggregation-aware plan failed to shrink the wire"
+        );
+    }
+    // The models agree exactly — same parameters, bit for bit.
+    assert_eq!(remote.model, serial.model);
+    assert_eq!(remote.model.step, STEPS as u64);
+    // Worker-reported metrics merged (summed) across both workers.
+    for (step, m) in remote.metrics.worker_steps.iter() {
+        assert_eq!(m.rows, cfg.rows as u64, "step {step} lost worker rows");
+        assert_eq!(m.row_tokens.total(), cfg.rows as u64);
+    }
+    drop(remote); // close sender connections before the next run
+
+    // Aggregation-UNAWARE comparison run against the same workers: the
+    // whole payload (advantages included) rides the wire — measurably
+    // more dispatched bytes for the same learning step.
+    let mut unaware = IngestCoordinator::connect(
+        IngestCfg { aggregation_aware: false, ..cfg },
+        addrs,
+    )
+    .unwrap();
+    let r = unaware.step().unwrap();
+    assert_eq!(r.dispatch_bytes, full_bytes);
+    assert_eq!(r.controller_bytes, 0);
+    assert!(
+        r.dispatch_bytes > wire_bytes,
+        "aggregation-aware planning must reduce dispatch_bytes \
+         ({wire_bytes} aware vs {} unaware)",
+        r.dispatch_bytes
+    );
+    // Same training outcome either way: routing is a systems choice.
+    assert_eq!(r.training_row(), reference[0].training_row());
+}
+
+#[test]
+fn killed_worker_is_a_deterministic_error_with_no_partial_merge() {
+    let cfg = IngestCfg {
+        commit_timeout: Duration::from_secs(10),
+        ..cfg()
+    };
+    let mut workers: Vec<WorkerProc> =
+        (0..2).map(|_| spawn_ingest_worker()).collect();
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr).collect();
+    let mut coord = IngestCoordinator::connect(cfg, addrs).unwrap();
+
+    // Healthy warmup: two steps complete.
+    coord.step().unwrap();
+    coord.step().unwrap();
+    let step_before = coord.model.step;
+    let params_before = coord.model.w.clone();
+
+    // Kill one worker, then attempt the next step.
+    {
+        let victim = &mut workers[1];
+        victim.child.kill().unwrap();
+        victim.child.wait().unwrap();
+    }
+    let t0 = Instant::now();
+    let err = coord.step();
+    assert!(err.is_err(), "step against a dead worker must fail");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "failure must surface promptly, not hang"
+    );
+    // No partial merge: the surviving worker's partial was never
+    // applied — parameters and step counter are untouched.
+    assert_eq!(coord.model.step, step_before);
+    assert_eq!(coord.model.w, params_before);
+
+    // The failure is sticky-deterministic: retrying against the dead
+    // worker keeps failing cleanly, still without touching the model.
+    assert!(coord.step().is_err());
+    assert_eq!(coord.model.w, params_before);
+    // The metrics log never saw a worker report for the failed step.
+    assert!(!coord.metrics.worker_steps.contains_key(&(step_before + 1)));
+}

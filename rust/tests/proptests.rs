@@ -6,9 +6,9 @@ use std::collections::BTreeMap;
 use earl::cluster::ClusterSpec;
 use earl::dispatch::{
     contiguous_runs, decode_frame, encode_frame, plan_alltoall,
-    plan_centralized, satisfies, DataLayout, DispatchTensor, FrameHeader,
-    ReceivedBatch, StepPayload, TransferPayload, WireTensorId,
-    FRAME_HEADER_LEN,
+    plan_centralized, plan_ingest, satisfies, DataLayout, DispatchTensor,
+    FrameHeader, ReceivedBatch, StepPayload, TensorKind, TransferPayload,
+    WireTensorId, WorkerReport, FRAME_HEADER_LEN,
 };
 use earl::envs::{ConnectFour, Game, Outcome, TicTacToe};
 use earl::parallelism::{
@@ -225,6 +225,183 @@ fn prop_truncated_or_corrupt_frames_rejected() {
         let idx = body_start + rng.below(tp.payload_bytes() as usize);
         corrupt[idx] ^= 1 + rng.below(255) as u8;
         assert!(decode_frame(&corrupt).is_err(), "bit flip at {idx}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Aggregation partition (paper §3.3): every tensor routes exactly once —
+// wire XOR controller — and membership is decided by needs_aggregation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_aggregation_partition_routes_each_tensor_once() {
+    // Real (non-control) tensor ids a payload can stage.
+    const STAGEABLE: [WireTensorId; 4] = [
+        WireTensorId::Tokens,
+        WireTensorId::Mask,
+        WireTensorId::Advantages,
+        WireTensorId::RefLogprobs,
+    ];
+    check_default("aggregation_partition", |rng| {
+        let rows = gen::usize_in(rng, 1, 6);
+        let cols = gen::usize_in(rng, 1, 8);
+        // A random nonempty subset of the stageable tensors.
+        let mut ids: Vec<WireTensorId> =
+            STAGEABLE.iter().copied().filter(|_| rng.below(2) == 0).collect();
+        if ids.is_empty() {
+            ids.push(*rng.choose(&STAGEABLE));
+        }
+        let tensors: Vec<DispatchTensor> = ids
+            .iter()
+            .map(|&id| match id {
+                WireTensorId::Tokens => DispatchTensor::from_i32(
+                    id,
+                    rows,
+                    cols,
+                    &vec![0i32; rows * cols],
+                )
+                .unwrap(),
+                _ => DispatchTensor::from_f32(
+                    id,
+                    rows,
+                    cols,
+                    &vec![0f32; rows * cols],
+                )
+                .unwrap(),
+            })
+            .collect();
+        let payload = StepPayload::new(tensors).unwrap();
+        let (wire, controller) = payload.partition_aggregation();
+
+        // Exactly once: wire ∪ controller == staged, wire ∩ controller == ∅.
+        assert_eq!(wire.len() + controller.len(), ids.len());
+        let mut routed: Vec<WireTensorId> = wire
+            .iter()
+            .chain(controller.iter())
+            .map(|t| t.id)
+            .collect();
+        routed.sort();
+        let mut want = ids.clone();
+        want.sort();
+        assert_eq!(routed, want, "some tensor routed zero or two times");
+        // Membership is needs_aggregation, both directions.
+        assert!(wire.iter().all(|t| !t.id.needs_aggregation()));
+        assert!(controller.iter().all(|t| t.id.needs_aggregation()));
+
+        // Byte accounting: wire + controller item bytes == full.
+        let wire_bytes: u64 =
+            wire.iter().map(|t| t.row_bytes() as u64).sum();
+        let ctrl_bytes: u64 =
+            controller.iter().map(|t| t.row_bytes() as u64).sum();
+        assert_eq!(wire_bytes + ctrl_bytes, payload.item_bytes());
+
+        // wire_subset agrees with the partition (or fails iff empty).
+        match payload.wire_subset() {
+            Ok(sub) => assert_eq!(sub.item_bytes(), wire_bytes),
+            Err(_) => assert!(wire.is_empty()),
+        }
+    });
+}
+
+#[test]
+fn prop_wire_and_layout_aggregation_tags_agree() {
+    // The WireTensorId tags must mirror the layout-level TensorKind
+    // tags for the tensors that exist in both vocabularies.
+    assert_eq!(
+        WireTensorId::Advantages.needs_aggregation(),
+        TensorKind::Advantages.needs_aggregation()
+    );
+    assert_eq!(
+        WireTensorId::RefLogprobs.needs_aggregation(),
+        TensorKind::RefLogprobs.needs_aggregation()
+    );
+    assert_eq!(
+        WireTensorId::Tokens.needs_aggregation(),
+        TensorKind::TokenIds.needs_aggregation()
+    );
+    assert_eq!(
+        WireTensorId::Mask.needs_aggregation(),
+        TensorKind::LossMask.needs_aggregation()
+    );
+}
+
+#[test]
+fn prop_ingest_scatter_routes_every_row_once() {
+    check_default("ingest_scatter", |rng| {
+        let workers = gen::usize_in(rng, 1, 10);
+        let items = gen::usize_in(rng, 1, 64);
+        let consumer = random_layout(rng, items, workers);
+        let shard = 1 + rng.below(10_000) as u64;
+        let plan = plan_ingest(&consumer, shard);
+        assert_eq!(plan.phases.len(), 1);
+        let mut seen = BTreeMap::new();
+        for t in &plan.phases[0] {
+            assert_eq!(t.src, 0, "scatter leaves the coordinator slot");
+            assert_eq!(t.bytes, shard * t.items.len() as u64);
+            assert!(!t.items.is_empty(), "empty transfer planned");
+            for &i in &t.items {
+                assert_eq!(consumer.owner[i], t.dst, "row to wrong worker");
+                assert!(seen.insert(i, t.dst).is_none(), "row {i} twice");
+            }
+        }
+        assert_eq!(seen.len(), items, "some row never shipped");
+        assert_eq!(plan.total_bytes(), shard * items as u64);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Ingest result frames: encode → decode is byte-identical; truncation
+// and corruption are rejected (extends the shard suite to the frames
+// workers answer with).
+// ---------------------------------------------------------------------------
+
+fn random_report(rng: &mut Pcg64) -> WorkerReport {
+    WorkerReport {
+        worker: rng.below(64) as u32,
+        step: rng.next_u64() >> 16,
+        rows: rng.below(1000) as u64,
+        gen_tokens: rng.below(100_000) as u64,
+        loss_sum: rng.gaussian() * 100.0,
+        update_seconds: rng.f64(),
+        grad: gen::vec_of(rng, 1, 64, |r| (r.gaussian() * 3.0) as f32),
+        hist_counts: gen::vec_of(rng, 1, 12, |r| r.below(1000) as u64),
+    }
+}
+
+#[test]
+fn prop_result_frames_roundtrip_byte_identical() {
+    check_default("result_frame_roundtrip", |rng| {
+        let rep = random_report(rng);
+        let frame = rep.encode_frame();
+        // Re-encoding is byte-identical (stable wire form).
+        assert_eq!(frame, rep.encode_frame());
+        let back = WorkerReport::decode_frame(&frame).unwrap();
+        assert_eq!(back, rep);
+    });
+}
+
+#[test]
+fn prop_result_frames_reject_truncation_and_corruption() {
+    check_default("result_frame_corruption", |rng| {
+        let rep = random_report(rng);
+        let frame = rep.encode_frame();
+        // Any strict prefix fails.
+        let cut = rng.below(frame.len());
+        assert!(
+            WorkerReport::decode_frame(&frame[..cut]).is_err(),
+            "decode must reject {cut}-byte prefix of {}",
+            frame.len()
+        );
+        // Any single-byte flip past the magic fails (length, body, or
+        // checksum corruption — never silently accepted). Flips inside
+        // the 4-byte magic are rejected as a bad magic.
+        let idx = rng.below(frame.len());
+        let mut corrupt = frame.clone();
+        corrupt[idx] ^= 1 + rng.below(255) as u8;
+        assert!(
+            WorkerReport::decode_frame(&corrupt).is_err(),
+            "bit flip at {idx} must be rejected"
+        );
     });
 }
 
