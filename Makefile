@@ -1,13 +1,24 @@
 # Repo-level targets. The rust crate lives in rust/; the AOT artifacts
 # it executes are produced by the python compile path.
 
-.PHONY: check check-core fmt lint test artifacts bench-pipeline
+.PHONY: check check-core analyze fmt lint test artifacts bench-pipeline
 
-# Full gate: formatting, clippy (warnings are errors), tier-1 tests,
-# plus the XLA-free core build (dispatch/selector/metrics, no
-# XLA_EXTENSION_DIR needed).
-check: fmt lint check-core
+# Full gate: formatting, clippy (warnings are errors), the earl-analyze
+# static-analysis pass, tier-1 tests, plus the XLA-free core build
+# (dispatch/selector/metrics, no XLA_EXTENSION_DIR needed).
+check: fmt lint check-core analyze
 	cd rust && cargo build --release && cargo test -q
+
+# Static-analysis gate (hard-fails `make check`): concurrency
+# discipline (lock-order inversions, channels under guards, wall-clock
+# in deterministic stages), wire-protocol consistency (dispatch/wire.rs
+# parsed into a machine-readable spec and cross-checked), and the
+# ratcheting panic budget (rust/analyze-baseline.json; regenerate with
+# `cargo run --bin earl-analyze -- --write-baseline` only to ratchet
+# DOWN). Runs on the no-default-features build so it shares the
+# check-core compile cache and needs no XLA toolchain.
+analyze:
+	cd rust && cargo run --release --no-default-features --bin earl-analyze
 
 # The `--no-default-features` core: proves the dispatcher (real-payload
 # wire format, TCP runtime, `earl worker`), selector, and metrics build

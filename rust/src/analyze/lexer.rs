@@ -1,0 +1,412 @@
+//! Minimal Rust lexer for the static-analysis pass: splits source into
+//! identifier / number / string / punctuation tokens with line numbers,
+//! and collects `//` comments separately (annotations live there).
+//!
+//! This is a *token* lexer, not a parser — no AST, no rustc internals,
+//! no `syn` (the build image is offline). It understands exactly as
+//! much Rust as the analyses need: strings (plain, raw, byte),
+//! char literals vs. lifetimes, nested block comments, and numeric
+//! literals including `0x`/`0o`/`0b` prefixes and `_` separators.
+
+/// Kind of one lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `WireTensorId`, ...).
+    Ident,
+    /// Numeric literal (`40`, `0xEA71_D157`, `1.5e3`).
+    Num,
+    /// String literal (content kept verbatim, quotes stripped).
+    Str,
+    /// Char literal (`'a'`, `'\n'`).
+    Char,
+    /// One punctuation character (`.` `(` `{` `!` ...). Multi-char
+    /// operators arrive as consecutive tokens.
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1
+            && self.text.as_bytes()[0] as char == c
+    }
+}
+
+/// Lexed file: the token stream plus every `//` comment (line, text
+/// after the slashes) — annotations are parsed out of the latter.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<(u32, String)>,
+}
+
+/// Parse the integer value of a numeric-literal token, handling `_`
+/// separators, `0x`/`0o`/`0b` prefixes and type suffixes (`40usize`,
+/// `0xFFFEu16`). Returns `None` for floats and malformed input.
+pub fn int_value(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let (radix, digits) = if let Some(rest) = t.strip_prefix("0x") {
+        (16, rest)
+    } else if let Some(rest) = t.strip_prefix("0X") {
+        (16, rest)
+    } else if let Some(rest) = t.strip_prefix("0o") {
+        (8, rest)
+    } else if let Some(rest) = t.strip_prefix("0b") {
+        (2, rest)
+    } else {
+        (10, t.as_str())
+    };
+    // Strip a trailing type suffix (u8/u16/u32/u64/usize/i*...).
+    let end = digits
+        .char_indices()
+        .find(|(_, c)| !c.is_digit(radix))
+        .map(|(i, _)| i)
+        .unwrap_or(digits.len());
+    if end == 0 {
+        return None;
+    }
+    let suffix = &digits[end..];
+    if !suffix.is_empty()
+        && !matches!(
+            suffix,
+            "u8" | "u16" | "u32" | "u64" | "u128" | "usize" | "i8" | "i16"
+                | "i32" | "i64" | "i128" | "isize"
+        )
+    {
+        return None;
+    }
+    u64::from_str_radix(&digits[..end], radix).ok()
+}
+
+/// Lex `src` into tokens + comments. Never fails: unrecognized bytes
+/// are skipped (the analyses are heuristic pattern matchers; a lexing
+/// gap degrades to a missed match, not a crash).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let is_id_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_id = |c: char| c.is_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (incl. /// and //!) — collected for annotations.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            let text: String = b[start..j].iter().collect();
+            out.comments.push((line, text.trim().to_string()));
+            i = j;
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes: r"..", r#".."#, b"..", br#".."#.
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let mut j = i + 1;
+            let mut raw = c == 'r';
+            if c == 'b' && j < n && b[j] == 'r' {
+                raw = true;
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            if raw {
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+            }
+            if j < n && b[j] == '"' && (raw || c == 'b') {
+                let start_line = line;
+                j += 1;
+                let content_start = j;
+                'outer: while j < n {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if !raw && b[j] == '\\' {
+                        j += 2;
+                        continue;
+                    }
+                    if b[j] == '"' {
+                        if raw {
+                            let mut k = 0usize;
+                            while k < hashes
+                                && j + 1 + k < n
+                                && b[j + 1 + k] == '#'
+                            {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                out.toks.push(Tok {
+                                    kind: TokKind::Str,
+                                    text: b[content_start..j].iter().collect(),
+                                    line: start_line,
+                                });
+                                j += 1 + hashes;
+                                break 'outer;
+                            }
+                        } else {
+                            out.toks.push(Tok {
+                                kind: TokKind::Str,
+                                text: b[content_start..j].iter().collect(),
+                                line: start_line,
+                            });
+                            j += 1;
+                            break 'outer;
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            // Not a string prefix after all: fall through to ident.
+        }
+        // Plain string literal.
+        if c == '"' {
+            let start_line = line;
+            let mut j = i + 1;
+            let content_start = j;
+            while j < n {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '\\' {
+                    j += 2;
+                } else if b[j] == '"' {
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: b[content_start..j.min(n)].iter().collect(),
+                line: start_line,
+            });
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Char literal vs. lifetime: 'a' is a char, 'a (no closing
+        // quote right after) is a lifetime.
+        if c == '\'' {
+            let mut j = i + 1;
+            if j < n && b[j] == '\\' {
+                // Escaped char literal: '\n', '\'', '\u{..}'.
+                j += 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: b[i + 1..j.min(n)].iter().collect(),
+                    line,
+                });
+                i = (j + 1).min(n);
+                continue;
+            }
+            if j < n && is_id_start(b[j]) && !(j + 1 < n && b[j + 1] == '\'') {
+                // Lifetime: skip the identifier, emit nothing.
+                while j < n && is_id(b[j]) {
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            // Single-char literal 'x'.
+            if j + 1 < n && b[j + 1] == '\'' {
+                out.toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: b[j].to_string(),
+                    line,
+                });
+                i = j + 2;
+                continue;
+            }
+            // Bare quote (macro-land); treat as punctuation.
+            out.toks.push(Tok {
+                kind: TokKind::Punct,
+                text: "'".to_string(),
+                line,
+            });
+            i += 1;
+            continue;
+        }
+        if is_id_start(c) {
+            let mut j = i;
+            while j < n && is_id(b[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let d = b[j];
+                if is_id(d) {
+                    j += 1;
+                } else if d == '.'
+                    && j + 1 < n
+                    && b[j + 1].is_ascii_digit()
+                    && !(j > i && b[j - 1] == '.')
+                {
+                    // Float dot — but `1..2` stays two range dots.
+                    j += 1;
+                } else if (d == '+' || d == '-')
+                    && j > i
+                    && (b[j - 1] == 'e' || b[j - 1] == 'E')
+                {
+                    // Exponent sign in 1.5e-3.
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Num,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Everything else: one punctuation char per token.
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn lexes_idents_numbers_punct_with_lines() {
+        let l = lex("fn foo() {\n  x.unwrap();\n}\n");
+        let unwrap = l.toks.iter().find(|t| t.is_ident("unwrap")).unwrap();
+        assert_eq!(unwrap.line, 2);
+        let close = l.toks.iter().rfind(|t| t.is_punct('}')).unwrap();
+        assert_eq!(close.line, 3);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_leak_tokens() {
+        let l = lex("let s = \"unwrap() // not a comment\"; // real comment\n");
+        assert!(!l.toks.iter().any(|t| t.is_ident("unwrap")));
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].1, "real comment");
+        // Raw strings with hashes and escapes.
+        let l = lex(r##"let r = r#"a "quoted" panic!()"#; let e = "a\"b";"##);
+        assert!(!l.toks.iter().any(|t| t.is_ident("panic")));
+        let strs: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .collect();
+        assert_eq!(strs.len(), 2);
+        assert_eq!(strs[1].text, "a\\\"b");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let q = '\\''; }");
+        let chars: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 2);
+        // The lifetime never shows up as a Char or a stray quote token.
+        assert!(!chars.iter().any(|t| t.text == "a"));
+        assert!(!l.toks.iter().any(|t| t.is_punct('\'')));
+    }
+
+    #[test]
+    fn numeric_values_parse() {
+        assert_eq!(int_value("40"), Some(40));
+        assert_eq!(int_value("0xEA71_D157"), Some(0xEA71_D157));
+        assert_eq!(int_value("0xFFFE"), Some(0xFFFE));
+        assert_eq!(int_value("16usize"), Some(16));
+        assert_eq!(int_value("0b101"), Some(5));
+        assert_eq!(int_value("1.5"), None);
+        let toks = kinds("let x = 1..2;");
+        let nums: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1", "2"], "range dots must split numbers");
+    }
+
+    #[test]
+    fn nested_block_comments_skip_cleanly() {
+        let l = lex("a /* outer /* inner */ still comment */ b");
+        let ids: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(ids, vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,746 @@
+//! Concurrency-discipline analysis: per-function lock-acquisition sets
+//! and the findings built on top of them.
+//!
+//! The scan is a heuristic token walk, not a type-checked alias
+//! analysis. The rules it relies on (and that the dispatch/coordinator
+//! code is written to satisfy):
+//!
+//! * A lock's **identity is its field name** — the last path ident
+//!   before `.lock()`, or the last ident of the first argument of the
+//!   `lock_recover(..)` / `lock_or_fail(..)` helpers. Two mutexes
+//!   behind the same field name in one file are conflated.
+//! * A **let-bound guard lives to the end of its enclosing block**; a
+//!   guard used as a temporary (`x.lock().. .push(..)`) is released at
+//!   the end of the statement — including when the chain is bound
+//!   (`let n = x.lock().unwrap().len();` binds the *length*, not the
+//!   guard; only `unwrap` / `expect` / `map_err` / `context` /
+//!   `with_context` / `?` keep the guard flowing to the binding).
+//!   `drop(guard)` releases early.
+//! * The **call graph is name-based and file-local**: an ident that
+//!   matches a same-file `fn` name, followed by `(`, is a call; lock
+//!   sets propagate through it to a fixpoint. Cross-file lock coupling
+//!   is out of scope (every mutex in this crate is a private field used
+//!   by its own module).
+//!
+//! Findings:
+//!
+//! * `lock-order` — two locks acquired in both orders across any pair
+//!   of call paths in a file (deadlock candidate).
+//! * `channel-under-lock` — a channel `send` / blocking `recv` /
+//!   `recv_timeout` while any guard is live. A receive **on the guard
+//!   itself** (the `Mutex<Receiver>` single-consumer pattern) is
+//!   exempt: that lock exists to serialize the receive.
+//! * `time-in-deterministic` — `thread::sleep` / `Instant::now` inside
+//!   a fn annotated `// earl-analyze: deterministic`.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::analyze::source::{FnInfo, SourceFile};
+use crate::analyze::Finding;
+
+/// One direct lock acquisition inside a function body.
+#[derive(Debug, Clone)]
+pub struct LockEvent {
+    pub lock: String,
+    pub line: u32,
+    /// Lock names already held at the acquisition.
+    pub held: Vec<String>,
+}
+
+/// A same-file call made while (possibly) holding locks.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    pub callee: String,
+    pub line: u32,
+    pub held: Vec<String>,
+}
+
+/// Lock-relevant summary of one function.
+#[derive(Debug, Clone)]
+pub struct FnSummary {
+    pub name: String,
+    pub events: Vec<LockEvent>,
+    pub calls: Vec<CallSite>,
+}
+
+/// Scan every non-test fn of `file`, returning the per-fn lock
+/// summaries plus the intra-fn findings (channel-under-lock and
+/// time-in-deterministic).
+pub fn summarize(file: &SourceFile) -> (Vec<FnSummary>, Vec<Finding>) {
+    let known: BTreeSet<&str> = file
+        .fns
+        .iter()
+        .filter(|f| !f.in_test)
+        .map(|f| f.name.as_str())
+        .collect();
+    let mut sums = Vec::new();
+    let mut findings = Vec::new();
+    for f in &file.fns {
+        if f.in_test || f.body.0 >= f.body.1 {
+            continue;
+        }
+        sums.push(scan_fn(file, f, &known, &mut findings));
+    }
+    (sums, findings)
+}
+
+/// Full analysis over a set of files: per-file lock-order graphs (with
+/// name-based transitive lock sets) plus the intra-fn findings.
+pub fn analyze(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in files {
+        let (sums, mut intra) = summarize(file);
+        out.append(&mut intra);
+
+        // Transitive lock sets, merged by fn name, to a fixpoint.
+        let mut locks_all: HashMap<&str, BTreeSet<String>> = HashMap::new();
+        for s in &sums {
+            let e = locks_all.entry(s.name.as_str()).or_default();
+            for ev in &s.events {
+                e.insert(ev.lock.clone());
+            }
+        }
+        loop {
+            let mut changed = false;
+            for s in &sums {
+                let mut add: BTreeSet<String> = BTreeSet::new();
+                for c in &s.calls {
+                    if let Some(ls) = locks_all.get(c.callee.as_str()) {
+                        add.extend(ls.iter().cloned());
+                    }
+                }
+                let e = locks_all.entry(s.name.as_str()).or_default();
+                for l in add {
+                    changed |= e.insert(l);
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        // Ordered-acquisition edges held → new, with one witness each.
+        type Witness = (u32, String);
+        let mut edges: BTreeMap<(String, String), Witness> = BTreeMap::new();
+        let mut add_edge = |held: &[String], lock: &str, line: u32, f: &str| {
+            for h in held {
+                if h != lock {
+                    edges
+                        .entry((h.clone(), lock.to_string()))
+                        .or_insert((line, f.to_string()));
+                }
+            }
+        };
+        for s in &sums {
+            for ev in &s.events {
+                if file.allowed(ev.line, "lock-order") {
+                    continue;
+                }
+                add_edge(&ev.held, &ev.lock, ev.line, &s.name);
+            }
+            for c in &s.calls {
+                if c.held.is_empty() || file.allowed(c.line, "lock-order") {
+                    continue;
+                }
+                if let Some(ls) = locks_all.get(c.callee.as_str()) {
+                    for l in ls.clone() {
+                        add_edge(&c.held, &l, c.line, &s.name);
+                    }
+                }
+            }
+        }
+
+        // Inversions: a→b and b→a both witnessed.
+        for ((a, b), (line, in_fn)) in &edges {
+            if a >= b {
+                continue;
+            }
+            if let Some((line2, in_fn2)) = edges.get(&(b.clone(), a.clone())) {
+                out.push(Finding {
+                    family: "concurrency",
+                    kind: "lock-order",
+                    file: file.rel.clone(),
+                    line: *line,
+                    message: format!(
+                        "lock-order inversion: `{a}` then `{b}` in `{in_fn}` \
+                         (line {line}) vs `{b}` then `{a}` in `{in_fn2}` \
+                         (line {line2}) — deadlock candidate"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Token walk of one fn body tracking guard scopes.
+fn scan_fn(
+    file: &SourceFile,
+    f: &FnInfo,
+    known: &BTreeSet<&str>,
+    findings: &mut Vec<Finding>,
+) -> FnSummary {
+    let toks = &file.lexed.toks;
+    // Scopes of (binding name, lock name); index 0 is the fn body.
+    let mut scopes: Vec<Vec<(String, String)>> = vec![Vec::new()];
+    let mut temps: Vec<String> = Vec::new();
+    let mut pending_let: Option<String> = None;
+    let mut events = Vec::new();
+    let mut calls = Vec::new();
+
+    let held = |scopes: &[Vec<(String, String)>], temps: &[String]| {
+        let mut h: Vec<String> = scopes
+            .iter()
+            .flat_map(|s| s.iter().map(|(_, l)| l.clone()))
+            .collect();
+        h.extend(temps.iter().cloned());
+        h.sort();
+        h.dedup();
+        h
+    };
+
+    let mut i = f.body.0;
+    while i < f.body.1 {
+        let t = &toks[i];
+        if t.is_punct('{') {
+            scopes.push(Vec::new());
+            pending_let = None;
+        } else if t.is_punct('}') {
+            scopes.pop();
+            if scopes.is_empty() {
+                scopes.push(Vec::new());
+            }
+        } else if t.is_punct(';') {
+            pending_let = None;
+            temps.clear();
+        } else if t.is_ident("let") {
+            pending_let = let_binding(toks, i, f.body.1);
+        } else if t.is_ident("drop")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+            && toks.get(i + 3).is_some_and(|t| t.is_punct(')'))
+        {
+            if let Some(name) = toks.get(i + 2) {
+                for s in scopes.iter_mut() {
+                    s.retain(|(b, _)| *b != name.text);
+                }
+            }
+        } else if t.is_ident("lock")
+            && i > 0
+            && toks[i - 1].is_punct('.')
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct(')'))
+        {
+            let lock = ident_before_dot(toks, i);
+            events.push(LockEvent {
+                lock: lock.clone(),
+                line: t.line,
+                held: held(&scopes, &temps),
+            });
+            match pending_let.take() {
+                Some(b) if !chain_consumes(toks, i + 3, f.body.1) => {
+                    scopes.last_mut().expect("scope").push((b, lock))
+                }
+                _ => temps.push(lock),
+            }
+        } else if (t.is_ident("lock_recover") || t.is_ident("lock_or_fail"))
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+        {
+            let lock = first_arg_ident(toks, i + 1, f.body.1);
+            events.push(LockEvent {
+                lock: lock.clone(),
+                line: t.line,
+                held: held(&scopes, &temps),
+            });
+            let after = matching_paren(toks, i + 1, f.body.1) + 1;
+            match pending_let.take() {
+                Some(b) if !chain_consumes(toks, after, f.body.1) => {
+                    scopes.last_mut().expect("scope").push((b, lock))
+                }
+                _ => temps.push(lock),
+            }
+        } else if (t.is_ident("send")
+            || t.is_ident("recv")
+            || t.is_ident("recv_timeout"))
+            && i > 0
+            && toks[i - 1].is_punct('.')
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+        {
+            let h = held(&scopes, &temps);
+            if !h.is_empty() {
+                let recv = ident_before_dot(toks, i);
+                let on_guard = scopes
+                    .iter()
+                    .any(|s| s.iter().any(|(b, _)| *b == recv))
+                    || chained_on_lock(toks, i);
+                if !on_guard && !file.allowed(t.line, "channel-under-lock") {
+                    findings.push(Finding {
+                        family: "concurrency",
+                        kind: "channel-under-lock",
+                        file: file.rel.clone(),
+                        line: t.line,
+                        message: format!(
+                            "channel `{}` on `{recv}` in `{}` while holding \
+                             lock(s) [{}]",
+                            t.text,
+                            f.name,
+                            h.join(", ")
+                        ),
+                    });
+                }
+            }
+        } else if t.is_ident("sleep")
+            && f.deterministic
+            && i >= 3
+            && toks[i - 1].is_punct(':')
+            && toks[i - 2].is_punct(':')
+            && toks[i - 3].is_ident("thread")
+            && !file.allowed(t.line, "time")
+        {
+            findings.push(Finding {
+                family: "concurrency",
+                kind: "time-in-deterministic",
+                file: file.rel.clone(),
+                line: t.line,
+                message: format!(
+                    "thread::sleep inside deterministic stage `{}`",
+                    f.name
+                ),
+            });
+        } else if t.is_ident("now")
+            && f.deterministic
+            && i >= 3
+            && toks[i - 1].is_punct(':')
+            && toks[i - 2].is_punct(':')
+            && toks[i - 3].is_ident("Instant")
+            && !file.allowed(t.line, "time")
+        {
+            findings.push(Finding {
+                family: "concurrency",
+                kind: "time-in-deterministic",
+                file: file.rel.clone(),
+                line: t.line,
+                message: format!(
+                    "Instant::now inside deterministic stage `{}`",
+                    f.name
+                ),
+            });
+        } else if t.kind == crate::analyze::lexer::TokKind::Ident
+            && known.contains(t.text.as_str())
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+            && !(i > 0 && toks[i - 1].is_ident("fn"))
+        {
+            calls.push(CallSite {
+                callee: t.text.clone(),
+                line: t.line,
+                held: held(&scopes, &temps),
+            });
+        }
+        i += 1;
+    }
+    FnSummary { name: f.name.clone(), events, calls }
+}
+
+/// Binding name of a `let` statement starting at token `i` (`let`).
+/// Handles `mut`, `Ok(..)` / `Some(..)` / tuple patterns by taking the
+/// first bound ident.
+fn let_binding(
+    toks: &[crate::analyze::lexer::Tok],
+    i: usize,
+    end: usize,
+) -> Option<String> {
+    let mut j = i + 1;
+    while j < end {
+        let t = &toks[j];
+        if t.is_ident("mut") || t.is_punct('(') || t.is_punct('&') {
+            j += 1;
+            continue;
+        }
+        if t.kind == crate::analyze::lexer::TokKind::Ident {
+            // `Ok(g)` / `Some(g)`: descend into the constructor.
+            if toks.get(j + 1).is_some_and(|t| t.is_punct('(')) {
+                j += 2;
+                continue;
+            }
+            return Some(t.text.clone());
+        }
+        return None;
+    }
+    None
+}
+
+/// Does the method chain starting right after an acquisition *consume*
+/// the guard (`let n = m.lock().unwrap().len();` → yes: the binding is
+/// the chain's result, and the guard dies at the statement end)?
+/// `unwrap` / `expect` / `map_err` / `context` / `with_context` and `?`
+/// pass the guard through; any other `.method(` takes it.
+fn chain_consumes(
+    toks: &[crate::analyze::lexer::Tok],
+    mut j: usize,
+    end: usize,
+) -> bool {
+    const PASSTHROUGH: [&str; 5] =
+        ["unwrap", "expect", "map_err", "context", "with_context"];
+    while j < end {
+        let t = &toks[j];
+        if t.is_punct('?') {
+            j += 1;
+        } else if t.is_punct('.') {
+            let keeps = toks.get(j + 1).is_some_and(|m| {
+                m.kind == crate::analyze::lexer::TokKind::Ident
+                    && PASSTHROUGH.contains(&m.text.as_str())
+            }) && toks.get(j + 2).is_some_and(|t| t.is_punct('('));
+            if !keeps {
+                return true;
+            }
+            j = matching_paren(toks, j + 2, end) + 1;
+        } else {
+            // `;`, `else`, `{` … — the binding is the guard itself.
+            return false;
+        }
+    }
+    false
+}
+
+/// Is the channel op at `i` chained directly on a lock guard
+/// (`self.tx.lock().unwrap().send(..)` — the `Mutex<Sender>` /
+/// `Mutex<Receiver>` serialization pattern)? Walks the method chain
+/// backwards through `unwrap` / `expect` to a `.lock()`.
+fn chained_on_lock(toks: &[crate::analyze::lexer::Tok], i: usize) -> bool {
+    let mut j = match i.checked_sub(2) {
+        Some(j) if toks[i - 1].is_punct('.') => j,
+        _ => return false,
+    };
+    loop {
+        // Expect the `)` of the previous chain call; find its `(`.
+        if !toks[j].is_punct(')') {
+            return false;
+        }
+        let mut depth = 0i64;
+        while j > 0 {
+            if toks[j].is_punct(')') {
+                depth += 1;
+            } else if toks[j].is_punct('(') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j -= 1;
+        }
+        if j < 2 {
+            return false;
+        }
+        let m = &toks[j - 1];
+        if m.is_ident("lock") {
+            return true;
+        }
+        if (m.is_ident("unwrap") || m.is_ident("expect"))
+            && toks[j - 2].is_punct('.')
+        {
+            j -= 3;
+            continue;
+        }
+        return false;
+    }
+}
+
+/// Index of the `)` matching the `(` at `open` (or `end - 1`).
+fn matching_paren(
+    toks: &[crate::analyze::lexer::Tok],
+    open: usize,
+    end: usize,
+) -> usize {
+    let mut depth = 0i64;
+    let mut j = open;
+    while j < end {
+        if toks[j].is_punct('(') {
+            depth += 1;
+        } else if toks[j].is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    end.saturating_sub(1)
+}
+
+/// The path ident owning a `.method()` call: for `self.a.b.lock()` at
+/// the `lock` token this is `b`.
+fn ident_before_dot(toks: &[crate::analyze::lexer::Tok], i: usize) -> String {
+    if i >= 2 && toks[i - 2].kind == crate::analyze::lexer::TokKind::Ident {
+        toks[i - 2].text.clone()
+    } else {
+        "_expr".to_string()
+    }
+}
+
+/// Last ident of the first call argument: `lock_or_fail(&self.conns, "x")`
+/// → `conns`. `open` must be the `(` token index.
+fn first_arg_ident(
+    toks: &[crate::analyze::lexer::Tok],
+    open: usize,
+    end: usize,
+) -> String {
+    let mut depth = 0i64;
+    let mut last = None;
+    let mut j = open;
+    while j < end {
+        let t = &toks[j];
+        if t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if t.is_punct(',') && depth == 1 {
+            break;
+        } else if t.kind == crate::analyze::lexer::TokKind::Ident {
+            last = Some(t.text.clone());
+        }
+        j += 1;
+    }
+    last.unwrap_or_else(|| "_expr".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse_source;
+
+    fn kinds(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.kind).collect()
+    }
+
+    #[test]
+    fn seeded_lock_order_inversion_is_caught() {
+        // Seeded violation of the lock-order family.
+        let src = "\
+impl S {
+    fn ab(&self) {
+        let a = self.alpha.lock().unwrap();
+        let b = self.beta.lock().unwrap();
+    }
+    fn ba(&self) {
+        let b = self.beta.lock().unwrap();
+        let a = self.alpha.lock().unwrap();
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        let got = analyze(&[f]);
+        assert_eq!(kinds(&got), vec!["lock-order"]);
+        assert!(got[0].message.contains("alpha"));
+        assert!(got[0].message.contains("beta"));
+    }
+
+    #[test]
+    fn inversion_through_a_call_path_is_caught() {
+        let src = "\
+impl S {
+    fn outer(&self) {
+        let a = self.alpha.lock().unwrap();
+        self.helper();
+    }
+    fn helper(&self) {
+        let b = self.beta.lock().unwrap();
+    }
+    fn rev(&self) {
+        let b = self.beta.lock().unwrap();
+        let a = self.alpha.lock().unwrap();
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        assert_eq!(kinds(&analyze(&[f])), vec!["lock-order"]);
+    }
+
+    #[test]
+    fn consistent_order_and_temporaries_are_clean() {
+        // Same order everywhere; plus statement-scoped temporaries do
+        // not extend to the next statement.
+        let src = "\
+impl S {
+    fn one(&self) {
+        let a = self.alpha.lock().unwrap();
+        let b = self.beta.lock().unwrap();
+    }
+    fn two(&self) {
+        self.beta.lock().unwrap().push(1);
+        self.alpha.lock().unwrap().push(2);
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        assert!(analyze(&[f]).is_empty());
+    }
+
+    #[test]
+    fn scoped_guard_releases_at_block_end() {
+        let src = "\
+impl S {
+    fn seq(&self) {
+        {
+            let a = self.alpha.lock().unwrap();
+            a.touch();
+        }
+        let b = self.beta.lock().unwrap();
+    }
+    fn rev(&self) {
+        {
+            let b = self.beta.lock().unwrap();
+        }
+        let a = self.alpha.lock().unwrap();
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        assert!(analyze(&[f]).is_empty());
+    }
+
+    #[test]
+    fn helper_acquisitions_count_and_allow_suppresses() {
+        let src = "\
+impl S {
+    fn ab(&self) -> Result<()> {
+        let a = lock_or_fail(&self.alpha, \"a\")?;
+        let b = lock_or_fail(&self.beta, \"b\")?;
+        Ok(())
+    }
+    fn ba(&self) {
+        let b = lock_recover(&self.beta);
+        // earl-analyze: allow(lock-order) — test fixture
+        let a = lock_recover(&self.alpha);
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        assert!(analyze(&[f]).is_empty(), "annotated inversion suppressed");
+    }
+
+    #[test]
+    fn channel_op_under_guard_is_caught_guard_receiver_exempt() {
+        let src = "\
+impl S {
+    fn bad(&self) {
+        let g = self.state.lock().unwrap();
+        self.tx.send(1).unwrap();
+    }
+    fn single_consumer(&self) {
+        let rx = self.done_rx.lock().unwrap();
+        let _ = rx.recv_timeout(TIMEOUT);
+    }
+    fn free(&self) {
+        self.tx.send(2).unwrap();
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        let got = analyze(&[f]);
+        assert_eq!(kinds(&got), vec!["channel-under-lock"]);
+        assert!(got[0].message.contains("bad"));
+    }
+
+    #[test]
+    fn time_flagged_only_in_deterministic_fns() {
+        let src = "\
+// earl-analyze: deterministic
+fn stage(d: Duration) {
+    thread::sleep(d);
+}
+fn free(d: Duration) {
+    thread::sleep(d);
+    let _t = Instant::now();
+}
+// earl-analyze: deterministic
+fn stamped() {
+    let _t = Instant::now();
+}
+";
+        let f = parse_source("coordinator/fake.rs", src);
+        let got = analyze(&[f]);
+        assert_eq!(
+            kinds(&got),
+            vec!["time-in-deterministic", "time-in-deterministic"]
+        );
+        assert!(got[0].message.contains("stage"));
+        assert!(got[1].message.contains("stamped"));
+    }
+
+    #[test]
+    fn bound_chain_result_is_not_a_guard() {
+        // `let n = x.lock().unwrap().len()` binds the *length*; the
+        // guard is statement-scoped, so the reversed orders are clean
+        // and the later send is not "under" the lock.
+        let src = "\
+impl S {
+    fn one(&self) {
+        let n = self.alpha.lock().unwrap().len();
+        let b = self.beta.lock().unwrap();
+    }
+    fn two(&self) {
+        let m = self.beta.lock().unwrap().len();
+        let a = self.alpha.lock().unwrap();
+    }
+    fn pop(&self) {
+        let Some(p) = lock_recover(&self.queue).pop_front() else {
+            return;
+        };
+        self.tx.send(p).unwrap();
+    }
+    fn kept(&self) -> Result<()> {
+        let g = lock_or_fail(&self.alpha, \"a\")?;
+        self.tx.send(1).unwrap();
+        Ok(())
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        let got = analyze(&[f]);
+        // Only `kept` really holds its guard across the send.
+        assert_eq!(kinds(&got), vec!["channel-under-lock"]);
+        assert!(got[0].message.contains("kept"));
+    }
+
+    #[test]
+    fn send_chained_on_the_lock_itself_is_exempt() {
+        // `Mutex<Sender>` idiom: the lock exists to serialize the send.
+        let src = "\
+impl S {
+    fn pooled(&self, f: Job) {
+        self.tx.as_ref().expect(\"shut down\").lock().unwrap().send(f).expect(\"gone\");
+    }
+    fn bad(&self) {
+        let g = self.state.lock().unwrap();
+        self.tx.send(1).unwrap();
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        let got = analyze(&[f]);
+        assert_eq!(kinds(&got), vec!["channel-under-lock"]);
+        assert!(got[0].message.contains("bad"));
+    }
+
+    #[test]
+    fn drop_releases_guard_early() {
+        let src = "\
+impl S {
+    fn ab(&self) {
+        let a = self.alpha.lock().unwrap();
+        drop(a);
+        let b = self.beta.lock().unwrap();
+    }
+    fn ba(&self) {
+        let b = self.beta.lock().unwrap();
+        drop(b);
+        let a = self.alpha.lock().unwrap();
+    }
+}
+";
+        let f = parse_source("dispatch/fake.rs", src);
+        assert!(analyze(&[f]).is_empty());
+    }
+}

@@ -1,0 +1,294 @@
+//! `earl-analyze`: in-repo static analysis over the crate source.
+//!
+//! Three finding families, all running off the same hand-rolled token
+//! walk ([`lexer`] / [`source`]; no rustc internals, so the pass runs
+//! in the `--no-default-features` build with zero new dependencies):
+//!
+//! * **concurrency** ([`locks`]) — lock-order inversions across call
+//!   paths, channel ops under a live guard, wall-clock reads inside
+//!   deterministic pipeline stages;
+//! * **wire-protocol** ([`wirespec`]) — `dispatch/wire.rs` parsed into
+//!   a machine-readable protocol spec and checked for encode/decode
+//!   completeness, layout tiling, and checksum coverage;
+//! * **panic-budget** ([`panics`]) — `unwrap()`/`expect()`/`panic!` in
+//!   non-test `dispatch/`, `coordinator/`, `runtime/` code, gated by
+//!   explicit `// earl-analyze: allow(panic)` annotations and a
+//!   ratcheting per-file baseline (counts may only shrink).
+//!
+//! `make analyze` (folded into `make check`) runs the
+//! [`crate::analyze`] pass via the `earl-analyze` bin and fails on any
+//! finding.
+
+pub mod lexer;
+pub mod locks;
+pub mod panics;
+pub mod source;
+pub mod wirespec;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Relative path of the wire module the protocol checks run against.
+pub const WIRE_MODULE: &str = "dispatch/wire.rs";
+
+/// One diagnostic produced by the analysis pass.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Finding family: `concurrency`, `wire-protocol`, `panic-budget`.
+    pub family: &'static str,
+    /// Specific check within the family (e.g. `lock-order`).
+    pub kind: &'static str,
+    /// Path relative to the crawl root.
+    pub file: String,
+    /// 1-based line, or 0 for file-level findings.
+    pub line: u32,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("family", Json::str(self.family)),
+            ("kind", Json::str(self.kind)),
+            ("file", Json::str(self.file.as_str())),
+            ("line", Json::num(self.line as f64)),
+            ("message", Json::str(self.message.as_str())),
+        ])
+    }
+
+    /// `file:line: [family/kind] message` (file-level findings omit the
+    /// line so terminals still hyperlink the path).
+    pub fn render(&self) -> String {
+        if self.line > 0 {
+            format!(
+                "{}:{}: [{}/{}] {}",
+                self.file, self.line, self.family, self.kind, self.message
+            )
+        } else {
+            format!("{}: [{}/{}] {}", self.file, self.family, self.kind, self.message)
+        }
+    }
+}
+
+/// Output of one full analysis run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Current un-annotated panic-site count per linted file (including
+    /// files covered by the baseline).
+    pub panic_counts: BTreeMap<String, usize>,
+    /// Baselined files whose count shrank — candidates for ratcheting
+    /// the baseline down. `(file, current, baseline)`.
+    pub slack: Vec<(String, usize, usize)>,
+    /// The extracted wire-protocol spec, when the wire module was seen.
+    pub spec: Option<wirespec::WireSpec>,
+    /// Source files crawled.
+    pub files: usize,
+}
+
+impl Report {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("files", Json::num(self.files as f64)),
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(|f| f.to_json())),
+            ),
+            (
+                "panic_counts",
+                Json::Obj(
+                    self.panic_counts
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(spec) = &self.spec {
+            fields.push(("wire_spec", spec.to_json()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Run the full pass over the source tree at `root` (the crate's `src/`
+/// directory) against a panic-budget `baseline` (per-file allowances).
+pub fn run(root: &Path, baseline: &BTreeMap<String, usize>) -> Result<Report> {
+    let files = source::crawl(root)?;
+    let mut report = Report { files: files.len(), ..Report::default() };
+
+    // Concurrency family.
+    report.findings.extend(locks::analyze(&files));
+
+    // Wire-protocol family.
+    match files.iter().find(|f| f.rel == WIRE_MODULE) {
+        Some(wire) => {
+            let mut spec = wirespec::extract_spec(wire);
+            let mut findings = wirespec::check_spec(wire, &mut spec);
+            findings.extend(wirespec::check_required(wire, &spec));
+            report.findings.append(&mut findings);
+            report.spec = Some(spec);
+        }
+        None => report.findings.push(Finding {
+            family: "wire-protocol",
+            kind: "wirespec-extract",
+            file: WIRE_MODULE.to_string(),
+            line: 0,
+            message: "wire module not found under the analysis root".into(),
+        }),
+    }
+
+    // Panic-budget family.
+    for file in &files {
+        if !panics::linted(&file.rel) {
+            continue;
+        }
+        let sites = panics::scan(file);
+        report.panic_counts.insert(file.rel.clone(), sites.len());
+        let allowed = baseline.get(&file.rel).copied().unwrap_or(0);
+        if sites.len() > allowed {
+            let lines: Vec<String> = sites
+                .iter()
+                .map(|s| format!("{} at line {}", s.what, s.line))
+                .collect();
+            report.findings.push(Finding {
+                family: "panic-budget",
+                kind: "panic",
+                file: file.rel.clone(),
+                line: sites.first().map(|s| s.line).unwrap_or(0),
+                message: format!(
+                    "{} un-annotated panic site(s), baseline allows {}: {}",
+                    sites.len(),
+                    allowed,
+                    lines.join(", ")
+                ),
+            });
+        } else if sites.len() < allowed {
+            report
+                .slack
+                .push((file.rel.clone(), sites.len(), allowed));
+        }
+    }
+
+    Ok(report)
+}
+
+/// Load a panic-budget baseline file (`{"panic-budget": {"file": N}}`).
+/// A missing file is an empty baseline — the strictest gate.
+pub fn load_baseline(path: &Path) -> Result<BTreeMap<String, usize>> {
+    if !path.exists() {
+        return Ok(BTreeMap::new());
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let json = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    let mut out = BTreeMap::new();
+    if let Some(obj) = json.at(&["panic-budget"]).as_obj() {
+        for (k, v) in obj {
+            if let Some(n) = v.as_usize() {
+                out.insert(k.clone(), n);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Serialize current panic counts as a baseline file (zero-count files
+/// omitted: absence already means zero, and the ratchet should shrink).
+pub fn baseline_json(counts: &BTreeMap<String, usize>) -> Json {
+    Json::obj(vec![(
+        "panic-budget",
+        Json::Obj(
+            counts
+                .iter()
+                .filter(|(_, v)| **v > 0)
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        ),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_roundtrip() {
+        let mut counts = BTreeMap::new();
+        counts.insert("dispatch/a.rs".to_string(), 3usize);
+        counts.insert("dispatch/clean.rs".to_string(), 0usize);
+        let text = baseline_json(&counts).to_string();
+        let json = Json::parse(&text).expect("baseline json parses");
+        assert_eq!(
+            json.at(&["panic-budget", "dispatch/a.rs"]).as_usize(),
+            Some(3)
+        );
+        // Zero-count files are omitted (absence means zero).
+        assert!(json
+            .at(&["panic-budget"])
+            .as_obj()
+            .is_some_and(|o| !o.contains_key("dispatch/clean.rs")));
+    }
+
+    #[test]
+    fn finding_renders_with_and_without_line() {
+        let f = Finding {
+            family: "panic-budget",
+            kind: "panic",
+            file: "dispatch/tcp.rs".into(),
+            line: 42,
+            message: "m".into(),
+        };
+        assert_eq!(f.render(), "dispatch/tcp.rs:42: [panic-budget/panic] m");
+        let g = Finding { line: 0, ..f };
+        assert_eq!(g.render(), "dispatch/tcp.rs: [panic-budget/panic] m");
+    }
+
+    #[test]
+    fn run_over_a_fixture_tree_applies_the_ratchet() {
+        let dir = std::env::temp_dir().join("earl-analyze-fixture");
+        let dispatch = dir.join("dispatch");
+        std::fs::create_dir_all(&dispatch).expect("mkdir");
+        std::fs::write(
+            dispatch.join("wire.rs"),
+            "pub fn ship(x: Option<u8>) -> u8 { x.unwrap() }\n",
+        )
+        .expect("write");
+
+        // Empty baseline: the unwrap plus the missing wire-spec shapes
+        // are findings.
+        let report = run(&dir, &BTreeMap::new()).expect("run");
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.family == "panic-budget" && f.file == "dispatch/wire.rs"));
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.kind == "wirespec-extract"));
+        assert_eq!(report.panic_counts.get("dispatch/wire.rs"), Some(&1));
+
+        // Baselining the file silences the panic finding (ratchet).
+        let mut base = BTreeMap::new();
+        base.insert("dispatch/wire.rs".to_string(), 1usize);
+        let report = run(&dir, &base).expect("run");
+        assert!(!report
+            .findings
+            .iter()
+            .any(|f| f.family == "panic-budget"));
+
+        // Over-generous baseline shows up as slack, not a finding.
+        base.insert("dispatch/wire.rs".to_string(), 5usize);
+        let report = run(&dir, &base).expect("run");
+        assert_eq!(
+            report.slack,
+            vec![("dispatch/wire.rs".to_string(), 1, 5)]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,109 @@
+//! Panic-budget lint: `unwrap()` / `expect(` / `panic!` are forbidden
+//! in non-test code under `dispatch/`, `coordinator/` and `runtime/`.
+//!
+//! Escapes: an explicit `// earl-analyze: allow(panic)` annotation on
+//! the site (with a justification), or the checked-in baseline file —
+//! per-file counts that may only shrink (the ratchet), so legacy debt
+//! is bounded while new panics fail `make check` immediately.
+
+use crate::analyze::source::SourceFile;
+
+/// Directories (relative to the crawl root) the lint applies to.
+pub const LINTED_DIRS: [&str; 3] = ["dispatch/", "coordinator/", "runtime/"];
+
+/// Whether the lint applies to this file at all.
+pub fn linted(rel: &str) -> bool {
+    LINTED_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+/// One panic-capable call site in non-test, non-annotated code.
+#[derive(Debug, Clone)]
+pub struct PanicSite {
+    pub line: u32,
+    /// `unwrap()`, `expect()` or `panic!`.
+    pub what: &'static str,
+}
+
+/// Scan one file for un-annotated panic sites in production code.
+pub fn scan(file: &SourceFile) -> Vec<PanicSite> {
+    let toks = &file.lexed.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        let what = if t.is_ident("unwrap")
+            && i > 0
+            && toks[i - 1].is_punct('.')
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct(')'))
+        {
+            "unwrap()"
+        } else if t.is_ident("expect")
+            && i > 0
+            && toks[i - 1].is_punct('.')
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+        {
+            "expect()"
+        } else if t.is_ident("panic")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('!'))
+        {
+            "panic!"
+        } else {
+            continue;
+        };
+        if file.in_test(t.line) || file.allowed(t.line, "panic") {
+            continue;
+        }
+        out.push(PanicSite { line: t.line, what });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse_source;
+
+    #[test]
+    fn flags_unannotated_unwrap_in_dispatch_code() {
+        // Seeded violation of the panic family: an un-annotated
+        // unwrap() in dispatch/-style production code must be caught.
+        let src = "fn ship(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        let f = parse_source("dispatch/fake.rs", src);
+        assert!(linted(&f.rel));
+        let sites = scan(&f);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].line, 2);
+        assert_eq!(sites[0].what, "unwrap()");
+    }
+
+    #[test]
+    fn flags_expect_and_panic_macro() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    if x.is_none() { panic!(\"no\"); }\n    x.expect(\"checked\")\n}\n";
+        let f = parse_source("coordinator/fake.rs", src);
+        let whats: Vec<_> = scan(&f).iter().map(|s| s.what).collect();
+        assert_eq!(whats, vec!["panic!", "expect()"]);
+    }
+
+    #[test]
+    fn annotation_and_test_code_are_exempt() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    // earl-analyze: allow(panic) — len checked above\n    x.unwrap()\n}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { None::<u8>.unwrap(); }\n}\n";
+        let f = parse_source("runtime/fake.rs", src);
+        assert!(scan(&f).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_and_strings_not_flagged() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    let _s = \"don't panic!\";\n    x.unwrap_or(0)\n}\nfn g(x: Option<u8>) -> u8 {\n    x.unwrap_or_else(|| 1)\n}\n";
+        let f = parse_source("dispatch/fake.rs", src);
+        assert!(scan(&f).is_empty());
+    }
+
+    #[test]
+    fn scope_is_the_three_concurrent_dirs() {
+        assert!(linted("dispatch/tcp.rs"));
+        assert!(linted("coordinator/pipeline.rs"));
+        assert!(linted("runtime/snapshot.rs"));
+        assert!(!linted("util/json.rs"));
+        assert!(!linted("metrics/mod.rs"));
+    }
+}

@@ -1,0 +1,388 @@
+//! Source model for the analysis pass: crawls a `src/` tree, lexes
+//! every `.rs` file, and extracts the structure the analyses need —
+//! function spans, `#[cfg(test)]` / `#[test]` regions (excluded from
+//! production lints), and `// earl-analyze:` annotations.
+//!
+//! ## Annotations
+//!
+//! A `//` comment containing `earl-analyze:` carries directives,
+//! comma-separated:
+//!
+//! * `allow(panic)` / `allow(lock-order)` / `allow(channel-under-lock)`
+//!   / `allow(time)` — suppress that finding kind on the same line or
+//!   the line directly below the comment.
+//! * `deterministic` — marks the next `fn` as a deterministic stage:
+//!   `thread::sleep` / `Instant::now` inside it become findings.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::analyze::lexer::{lex, Lexed, TokKind};
+
+/// One function's span inside a file.
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Token-index range of the body, *inside* the braces
+    /// (`toks[body.0..body.1]`). Empty for bodyless trait fns.
+    pub body: (usize, usize),
+    /// Annotated `// earl-analyze: deterministic`.
+    pub deterministic: bool,
+    /// Inside a `#[cfg(test)]` region or under `#[test]`.
+    pub in_test: bool,
+}
+
+/// One analyzed source file.
+pub struct SourceFile {
+    pub path: PathBuf,
+    /// Path relative to the crawl root, forward slashes (`dispatch/tcp.rs`).
+    pub rel: String,
+    pub lexed: Lexed,
+    pub fns: Vec<FnInfo>,
+    /// Line ranges (inclusive) of test-only code.
+    pub test_regions: Vec<(u32, u32)>,
+    /// Line → annotation directives on that line's comment.
+    pub directives: HashMap<u32, Vec<String>>,
+}
+
+impl SourceFile {
+    /// Whether `line` falls inside test-only code.
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// Whether a finding of `kind` at `line` is allow-annotated (same
+    /// line, or a comment on the line directly above).
+    pub fn allowed(&self, line: u32, kind: &str) -> bool {
+        let want = format!("allow({kind})");
+        [line, line.saturating_sub(1)].iter().any(|l| {
+            self.directives
+                .get(l)
+                .is_some_and(|ds| ds.iter().any(|d| d == &want))
+        })
+    }
+}
+
+/// Parse a file already read into memory (fixture-friendly: the
+/// analyzer's own tests feed inline sources through this).
+pub fn parse_source(rel: &str, src: &str) -> SourceFile {
+    let lexed = lex(src);
+    let directives = collect_directives(&lexed);
+    let test_regions = find_test_regions(&lexed);
+    let fns = find_fns(&lexed, &directives, &test_regions);
+    SourceFile {
+        path: PathBuf::from(rel),
+        rel: rel.to_string(),
+        lexed,
+        fns,
+        test_regions,
+        directives,
+    }
+}
+
+/// Crawl `root` recursively for `.rs` files, in deterministic (sorted)
+/// order.
+pub fn crawl(root: &Path) -> Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                if path.file_name().is_some_and(|n| n == "target") {
+                    continue;
+                }
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    files
+        .into_iter()
+        .map(|path| {
+            let src = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let mut f = parse_source(&rel, &src);
+            f.path = path;
+            Ok(f)
+        })
+        .collect()
+}
+
+fn collect_directives(lexed: &Lexed) -> HashMap<u32, Vec<String>> {
+    let mut map: HashMap<u32, Vec<String>> = HashMap::new();
+    for (line, text) in &lexed.comments {
+        let Some(idx) = text.find("earl-analyze:") else { continue };
+        let rest = &text[idx + "earl-analyze:".len()..];
+        // Directives end at a freeform explanation (" — why" / extra
+        // prose); split on commas, keep `word` or `word(arg)` shapes.
+        for part in rest.split(',') {
+            let d: String = part
+                .trim()
+                .chars()
+                .take_while(|c| {
+                    c.is_alphanumeric() || matches!(c, '(' | ')' | '-' | '_')
+                })
+                .collect();
+            if !d.is_empty() {
+                map.entry(*line).or_default().push(d);
+            }
+        }
+    }
+    map
+}
+
+/// Find the token index of the matching close brace for the open brace
+/// at `open` (which must be `{`). Returns the index of the `}`.
+pub fn match_brace(lexed: &Lexed, open: usize) -> usize {
+    let mut depth = 0i64;
+    let toks = &lexed.toks;
+    let mut i = open;
+    while i < toks.len() {
+        if toks[i].is_punct('{') {
+            depth += 1;
+        } else if toks[i].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Token regions under `#[cfg(test)]` items and `#[test]` functions,
+/// as inclusive line ranges.
+fn find_test_regions(lexed: &Lexed) -> Vec<(u32, u32)> {
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_punct('#') {
+            i += 1;
+            continue;
+        }
+        // Parse one attribute: #[ ... ] with bracket matching.
+        if i + 1 >= toks.len() || !toks[i + 1].is_punct('[') {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        let mut depth = 0i64;
+        let mut attr_toks: Vec<&str> = Vec::new();
+        while j < toks.len() {
+            if toks[j].is_punct('[') {
+                depth += 1;
+            } else if toks[j].is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            if toks[j].kind == TokKind::Ident {
+                attr_toks.push(&toks[j].text);
+            }
+            j += 1;
+        }
+        let is_test_attr = attr_toks.first() == Some(&"test")
+            || (attr_toks.first() == Some(&"cfg")
+                && attr_toks.contains(&"test")
+                && !attr_toks.contains(&"not"));
+        if !is_test_attr {
+            i = j + 1;
+            continue;
+        }
+        // Skip any further attributes, then find the guarded item's
+        // body: the first `{` before a top-level `;`.
+        let mut k = j + 1;
+        let mut pdepth = 0i64;
+        let mut open = None;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_punct('#')
+                && k + 1 < toks.len()
+                && toks[k + 1].is_punct('[')
+            {
+                // Nested attribute: skip it wholesale.
+                let mut d = 0i64;
+                k += 1;
+                while k < toks.len() {
+                    if toks[k].is_punct('[') {
+                        d += 1;
+                    } else if toks[k].is_punct(']') {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                k += 1;
+                continue;
+            }
+            if t.is_punct('(') || t.is_punct('[') {
+                pdepth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                pdepth -= 1;
+            } else if t.is_punct('{') && pdepth == 0 {
+                open = Some(k);
+                break;
+            } else if t.is_punct(';') && pdepth == 0 {
+                break; // `#[cfg(test)] use ...;` — no region
+            }
+            k += 1;
+        }
+        if let Some(open) = open {
+            let close = match_brace(lexed, open);
+            out.push((toks[i].line, toks[close].line));
+            i = close + 1;
+        } else {
+            i = k + 1;
+        }
+    }
+    out
+}
+
+fn find_fns(
+    lexed: &Lexed,
+    directives: &HashMap<u32, Vec<String>>,
+    test_regions: &[(u32, u32)],
+) -> Vec<FnInfo> {
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_ident("fn") {
+            i += 1;
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let fn_line = toks[i].line;
+        // Find the body `{` at paren/bracket depth 0, stopping at `;`.
+        let mut k = i + 2;
+        let mut pdepth = 0i64;
+        let mut body = (0usize, 0usize);
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_punct('(') || t.is_punct('[') {
+                pdepth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                pdepth -= 1;
+            } else if t.is_punct('{') && pdepth == 0 {
+                let close = match_brace(lexed, k);
+                body = (k + 1, close);
+                break;
+            } else if t.is_punct(';') && pdepth == 0 {
+                break;
+            }
+            k += 1;
+        }
+        let deterministic = (fn_line.saturating_sub(2)..=fn_line).any(|l| {
+            directives
+                .get(&l)
+                .is_some_and(|ds| ds.iter().any(|d| d == "deterministic"))
+        });
+        let in_test = test_regions
+            .iter()
+            .any(|&(a, b)| a <= fn_line && fn_line <= b);
+        out.push(FnInfo {
+            name: name_tok.text.clone(),
+            line: fn_line,
+            body,
+            deterministic,
+            in_test,
+        });
+        i += 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIXTURE: &str = r#"
+pub fn alpha() {
+    let x = 1;
+}
+
+// earl-analyze: deterministic
+fn beta(v: &[u8]) -> u8 {
+    v[0]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gamma() {
+        assert!(true);
+    }
+}
+"#;
+
+    #[test]
+    fn extracts_fns_regions_and_annotations() {
+        let f = parse_source("m.rs", FIXTURE);
+        let names: Vec<_> = f.fns.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "beta", "gamma"]);
+        let beta = &f.fns[1];
+        assert!(beta.deterministic);
+        assert!(!beta.in_test);
+        let gamma = &f.fns[2];
+        assert!(gamma.in_test);
+        assert!(!f.fns[0].deterministic);
+        // Test region spans the whole mod tests block.
+        assert_eq!(f.test_regions.len(), 1);
+        assert!(f.in_test(gamma.line));
+        assert!(!f.in_test(f.fns[0].line));
+    }
+
+    #[test]
+    fn allow_annotations_cover_same_and_next_line() {
+        let src = "fn f() {\n    // earl-analyze: allow(panic) — justified\n    x.unwrap();\n    y.unwrap(); // earl-analyze: allow(panic)\n    z.unwrap();\n}\n";
+        let f = parse_source("m.rs", src);
+        assert!(f.allowed(3, "panic"), "comment-above form");
+        assert!(f.allowed(4, "panic"), "trailing form");
+        assert!(!f.allowed(5, "panic"));
+        assert!(!f.allowed(3, "lock-order"));
+    }
+
+    #[test]
+    fn cfg_test_on_use_item_makes_no_region() {
+        let f = parse_source(
+            "m.rs",
+            "#[cfg(test)]\nuse foo::bar;\nfn live() { x.unwrap(); }\n",
+        );
+        assert!(f.test_regions.is_empty());
+        assert!(!f.in_test(3));
+    }
+
+    #[test]
+    fn body_spans_cover_nested_braces() {
+        let src = "fn outer() { if a { b() } else { c() } }\nfn next() {}\n";
+        let f = parse_source("m.rs", src);
+        assert_eq!(f.fns.len(), 2);
+        let (a, b) = f.fns[0].body;
+        assert!(b > a);
+        // next()'s body is separate and after outer()'s close.
+        assert!(f.fns[1].body.0 > b);
+    }
+}

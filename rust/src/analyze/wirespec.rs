@@ -1,0 +1,959 @@
+//! Wire-protocol consistency analysis over `dispatch/wire.rs`.
+//!
+//! Extracts a machine-readable protocol spec from the source (consts,
+//! enum code tables, fixed-layout byte ranges, checksum stream order)
+//! and checks it for internal consistency:
+//!
+//! * every enum variant handled in both `code()` (encode) and
+//!   `from_code()` (decode), with a bijective mapping, and listed in
+//!   the `ALL` table when one exists;
+//! * fixed layouts (`fn encode(..) -> [u8; LEN]` + `fn decode`): the
+//!   encode writes tile `0..LEN` without overlap — padding holes only
+//!   where declared in [`PAD_HOLES`] — and the decode reads touch
+//!   exactly the same byte ranges;
+//! * the frame checksum covers every framed byte: the `.update(..)`
+//!   stream of `checksum()` must equal the `.extend_from_slice(..)`
+//!   stream of the frame encoder minus its leading header element.
+//!
+//! Extraction is a token walk keyed on the idioms the wire module is
+//! written in (literal index ranges, `Type::Variant => code` match
+//! arms); anything it cannot see, it reports as a `wirespec-extract`
+//! finding instead of passing silently.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analyze::lexer::{int_value, Tok, TokKind};
+use crate::analyze::source::{match_brace, SourceFile};
+use crate::analyze::Finding;
+use crate::util::json::Json;
+
+/// Declared padding bytes of fixed layouts (holes the encoder is
+/// *expected* to leave): `ShardDesc` byte 3 pads `dtype u8` to the
+/// 4-byte `row_start` boundary.
+pub const PAD_HOLES: &[(&str, &[u64])] = &[("ShardDesc", &[3])];
+
+/// Code tables of one wire enum.
+#[derive(Debug, Clone, Default)]
+pub struct EnumSpec {
+    pub variants: Vec<String>,
+    /// `code()` match arms, in source order.
+    pub codes: Vec<(String, u64)>,
+    /// `from_code()` match arms, in source order.
+    pub from_codes: Vec<(u64, String)>,
+    /// The `ALL` iteration table, if the impl declares one.
+    pub all: Option<Vec<String>>,
+    /// Declared length of `ALL` (`[Self; N]`).
+    pub all_len: Option<u64>,
+}
+
+/// Byte layout of one fixed-size frame struct.
+#[derive(Debug, Clone, Default)]
+pub struct LayoutSpec {
+    pub len: u64,
+    /// Byte ranges written by `encode`, in source order.
+    pub encode: Vec<(u64, u64)>,
+    /// Byte ranges read by `decode`, in source order.
+    pub decode: Vec<(u64, u64)>,
+    /// Bytes `encode` leaves unwritten (padding).
+    pub holes: Vec<u64>,
+}
+
+/// The extracted protocol spec.
+#[derive(Debug, Clone, Default)]
+pub struct WireSpec {
+    pub consts: BTreeMap<String, u64>,
+    pub enums: BTreeMap<String, EnumSpec>,
+    pub layouts: BTreeMap<String, LayoutSpec>,
+    /// Argument expressions fed to the checksum, in stream order.
+    pub checksum_stream: Vec<String>,
+    /// Argument expressions appended by the frame encoder, in order.
+    pub frame_stream: Vec<String>,
+}
+
+impl WireSpec {
+    pub fn to_json(&self) -> Json {
+        let consts = Json::Obj(
+            self.consts
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let enums = Json::Obj(
+            self.enums
+                .iter()
+                .map(|(name, e)| {
+                    let mut fields = vec![
+                        (
+                            "variants",
+                            Json::arr(
+                                e.variants.iter().map(|v| Json::str(v.as_str())),
+                            ),
+                        ),
+                        (
+                            "codes",
+                            Json::arr(e.codes.iter().map(|(v, c)| {
+                                Json::arr([
+                                    Json::str(v),
+                                    Json::num(*c as f64),
+                                ])
+                            })),
+                        ),
+                        (
+                            "from_codes",
+                            Json::arr(e.from_codes.iter().map(|(c, v)| {
+                                Json::arr([
+                                    Json::num(*c as f64),
+                                    Json::str(v),
+                                ])
+                            })),
+                        ),
+                    ];
+                    if let Some(all) = &e.all {
+                        fields.push((
+                            "all",
+                            Json::arr(all.iter().map(|v| Json::str(v.as_str()))),
+                        ));
+                    }
+                    (name.clone(), Json::obj(fields))
+                })
+                .collect(),
+        );
+        let layouts = Json::Obj(
+            self.layouts
+                .iter()
+                .map(|(name, l)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("len", Json::num(l.len as f64)),
+                            (
+                                "encode",
+                                Json::arr(l.encode.iter().map(|(a, b)| {
+                                    Json::arr([
+                                        Json::num(*a as f64),
+                                        Json::num(*b as f64),
+                                    ])
+                                })),
+                            ),
+                            (
+                                "holes",
+                                Json::arr(
+                                    l.holes.iter().map(|h| Json::num(*h as f64)),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("consts", consts),
+            ("enums", enums),
+            ("layouts", layouts),
+            (
+                "checksum_stream",
+                Json::arr(
+                    self.checksum_stream.iter().map(|v| Json::str(v.as_str())),
+                ),
+            ),
+            (
+                "frame_stream",
+                Json::arr(
+                    self.frame_stream.iter().map(|v| Json::str(v.as_str())),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Extract the protocol spec from a parsed wire module.
+pub fn extract_spec(file: &SourceFile) -> WireSpec {
+    let toks = &file.lexed.toks;
+    let mut spec = WireSpec::default();
+
+    // --- consts: literal values and `a << b` shifts -----------------------
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].is_ident("const")
+            && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident)
+            && !file.in_test(toks[i].line)
+        {
+            let name = toks[i + 1].text.clone();
+            if let Some(v) = const_value(toks, i) {
+                spec.consts.insert(name, v);
+            }
+        }
+        i += 1;
+    }
+
+    // --- enum variant lists ----------------------------------------------
+    i = 0;
+    while i < toks.len() {
+        if toks[i].is_ident("enum")
+            && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident)
+            && !file.in_test(toks[i].line)
+        {
+            let name = toks[i + 1].text.clone();
+            if let Some(open) = (i + 2..toks.len().min(i + 8))
+                .find(|&j| toks[j].is_punct('{'))
+            {
+                let close = match_brace(&file.lexed, open);
+                let mut variants = Vec::new();
+                let mut depth = 0i64;
+                let mut prev_sig: Option<char> = Some('{');
+                for j in open..=close {
+                    let t = &toks[j];
+                    if t.is_punct('{') || t.is_punct('(') {
+                        depth += 1;
+                    } else if t.is_punct('}') || t.is_punct(')') {
+                        depth -= 1;
+                    } else if depth == 1
+                        && t.kind == TokKind::Ident
+                        && matches!(prev_sig, Some('{') | Some(','))
+                    {
+                        variants.push(t.text.clone());
+                    }
+                    prev_sig = match t.kind {
+                        TokKind::Punct => t.text.chars().next(),
+                        _ => None,
+                    };
+                }
+                spec.enums.entry(name).or_default().variants = variants;
+                i = close;
+            }
+        }
+        i += 1;
+    }
+
+    // --- impl blocks: code()/from_code()/ALL, encode/decode layouts ------
+    i = 0;
+    while i < toks.len() {
+        if toks[i].is_ident("impl")
+            && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident)
+            && toks.get(i + 2).is_some_and(|t| t.is_punct('{'))
+        {
+            let ty = toks[i + 1].text.clone();
+            let open = i + 2;
+            let close = match_brace(&file.lexed, open);
+            extract_impl(file, &ty, open, close, &mut spec);
+            i = close;
+        }
+        i += 1;
+    }
+
+    // --- checksum / frame streams ----------------------------------------
+    for f in &file.fns {
+        if f.in_test || f.body.0 >= f.body.1 {
+            continue;
+        }
+        if f.name == "checksum" && spec.checksum_stream.is_empty() {
+            spec.checksum_stream = call_args(toks, f.body, "update");
+        }
+        if f.name == "encode_frame" {
+            // Two fns share this name; the frame encoder is the one
+            // that builds a `FrameHeader`.
+            let body = &toks[f.body.0..f.body.1];
+            if body.iter().any(|t| t.is_ident("FrameHeader")) {
+                spec.frame_stream = call_args(toks, f.body, "extend_from_slice");
+            }
+        }
+    }
+    spec
+}
+
+fn extract_impl(
+    file: &SourceFile,
+    ty: &str,
+    open: usize,
+    close: usize,
+    spec: &mut WireSpec,
+) {
+    let toks = &file.lexed.toks;
+    // fns of this impl, by name.
+    let fns: BTreeMap<&str, (usize, usize)> = file
+        .fns
+        .iter()
+        .filter(|f| f.body.0 > open && f.body.1 <= close && !f.in_test)
+        .map(|f| (f.name.as_str(), f.body))
+        .collect();
+
+    if let Some(&body) = fns.get("code") {
+        let e = spec.enums.entry(ty.to_string()).or_default();
+        e.codes = encode_arms(toks, body, ty);
+    }
+    if let Some(&body) = fns.get("from_code") {
+        let e = spec.enums.entry(ty.to_string()).or_default();
+        e.from_codes = decode_arms(toks, body, ty);
+    }
+
+    // `pub const ALL: [Ty; N] = [Ty::A, Ty::B, ...];`
+    let mut i = open;
+    while i < close {
+        if toks[i].is_ident("ALL") && toks.get(i + 1).is_some_and(|t| t.is_punct(':')) {
+            let mut len = None;
+            let mut j = i + 2;
+            while j < close && !toks[j].is_punct('=') {
+                if toks[j].kind == TokKind::Num {
+                    len = int_value(&toks[j].text);
+                }
+                j += 1;
+            }
+            let mut items = Vec::new();
+            while j < close && !toks[j].is_punct(';') {
+                if toks[j].kind == TokKind::Ident
+                    && j >= 2
+                    && toks[j - 1].is_punct(':')
+                    && toks[j - 2].is_punct(':')
+                {
+                    items.push(toks[j].text.clone());
+                }
+                j += 1;
+            }
+            let e = spec.enums.entry(ty.to_string()).or_default();
+            e.all = Some(items);
+            e.all_len = len;
+            i = j;
+        }
+        i += 1;
+    }
+
+    // Fixed layout: `fn encode(..) -> [u8; LEN]` + `fn decode`.
+    if let (Some(&enc), Some(&dec)) = (fns.get("encode"), fns.get("decode")) {
+        if let Some(len) = encode_ret_len(toks, enc.0, &spec.consts) {
+            spec.layouts.insert(
+                ty.to_string(),
+                LayoutSpec {
+                    len,
+                    encode: literal_ranges(toks, enc),
+                    decode: literal_ranges(toks, dec),
+                    holes: Vec::new(), // filled by check_spec
+                },
+            );
+        }
+    }
+}
+
+/// Value of `const NAME: T = <literal | a << b>;` starting at `const`.
+fn const_value(toks: &[Tok], i: usize) -> Option<u64> {
+    let eq = (i..toks.len().min(i + 16)).find(|&j| toks[j].is_punct('='))?;
+    let mut vals = Vec::new();
+    let mut j = eq + 1;
+    while j < toks.len() && !toks[j].is_punct(';') {
+        vals.push(&toks[j]);
+        j += 1;
+    }
+    match vals.as_slice() {
+        [n] if n.kind == TokKind::Num => int_value(&n.text),
+        [a, s1, s2, b]
+            if a.kind == TokKind::Num
+                && s1.is_punct('<')
+                && s2.is_punct('<')
+                && b.kind == TokKind::Num =>
+        {
+            Some(int_value(&a.text)? << int_value(&b.text)?)
+        }
+        _ => None,
+    }
+}
+
+/// `Ty::Variant => code` match arms of an encode fn, in order.
+fn encode_arms(toks: &[Tok], body: (usize, usize), ty: &str) -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    let mut i = body.0;
+    while i + 6 < body.1 {
+        if toks[i].is_ident(ty)
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && toks[i + 3].kind == TokKind::Ident
+            && toks[i + 4].is_punct('=')
+            && toks[i + 5].is_punct('>')
+            && toks[i + 6].kind == TokKind::Num
+        {
+            if let Some(v) = int_value(&toks[i + 6].text) {
+                out.push((toks[i + 3].text.clone(), v));
+            }
+            i += 7;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `code => Ty::Variant` match arms of a decode fn, in order.
+fn decode_arms(toks: &[Tok], body: (usize, usize), ty: &str) -> Vec<(u64, String)> {
+    let mut out = Vec::new();
+    let mut i = body.0;
+    while i + 6 < body.1 {
+        if toks[i].kind == TokKind::Num
+            && toks[i + 1].is_punct('=')
+            && toks[i + 2].is_punct('>')
+            && toks[i + 3].is_ident(ty)
+            && toks[i + 4].is_punct(':')
+            && toks[i + 5].is_punct(':')
+            && toks[i + 6].kind == TokKind::Ident
+        {
+            if let Some(v) = int_value(&toks[i].text) {
+                out.push((v, toks[i + 6].text.clone()));
+            }
+            i += 7;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Resolve `fn encode(..) -> [u8; LEN]`: the declared byte width, with
+/// `LEN` either a literal or a const name looked up in `consts`.
+fn encode_ret_len(
+    toks: &[Tok],
+    body_start: usize,
+    consts: &BTreeMap<String, u64>,
+) -> Option<u64> {
+    // Walk backwards from the body over the signature: `[ u8 ; X ]`.
+    let lo = body_start.saturating_sub(24);
+    let mut i = body_start;
+    while i > lo + 4 {
+        i -= 1;
+        if toks[i - 4].is_punct('[')
+            && toks[i - 3].is_ident("u8")
+            && toks[i - 2].is_punct(';')
+            && toks[i].is_punct(']')
+        {
+            let x = &toks[i - 1];
+            return match x.kind {
+                TokKind::Num => int_value(&x.text),
+                TokKind::Ident => consts.get(&x.text).copied(),
+                _ => None,
+            };
+        }
+    }
+    None
+}
+
+/// Literal byte ranges indexed on any ident inside a fn body:
+/// `b[..2]` → (0,2), `b[4..8]` → (4,8), `b[2]` → (2,3). Non-literal
+/// index expressions are skipped.
+fn literal_ranges(toks: &[Tok], body: (usize, usize)) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut i = body.0;
+    while i + 1 < body.1 {
+        if toks[i].kind == TokKind::Ident && toks[i + 1].is_punct('[') {
+            let mut j = i + 2;
+            let mut depth = 1i64;
+            let mut inner = Vec::new();
+            while j < body.1 && depth > 0 {
+                if toks[j].is_punct('[') {
+                    depth += 1;
+                } else if toks[j].is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                inner.push(&toks[j]);
+                j += 1;
+            }
+            let range = match inner.as_slice() {
+                [n] if n.kind == TokKind::Num => {
+                    int_value(&n.text).map(|a| (a, a + 1))
+                }
+                [a, d1, d2, b]
+                    if a.kind == TokKind::Num
+                        && d1.is_punct('.')
+                        && d2.is_punct('.')
+                        && b.kind == TokKind::Num =>
+                {
+                    int_value(&a.text).zip(int_value(&b.text))
+                }
+                [d1, d2, b]
+                    if d1.is_punct('.')
+                        && d2.is_punct('.')
+                        && b.kind == TokKind::Num =>
+                {
+                    int_value(&b.text).map(|b| (0, b))
+                }
+                _ => None,
+            };
+            if let Some(r) = range {
+                out.push(r);
+            }
+            i = j;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Ordered argument texts of every `.method(..)` call in a fn body.
+fn call_args(toks: &[Tok], body: (usize, usize), method: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = body.0;
+    while i + 1 < body.1 {
+        if toks[i].is_ident(method)
+            && i > 0
+            && toks[i - 1].is_punct('.')
+            && toks[i + 1].is_punct('(')
+        {
+            let mut j = i + 2;
+            let mut depth = 1i64;
+            let mut text = Vec::new();
+            while j < body.1 && depth > 0 {
+                if toks[j].is_punct('(') {
+                    depth += 1;
+                } else if toks[j].is_punct(')') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                text.push(toks[j].text.as_str());
+                j += 1;
+            }
+            out.push(text.join(" "));
+            i = j;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Consistency checks over an extracted spec.
+pub fn check_spec(file: &SourceFile, spec: &mut WireSpec) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut push = |kind: &'static str, message: String| {
+        out.push(Finding {
+            family: "wire-protocol",
+            kind,
+            file: file.rel.clone(),
+            line: 0,
+            message,
+        });
+    };
+
+    for (name, e) in &spec.enums {
+        if e.codes.is_empty() {
+            continue; // enum without a wire code table
+        }
+        let variants: BTreeSet<&str> =
+            e.variants.iter().map(|s| s.as_str()).collect();
+        let coded: BTreeSet<&str> =
+            e.codes.iter().map(|(v, _)| v.as_str()).collect();
+        for v in variants.difference(&coded) {
+            push(
+                "encode-missing-variant",
+                format!("{name}::{v} has no arm in code() — unencodable"),
+            );
+        }
+        let mut seen = BTreeMap::new();
+        for (v, c) in &e.codes {
+            if let Some(prev) = seen.insert(*c, v.clone()) {
+                push(
+                    "duplicate-code",
+                    format!("{name}: code {c} maps both {prev} and {v}"),
+                );
+            }
+            if !variants.contains(v.as_str()) {
+                push(
+                    "wirespec-extract",
+                    format!("{name}::{v} coded but not a declared variant"),
+                );
+            }
+        }
+        let from: BTreeMap<u64, &str> = e
+            .from_codes
+            .iter()
+            .map(|(c, v)| (*c, v.as_str()))
+            .collect();
+        for (v, c) in &e.codes {
+            match from.get(c) {
+                None => push(
+                    "decode-missing-variant",
+                    format!(
+                        "{name}::{v} (code {c}) has no arm in from_code() — \
+                         encodes but cannot decode"
+                    ),
+                ),
+                Some(got) if *got != v => push(
+                    "roundtrip-mismatch",
+                    format!(
+                        "{name} code {c}: encodes {v} but decodes {got}"
+                    ),
+                ),
+                _ => {}
+            }
+        }
+        for (c, v) in &e.from_codes {
+            if !e.codes.iter().any(|(_, cc)| cc == c) {
+                push(
+                    "roundtrip-mismatch",
+                    format!(
+                        "{name}::from_code accepts {c} (→ {v}) which \
+                         code() never emits"
+                    ),
+                );
+            }
+        }
+        if let Some(all) = &e.all {
+            let in_all: BTreeSet<&str> = all.iter().map(|s| s.as_str()).collect();
+            for v in variants.difference(&in_all) {
+                push(
+                    "all-incomplete",
+                    format!("{name}::{v} missing from the ALL table"),
+                );
+            }
+            if let Some(n) = e.all_len {
+                if n as usize != all.len() {
+                    push(
+                        "wirespec-extract",
+                        format!(
+                            "{name}::ALL declares {n} entries, lists {}",
+                            all.len()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    let pad: BTreeMap<&str, &[u64]> = PAD_HOLES.iter().copied().collect();
+    for (name, l) in spec.layouts.iter_mut() {
+        let len = l.len as usize;
+        let mut covered = vec![false; len];
+        for &(a, b) in &l.encode {
+            if b as usize > len || a >= b {
+                push(
+                    "layout-encode",
+                    format!(
+                        "{name}::encode writes bytes {a}..{b}, outside the \
+                         declared {len}-byte layout"
+                    ),
+                );
+                continue;
+            }
+            for byte in a..b {
+                if covered[byte as usize] {
+                    push(
+                        "layout-encode",
+                        format!(
+                            "{name}::encode writes byte {byte} twice \
+                             (overlapping field writes)"
+                        ),
+                    );
+                }
+                covered[byte as usize] = true;
+            }
+        }
+        let holes: Vec<u64> = (0..len as u64)
+            .filter(|&b| !covered[b as usize])
+            .collect();
+        let allowed = pad.get(name.as_str()).copied().unwrap_or(&[]);
+        for h in &holes {
+            if !allowed.contains(h) {
+                push(
+                    "layout-encode",
+                    format!(
+                        "{name}::encode never writes byte {h} of the \
+                         declared {len}-byte layout"
+                    ),
+                );
+            }
+        }
+        l.holes = holes;
+        let enc: BTreeSet<(u64, u64)> = l.encode.iter().copied().collect();
+        let dec: BTreeSet<(u64, u64)> = l.decode.iter().copied().collect();
+        if enc != dec {
+            for r in enc.difference(&dec) {
+                push(
+                    "layout-decode-mismatch",
+                    format!(
+                        "{name}: encode writes {}..{} but decode never \
+                         reads it",
+                        r.0, r.1
+                    ),
+                );
+            }
+            for r in dec.difference(&enc) {
+                push(
+                    "layout-decode-mismatch",
+                    format!(
+                        "{name}: decode reads {}..{} but encode never \
+                         writes it",
+                        r.0, r.1
+                    ),
+                );
+            }
+        }
+    }
+
+    if !spec.frame_stream.is_empty() || !spec.checksum_stream.is_empty() {
+        let framed = &spec.frame_stream;
+        let summed = &spec.checksum_stream;
+        let header_first =
+            framed.first().is_some_and(|f| f.contains("header"));
+        if !header_first || framed.len() != summed.len() + 1 || framed[1..] != summed[..]
+        {
+            push(
+                "checksum-coverage",
+                format!(
+                    "frame checksum does not cover every framed byte: \
+                     encoder streams [{}], checksum covers [{}] (must be \
+                     the encoder stream minus the leading header)",
+                    framed.join(" | "),
+                    summed.join(" | ")
+                ),
+            );
+        }
+    }
+
+    out
+}
+
+/// Presence checks for the real wire module: extraction misses must
+/// fail the gate, not silently pass.
+pub fn check_required(file: &SourceFile, spec: &WireSpec) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut miss = |what: &str| {
+        out.push(Finding {
+            family: "wire-protocol",
+            kind: "wirespec-extract",
+            file: file.rel.clone(),
+            line: 0,
+            message: format!("failed to extract {what} from the wire module"),
+        });
+    };
+    for c in [
+        "WIRE_MAGIC",
+        "FRAME_HEADER_LEN",
+        "SHARD_DESC_LEN",
+        "RESULT_MAGIC",
+        "RESULT_FIXED_LEN",
+        "INGEST_REQ_FIXED_LEN",
+    ] {
+        if !spec.consts.contains_key(c) {
+            miss(&format!("const {c}"));
+        }
+    }
+    for e in ["WireTensorId", "WireDtype"] {
+        match spec.enums.get(e) {
+            None => miss(&format!("enum {e}")),
+            Some(s) => {
+                if s.variants.is_empty() || s.codes.is_empty() || s.from_codes.is_empty()
+                {
+                    miss(&format!("code tables of enum {e}"));
+                }
+            }
+        }
+    }
+    if !spec
+        .enums
+        .get("WireTensorId")
+        .is_some_and(|e| e.all.is_some())
+    {
+        miss("WireTensorId::ALL");
+    }
+    for l in ["FrameHeader", "ShardDesc"] {
+        if !spec.layouts.contains_key(l) {
+            miss(&format!("fixed layout of {l}"));
+        }
+    }
+    if spec.checksum_stream.is_empty() || spec.frame_stream.is_empty() {
+        miss("checksum/frame stream order");
+    }
+    out
+}
+
+/// Extract + check one file (the real gate path and the fixture tests).
+pub fn analyze(file: &SourceFile) -> (WireSpec, Vec<Finding>) {
+    let mut spec = extract_spec(file);
+    let findings = check_spec(file, &mut spec);
+    (spec, findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse_source;
+
+    const CLEAN: &str = r#"
+pub const ID_LEN: usize = 4;
+pub const CAP: u64 = 1 << 20;
+
+pub enum Id {
+    A,
+    B,
+}
+
+impl Id {
+    pub const ALL: [Id; 2] = [Id::A, Id::B];
+
+    pub fn code(self) -> u16 {
+        match self {
+            Id::A => 0,
+            Id::B => 0xFFFF,
+        }
+    }
+
+    pub fn from_code(c: u16) -> Result<Id> {
+        Ok(match c {
+            0 => Id::A,
+            0xFFFF => Id::B,
+            other => bail!("unknown {other}"),
+        })
+    }
+}
+
+pub struct Head {
+    pub tag: u16,
+    pub len: u16,
+}
+
+impl Head {
+    pub fn encode(&self) -> [u8; ID_LEN] {
+        let mut b = [0u8; ID_LEN];
+        b[..2].copy_from_slice(&self.tag.to_le_bytes());
+        b[2..4].copy_from_slice(&self.len.to_le_bytes());
+        b
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Head> {
+        Ok(Head {
+            tag: u16::from_le_bytes(buf[..2].try_into()?),
+            len: u16::from_le_bytes(buf[2..4].try_into()?),
+        })
+    }
+}
+"#;
+
+    #[test]
+    fn clean_fixture_extracts_and_passes() {
+        let f = parse_source("dispatch/fixture.rs", CLEAN);
+        let (spec, findings) = analyze(&f);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(spec.consts["ID_LEN"], 4);
+        assert_eq!(spec.consts["CAP"], 1 << 20);
+        let e = &spec.enums["Id"];
+        assert_eq!(e.variants, vec!["A", "B"]);
+        assert_eq!(
+            e.codes,
+            vec![("A".to_string(), 0u64), ("B".to_string(), 0xFFFF)]
+        );
+        assert_eq!(
+            e.all.as_deref(),
+            Some(&["A".to_string(), "B".to_string()][..])
+        );
+        let l = &spec.layouts["Head"];
+        assert_eq!(l.len, 4);
+        assert_eq!(l.encode, vec![(0, 2), (2, 4)]);
+        assert!(l.holes.is_empty());
+    }
+
+    #[test]
+    fn seeded_unhandled_variant_is_caught() {
+        // Seeded violation of the wire-protocol family: variant C is
+        // declared (and encodable) but from_code cannot decode it.
+        let src = "\
+pub enum Id { A, B, C }
+impl Id {
+    pub fn code(self) -> u16 {
+        match self { Id::A => 0, Id::B => 1, Id::C => 2 }
+    }
+    pub fn from_code(c: u16) -> Result<Id> {
+        Ok(match c { 0 => Id::A, 1 => Id::B, other => bail!(\"x\") })
+    }
+}
+";
+        let f = parse_source("dispatch/fixture.rs", src);
+        let (_, findings) = analyze(&f);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].kind, "decode-missing-variant");
+        assert!(findings[0].message.contains("Id::C"));
+    }
+
+    #[test]
+    fn variant_missing_from_code_table_is_caught() {
+        let src = "\
+pub enum Id { A, B }
+impl Id {
+    pub fn code(self) -> u16 {
+        match self { Id::A => 0 }
+    }
+    pub fn from_code(c: u16) -> Result<Id> {
+        Ok(match c { 0 => Id::A, other => bail!(\"x\") })
+    }
+}
+";
+        let f = parse_source("dispatch/fixture.rs", src);
+        let (_, findings) = analyze(&f);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].kind, "encode-missing-variant");
+    }
+
+    #[test]
+    fn layout_hole_and_decode_mismatch_are_caught() {
+        let src = "\
+pub const HLEN: usize = 8;
+pub struct H { a: u16, b: u32 }
+impl H {
+    pub fn encode(&self) -> [u8; HLEN] {
+        let mut x = [0u8; HLEN];
+        x[..2].copy_from_slice(&self.a.to_le_bytes());
+        x[4..8].copy_from_slice(&self.b.to_le_bytes());
+        x
+    }
+    pub fn decode(buf: &[u8]) -> Result<H> {
+        Ok(H {
+            a: u16::from_le_bytes(buf[..2].try_into()?),
+            b: u32::from_le_bytes(buf[2..6].try_into()?),
+        })
+    }
+}
+";
+        let f = parse_source("dispatch/fixture.rs", src);
+        let (_, findings) = analyze(&f);
+        let kinds: Vec<_> = findings.iter().map(|x| x.kind).collect();
+        // Bytes 2,3 never written (no pad declared for `H`), and the
+        // decode reads 2..6 / misses 4..8.
+        assert!(kinds.contains(&"layout-encode"), "{findings:?}");
+        assert!(kinds.contains(&"layout-decode-mismatch"), "{findings:?}");
+    }
+
+    #[test]
+    fn checksum_must_cover_frame_stream() {
+        let src = "\
+impl T {
+    pub fn checksum(&self) -> u64 {
+        let mut f = Fnv64::new();
+        f.update(&self.desc.encode());
+        f.finish()
+    }
+}
+pub fn encode_frame(p: &T) -> Vec<u8> {
+    let header = FrameHeader { x: 0 };
+    let mut out = Vec::new();
+    out.extend_from_slice(&header.encode());
+    out.extend_from_slice(&p.desc.encode());
+    out.extend_from_slice(p.payload.as_slice());
+    out
+}
+";
+        let f = parse_source("dispatch/fixture.rs", src);
+        let (spec, findings) = analyze(&f);
+        assert_eq!(spec.frame_stream.len(), 3);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].kind, "checksum-coverage");
+    }
+
+    #[test]
+    fn real_shapes_roundtrip_through_required_check() {
+        // A miniature of the real module satisfies check_required's
+        // shape expectations when every item is present.
+        let f = parse_source("dispatch/fixture.rs", CLEAN);
+        let (spec, _) = analyze(&f);
+        // The fixture lacks the real names, so required reports misses.
+        let misses = check_required(&f, &spec);
+        assert!(!misses.is_empty());
+        assert!(misses.iter().all(|m| m.kind == "wirespec-extract"));
+    }
+}

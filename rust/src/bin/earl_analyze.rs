@@ -1,0 +1,134 @@
+//! `earl-analyze` — the repo's static-analysis gate.
+//!
+//! ```text
+//! earl-analyze [--root DIR] [--baseline FILE] [--json FILE]
+//!              [--spec FILE] [--write-baseline] [--quiet]
+//! ```
+//!
+//! Crawls `--root` (default `src`), runs the three finding families
+//! (concurrency, wire-protocol, panic-budget; see [`earl::analyze`]),
+//! prints human diagnostics, and exits non-zero on any finding.
+//! `--json` / `--spec` dump the machine-readable report / extracted
+//! wire-protocol spec. `--write-baseline` regenerates the panic-budget
+//! ratchet file from current counts instead of gating.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use earl::analyze;
+
+struct Opts {
+    root: PathBuf,
+    baseline: PathBuf,
+    json: Option<PathBuf>,
+    spec: Option<PathBuf>,
+    write_baseline: bool,
+    quiet: bool,
+}
+
+fn parse_opts() -> Result<Opts> {
+    let mut opts = Opts {
+        root: PathBuf::from("src"),
+        baseline: PathBuf::from("analyze-baseline.json"),
+        json: None,
+        spec: None,
+        write_baseline: false,
+        quiet: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        let mut path_arg = |args: &mut dyn Iterator<Item = String>| {
+            args.next()
+                .map(PathBuf::from)
+                .with_context(|| format!("{arg} needs a path argument"))
+        };
+        match arg.as_str() {
+            "--root" => opts.root = path_arg(&mut args)?,
+            "--baseline" => opts.baseline = path_arg(&mut args)?,
+            "--json" => opts.json = Some(path_arg(&mut args)?),
+            "--spec" => opts.spec = Some(path_arg(&mut args)?),
+            "--write-baseline" => opts.write_baseline = true,
+            "--quiet" => opts.quiet = true,
+            "--help" | "-h" => {
+                println!(
+                    "usage: earl-analyze [--root DIR] [--baseline FILE] \
+                     [--json FILE] [--spec FILE] [--write-baseline] [--quiet]"
+                );
+                std::process::exit(0);
+            }
+            other => bail!("unknown argument `{other}` (see --help)"),
+        }
+    }
+    Ok(opts)
+}
+
+fn run() -> Result<bool> {
+    let opts = parse_opts()?;
+    let baseline = if opts.write_baseline {
+        BTreeMap::new()
+    } else {
+        analyze::load_baseline(&opts.baseline)?
+    };
+    let report = analyze::run(&opts.root, &baseline)?;
+
+    if opts.write_baseline {
+        let json = analyze::baseline_json(&report.panic_counts);
+        std::fs::write(&opts.baseline, format!("{json}\n"))
+            .with_context(|| format!("writing {}", opts.baseline.display()))?;
+        if !opts.quiet {
+            println!(
+                "earl-analyze: wrote {} ({} linted file(s), {} with sites)",
+                opts.baseline.display(),
+                report.panic_counts.len(),
+                report.panic_counts.values().filter(|v| **v > 0).count()
+            );
+        }
+        return Ok(true);
+    }
+
+    if let Some(path) = &opts.json {
+        std::fs::write(path, format!("{}\n", report.to_json()))
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    if let Some(path) = &opts.spec {
+        let Some(spec) = &report.spec else {
+            bail!("no wire-protocol spec extracted; cannot write --spec");
+        };
+        std::fs::write(path, format!("{}\n", spec.to_json()))
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+
+    if !opts.quiet {
+        for f in &report.findings {
+            eprintln!("{}", f.render());
+        }
+        for (file, cur, base) in &report.slack {
+            eprintln!(
+                "note: {file} has {cur} panic site(s) but the baseline \
+                 allows {base} — ratchet it down (earl-analyze \
+                 --write-baseline)"
+            );
+        }
+        let status = if report.findings.is_empty() { "clean" } else { "FAILED" };
+        eprintln!(
+            "earl-analyze: {} file(s), {} finding(s) — {status}",
+            report.files,
+            report.findings.len()
+        );
+    }
+    Ok(report.findings.is_empty())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("earl-analyze: error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -38,7 +38,8 @@ pub fn train_bucket(
         .iter()
         .copied()
         .find(|&b| b >= longest)
-        .unwrap_or(*buckets.last().unwrap());
+        .or_else(|| buckets.last().copied())
+        .unwrap_or(longest);
     needed.max(suggested)
 }
 

@@ -275,22 +275,25 @@ fn run_job(
                     aimd: None,
                 });
             }
+            // The stale check above guarantees the cache is populated;
+            // surface a broken invariant as a job error, not a panic in
+            // the long-lived dispatch worker thread.
+            let cache = tcp
+                .as_mut()
+                .ok_or_else(|| anyhow!("tcp runtime cache not initialized"))?;
             // Resolve the effective budget: the AIMD controller adapts a
             // seeded budget across steps from each execute's observed
             // stall; non-adaptive jobs pass their budget through.
-            let effective = {
-                let cache = tcp.as_mut().unwrap();
-                match (job.adaptive_budget, job.inflight_budget) {
-                    (true, Some(seed)) => {
-                        let aimd = cache.aimd.get_or_insert_with(|| {
-                            crate::dispatch::tcp::AimdBudget::new(seed)
-                        });
-                        Some(aimd.current())
-                    }
-                    (_, budget) => budget,
+            let effective = match (job.adaptive_budget, job.inflight_budget) {
+                (true, Some(seed)) => {
+                    let aimd = cache.aimd.get_or_insert_with(|| {
+                        crate::dispatch::tcp::AimdBudget::new(seed)
+                    });
+                    Some(aimd.current())
                 }
+                (_, budget) => budget,
             };
-            let outcome = tcp.as_ref().unwrap().runtime.execute_opts(
+            let outcome = cache.runtime.execute_opts(
                 &job.plan,
                 ExecOptions {
                     payload: job.payload.as_deref(),
@@ -299,7 +302,7 @@ fn run_job(
             )?;
             let report = outcome.report;
             if job.adaptive_budget {
-                if let Some(aimd) = tcp.as_mut().unwrap().aimd.as_mut() {
+                if let Some(aimd) = cache.aimd.as_mut() {
                     aimd.observe(report.stall_seconds);
                 }
             }

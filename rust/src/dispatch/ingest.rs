@@ -127,11 +127,11 @@ pub struct MergedUpdate {
 }
 
 fn le_f32(b: &[u8], i: usize) -> f32 {
-    f32::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap())
+    crate::dispatch::wire::f32_le(&b[(i * 4).min(b.len())..])
 }
 
 fn le_i32(b: &[u8], i: usize) -> i32 {
-    i32::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap())
+    crate::dispatch::wire::u32_le(&b[(i * 4).min(b.len())..]) as i32
 }
 
 /// Run the worker-local update step over a reassembled batch: exactly

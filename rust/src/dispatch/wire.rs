@@ -91,6 +91,44 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 }
 
 // ---------------------------------------------------------------------------
+// Little-endian field readers
+// ---------------------------------------------------------------------------
+//
+// Every decoder below bounds-checks its buffer before slicing fields
+// out of it, so these helpers never see a short slice in practice; if
+// one ever does, the missing tail reads as zero instead of panicking —
+// a decoder must never be able to take the dispatch path down.
+
+pub fn u16_le(b: &[u8]) -> u16 {
+    let mut a = [0u8; 2];
+    let n = a.len().min(b.len());
+    a[..n].copy_from_slice(&b[..n]);
+    u16::from_le_bytes(a)
+}
+
+pub fn u32_le(b: &[u8]) -> u32 {
+    let mut a = [0u8; 4];
+    let n = a.len().min(b.len());
+    a[..n].copy_from_slice(&b[..n]);
+    u32::from_le_bytes(a)
+}
+
+pub fn u64_le(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    let n = a.len().min(b.len());
+    a[..n].copy_from_slice(&b[..n]);
+    u64::from_le_bytes(a)
+}
+
+pub fn f32_le(b: &[u8]) -> f32 {
+    f32::from_bits(u32_le(b))
+}
+
+pub fn f64_le(b: &[u8]) -> f64 {
+    f64::from_bits(u64_le(b))
+}
+
+// ---------------------------------------------------------------------------
 // Shard descriptors
 // ---------------------------------------------------------------------------
 
@@ -204,6 +242,7 @@ impl ShardDesc {
 
     /// Fixed 16-byte little-endian layout:
     /// `tensor u16 | dtype u8 | pad u8 | row_start u32 | rows u32 | row_bytes u32`.
+    // earl-analyze: deterministic
     pub fn encode(&self) -> [u8; SHARD_DESC_LEN] {
         let mut b = [0u8; SHARD_DESC_LEN];
         b[..2].copy_from_slice(&self.tensor.code().to_le_bytes());
@@ -214,6 +253,7 @@ impl ShardDesc {
         b
     }
 
+    // earl-analyze: deterministic
     pub fn decode(buf: &[u8]) -> Result<ShardDesc> {
         if buf.len() < SHARD_DESC_LEN {
             bail!(
@@ -222,13 +262,11 @@ impl ShardDesc {
             );
         }
         Ok(ShardDesc {
-            tensor: WireTensorId::from_code(u16::from_le_bytes(
-                buf[..2].try_into().unwrap(),
-            ))?,
+            tensor: WireTensorId::from_code(u16_le(&buf[..2]))?,
             dtype: WireDtype::from_code(buf[2])?,
-            row_start: u32::from_le_bytes(buf[4..8].try_into().unwrap()),
-            rows: u32::from_le_bytes(buf[8..12].try_into().unwrap()),
-            row_bytes: u32::from_le_bytes(buf[12..16].try_into().unwrap()),
+            row_start: u32_le(&buf[4..8]),
+            rows: u32_le(&buf[8..12]),
+            row_bytes: u32_le(&buf[12..16]),
         })
     }
 }
@@ -258,6 +296,7 @@ pub struct FrameHeader {
 }
 
 impl FrameHeader {
+    // earl-analyze: deterministic
     pub fn encode(&self) -> [u8; FRAME_HEADER_LEN] {
         let mut h = [0u8; FRAME_HEADER_LEN];
         h[..4].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
@@ -271,6 +310,7 @@ impl FrameHeader {
 
     /// Decode from the first [`FRAME_HEADER_LEN`] bytes of `buf`;
     /// truncation or a magic mismatch is a framing error, not a panic.
+    // earl-analyze: deterministic
     pub fn decode(buf: &[u8]) -> Result<FrameHeader> {
         if buf.len() < FRAME_HEADER_LEN {
             bail!(
@@ -278,16 +318,16 @@ impl FrameHeader {
                 buf.len()
             );
         }
-        let magic = u32::from_le_bytes(buf[..4].try_into().unwrap());
+        let magic = u32_le(&buf[..4]);
         if magic != WIRE_MAGIC {
             bail!("bad frame magic {magic:#x} (stream desynced?)");
         }
         Ok(FrameHeader {
-            n_shards: u32::from_le_bytes(buf[4..8].try_into().unwrap()),
-            src: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
-            epoch: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
-            bytes: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
-            checksum: u64::from_le_bytes(buf[32..40].try_into().unwrap()),
+            n_shards: u32_le(&buf[4..8]),
+            src: u64_le(&buf[8..16]),
+            epoch: u64_le(&buf[16..24]),
+            bytes: u64_le(&buf[24..32]),
+            checksum: u64_le(&buf[32..40]),
         })
     }
 
@@ -605,6 +645,7 @@ impl TransferPayload {
     /// FNV-1a 64 over the descriptor table then the payload bytes, in
     /// wire order — exactly what the receiver recomputes from the
     /// stream.
+    // earl-analyze: deterministic
     pub fn checksum(&self) -> u64 {
         let mut f = Fnv64::new();
         for (desc, _) in &self.shards {
@@ -623,6 +664,7 @@ impl TransferPayload {
 // ---------------------------------------------------------------------------
 
 /// Serialize one transfer into a standalone frame buffer.
+// earl-analyze: deterministic
 pub fn encode_frame(src: u64, epoch: u64, payload: &TransferPayload) -> Vec<u8> {
     let header = FrameHeader {
         src,
@@ -649,6 +691,7 @@ pub fn encode_frame(src: u64, epoch: u64, payload: &TransferPayload) -> Vec<u8> 
 /// Parse and checksum-verify one frame buffer, returning the header and
 /// each shard's descriptor + payload bytes. Truncated or corrupt
 /// buffers are errors.
+// earl-analyze: deterministic
 pub fn decode_frame(buf: &[u8]) -> Result<(FrameHeader, Vec<(ShardDesc, Vec<u8>)>)> {
     let header = FrameHeader::decode(buf)?;
     if header.n_shards > MAX_FRAME_SHARDS {
@@ -921,6 +964,7 @@ impl IngestRequest {
     /// Serialize: `step u64 | worker u32 | vocab u32 | lr f32 | l2 f32 |
     /// n_rows u32 | n_params u32 | rows u32× | advantages f32× |
     /// params f32×`, little-endian throughout.
+    // earl-analyze: deterministic
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(
             INGEST_REQ_FIXED_LEN + self.rows.len() * 8 + self.params.len() * 4,
@@ -944,6 +988,7 @@ impl IngestRequest {
         b
     }
 
+    // earl-analyze: deterministic
     pub fn decode(buf: &[u8]) -> Result<IngestRequest> {
         if buf.len() < INGEST_REQ_FIXED_LEN {
             bail!(
@@ -951,9 +996,9 @@ impl IngestRequest {
                 buf.len()
             );
         }
-        let u32_at = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
-        let f32_at = |o: usize| f32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
-        let step = u64::from_le_bytes(buf[..8].try_into().unwrap());
+        let u32_at = |o: usize| u32_le(&buf[o..o + 4]);
+        let f32_at = |o: usize| f32_le(&buf[o..o + 4]);
+        let step = u64_le(&buf[..8]);
         let worker = u32_at(8);
         let vocab = u32_at(12);
         let hp = IngestHp { lr: f32_at(16), l2: f32_at(20) };
@@ -1056,6 +1101,7 @@ impl WorkerReport {
 
     /// Serialize the full result frame:
     /// `RESULT_MAGIC u32 | body_len u32 | body | fnv1a64(body) u64`.
+    // earl-analyze: deterministic
     pub fn encode_frame(&self) -> Vec<u8> {
         let body = self.encode_body();
         let mut out = Vec::with_capacity(8 + body.len() + 8);
@@ -1074,12 +1120,9 @@ impl WorkerReport {
                 body.len()
             );
         }
-        let u32_at =
-            |o: usize| u32::from_le_bytes(body[o..o + 4].try_into().unwrap());
-        let u64_at =
-            |o: usize| u64::from_le_bytes(body[o..o + 8].try_into().unwrap());
-        let f64_at =
-            |o: usize| f64::from_le_bytes(body[o..o + 8].try_into().unwrap());
+        let u32_at = |o: usize| u32_le(&body[o..o + 4]);
+        let u64_at = |o: usize| u64_le(&body[o..o + 8]);
+        let f64_at = |o: usize| f64_le(&body[o..o + 8]);
         let worker = u32_at(0);
         let n_grad = u32_at(4) as usize;
         let step = u64_at(8);
@@ -1095,7 +1138,7 @@ impl WorkerReport {
         let mut off = RESULT_FIXED_LEN;
         let mut grad = Vec::with_capacity(n_grad);
         for _ in 0..n_grad {
-            grad.push(f32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
+            grad.push(f32_le(&body[off..off + 4]));
             off += 4;
         }
         let mut hist_counts = Vec::with_capacity(n_hist);
@@ -1130,15 +1173,16 @@ impl WorkerReport {
     /// Parse and checksum-verify a standalone result-frame buffer.
     /// Truncation, a bad magic, a hostile length, and corruption are all
     /// rejected.
+    // earl-analyze: deterministic
     pub fn decode_frame(buf: &[u8]) -> Result<WorkerReport> {
         if buf.len() < 16 {
             bail!("truncated result frame: {} of 16+ bytes", buf.len());
         }
-        let magic = u32::from_le_bytes(buf[..4].try_into().unwrap());
+        let magic = u32_le(&buf[..4]);
         if magic != RESULT_MAGIC {
             bail!("bad result magic {magic:#x} (ack stream desynced?)");
         }
-        let body_len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        let body_len = u32_le(&buf[4..8]) as usize;
         if body_len > MAX_RESULT_BYTES {
             bail!("result frame claims {body_len}-byte body");
         }
@@ -1149,8 +1193,7 @@ impl WorkerReport {
                 8 + body_len + 8
             );
         }
-        let want =
-            u64::from_le_bytes(buf[8 + body_len..].try_into().unwrap());
+        let want = u64_le(&buf[8 + body_len..]);
         Self::decode_checked(&buf[8..8 + body_len], want)
     }
 }

@@ -24,6 +24,7 @@
 //! core — including the real-payload wire format, the TCP runtime, and
 //! the `earl worker` receive-side process — without `XLA_EXTENSION_DIR`.
 
+pub mod analyze;
 pub mod cluster;
 #[cfg(feature = "xla")]
 pub mod config;

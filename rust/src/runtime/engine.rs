@@ -5,13 +5,14 @@
 //! executable-level analogue of the paper's dynamic parallelism switch.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::runtime::manifest::{Func, Manifest};
+use crate::util::sync::{lock_recover, Mutex};
 use crate::runtime::state::ModelState;
 use crate::runtime::tensor::{TokenBatch, TrainBatch, TrainHp, TrainStats};
 
@@ -61,7 +62,9 @@ impl Engine {
 
     /// Compile (or fetch cached) executable for (func, bucket).
     fn executable(&self, func: Func, bucket: usize) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
+        // Compiled-executable cache: every insert is whole-value, so a
+        // peer's panic can't leave a half-built entry — recover.
+        let mut cache = lock_recover(&self.cache);
         if cache.contains_key(&(func, bucket)) {
             return Ok(());
         }
@@ -115,8 +118,13 @@ impl Engine {
         // across execution — concurrent stage threads (rollout scoring
         // vs. model update) would otherwise serialize here.
         let exe = {
-            let cache = self.cache.lock().unwrap();
-            Arc::clone(cache.get(&(func, bucket)).unwrap())
+            let cache = lock_recover(&self.cache);
+            cache.get(&(func, bucket)).map(Arc::clone).ok_or_else(|| {
+                anyhow!(
+                    "executable for {} t={bucket} missing from cache",
+                    func.name()
+                )
+            })?
         };
         let t0 = Instant::now();
         let result = exe
@@ -126,17 +134,18 @@ impl Engine {
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching result: {e}"))?;
         let secs = t0.elapsed().as_secs_f64();
-        self.timings
-            .lock()
-            .unwrap()
-            .push(ExecTiming { func, bucket, seconds: secs });
+        lock_recover(&self.timings).push(ExecTiming {
+            func,
+            bucket,
+            seconds: secs,
+        });
         // All artifacts are lowered with return_tuple=True.
         lit.to_tuple().map_err(|e| anyhow!("untupling: {e}"))
     }
 
     /// Drain accumulated execution timings.
     pub fn take_timings(&self) -> Vec<ExecTiming> {
-        std::mem::take(&mut self.timings.lock().unwrap())
+        std::mem::take(&mut *lock_recover(&self.timings))
     }
 
     fn check_batch(&self, b: usize, t: usize, func: Func) -> Result<()> {
@@ -211,10 +220,16 @@ impl Engine {
                 3 * n + 4
             );
         }
-        let entropy = out.pop().unwrap().get_first_element::<f32>()?;
-        let kl_v = out.pop().unwrap().get_first_element::<f32>()?;
-        let pg = out.pop().unwrap().get_first_element::<f32>()?;
-        let loss = out.pop().unwrap().get_first_element::<f32>()?;
+        let mut pop_scalar = || -> Result<f32> {
+            let lit = out
+                .pop()
+                .ok_or_else(|| anyhow!("train_step result truncated"))?;
+            Ok(lit.get_first_element::<f32>()?)
+        };
+        let entropy = pop_scalar()?;
+        let kl_v = pop_scalar()?;
+        let pg = pop_scalar()?;
+        let loss = pop_scalar()?;
 
         let adam_v: Vec<Literal> = out.split_off(2 * n);
         let adam_m: Vec<Literal> = out.split_off(n);

@@ -227,7 +227,7 @@ impl Manifest {
     }
 
     pub fn max_bucket(&self) -> usize {
-        *self.buckets.last().unwrap()
+        self.buckets.last().copied().unwrap_or(0)
     }
 
     pub fn params_path(&self) -> PathBuf {

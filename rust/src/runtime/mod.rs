@@ -7,6 +7,8 @@
 //! * [`tensor`] — host-side batch containers (xla-free; available to
 //!   `--no-default-features` builds so the dispatch payload layer can
 //!   serialize real training tensors without PJRT).
+//! * [`snapshot`] — the generic bounded-staleness [`StepBuffer`]
+//!   (xla-free; model-checked under loom, TSan'd in the core suite).
 //! * [`state`] — model parameters + Adam moments as XLA literals
 //!   (`xla` feature).
 //! * [`engine`] — lazy-compiling executable cache + typed entry points
@@ -16,6 +18,7 @@
 #[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
+pub mod snapshot;
 #[cfg(feature = "xla")]
 pub mod state;
 pub mod tensor;
@@ -23,6 +26,7 @@ pub mod tensor;
 #[cfg(feature = "xla")]
 pub use engine::{Engine, ExecTiming};
 pub use manifest::{ArtifactEntry, Func, Manifest, ModelSpec, ParamEntry};
+pub use snapshot::StepBuffer;
 #[cfg(feature = "xla")]
 pub use state::{ModelState, ParamSnapshot, SnapshotBuffer};
 pub use tensor::{F32Batch, TokenBatch, TrainBatch, TrainHp, TrainStats};

@@ -1,0 +1,205 @@
+//! Generic bounded-staleness snapshot buffer — the concurrency core of
+//! the pipelined step engine, factored out of the xla-gated
+//! [`crate::runtime::state`] so it builds (and is tested, TSan'd and
+//! loom-model-checked) with `--no-default-features`.
+//!
+//! [`StepBuffer`] is a thread-safe double buffer of step-stamped
+//! values: `publish` installs a new front value behind an `Arc`,
+//! readers receive `Arc` clones and therefore never observe a torn or
+//! mid-update value even when a writer publishes concurrently.
+//!
+//! Publishes are **monotone** in the step: a publish that would move
+//! the front backwards is rejected. Consumers that must bound how
+//! stale their value is use [`StepBuffer::acquire`], which blocks
+//! until the front is at least `min_step` — the bounded-staleness
+//! guard of the one-step-stale rollout mode.
+//!
+//! The xla-side [`crate::runtime::state::SnapshotBuffer`] is a thin
+//! wrapper of `StepBuffer<ParamSnapshot>`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::util::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+struct Slots<T> {
+    /// Two-deep history of published values behind `Arc`s — the
+    /// double-buffer shape of the original design, with `Arc` hand-out
+    /// so a reader that out-lives two publishes still reads its copy.
+    slots: [Option<(u64, Arc<T>)>; 2],
+    front: usize,
+}
+
+/// Thread-safe, monotone, step-stamped double buffer (see module docs).
+pub struct StepBuffer<T> {
+    inner: Mutex<Slots<T>>,
+    published: Condvar,
+}
+
+impl<T> Default for StepBuffer<T> {
+    fn default() -> Self {
+        StepBuffer::new()
+    }
+}
+
+impl<T> StepBuffer<T> {
+    pub fn new() -> StepBuffer<T> {
+        StepBuffer {
+            inner: Mutex::new(Slots { slots: [None, None], front: 0 }),
+            published: Condvar::new(),
+        }
+    }
+
+    /// Take the slot lock. Every mutation of `Slots` keeps it valid at
+    /// each intermediate point (worst case a publish panicking between
+    /// slot write and front flip leaves the *older* front installed,
+    /// which is still a coherent, monotone state), so a poisoned lock
+    /// is safe to recover.
+    fn locked(&self) -> MutexGuard<'_, Slots<T>> {
+        #[cfg(not(loom))]
+        return self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        #[cfg(loom)]
+        return self.inner.lock().unwrap(); // earl-analyze: allow(panic) — loom mutexes cannot poison
+    }
+
+    /// Install `value` as the new front, stamped with `step`. Fails if
+    /// the publish would regress the front's step.
+    pub fn publish(&self, step: u64, value: T) -> Result<()> {
+        let snap = Arc::new(value);
+        let mut inner = self.locked();
+        if let Some((cur, _)) = inner.slots[inner.front].as_ref() {
+            if step < *cur {
+                bail!(
+                    "snapshot publish would regress: step {step} behind \
+                     published front {cur}"
+                );
+            }
+        }
+        let back = 1 - inner.front;
+        inner.slots[back] = Some((step, snap));
+        inner.front = back;
+        self.published.notify_all();
+        Ok(())
+    }
+
+    /// The most recently published value, if any.
+    pub fn front(&self) -> Option<Arc<T>> {
+        let inner = self.locked();
+        inner.slots[inner.front].as_ref().map(|(_, v)| Arc::clone(v))
+    }
+
+    /// Step of the front value (`None` before the first publish).
+    pub fn front_step(&self) -> Option<u64> {
+        let inner = self.locked();
+        inner.slots[inner.front].as_ref().map(|(s, _)| *s)
+    }
+
+    /// Bounded-staleness acquire: block until the front is at least
+    /// `min_step` (i.e. refuse any value older than the caller's
+    /// staleness budget), failing after `timeout` so a wedged publisher
+    /// surfaces as an error instead of a silent hang.
+    pub fn acquire(&self, min_step: u64, timeout: Duration) -> Result<Arc<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.locked();
+        loop {
+            if let Some((s, v)) = inner.slots[inner.front].as_ref() {
+                if *s >= min_step {
+                    return Ok(Arc::clone(v));
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "snapshot acquire timed out waiting for step >= \
+                     {min_step} (front: {:?})",
+                    inner.slots[inner.front].as_ref().map(|(s, _)| *s)
+                );
+            }
+            #[cfg(not(loom))]
+            {
+                let (guard, _timed_out) = self
+                    .published
+                    .wait_timeout(inner, deadline - now)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                inner = guard;
+            }
+            #[cfg(loom)]
+            {
+                // Loom models don't model time; a model that acquires
+                // always publishes, so a plain wait terminates.
+                inner = self.published.wait(inner).unwrap(); // earl-analyze: allow(panic)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_flips_front_and_hands_out_arcs() {
+        let buf = StepBuffer::new();
+        assert!(buf.front().is_none());
+        assert!(buf.front_step().is_none());
+        buf.publish(1, vec![1.0f32]).unwrap();
+        let a = buf.front().unwrap();
+        buf.publish(2, vec![2.0f32]).unwrap();
+        // The older Arc stays valid after a second publish.
+        assert_eq!(*a, vec![1.0f32]);
+        assert_eq!(*buf.front().unwrap(), vec![2.0f32]);
+        assert_eq!(buf.front_step(), Some(2));
+    }
+
+    #[test]
+    fn publish_is_monotone() {
+        let buf = StepBuffer::new();
+        buf.publish(5, "a").unwrap();
+        assert!(buf.publish(3, "b").is_err(), "regression accepted");
+        assert_eq!(buf.front_step(), Some(5));
+        // Equal step republish is allowed (same-step refresh).
+        buf.publish(5, "c").unwrap();
+        buf.publish(6, "d").unwrap();
+        assert_eq!(buf.front_step(), Some(6));
+    }
+
+    #[test]
+    fn acquire_times_out_and_unblocks_on_publish() {
+        let buf = std::sync::Arc::new(StepBuffer::new());
+        assert!(buf.acquire(0, Duration::from_millis(40)).is_err());
+        buf.publish(4, 44u64).unwrap();
+        let v = buf.acquire(4, Duration::from_millis(40)).unwrap();
+        assert_eq!(*v, 44);
+        // Too-new requirement: must time out, front stays.
+        assert!(buf.acquire(5, Duration::from_millis(40)).is_err());
+        let pub_buf = std::sync::Arc::clone(&buf);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            pub_buf.publish(5, 55u64).unwrap();
+        });
+        let fresh = buf.acquire(5, Duration::from_secs(10)).unwrap();
+        assert_eq!(*fresh, 55);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_with_coherent_front() {
+        let buf = std::sync::Arc::new(StepBuffer::new());
+        buf.publish(2, 20u64).unwrap();
+        let b = std::sync::Arc::clone(&buf);
+        // Poison the slot mutex by panicking while holding it.
+        let _ = std::thread::spawn(move || {
+            let _g = b.locked();
+            panic!("poison");
+        })
+        .join();
+        // Readers and writers keep working on the recovered state.
+        assert_eq!(buf.front_step(), Some(2));
+        buf.publish(3, 30u64).unwrap();
+        assert_eq!(*buf.front().unwrap(), 30);
+    }
+}

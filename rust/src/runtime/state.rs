@@ -2,13 +2,14 @@
 //! literals, marshalled positionally per the manifest's `param_spec` ABI.
 
 use std::path::Path;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use crate::runtime::manifest::Manifest;
+use crate::runtime::snapshot::StepBuffer;
 use crate::util::bytes;
 
 /// Policy (or reference) model state: parameter literals in ABI order,
@@ -145,33 +146,15 @@ pub struct ParamSnapshot {
 unsafe impl Send for ParamSnapshot {}
 unsafe impl Sync for ParamSnapshot {}
 
-#[derive(Default)]
-struct SnapshotSlots {
-    /// Two-deep history of published snapshots behind `Arc`s — the
-    /// double-buffer shape of the original design, now with `Arc` hand-out
-    /// so a rollout that out-lives two publishes still reads its copy.
-    slots: [Option<Arc<ParamSnapshot>>; 2],
-    front: usize,
-}
-
 /// Thread-safe double buffer of parameter snapshots for the pipelined
-/// step engines.
-///
-/// `publish` deep-copies the live parameters into the *back* slot and
-/// flips it to the front; readers receive `Arc` clones, so a rollout
-/// never observes a torn or mid-update parameter set even when the
-/// `OverlappedAsync` update stage thread publishes concurrently.
-///
-/// Publishes are **monotone** in `ModelState::step`: a publish that
-/// would move the front snapshot backwards is rejected. Consumers that
-/// must bound how stale their parameters are use
-/// [`SnapshotBuffer::acquire`], which blocks until the front snapshot
-/// is at least `min_step` — the bounded-staleness guard of the
-/// one-step-stale rollout mode.
+/// step engines — a thin xla-typed wrapper of the generic (xla-free,
+/// loom-model-checked) [`StepBuffer`], which owns all the concurrency:
+/// monotone publishes, `Arc` hand-out, and the bounded-staleness
+/// [`SnapshotBuffer::acquire`] guard of the one-step-stale rollout
+/// mode.
 #[derive(Default)]
 pub struct SnapshotBuffer {
-    inner: Mutex<SnapshotSlots>,
-    published: Condvar,
+    inner: StepBuffer<ParamSnapshot>,
 }
 
 impl SnapshotBuffer {
@@ -184,35 +167,18 @@ impl SnapshotBuffer {
     pub fn publish(&self, state: &ModelState) -> Result<()> {
         // Deep copy outside the lock: readers stay unblocked during the
         // (comparatively slow) literal copy.
-        let snap = Arc::new(state.snapshot()?);
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(cur) = inner.slots[inner.front].as_ref() {
-            if snap.step < cur.step {
-                bail!(
-                    "snapshot publish would regress: step {} behind \
-                     published front {}",
-                    snap.step,
-                    cur.step
-                );
-            }
-        }
-        let back = 1 - inner.front;
-        inner.slots[back] = Some(snap);
-        inner.front = back;
-        self.published.notify_all();
-        Ok(())
+        let snap = state.snapshot()?;
+        self.inner.publish(snap.step, snap)
     }
 
     /// The most recently published snapshot, if any.
     pub fn front(&self) -> Option<Arc<ParamSnapshot>> {
-        let inner = self.inner.lock().unwrap();
-        inner.slots[inner.front].clone()
+        self.inner.front()
     }
 
     /// Optimizer step of the front snapshot (`None` before first publish).
     pub fn front_step(&self) -> Option<u64> {
-        let inner = self.inner.lock().unwrap();
-        inner.slots[inner.front].as_ref().map(|s| s.step)
+        self.inner.front_step()
     }
 
     /// Bounded-staleness acquire: block until the front snapshot is at
@@ -224,27 +190,6 @@ impl SnapshotBuffer {
         min_step: u64,
         timeout: Duration,
     ) -> Result<Arc<ParamSnapshot>> {
-        let deadline = Instant::now() + timeout;
-        let mut inner = self.inner.lock().unwrap();
-        loop {
-            if let Some(s) = inner.slots[inner.front].as_ref() {
-                if s.step >= min_step {
-                    return Ok(Arc::clone(s));
-                }
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                bail!(
-                    "snapshot acquire timed out waiting for step >= \
-                     {min_step} (front: {:?})",
-                    inner.slots[inner.front].as_ref().map(|s| s.step)
-                );
-            }
-            let (guard, _timed_out) = self
-                .published
-                .wait_timeout(inner, deadline - now)
-                .unwrap();
-            inner = guard;
-        }
+        self.inner.acquire(min_step, timeout)
     }
 }

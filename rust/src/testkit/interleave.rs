@@ -1,0 +1,128 @@
+//! Exhaustive interleaving enumeration for small concurrency models.
+//!
+//! For a structure whose every operation holds one coarse mutex
+//! ([`crate::runtime::snapshot::StepBuffer`], the dispatcher's
+//! `IngestState`), any real concurrent execution is equivalent to
+//! *some* sequential interleaving of the operations — the lock
+//! linearizes them. Replaying every interleaving of two or three small
+//! per-thread scripts against the real structure therefore checks
+//! every lock-serialized behavior, deterministically and on stable,
+//! with no extra dependency. The `cfg(loom)` models in
+//! `tests/loom_model.rs` check the same invariants *below* the mutex
+//! level (lock acquisition order, condvar wakeups) when run with the
+//! loom toolchain; this module is the always-on approximation.
+//!
+//! The number of interleavings is the multinomial
+//! `(Σ counts)! / Π counts!` — 210 for three threads of 3+2+2 steps —
+//! so scripts must stay small. A `cap` guards against accidental
+//! blow-ups: exploration stops there and reports truncation, which
+//! callers should assert *against* (a truncated exploration silently
+//! weakens the check).
+
+/// Summary of one exploration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Explored {
+    /// Complete schedules visited.
+    pub schedules: usize,
+    /// True if `cap` stopped the walk before exhausting the space.
+    pub truncated: bool,
+}
+
+/// Invoke `f` once per interleaving of `counts.len()` threads, where
+/// thread `t` contributes `counts[t]` ordered steps. Each schedule is a
+/// sequence of thread indices; within a thread, steps always appear in
+/// program order (that is what makes it an interleaving rather than a
+/// permutation). Stops after `cap` schedules.
+pub fn explore<F: FnMut(&[usize])>(counts: &[usize], cap: usize, mut f: F) -> Explored {
+    let total: usize = counts.iter().sum();
+    let mut remaining = counts.to_vec();
+    let mut prefix = Vec::with_capacity(total);
+    let mut out = Explored { schedules: 0, truncated: false };
+    dfs(&mut remaining, &mut prefix, cap, &mut out, &mut f);
+    out
+}
+
+fn dfs<F: FnMut(&[usize])>(
+    remaining: &mut [usize],
+    prefix: &mut Vec<usize>,
+    cap: usize,
+    out: &mut Explored,
+    f: &mut F,
+) {
+    if out.schedules >= cap {
+        out.truncated = true;
+        return;
+    }
+    if remaining.iter().all(|&r| r == 0) {
+        f(prefix);
+        out.schedules += 1;
+        return;
+    }
+    for t in 0..remaining.len() {
+        if remaining[t] == 0 {
+            continue;
+        }
+        remaining[t] -= 1;
+        prefix.push(t);
+        dfs(remaining, prefix, cap, out, f);
+        prefix.pop();
+        remaining[t] += 1;
+    }
+}
+
+/// The multinomial `(Σ counts)! / Π counts!` — how many schedules
+/// [`explore`] visits when uncapped. Computed incrementally so it does
+/// not overflow for the script sizes this harness is meant for.
+pub fn schedule_count(counts: &[usize]) -> u64 {
+    let mut total = 0u64;
+    let mut acc = 1u64;
+    for &c in counts {
+        for k in 1..=c as u64 {
+            total += 1;
+            // C(total, k) built as a running product stays integral.
+            acc = acc * total / k;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerates_all_merges_in_program_order() {
+        let mut seen = Vec::new();
+        let got = explore(&[2, 2], usize::MAX, |s| seen.push(s.to_vec()));
+        assert_eq!(got, Explored { schedules: 6, truncated: false });
+        assert_eq!(seen.len(), 6);
+        // All distinct, all the right multiset.
+        for s in &seen {
+            assert_eq!(s.iter().filter(|&&t| t == 0).count(), 2);
+            assert_eq!(s.iter().filter(|&&t| t == 1).count(), 2);
+        }
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 6, "duplicate schedules");
+        assert_eq!(schedule_count(&[2, 2]), 6);
+        assert_eq!(schedule_count(&[3, 2, 2]), 210);
+    }
+
+    #[test]
+    fn cap_truncates_and_reports() {
+        let mut n = 0usize;
+        let got = explore(&[3, 3], 5, |_| n += 1);
+        assert_eq!(n, 5);
+        assert!(got.truncated);
+        assert_eq!(got.schedules, 5);
+    }
+
+    #[test]
+    fn degenerate_single_thread_is_one_schedule() {
+        let mut seen = Vec::new();
+        let got = explore(&[4], 100, |s| seen.push(s.to_vec()));
+        assert_eq!(got.schedules, 1);
+        assert!(!got.truncated);
+        assert_eq!(seen, vec![vec![0, 0, 0, 0]]);
+    }
+}

@@ -3,6 +3,7 @@
 //! and on failure report the seed so the case replays exactly.
 
 pub mod bench;
+pub mod interleave;
 
 use crate::util::rng::Pcg64;
 

@@ -1,0 +1,92 @@
+//! Synchronization facade + poison-handling policy.
+//!
+//! Two concerns live here:
+//!
+//! 1. **Loom wiring.** Modules whose concurrency is model-checked
+//!    (`runtime::snapshot`, `dispatch::tcp`'s `IngestState`) import
+//!    `Arc`/`Mutex`/`Condvar` from this module instead of `std::sync`.
+//!    In normal builds these re-exports *are* the std types (zero
+//!    cost); building with `RUSTFLAGS="--cfg loom"` swaps in loom's
+//!    model-checked replacements so `tests/loom_model.rs` can
+//!    exhaustively explore interleavings. The offline build image
+//!    cannot vendor the `loom` crate, so the dependency is added
+//!    manually when running the models (see README "Correctness
+//!    tooling"); `cfg(loom)` code is never compiled otherwise.
+//!
+//! 2. **Poison policy.** A panicking thread poisons every mutex it
+//!    held. The crate's policy, enforced by the `earl-analyze` panic
+//!    lint, is that no code under `dispatch/`, `coordinator/` or
+//!    `runtime/` may `unwrap()` a lock: it either *recovers* (the
+//!    protected state is valid at every lock release, so the guard can
+//!    be taken anyway — pacing counters, join-handle lists, drop
+//!    paths) or *fails fast* (the poison is mapped into the dispatch
+//!    error path so a worker death surfaces as a deterministic step
+//!    failure instead of a cascading panic).
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use anyhow::{anyhow, Result};
+
+/// Recovery policy: take the lock even if a peer thread panicked while
+/// holding it. Only correct when every mutation of the protected state
+/// is atomic with respect to panics (the invariant holds at every
+/// intermediate release point) — pacer clocks, handle lists, caches
+/// that are re-validated by their consumers.
+///
+/// Defined over the facade [`Mutex`], so callers keep compiling under
+/// `--cfg loom` (loom mutexes share std's `LockResult` API and simply
+/// never poison).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Fail-fast policy: a poisoned lock becomes an `Err` on the caller's
+/// existing error path. Used wherever continuing with possibly
+/// half-updated shared state could fabricate data (ingest merges,
+/// completion plumbing) — the dispatch step fails deterministically,
+/// exactly like a dead worker's closed socket.
+pub fn lock_or_fail<'a, T>(
+    m: &'a Mutex<T>,
+    what: &str,
+) -> Result<MutexGuard<'a, T>> {
+    m.lock().map_err(|_| {
+        anyhow!("{what}: lock poisoned by a panicked peer thread")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn poison(m: &std::sync::Arc<Mutex<u32>>) {
+        let m2 = std::sync::Arc::clone(m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+    }
+
+    #[test]
+    fn recover_takes_poisoned_lock() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        poison(&m);
+        assert!(m.lock().is_err(), "lock should be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+    }
+
+    #[test]
+    fn fail_fast_maps_poison_to_error() {
+        let m = std::sync::Arc::new(Mutex::new(0u32));
+        assert!(lock_or_fail(&m, "test state").is_ok());
+        poison(&m);
+        let err = lock_or_fail(&m, "test state").err();
+        let msg = err.map(|e| e.to_string()).unwrap_or_default();
+        assert!(msg.contains("test state"), "unexpected message: {msg}");
+        assert!(msg.contains("poisoned"), "unexpected message: {msg}");
+    }
+}

@@ -1,0 +1,130 @@
+#![cfg(loom)]
+//! Loom model checks for the crate's two concurrency cores. These
+//! explore every interleaving *below* the mutex level (lock handoffs,
+//! condvar wakeups) — the layer the sequential interleaving models in
+//! `tests/model_concurrency.rs` take on faith.
+//!
+//! The offline build image cannot vendor the `loom` crate, so this
+//! file is compiled out of every normal build (`--cfg loom` is never
+//! set; `Cargo.toml` declares the cfg for the lint). To run the
+//! models on a networked machine:
+//!
+//! ```sh
+//! cd rust
+//! cargo add loom@0.7 --dev          # one-time, not committed
+//! RUSTFLAGS="--cfg loom" cargo test --release \
+//!     --no-default-features --test loom_model
+//! ```
+
+use loom::sync::Arc;
+use loom::thread;
+
+use earl::dispatch::tcp::IngestState;
+use earl::dispatch::wire::{ReceivedBatch, ShardDesc, WireDtype, WireTensorId};
+use earl::runtime::snapshot::StepBuffer;
+
+fn one_row(tensor: WireTensorId, row_bytes: u32, row: u32) -> ReceivedBatch {
+    let mut b = ReceivedBatch::new();
+    let desc = ShardDesc {
+        tensor,
+        dtype: WireDtype::I32,
+        row_start: row,
+        rows: 1,
+        row_bytes,
+    };
+    b.insert(&desc, &vec![0xAB; row_bytes as usize]).unwrap();
+    b
+}
+
+/// Publish/acquire monotonicity: concurrent publishers never regress
+/// the front, concurrent readers observe a monotone step sequence, and
+/// every interleaving converges to the newest step.
+#[test]
+fn step_buffer_publish_acquire_monotone() {
+    loom::model(|| {
+        let buf = Arc::new(StepBuffer::new());
+        let p1 = {
+            let b = Arc::clone(&buf);
+            // May lose the race against step 2 — that is the monotone
+            // rejection, not an error.
+            thread::spawn(move || {
+                let _ = b.publish(1, 10u64);
+            })
+        };
+        let p2 = {
+            let b = Arc::clone(&buf);
+            thread::spawn(move || b.publish(2, 20u64).unwrap())
+        };
+        let reader = {
+            let b = Arc::clone(&buf);
+            thread::spawn(move || {
+                let a = b.front_step();
+                let c = b.front_step();
+                assert!(a <= c, "reader saw front regress {a:?} -> {c:?}");
+            })
+        };
+        p1.join().unwrap();
+        p2.join().unwrap();
+        reader.join().unwrap();
+        // Step 2 always wins; its value is never torn.
+        assert_eq!(buf.front_step(), Some(2));
+        assert_eq!(*buf.front().unwrap(), 20);
+        // The condvar path: an acquire bounded at the newest step is
+        // satisfied without further publishes.
+        let v = buf
+            .acquire(2, std::time::Duration::from_secs(3600))
+            .unwrap();
+        assert_eq!(*v, 20);
+    });
+}
+
+/// `IngestState::merge` all-or-nothing under every lock interleaving:
+/// compatible frames from two senders always union; a conflicting
+/// frame fails whichever side loses the race AND discards the whole
+/// epoch (no half-merged batch survives for a later commit).
+#[test]
+fn ingest_state_merge_all_or_nothing() {
+    use WireTensorId::{Mask, Tokens};
+
+    // Compatible senders: both merges land, any order.
+    loom::model(|| {
+        let st = Arc::new(IngestState::new());
+        let a = {
+            let s = Arc::clone(&st);
+            thread::spawn(move || s.merge(7, one_row(Tokens, 8, 0)).unwrap())
+        };
+        let b = {
+            let s = Arc::clone(&st);
+            thread::spawn(move || s.merge(7, one_row(Mask, 4, 0)).unwrap())
+        };
+        a.join().unwrap();
+        b.join().unwrap();
+        let batch = st.take(7).unwrap();
+        assert!(batch.tensor(Tokens).is_some());
+        assert!(batch.tensor(Mask).is_some());
+    });
+
+    // Conflicting senders: the first to the lock wins, the second
+    // errors and drops the epoch — the final state is always empty.
+    loom::model(|| {
+        let st = Arc::new(IngestState::new());
+        let a = {
+            let s = Arc::clone(&st);
+            thread::spawn(move || s.merge(7, one_row(Tokens, 8, 0)).is_ok())
+        };
+        let b = {
+            let s = Arc::clone(&st);
+            thread::spawn(move || s.merge(7, one_row(Tokens, 4, 1)).is_ok())
+        };
+        let ok_a = a.join().unwrap();
+        let ok_b = b.join().unwrap();
+        assert!(
+            ok_a ^ ok_b,
+            "exactly one merge wins the race (a: {ok_a}, b: {ok_b})"
+        );
+        assert!(
+            st.take(7).unwrap().is_empty(),
+            "conflict retained a half-merged epoch"
+        );
+    });
+}

@@ -1,0 +1,251 @@
+//! Interleaving model checks for the two concurrency cores: the
+//! bounded-staleness [`StepBuffer`] and the dispatcher's `IngestState`.
+//!
+//! Both structures serialize every operation behind one coarse mutex,
+//! so any real concurrent execution is equivalent to *some* sequential
+//! interleaving of the operations — which
+//! [`earl::testkit::interleave::explore`] enumerates exhaustively.
+//! Each schedule replays the per-thread scripts against the real
+//! structure and checks the invariant against an independently-computed
+//! model. The `cfg(loom)` models in `tests/loom_model.rs` cover the
+//! same invariants below the mutex level; this suite runs always
+//! (including `--no-default-features`, so it is part of the TSan job).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+use earl::dispatch::tcp::{IngestState, MAX_PENDING_INGEST_EPOCHS};
+use earl::dispatch::wire::{ReceivedBatch, ShardDesc, WireDtype, WireTensorId};
+use earl::runtime::snapshot::StepBuffer;
+use earl::testkit::interleave::{explore, schedule_count};
+
+// ---------------------------------------------------------------------------
+// StepBuffer: publish/front monotonicity under every interleaving
+// ---------------------------------------------------------------------------
+
+#[test]
+fn step_buffer_front_is_monotone_under_all_interleavings() {
+    // Three publishers with overlapping step ranges; 210 schedules.
+    let scripts: [&[u64]; 3] = [&[1, 2, 5], &[2, 4], &[3, 3]];
+    let counts: Vec<usize> = scripts.iter().map(|s| s.len()).collect();
+
+    let got = explore(&counts, 10_000, |schedule| {
+        let buf = StepBuffer::new();
+        let mut idx = [0usize; 3];
+        let mut last_front: Option<u64> = None;
+        for &t in schedule {
+            let step = scripts[t][idx[t]];
+            idx[t] += 1;
+            let before = buf.front_step();
+            let res = buf.publish(step, step);
+            // Publish succeeds exactly when it does not regress the
+            // front, and on success the front *is* the published step.
+            let expect_ok = before.map_or(true, |cur| step >= cur);
+            assert_eq!(
+                res.is_ok(),
+                expect_ok,
+                "publish({step}) with front {before:?} in {schedule:?}"
+            );
+            let after = buf.front_step();
+            if expect_ok {
+                assert_eq!(after, Some(step));
+            } else {
+                assert_eq!(after, before, "failed publish moved the front");
+            }
+            // Global monotonicity: the front never goes backwards.
+            assert!(
+                after >= last_front,
+                "front regressed {last_front:?} -> {after:?} in {schedule:?}"
+            );
+            last_front = after;
+            // Arc handout coherence: the value is the step it was
+            // stamped with (readers can never see a torn pair).
+            let v = buf.front().expect("published");
+            assert_eq!(Some(*v), after);
+        }
+        // 5 is the maximum step across all scripts, so it is always
+        // accepted and nothing after it can win: every interleaving
+        // converges to the same front.
+        assert_eq!(buf.front_step(), Some(5));
+        // Bounded-staleness acquire sees it without blocking.
+        let v = buf.acquire(5, Duration::from_millis(50)).expect("fresh");
+        assert_eq!(*v, 5);
+    });
+    assert!(!got.truncated, "exploration must be exhaustive");
+    assert_eq!(got.schedules as u64, schedule_count(&counts));
+}
+
+#[test]
+fn step_buffer_acquire_rejects_stale_and_times_out() {
+    let buf = StepBuffer::new();
+    buf.publish(3, 30u64).expect("publish");
+    // Satisfiable bound: returns immediately.
+    assert_eq!(*buf.acquire(2, Duration::from_millis(50)).expect("ok"), 30);
+    // Unsatisfiable bound: errors after the timeout instead of handing
+    // out a staler-than-requested value.
+    let err = buf.acquire(4, Duration::from_millis(40));
+    assert!(err.is_err(), "acquire handed out a stale value");
+    assert_eq!(buf.front_step(), Some(3));
+}
+
+// ---------------------------------------------------------------------------
+// IngestState: all-or-nothing epoch merges under every interleaving
+// ---------------------------------------------------------------------------
+
+/// One single-row shard: `(tensor, row_bytes, row index)`.
+type Shard = (WireTensorId, u32, u32);
+
+fn batch_of(shards: &[Shard]) -> ReceivedBatch {
+    let mut b = ReceivedBatch::new();
+    for &(tensor, row_bytes, row) in shards {
+        let desc = ShardDesc {
+            tensor,
+            dtype: WireDtype::I32,
+            row_start: row,
+            rows: 1,
+            row_bytes,
+        };
+        b.insert(&desc, &vec![0xAB; row_bytes as usize])
+            .expect("self-consistent test batch");
+    }
+    b
+}
+
+/// Pure mirror of the epoch-level all-or-nothing contract: a merge
+/// whose shards conflict with the retained entry (same tensor,
+/// different row size) fails AND discards the whole epoch; a successful
+/// merge is the union.
+type Model = BTreeMap<u16, (u32, BTreeSet<u32>)>;
+
+fn model_merge(entry: &mut Option<Model>, shards: &[Shard]) -> bool {
+    let mut work = entry.take().unwrap_or_default();
+    for &(tensor, row_bytes, row) in shards {
+        let e = work.entry(tensor.code()).or_insert((row_bytes, BTreeSet::new()));
+        if e.0 != row_bytes {
+            return false; // entry stays None: epoch discarded
+        }
+        e.1.insert(row);
+    }
+    *entry = Some(work);
+    true
+}
+
+#[test]
+fn ingest_merge_is_all_or_nothing_under_all_interleavings() {
+    use WireTensorId::{Mask, Tokens};
+    // Sender A streams two well-formed Tokens frames; sender B first
+    // sends a conflicting Tokens shape (a corrupted/mismatched peer),
+    // then a clean Mask frame. Depending on order, either side can be
+    // the one that conflicts — and a conflict must drop the *whole*
+    // epoch, never retain a half-merged batch.
+    let scripts: [&[&[Shard]]; 2] = [
+        &[&[(Tokens, 8, 0)], &[(Tokens, 8, 1)]],
+        &[&[(Tokens, 4, 2)], &[(Mask, 4, 0)]],
+    ];
+    let counts: Vec<usize> = scripts.iter().map(|s| s.len()).collect();
+
+    let got = explore(&counts, 1_000, |schedule| {
+        let state = IngestState::new();
+        let mut model: Option<Model> = None;
+        let mut idx = [0usize; 2];
+        for &t in schedule {
+            let shards = scripts[t][idx[t]];
+            idx[t] += 1;
+            let expect_ok = model_merge(&mut model, shards);
+            let res = state.merge(7, batch_of(shards));
+            assert_eq!(
+                res.is_ok(),
+                expect_ok,
+                "merge {shards:?} in {schedule:?}: {res:?}"
+            );
+        }
+        // The final reassembled batch must be exactly the model's union
+        // of fully-applied frames — nothing partial, nothing extra.
+        let batch = state.take(7).expect("not poisoned");
+        match model {
+            None => assert!(batch.is_empty(), "conflict retained partial state"),
+            Some(m) => {
+                assert_eq!(batch.tensors().count(), m.len());
+                for (code, (row_bytes, rows)) in m {
+                    let id = WireTensorId::from_code(code).expect("model code");
+                    let t = batch.tensor(id).expect("model tensor present");
+                    assert_eq!(t.row_bytes as u32, row_bytes);
+                    let present: BTreeSet<u32> = (0..t.present.len() as u32)
+                        .filter(|&r| t.row(r as usize).is_some())
+                        .collect();
+                    assert_eq!(present, rows, "rows of {id:?} in {schedule:?}");
+                }
+            }
+        }
+        // take() consumed the epoch.
+        assert_eq!(state.pending_epochs(), 0);
+    });
+    assert!(!got.truncated);
+    assert_eq!(got.schedules as u64, schedule_count(&counts));
+}
+
+#[test]
+fn ingest_eviction_caps_pending_epochs() {
+    use WireTensorId::Tokens;
+    let state = IngestState::new();
+    let total = MAX_PENDING_INGEST_EPOCHS as u64 + 5;
+    for epoch in 0..total {
+        state
+            .merge(epoch, batch_of(&[(Tokens, 8, 0)]))
+            .expect("clean merge");
+        assert!(
+            state.pending_epochs() <= MAX_PENDING_INGEST_EPOCHS,
+            "pending epochs exceeded the cap at epoch {epoch}"
+        );
+    }
+    assert_eq!(state.pending_epochs(), MAX_PENDING_INGEST_EPOCHS);
+    // The oldest epochs were evicted (never committed, sender stalled).
+    assert!(state.take(0).expect("not poisoned").is_empty());
+    // Taking an epoch prunes every older leftover but keeps newer ones.
+    let newest_kept = total - 1;
+    let mid = total - 3;
+    assert!(!state.take(mid).expect("not poisoned").is_empty());
+    assert_eq!(state.pending_epochs(), (newest_kept - mid) as usize);
+    assert!(!state.take(newest_kept).expect("not poisoned").is_empty());
+    assert_eq!(state.pending_epochs(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Real-thread stress (the schedule the enumerator abstracts): this is
+// the test the nightly ThreadSanitizer job leans on.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn step_buffer_threaded_readers_observe_monotone_fronts() {
+    let buf = std::sync::Arc::new(StepBuffer::new());
+    let mut handles = Vec::new();
+    for p in 0..2u64 {
+        let b = std::sync::Arc::clone(&buf);
+        handles.push(std::thread::spawn(move || {
+            for s in 0..50u64 {
+                // Interleaved step sequences; regressions are expected
+                // losses of the publish race, never panics.
+                let _ = b.publish(s * 2 + p, s * 2 + p);
+            }
+        }));
+    }
+    let reader = {
+        let b = std::sync::Arc::clone(&buf);
+        std::thread::spawn(move || {
+            let mut last = None;
+            for _ in 0..200 {
+                let now = b.front_step();
+                assert!(now >= last, "front regressed {last:?} -> {now:?}");
+                last = now;
+                std::thread::yield_now();
+            }
+        })
+    };
+    for h in handles {
+        h.join().expect("publisher");
+    }
+    reader.join().expect("reader");
+    // Highest step overall is 99 (publisher 1, s=49).
+    assert_eq!(buf.front_step(), Some(99));
+    assert_eq!(*buf.acquire(99, Duration::from_secs(1)).expect("fresh"), 99);
+}

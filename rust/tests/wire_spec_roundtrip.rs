@@ -1,0 +1,159 @@
+//! Exhaustive encode/decode roundtrips generated from the analyzer's
+//! *extracted* wire spec — not from a hand-maintained table. The
+//! `earl-analyze` wirespec pass parses `dispatch/wire.rs` into a
+//! machine-readable protocol spec (enum code tables, fixed layouts,
+//! checksum stream); this test turns that spec back on the live types,
+//! so a code-table edit that dodges the static checks still has to
+//! survive an exhaustive roundtrip here.
+
+use earl::analyze::source::parse_source;
+use earl::analyze::wirespec;
+use earl::analyze::WIRE_MODULE;
+use earl::dispatch::wire::{
+    FrameHeader, ShardDesc, WireDtype, WireTensorId, FRAME_HEADER_LEN,
+    SHARD_DESC_LEN, WIRE_MAGIC,
+};
+
+fn wire_spec() -> wirespec::WireSpec {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/src/dispatch/wire.rs");
+    let src = std::fs::read_to_string(path).expect("read wire.rs");
+    let file = parse_source(WIRE_MODULE, &src);
+    let (spec, findings) = wirespec::analyze(&file);
+    // The committed wire module must be self-consistent before the
+    // spec is trusted to generate cases.
+    assert!(
+        findings.is_empty(),
+        "wirespec findings on the committed wire.rs: {:?}",
+        findings.iter().map(|f| f.render()).collect::<Vec<_>>()
+    );
+    spec
+}
+
+#[test]
+fn extracted_tensor_id_table_matches_the_live_enum() {
+    let spec = wire_spec();
+    let e = spec.enums.get("WireTensorId").expect("WireTensorId spec");
+
+    // Every live variant appears in the extracted code table with the
+    // live code, and nothing else does.
+    assert_eq!(e.codes.len(), WireTensorId::ALL.len());
+    assert_eq!(e.all_len, Some(WireTensorId::ALL.len() as u64));
+    for id in WireTensorId::ALL {
+        let name = format!("{id:?}");
+        let code = e
+            .codes
+            .iter()
+            .find(|(v, _)| *v == name)
+            .unwrap_or_else(|| panic!("{name} missing from extracted spec"));
+        assert_eq!(code.1, id.code() as u64, "{name} code drifted");
+    }
+    // The `ALL` iteration table covers every variant (spec-side check
+    // of what the exhaustive scans below verify value-side).
+    let all = e.all.as_ref().expect("ALL table extracted");
+    for (v, _) in &e.codes {
+        assert!(all.contains(v), "{v} missing from ALL");
+    }
+}
+
+#[test]
+fn tensor_id_from_code_is_exhaustive_over_u16() {
+    let spec = wire_spec();
+    let e = spec.enums.get("WireTensorId").expect("WireTensorId spec");
+    let valid: std::collections::BTreeSet<u64> =
+        e.codes.iter().map(|(_, c)| *c).collect();
+
+    for c in 0..=u16::MAX {
+        match WireTensorId::from_code(c) {
+            Ok(id) => {
+                assert!(
+                    valid.contains(&(c as u64)),
+                    "from_code accepted {c:#x}, absent from the spec"
+                );
+                assert_eq!(id.code(), c, "code/from_code not inverse at {c:#x}");
+            }
+            Err(_) => assert!(
+                !valid.contains(&(c as u64)),
+                "from_code rejected spec'd code {c:#x}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn dtype_from_code_is_exhaustive_over_u8() {
+    let spec = wire_spec();
+    let e = spec.enums.get("WireDtype").expect("WireDtype spec");
+    let valid: std::collections::BTreeSet<u64> =
+        e.codes.iter().map(|(_, c)| *c).collect();
+
+    for c in 0..=u8::MAX {
+        match WireDtype::from_code(c) {
+            Ok(d) => {
+                assert!(valid.contains(&(c as u64)));
+                assert_eq!(d.code(), c);
+            }
+            Err(_) => assert!(!valid.contains(&(c as u64))),
+        }
+    }
+}
+
+#[test]
+fn shard_desc_roundtrips_for_every_variant_and_dtype() {
+    let spec = wire_spec();
+    let layout = spec.layouts.get("ShardDesc").expect("ShardDesc layout");
+    assert_eq!(layout.len as usize, SHARD_DESC_LEN);
+
+    for tensor in WireTensorId::ALL {
+        for dtype in [WireDtype::I32, WireDtype::F32] {
+            let desc = ShardDesc {
+                tensor,
+                dtype,
+                row_start: 0x0102_0304,
+                rows: 0x0A0B_0C0D,
+                row_bytes: 0xF00D_BEEF,
+            };
+            let bytes = desc.encode();
+            assert_eq!(bytes.len(), layout.len as usize);
+            let back = ShardDesc::decode(&bytes)
+                .unwrap_or_else(|e| panic!("decode {tensor:?}/{dtype:?}: {e}"));
+            assert_eq!(back, desc, "roundtrip drift for {tensor:?}/{dtype:?}");
+            // Declared padding holes stay zero on the wire (they are
+            // covered by the checksum, so garbage there would make
+            // equal frames compare unequal).
+            for &hole in &layout.holes {
+                assert_eq!(
+                    bytes[hole as usize], 0,
+                    "pad byte {hole} of ShardDesc not zeroed"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn frame_header_roundtrips_at_the_spec_width() {
+    let spec = wire_spec();
+    let layout = spec.layouts.get("FrameHeader").expect("FrameHeader layout");
+    assert_eq!(layout.len as usize, FRAME_HEADER_LEN);
+    assert_eq!(spec.consts.get("FRAME_HEADER_LEN"), Some(&40));
+    assert_eq!(spec.consts.get("SHARD_DESC_LEN"), Some(&16));
+    assert_eq!(spec.consts.get("WIRE_MAGIC"), Some(&(WIRE_MAGIC as u64)));
+    assert!(layout.holes.is_empty(), "FrameHeader grew padding");
+
+    let h = FrameHeader {
+        src: u64::MAX - 3,
+        epoch: 0x1122_3344_5566_7788,
+        bytes: 7,
+        n_shards: 0xDEAD_0001,
+        checksum: 0xCAFE_F00D_1234_5678,
+    };
+    let bytes = h.encode();
+    assert_eq!(bytes.len(), layout.len as usize);
+    let back = FrameHeader::decode(&bytes).expect("decode");
+    assert_eq!(back, h);
+
+    // Corrupting the magic must fail decode, not mis-frame.
+    let mut bad = bytes;
+    bad[0] ^= 0xFF;
+    assert!(FrameHeader::decode(&bad).is_err(), "bad magic accepted");
+}
