@@ -1,7 +1,7 @@
 # Repo-level targets. The rust crate lives in rust/; the AOT artifacts
 # it executes are produced by the python compile path.
 
-.PHONY: check check-core analyze fmt lint test artifacts bench-pipeline
+.PHONY: check check-core analyze fmt lint test artifacts bench-pipeline bench-replan
 
 # Full gate: formatting, clippy (warnings are errors), the earl-analyze
 # static-analysis pass, tier-1 tests, plus the XLA-free core build
@@ -31,6 +31,7 @@ check-core:
 	cd rust && cargo build --release --no-default-features
 	cd rust && cargo test -q --no-default-features
 	cd rust && cargo test -q --no-default-features --test integration_remote_ingest
+	cd rust && cargo bench --no-default-features --bench fig6_replan -- --smoke
 
 fmt:
 	cd rust && cargo fmt --check
@@ -55,3 +56,7 @@ artifacts:
 # emits BENCH_pipeline.json.
 bench-pipeline:
 	cd rust && cargo bench --bench fig5_pipeline
+
+# XLA-free: the full ramp writes rust/BENCH_replan.json.
+bench-replan:
+	cd rust && cargo bench --bench fig6_replan

@@ -157,6 +157,7 @@ fn synthetic_job(step: u64) -> DispatchJob {
         payload: None,
         inflight_budget: None,
         adaptive_budget: false,
+        reset_budget: false,
         controller_bytes: 0,
         remote: None,
     }

@@ -1,0 +1,150 @@
+//! Duration-literal lint: a hard-coded `Duration::from_*(<number>)`
+//! inside non-test `dispatch/`, `coordinator/` or `runtime/` function
+//! bodies is a tuning knob with no audited home. Timeouts in the
+//! concurrent tree must live in named module constants (or config
+//! fields) where they can be found, compared, and re-derived — a magic
+//! `from_secs(30)` buried in a connect path is how two sides of a
+//! protocol drift apart.
+//!
+//! Escapes: module-level `const` initializers (that *is* the audited
+//! home — only fn bodies are scanned), test code, non-literal
+//! arguments (`Duration::from_secs(cfg.timeout)` is already
+//! parameterized), and an explicit
+//! `// earl-analyze: allow(duration-literal)` annotation on the site.
+
+use crate::analyze::panics::linted;
+use crate::analyze::source::SourceFile;
+use crate::analyze::Finding;
+
+/// `Duration` constructors whose literal arguments the lint flags.
+pub const CTORS: [&str; 4] =
+    ["from_secs", "from_millis", "from_micros", "from_nanos"];
+
+/// One hard-coded timeout in production code.
+#[derive(Debug, Clone)]
+pub struct DurationSite {
+    pub line: u32,
+    /// The constructor, e.g. `from_secs`.
+    pub ctor: String,
+    /// The literal argument as written, e.g. `30`.
+    pub value: String,
+    /// The enclosing function.
+    pub in_fn: String,
+}
+
+/// Scan one file for un-annotated `Duration` literals in non-test fn
+/// bodies. Module-level consts are exempt by construction: they sit
+/// outside every body range.
+pub fn scan(file: &SourceFile) -> Vec<DurationSite> {
+    let toks = &file.lexed.toks;
+    let mut out = Vec::new();
+    for f in &file.fns {
+        if f.in_test || f.body.0 >= f.body.1 {
+            continue;
+        }
+        for i in f.body.0..f.body.1 {
+            // `Duration :: from_*( <num>` — the lexer splits `::` into
+            // two ':' puncts.
+            let t = &toks[i];
+            if !t.is_ident("Duration") {
+                continue;
+            }
+            let Some(ctor) = toks.get(i + 3) else { continue };
+            if !toks[i + 1].is_punct(':')
+                || !toks[i + 2].is_punct(':')
+                || !CTORS.iter().any(|&c| ctor.is_ident(c))
+                || !toks.get(i + 4).is_some_and(|t| t.is_punct('('))
+            {
+                continue;
+            }
+            let Some(arg) = toks.get(i + 5) else { continue };
+            if arg.kind != crate::analyze::lexer::TokKind::Num {
+                continue; // already parameterized
+            }
+            if file.in_test(t.line) || file.allowed(t.line, "duration-literal")
+            {
+                continue;
+            }
+            out.push(DurationSite {
+                line: t.line,
+                ctor: ctor.text.clone(),
+                value: arg.text.clone(),
+                in_fn: f.name.clone(),
+            });
+        }
+    }
+    out
+}
+
+/// Lint every file in the concurrent tree; one finding per site.
+pub fn analyze(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in files {
+        if !linted(&file.rel) {
+            continue;
+        }
+        for s in scan(file) {
+            out.push(Finding {
+                family: "duration-budget",
+                kind: "duration-literal",
+                file: file.rel.clone(),
+                line: s.line,
+                message: format!(
+                    "hard-coded Duration::{}({}) in `{}`; hoist to a named \
+                     const or annotate \
+                     `// earl-analyze: allow(duration-literal)`",
+                    s.ctor, s.value, s.in_fn
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse_source;
+
+    #[test]
+    fn flags_literal_timeout_in_dispatch_fn_body() {
+        let src = "use std::time::Duration;\nfn connect() {\n    let _t = Duration::from_secs(30);\n}\n";
+        let f = parse_source("dispatch/fake.rs", src);
+        let sites = scan(&f);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].line, 3);
+        assert_eq!(sites[0].ctor, "from_secs");
+        assert_eq!(sites[0].value, "30");
+        assert_eq!(sites[0].in_fn, "connect");
+        assert_eq!(analyze(&[f]).len(), 1);
+    }
+
+    #[test]
+    fn module_const_is_the_audited_home() {
+        // The remediation the lint asks for must itself be clean.
+        let src = "use std::time::Duration;\nconst COMMIT_TIMEOUT: Duration = Duration::from_secs(30);\nfn connect(t: Duration) {\n    let _d = Duration::from_millis(cfg.timeout_ms);\n    let _t = t;\n}\n";
+        let f = parse_source("coordinator/fake.rs", src);
+        assert!(scan(&f).is_empty());
+    }
+
+    #[test]
+    fn annotation_and_test_code_are_exempt() {
+        let src = "fn retry() {\n    // earl-analyze: allow(duration-literal) — paced by the OS resolution\n    let _t = Duration::from_millis(1);\n}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { let _ = Duration::from_secs(5); }\n}\n";
+        let f = parse_source("runtime/fake.rs", src);
+        assert!(scan(&f).is_empty());
+    }
+
+    #[test]
+    fn all_four_ctors_are_covered_and_scope_matches_panics() {
+        let src = "fn f() {\n    let _a = Duration::from_secs(1);\n    let _b = Duration::from_millis(2);\n    let _c = Duration::from_micros(3);\n    let _d = Duration::from_nanos(4);\n}\n";
+        let f = parse_source("dispatch/fake.rs", src);
+        let ctors: Vec<_> = scan(&f).iter().map(|s| s.ctor.clone()).collect();
+        assert_eq!(
+            ctors,
+            vec!["from_secs", "from_millis", "from_micros", "from_nanos"]
+        );
+        // Outside the concurrent tree the lint does not apply.
+        let g = parse_source("util/fake.rs", src);
+        assert!(analyze(&[g]).is_empty());
+    }
+}

@@ -1,6 +1,6 @@
 //! `earl-analyze`: in-repo static analysis over the crate source.
 //!
-//! Three finding families, all running off the same hand-rolled token
+//! Four finding families, all running off the same hand-rolled token
 //! walk ([`lexer`] / [`source`]; no rustc internals, so the pass runs
 //! in the `--no-default-features` build with zero new dependencies):
 //!
@@ -13,12 +13,17 @@
 //! * **panic-budget** ([`panics`]) — `unwrap()`/`expect()`/`panic!` in
 //!   non-test `dispatch/`, `coordinator/`, `runtime/` code, gated by
 //!   explicit `// earl-analyze: allow(panic)` annotations and a
-//!   ratcheting per-file baseline (counts may only shrink).
+//!   ratcheting per-file baseline (counts may only shrink);
+//! * **duration-budget** ([`durations`]) — hard-coded
+//!   `Duration::from_*(<literal>)` timeouts in the same concurrent
+//!   tree's non-test fn bodies; the audited home for a timeout is a
+//!   named module const or a config field.
 //!
 //! `make analyze` (folded into `make check`) runs the
 //! [`crate::analyze`] pass via the `earl-analyze` bin and fails on any
 //! finding.
 
+pub mod durations;
 pub mod lexer;
 pub mod locks;
 pub mod panics;
@@ -38,7 +43,8 @@ pub const WIRE_MODULE: &str = "dispatch/wire.rs";
 /// One diagnostic produced by the analysis pass.
 #[derive(Debug, Clone)]
 pub struct Finding {
-    /// Finding family: `concurrency`, `wire-protocol`, `panic-budget`.
+    /// Finding family: `concurrency`, `wire-protocol`, `panic-budget`,
+    /// `duration-budget`.
     pub family: &'static str,
     /// Specific check within the family (e.g. `lock-order`).
     pub kind: &'static str,
@@ -123,6 +129,9 @@ pub fn run(root: &Path, baseline: &BTreeMap<String, usize>) -> Result<Report> {
 
     // Concurrency family.
     report.findings.extend(locks::analyze(&files));
+
+    // Duration-budget family.
+    report.findings.extend(durations::analyze(&files));
 
     // Wire-protocol family.
     match files.iter().find(|f| f.rel == WIRE_MODULE) {

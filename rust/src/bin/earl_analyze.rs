@@ -5,8 +5,9 @@
 //!              [--spec FILE] [--write-baseline] [--quiet]
 //! ```
 //!
-//! Crawls `--root` (default `src`), runs the three finding families
-//! (concurrency, wire-protocol, panic-budget; see [`earl::analyze`]),
+//! Crawls `--root` (default `src`), runs the four finding families
+//! (concurrency, wire-protocol, panic-budget, duration-budget; see
+//! [`earl::analyze`]),
 //! prints human diagnostics, and exits non-zero on any finding.
 //! `--json` / `--spec` dump the machine-readable report / extracted
 //! wire-protocol spec. `--write-baseline` regenerates the panic-budget

@@ -100,6 +100,20 @@ pub struct TrainConfig {
     /// stay on the controller and are reported as
     /// `dispatch_controller_bytes`.
     pub dispatch_aggregation_aware: bool,
+    /// Enable the live parallelism re-planner: between RL stages, feed
+    /// the observed context distribution and stage timings into the
+    /// memory/throughput models and re-select the cluster-level
+    /// rollout/training parallelism (paper §2.3). The decision only
+    /// re-derives the dispatch plan shape and is recorded per step — it
+    /// never changes batch math, so learning curves are untouched.
+    pub replan: bool,
+    /// Concurrent responses the re-planner's memory model assumes per
+    /// rollout worker (the paper testbed profiles at 64 and 128).
+    pub replan_responses: usize,
+    /// Test hook: force a rollout-shape switch at this decision index
+    /// (1-based), exercising the switch path even when signals alone
+    /// would keep the current shape.
+    pub replan_force_step: Option<u64>,
     pub metrics_path: Option<PathBuf>,
     pub checkpoint_path: Option<PathBuf>,
     pub seed: u64,
@@ -125,6 +139,9 @@ impl Default for TrainConfig {
             dispatch_inflight_budget: None,
             dispatch_budget_adaptive: false,
             dispatch_aggregation_aware: true,
+            replan: false,
+            replan_responses: 64,
+            replan_force_step: None,
             metrics_path: None,
             checkpoint_path: None,
             seed: 0,
@@ -151,6 +168,9 @@ impl TrainConfig {
         }
         if !(self.off_policy_clip > 0.0 && self.off_policy_clip <= 1.0) {
             bail!("off_policy_clip must be in (0,1]");
+        }
+        if self.replan_responses == 0 {
+            bail!("replan_responses must be >= 1");
         }
         Ok(())
     }
@@ -238,6 +258,15 @@ impl TrainConfig {
         if let Some(b) = j.at(&["dispatch_aggregation_aware"]).as_bool() {
             c.dispatch_aggregation_aware = b;
         }
+        if let Some(b) = j.at(&["replan"]).as_bool() {
+            c.replan = b;
+        }
+        if let Some(n) = j.at(&["replan_responses"]).as_usize() {
+            c.replan_responses = n;
+        }
+        if let Some(n) = j.at(&["replan_force_step"]).as_usize() {
+            c.replan_force_step = Some(n as u64);
+        }
         if let Some(s) = j.at(&["metrics_path"]).as_str() {
             c.metrics_path = Some(PathBuf::from(s));
         }
@@ -319,6 +348,22 @@ mod tests {
     }
 
     #[test]
+    fn replan_parses() {
+        let c = TrainConfig::from_json_str(
+            r#"{"replan": true, "replan_responses": 128,
+                "replan_force_step": 2}"#,
+        )
+        .unwrap();
+        assert!(c.replan);
+        assert_eq!(c.replan_responses, 128);
+        assert_eq!(c.replan_force_step, Some(2));
+        let d = TrainConfig::default();
+        assert!(!d.replan);
+        assert_eq!(d.replan_responses, 64);
+        assert_eq!(d.replan_force_step, None);
+    }
+
+    #[test]
     fn rejects_bad_values() {
         assert!(TrainConfig::from_json_str(r#"{"steps": 0}"#).is_err());
         assert!(TrainConfig::from_json_str(r#"{"gamma": 1.5}"#).is_err());
@@ -326,6 +371,7 @@ mod tests {
         assert!(TrainConfig::from_json_str(r#"{"pipeline": "warp"}"#).is_err());
         assert!(TrainConfig::from_json_str(r#"{"off_policy_clip": 0.0}"#).is_err());
         assert!(TrainConfig::from_json_str(r#"{"off_policy_clip": 1.5}"#).is_err());
+        assert!(TrainConfig::from_json_str(r#"{"replan_responses": 0}"#).is_err());
         assert!(TrainConfig::from_json_str("not json").is_err());
     }
 

@@ -45,6 +45,10 @@ use crate::rl::advantage::whiten;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
 
+/// Default wall-clock budget for one commit round-trip (request out,
+/// worker report back) before the step fails loudly.
+const DEFAULT_COMMIT_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// Configuration of a remote-ingestion training run.
 #[derive(Debug, Clone)]
 pub struct IngestCfg {
@@ -82,7 +86,7 @@ impl Default for IngestCfg {
             aggregation_aware: true,
             inflight_budget: None,
             adaptive_budget: false,
-            commit_timeout: Duration::from_secs(30),
+            commit_timeout: DEFAULT_COMMIT_TIMEOUT,
         }
     }
 }

@@ -160,6 +160,11 @@ pub struct DispatchJob {
     /// the observed `stall_seconds` of every TCP execute. Inert without
     /// a seed budget or for the simulated modes.
     pub adaptive_budget: bool,
+    /// Drop the cached AIMD budget state before executing, so the next
+    /// adaptive job reseeds from its `inflight_budget`. Set by the
+    /// re-planner when a parallelism switch changes the dispatch shape
+    /// (the old budget was tuned for the old worker count).
+    pub reset_budget: bool,
     /// Bytes of this step's batch that aggregation-aware planning kept
     /// on the controller instead of dispatching (0 when the whole
     /// payload ships) — passed through to the result for metrics.
@@ -281,6 +286,9 @@ fn run_job(
             let cache = tcp
                 .as_mut()
                 .ok_or_else(|| anyhow!("tcp runtime cache not initialized"))?;
+            if job.reset_budget {
+                cache.aimd = None;
+            }
             // Resolve the effective budget: the AIMD controller adapts a
             // seeded budget across steps from each execute's observed
             // stall; non-adaptive jobs pass their budget through.
@@ -585,6 +593,7 @@ mod tests {
             payload: None,
             inflight_budget: None,
             adaptive_budget: false,
+            reset_budget: false,
             controller_bytes: 0,
             remote: None,
         }
@@ -670,6 +679,29 @@ mod tests {
     }
 
     #[test]
+    fn reset_budget_reseeds_the_aimd_controller() {
+        let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));
+        let seed = 1u64 << 20;
+        let mk = |step: u64, reset: bool| {
+            let mut j = job(step, DispatchMode::Tcp);
+            j.inflight_budget = Some(seed);
+            j.adaptive_budget = true;
+            j.reset_budget = reset;
+            j
+        };
+        w.submit(mk(0, false)).unwrap();
+        w.recv().unwrap();
+        w.submit(mk(1, false)).unwrap();
+        let grown = w.recv().unwrap();
+        assert!(grown.inflight_budget_bytes > seed, "AIMD never grew");
+        // A replan-triggered reset drops the adapted state: the next
+        // execute runs under the seed again, not the grown budget.
+        w.submit(mk(2, true)).unwrap();
+        let reseeded = w.recv().unwrap();
+        assert_eq!(reseeded.inflight_budget_bytes, seed);
+    }
+
+    #[test]
     fn dispatch_overlaps_caller_work() {
         // A paced TCP job takes ~>100ms; the caller does its own work
         // meanwhile. If the worker were synchronous the elapsed time
@@ -689,6 +721,7 @@ mod tests {
             payload: None,
             inflight_budget: None,
             adaptive_budget: false,
+            reset_budget: false,
             controller_bytes: 0,
             remote: None,
         })
@@ -706,6 +739,7 @@ mod tests {
             payload: None,
             inflight_budget: None,
             adaptive_budget: false,
+            reset_budget: false,
             controller_bytes: 0,
             remote: None,
         })

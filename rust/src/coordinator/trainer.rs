@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
+use crate::cluster::ClusterSpec;
 use crate::config::{EnvKind, OpponentKind, TrainConfig};
 use crate::coordinator::exp_prep;
 use crate::coordinator::pipeline::{
@@ -52,7 +53,10 @@ use crate::coordinator::pipeline::{
 use crate::dispatch::{plan_alltoall, plan_centralized, DataLayout};
 use crate::envs::{ConnectFour, Game, HeuristicOpponent, Opponent, RandomOpponent, TicTacToe};
 use crate::metrics::{MetricsLog, StepRecord};
-use crate::parallelism::{ProfilePoint, RangeTable, Selector};
+use crate::parallelism::{
+    ModelShape, ProfilePoint, RangeTable, Replanner, ReplanSignals, Selector,
+    ThroughputCfg,
+};
 use crate::rl::advantage::AdvantageCfg;
 use crate::rl::episode::{Episode, EpisodeStatus, ExperienceBatch};
 use crate::rollout::{RolloutEngine, RolloutStats};
@@ -90,6 +94,11 @@ struct StagedStep {
     exp_prep_seconds: f64,
     param_staleness: u64,
     snapshot_wait_seconds: f64,
+    /// Re-planner decision taken at this step's stage boundary
+    /// (`""`/false/0.0 when the re-planner is disabled).
+    replan_config: String,
+    replan_switched: bool,
+    mem_watermark_frac: f64,
 }
 
 /// A step that has been updated but whose dispatch is still in flight:
@@ -133,6 +142,17 @@ pub struct Trainer {
     /// Standalone worker-process addresses for `DispatchMode::Tcp`
     /// (`earl worker --listen ...`); `None` = in-process loopback.
     pub dispatch_remote: Option<Arc<Vec<SocketAddr>>>,
+    /// Live parallelism re-planner (`cfg.replan`): re-selects the
+    /// cluster-level rollout/training shapes at the ExpPrep stage
+    /// boundary from the observed context distribution.
+    pub replanner: Option<Replanner>,
+    /// Signals fed to the next re-planning decision: context stats from
+    /// the current rollout, dispatch volume and update wall time joined
+    /// in from the previous step's results.
+    replan_signals: ReplanSignals,
+    /// A switch happened since the last dispatch submission — the next
+    /// [`DispatchJob`] drops the dispatch worker's adapted AIMD state.
+    replan_reset_budget: bool,
     /// Persistent rollout driver (decode buffers survive across steps).
     rollout: RolloutEngine,
     /// Shared parameter-snapshot buffer: published by whichever thread
@@ -189,6 +209,26 @@ impl Trainer {
         // Shared pool: TCP send jobs of the persistent dispatch runtime.
         let dispatcher = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
         let cfg_budget = cfg.dispatch_inflight_budget;
+        // The re-planner models the paper testbed (72B policy on 16×8
+        // H100): the host run's conceptual cluster for dispatch planning.
+        let replanner = if cfg.replan {
+            Some(
+                Replanner::new(
+                    ModelShape::qwen2_5_72b(),
+                    ClusterSpec::paper_testbed(),
+                    ThroughputCfg::default(),
+                    cfg.replan_responses,
+                    4096,
+                )
+                .context("seeding the parallelism re-planner")?,
+            )
+        } else {
+            None
+        };
+        let dispatch_workers = match &replanner {
+            Some(rp) => rp.dispatch_workers(),
+            None => 8,
+        };
         Ok(Trainer {
             cfg,
             engine,
@@ -197,10 +237,13 @@ impl Trainer {
             selector,
             metrics,
             dispatch_mode: DispatchMode::Simulated,
-            dispatch_workers: 8,
+            dispatch_workers,
             dispatch_nic: None,
             dispatch_inflight_budget: cfg_budget,
             dispatch_remote: None,
+            replanner,
+            replan_signals: ReplanSignals::default(),
+            replan_reset_budget: false,
             rollout,
             snapshots: Arc::new(SnapshotBuffer::new()),
             dispatcher,
@@ -261,6 +304,41 @@ impl Trainer {
         rolled: RolledOut,
         policy: Option<&[Literal]>,
     ) -> Result<StagedStep> {
+        // Re-planning decision at the stage boundary (all three pipeline
+        // modes funnel through here): feed the fresh context distribution
+        // plus the previous step's dispatch/update signals into the cost
+        // models. The decision only re-derives the dispatch plan shape —
+        // it never touches batch math, so learning curves are untouched.
+        let (replan_config, replan_switched, mem_watermark_frac) =
+            match self.replanner.as_mut() {
+                Some(rp) => {
+                    self.replan_signals.ctx_mean = rolled.rstats.mean_episode_context;
+                    self.replan_signals.ctx_p95 = rolled.rstats.ctx_p95;
+                    self.replan_signals.ctx_max = rolled.rstats.ctx_max;
+                    self.replan_signals.rollout_seconds = rolled.rollout_seconds;
+                    let force =
+                        self.cfg.replan_force_step == Some(rp.decisions() + 1);
+                    let d = rp.decide(&self.replan_signals, force);
+                    if d.switched() && self.dispatch_remote.is_none() {
+                        // Re-derive the dispatch plan for the new shape:
+                        // one worker per node of the training placement,
+                        // AIMD budget re-seeded from observed volume.
+                        self.dispatch_workers = rp.dispatch_workers();
+                        self.replan_reset_budget = true;
+                        if self.cfg.dispatch_budget_adaptive {
+                            if let Some(b) = Replanner::reseed_budget(
+                                &self.replan_signals,
+                                self.dispatch_workers,
+                            ) {
+                                self.dispatch_inflight_budget = Some(b);
+                            }
+                        }
+                    }
+                    (d.label(), d.switched(), d.mem_watermark_frac)
+                }
+                None => (String::new(), false, 0.0),
+            };
+
         let t1 = Instant::now();
         let suggested = if self.cfg.dynamic_buckets {
             self.selector.current()
@@ -299,6 +377,9 @@ impl Trainer {
             exp_prep_seconds,
             param_staleness: rolled.param_staleness,
             snapshot_wait_seconds: rolled.snapshot_wait_seconds,
+            replan_config,
+            replan_switched,
+            mem_watermark_frac,
         })
     }
 
@@ -391,6 +472,7 @@ impl Trainer {
             payload,
             inflight_budget: self.dispatch_inflight_budget,
             adaptive_budget: self.cfg.dispatch_budget_adaptive,
+            reset_budget: std::mem::take(&mut self.replan_reset_budget),
             controller_bytes,
             remote: self.dispatch_remote.clone(),
         })
@@ -412,6 +494,10 @@ impl Trainer {
             tgs: staged.rstats.tgs,
             bucket: staged.bucket,
             selector_switched: staged.switched,
+            replan_config: staged.replan_config.clone(),
+            replan_switched: staged.replan_switched,
+            ctx_p95: staged.rstats.ctx_p95,
+            mem_watermark_frac: staged.mem_watermark_frac,
             rollout_seconds: staged.rollout_seconds,
             exp_prep_seconds: staged.exp_prep_seconds,
             dispatch_seconds: 0.0,
@@ -471,6 +557,18 @@ impl Trainer {
         rec.dispatch_budget_bytes = d.inflight_budget_bytes;
     }
 
+    /// Copy a committed record's dispatch/update observations into the
+    /// signals the *next* re-planning decision will consume.
+    fn observe_for_replan(&mut self, rec: &StepRecord) {
+        if self.replanner.is_none() {
+            return;
+        }
+        self.replan_signals.dispatch_bytes = rec.dispatch_bytes;
+        self.replan_signals.dispatch_controller_bytes =
+            rec.dispatch_controller_bytes;
+        self.replan_signals.train_seconds = rec.train_seconds;
+    }
+
     /// Join the dispatch result into the step record and commit it.
     fn finalize(
         &mut self,
@@ -481,6 +579,7 @@ impl Trainer {
         Self::apply_dispatch(&mut rec, &d);
         rec.step_wall_seconds = self.step_t0.elapsed().as_secs_f64();
         self.step_t0 = Instant::now();
+        self.observe_for_replan(&rec);
         self.metrics.record(rec.clone())?;
         Ok(rec)
     }
@@ -550,6 +649,7 @@ impl Trainer {
         Self::apply_dispatch(&mut rec, &d);
         rec.step_wall_seconds = self.step_t0.elapsed().as_secs_f64();
         self.step_t0 = Instant::now();
+        self.observe_for_replan(&rec);
         self.metrics.record(rec.clone())?;
         Self::print_step(&rec);
         Ok(())
@@ -661,7 +761,7 @@ impl Trainer {
     fn print_step(rec: &StepRecord) {
         eprintln!(
             "[step {:>4}] return {:+.3} ctx(ep) {:>5.1} ctx(turn) {:>5.1} \
-             trunc {:>4.1}% loss {:+.4} ent {:.3} bucket {} tgs {:.1}{}{}",
+             trunc {:>4.1}% loss {:+.4} ent {:.3} bucket {} tgs {:.1}{}{}{}",
             rec.step,
             rec.mean_return,
             rec.mean_episode_ctx,
@@ -677,6 +777,11 @@ impl Trainer {
                 String::new()
             },
             if rec.selector_switched { " [switch]" } else { "" },
+            if rec.replan_switched {
+                format!(" [replan {}]", rec.replan_config)
+            } else {
+                String::new()
+            },
         );
     }
 
@@ -691,6 +796,9 @@ impl Trainer {
             }
             PipelineMode::Overlapped => self.run_overlapped()?,
             PipelineMode::OverlappedAsync => self.run_overlapped_async()?,
+        }
+        if let Some(s) = self.metrics.replan_summary() {
+            eprintln!("{s}");
         }
         if let Some(p) = &self.cfg.checkpoint_path {
             self.state.save_params(p)?;

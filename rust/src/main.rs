@@ -130,6 +130,10 @@ fn print_help() {
              --dispatch-budget-adaptive (AIMD-adapt the budget from stall)\n\
              --agg-unaware (ship ALL tensors; default routes aggregated\n\
                advantages via the controller per paper 3.3)\n\
+             --replan (live parallelism re-planner: re-select the\n\
+               cluster rollout/training shapes from observed signals)\n\
+             --replan-responses N (memory-model batch dim, default 64)\n\
+             --replan-force-step N (force a switch at decision N)\n\
              --connect A1,A2,... (remote `earl worker` addresses for tcp)\n\
              --lr F --kl F --ent F --gamma F --seed N\n\
              --artifacts DIR --metrics FILE --checkpoint FILE --config FILE\n\
@@ -364,6 +368,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.has("agg-unaware") {
         cfg.dispatch_aggregation_aware = false;
+    }
+    if args.has("replan") {
+        cfg.replan = true;
+    }
+    if let Some(n) = args.get_usize("replan-responses")? {
+        cfg.replan_responses = n;
+    }
+    if let Some(n) = args.get_usize("replan-force-step")? {
+        cfg.replan_force_step = Some(n as u64);
     }
 
     let dispatch_mode = match args.get("dispatch") {

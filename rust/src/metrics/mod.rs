@@ -34,6 +34,16 @@ pub struct StepRecord {
     pub tgs: f64,
     pub bucket: usize,
     pub selector_switched: bool,
+    /// `"rollout-shape/train-shape"` the live re-planner ran the step
+    /// under (empty when re-planning is off).
+    pub replan_config: String,
+    /// The re-planner changed a stage shape entering this step.
+    pub replan_switched: bool,
+    /// 95th-percentile episode context of the rollout batch.
+    pub ctx_p95: f64,
+    /// Memory-model watermark of the rollout shape at the planned
+    /// context (1.0 = modeled OOM boundary; 0 when re-planning is off).
+    pub mem_watermark_frac: f64,
     pub rollout_seconds: f64,
     pub exp_prep_seconds: f64,
     /// Modeled dispatch latency: simulator makespan, or the measured
@@ -89,6 +99,10 @@ impl StepRecord {
             ("tgs", Json::num(self.tgs)),
             ("bucket", Json::num(self.bucket as f64)),
             ("selector_switched", Json::Bool(self.selector_switched)),
+            ("replan_config", Json::str(self.replan_config.as_str())),
+            ("replan_switched", Json::Bool(self.replan_switched)),
+            ("ctx_p95", Json::num(self.ctx_p95)),
+            ("mem_watermark_frac", Json::num(self.mem_watermark_frac)),
             ("rollout_seconds", Json::num(self.rollout_seconds)),
             ("exp_prep_seconds", Json::num(self.exp_prep_seconds)),
             ("dispatch_seconds", Json::num(self.dispatch_seconds)),
@@ -267,6 +281,27 @@ impl MetricsLog {
         slice.iter().map(|r| r.mean_return).sum::<f64>() / slice.len() as f64
     }
 
+    /// One-line summary of the re-planner's run: switch count, peak
+    /// memory watermark, and the final per-stage shapes. `None` when no
+    /// recorded step carried re-planner state.
+    pub fn replan_summary(&self) -> Option<String> {
+        let planned: Vec<&StepRecord> = self
+            .records
+            .iter()
+            .filter(|r| !r.replan_config.is_empty())
+            .collect();
+        let last = planned.last()?;
+        let switches = planned.iter().filter(|r| r.replan_switched).count();
+        let peak = planned
+            .iter()
+            .map(|r| r.mem_watermark_frac)
+            .fold(0.0, f64::max);
+        Some(format!(
+            "replan: {} switch(es), peak watermark {:.2}, final {}",
+            switches, peak, last.replan_config
+        ))
+    }
+
     /// Training throughput in steps/sec over recorded wall step times,
     /// skipping the first `skip` warmup steps (lazy executable compiles
     /// land there).
@@ -299,6 +334,10 @@ mod tests {
             tgs: 15.0,
             bucket: 128,
             selector_switched: false,
+            replan_config: "TP4xPP1xDP1/TP8xPP4xDP1".to_string(),
+            replan_switched: false,
+            ctx_p95: 180.0,
+            mem_watermark_frac: 0.4,
             rollout_seconds: 1.0,
             exp_prep_seconds: 0.5,
             dispatch_seconds: 0.1,
@@ -334,6 +373,13 @@ mod tests {
         );
         assert_eq!(j.at(&["dispatch_stall_seconds"]).as_f64(), Some(0.05));
         assert_eq!(j.at(&["dispatch_budget_bytes"]).as_usize(), Some(0));
+        assert_eq!(
+            j.at(&["replan_config"]).as_str(),
+            Some("TP4xPP1xDP1/TP8xPP4xDP1")
+        );
+        assert_eq!(j.at(&["replan_switched"]).as_bool(), Some(false));
+        assert_eq!(j.at(&["ctx_p95"]).as_f64(), Some(180.0));
+        assert_eq!(j.at(&["mem_watermark_frac"]).as_f64(), Some(0.4));
     }
 
     fn worker_metrics(rows: u64, tokens_per_row: f64) -> WorkerStepMetrics {
@@ -430,6 +476,29 @@ mod tests {
         let mut serial = rec(0, 0.0);
         serial.step_wall_seconds = serial.stage_seconds();
         assert!((serial.overlap_factor() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replan_summary_reports_switches_and_peak_watermark() {
+        let mut log = MetricsLog::memory();
+        // No replan-carrying records yet → no summary line.
+        let mut off = rec(0, 0.0);
+        off.replan_config = String::new();
+        log.record(off).unwrap();
+        assert!(log.replan_summary().is_none());
+
+        let mut a = rec(1, 0.0);
+        a.replan_switched = true;
+        a.mem_watermark_frac = 0.62;
+        log.record(a).unwrap();
+        let mut b = rec(2, 0.0);
+        b.replan_config = "TP8xPP1xDP1/TP8xPP4xDP1".to_string();
+        b.mem_watermark_frac = 0.31;
+        log.record(b).unwrap();
+        let s = log.replan_summary().unwrap();
+        assert!(s.contains("1 switch(es)"), "{s}");
+        assert!(s.contains("0.62"), "{s}");
+        assert!(s.contains("final TP8xPP1xDP1/TP8xPP4xDP1"), "{s}");
     }
 
     #[test]

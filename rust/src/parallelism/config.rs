@@ -28,6 +28,14 @@ impl ParallelismConfig {
         format!("TP{}xPP{}xDP{}", self.tp, self.pp, self.dp)
     }
 
+    /// Number of cluster nodes the placement spans. TP groups never
+    /// cross a node (see [`Self::placeable`]), so the span is a plain
+    /// ceiling division — the re-planner sizes the dispatch worker set
+    /// from it when the training shape changes.
+    pub fn nodes(&self, cluster: &ClusterSpec) -> usize {
+        self.gpus().div_ceil(cluster.gpus_per_node).max(1)
+    }
+
     /// Is this config placeable on the cluster (TP groups must fit within
     /// a node to ride NVLink, total GPUs must exist)?
     pub fn placeable(&self, cluster: &ClusterSpec) -> bool {
@@ -84,6 +92,17 @@ mod tests {
         let c = ParallelismConfig { tp: 4, pp: 2, dp: 3 };
         assert_eq!(c.gpus(), 24);
         assert_eq!(c.label(), "TP4xPP2xDP3");
+    }
+
+    #[test]
+    fn node_span_is_ceiling_division() {
+        let cluster = ClusterSpec::paper_testbed(); // 16×8
+        assert_eq!(ParallelismConfig::tp(4).nodes(&cluster), 1);
+        assert_eq!(ParallelismConfig::tp(8).nodes(&cluster), 1);
+        let tp8pp4 = ParallelismConfig { tp: 8, pp: 4, dp: 1 };
+        assert_eq!(tp8pp4.nodes(&cluster), 4);
+        let tp4pp3 = ParallelismConfig { tp: 4, pp: 3, dp: 1 };
+        assert_eq!(tp4pp3.nodes(&cluster), 2); // 12 GPUs → 2 nodes
     }
 
     #[test]

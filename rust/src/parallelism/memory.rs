@@ -90,6 +90,33 @@ pub fn rollout_oom(
     (fit as f64) < (responses as f64 * MIN_LIVE_FRACTION).max(1.0)
 }
 
+/// Memory watermark of a rollout config at an observed context: the
+/// fraction of usable HBM its **minimum viable working set** needs —
+/// weights + scratch + the smallest resident batch the engine can make
+/// progress with ([`MIN_LIVE_FRACTION`] of the requested responses).
+/// Crosses 1.0 exactly where [`rollout_oom`] flips (for integer
+/// min-live batches), so the re-planner can act on a headroom threshold
+/// *before* the OOM boundary instead of at it. A raw demand/usable
+/// ratio would not work here: paged engines preempt long before demand
+/// exceeds HBM, so raw demand exceeds 1.0 on perfectly healthy runs.
+pub fn rollout_watermark_frac(
+    shape: &ModelShape,
+    cfg: ParallelismConfig,
+    gpu: &GpuSpec,
+    ctx: usize,
+    responses: usize,
+) -> f64 {
+    let mem = rollout_memory(shape, cfg, ctx, responses);
+    let usable = usable_bytes(gpu) as f64;
+    let fixed = (mem.weights + mem.scratch) as f64;
+    if fixed >= usable {
+        return fixed / usable; // weights alone blow the budget: >= 1.0
+    }
+    let min_live = (responses as f64 * MIN_LIVE_FRACTION).max(1.0);
+    let per_seq = (shape.kv_bytes_per_seq(ctx) / cfg.tp as u64) as f64;
+    (fixed + min_live * per_seq) / usable
+}
+
 /// Training memory per GPU (mixed precision + Adam), bytes. Used by the
 /// §1 motivation bench and the ModelUpdate-stage ablation.
 ///
@@ -181,6 +208,39 @@ mod tests {
         let f32k = fit_sequences(&qwen(), ParallelismConfig::tp(8), &gpu, 32_768, 64);
         assert!(f8k > f32k);
         assert!(f32k >= 16, "TP8 must hold >=16 seqs at 32K: {f32k}");
+    }
+
+    #[test]
+    fn watermark_tracks_the_oom_boundary() {
+        // The watermark crosses 1.0 exactly where rollout_oom flips:
+        // below the boundary it reads < 1, past it >= 1 — scanning the
+        // paper's TP4 @ 128-response column across context.
+        let gpu = GpuSpec::h100_80g();
+        let cfg = ParallelismConfig::tp(4);
+        for ctx in (1024..=49_152).step_by(1024) {
+            let w = rollout_watermark_frac(&qwen(), cfg, &gpu, ctx, 128);
+            let oom = rollout_oom(&qwen(), cfg, &gpu, ctx, 128);
+            if w < 1.0 - 1e-9 {
+                assert!(!oom, "watermark {w:.3} < 1 but OOM at ctx {ctx}");
+            }
+            if w > 1.0 + 1e-9 {
+                assert!(oom, "watermark {w:.3} > 1 but no OOM at ctx {ctx}");
+            }
+        }
+    }
+
+    #[test]
+    fn watermark_monotone_in_ctx_and_relieved_by_tp() {
+        let gpu = GpuSpec::h100_80g();
+        let w4_8k = rollout_watermark_frac(&qwen(), ParallelismConfig::tp(4), &gpu, 8192, 128);
+        let w4_32k =
+            rollout_watermark_frac(&qwen(), ParallelismConfig::tp(4), &gpu, 32_768, 128);
+        let w8_32k =
+            rollout_watermark_frac(&qwen(), ParallelismConfig::tp(8), &gpu, 32_768, 128);
+        assert!(w4_8k < w4_32k, "watermark must grow with ctx");
+        assert!(w8_32k < w4_32k, "doubling TP must relieve the watermark");
+        assert!(w4_32k > 1.0, "TP4 @ (128, 32K) is the paper's OOM cell");
+        assert!(w8_32k < 1.0);
     }
 
     #[test]

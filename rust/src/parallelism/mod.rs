@@ -1,16 +1,25 @@
 //! EARL contribution #1: the **Parallelism Selector** and its supporting
 //! models — parallelism configurations, per-GPU memory estimation (the
-//! OOM boundary), and the decode-throughput model that reproduces paper
-//! Fig. 3.
+//! OOM boundary), the decode-throughput model that reproduces paper
+//! Fig. 3, and the live re-planner ([`replan`]) that re-selects the
+//! rollout/training shapes between RL stages from observed signals.
 
 pub mod config;
 pub mod memory;
+pub mod replan;
 pub mod selector;
 pub mod shape;
 pub mod throughput;
 
 pub use config::{ParallelismConfig, Stage};
-pub use memory::{fit_sequences, rollout_memory, rollout_oom, train_memory_per_gpu};
+pub use memory::{
+    fit_sequences, rollout_memory, rollout_oom, rollout_watermark_frac,
+    train_memory_per_gpu,
+};
+pub use replan::{ReplanDecision, ReplanSignals, Replanner};
 pub use selector::{Decision, ProfilePoint, RangeTable, Selector};
 pub use shape::ModelShape;
-pub use throughput::{decode_estimate, speedup_pct, DecodeEstimate, ThroughputCfg};
+pub use throughput::{
+    decode_estimate, profile_rollout_candidates, speedup_pct, DecodeEstimate,
+    ThroughputCfg,
+};

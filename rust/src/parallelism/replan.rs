@@ -1,0 +1,545 @@
+//! The **live parallelism re-planner** — closes the loop the paper's
+//! §2 selector promises: between RL stages, observed per-step signals
+//! (the rollout sequence-length distribution — mean *and* tail, not
+//! just the EMA — dispatch byte volumes, and stage wall times) are fed
+//! into the memory ([`crate::parallelism::memory`]) and throughput
+//! ([`crate::parallelism::throughput`]) cost models, which re-select
+//! the [`ParallelismConfig`] for the rollout and training stages
+//! **independently**. When the training shape changes, the dispatch
+//! plan is re-derived by the trainer (worker count from the node span,
+//! AIMD budget re-seeded from observed `dispatch_bytes`).
+//!
+//! ## Decision protocol
+//!
+//! Every decision is a pure function of the observed context
+//! distribution, the cost models, and the planner's own decision
+//! counter — stage wall times only pick the *hysteresis strictness*
+//! (a switch must promise more when rollout is not the dominant
+//! stage), never flip a decision on their own, so a re-planning run is
+//! bit-reproducible across pipeline schedules.
+//!
+//! * **Planning context**: `max(ctx_mean, ctx_p95 ×
+//!   [`PLAN_CTX_HEADROOM`])` — plan for the tail the batch will reach,
+//!   not the average it had.
+//! * **Memory-forced switch**: when the current rollout config's
+//!   [`rollout_watermark_frac`] at the planning context crosses
+//!   [`SWITCH_WATERMARK_FRAC`], re-shard immediately (cooldown
+//!   ignored) — this is the "re-shard *ahead of* the OOM boundary"
+//!   path the `fig6_replan` bench exercises.
+//! * **Throughput switch**: otherwise, switch only after
+//!   [`REPLAN_COOLDOWN_DECISIONS`] quiet decisions and only for a
+//!   modeled TGS gain above the stage-dominance threshold.
+//! * **Training side**: grow the (TP, PP) placement when the current
+//!   one no longer fits the activation memory at the planning context
+//!   (forced); shrink back only under cooldown.
+
+use crate::cluster::ClusterSpec;
+use crate::parallelism::config::{ParallelismConfig, Stage};
+use crate::parallelism::memory::{
+    rollout_watermark_frac, train_memory_per_gpu, usable_bytes,
+};
+use crate::parallelism::selector::Decision;
+use crate::parallelism::shape::ModelShape;
+use crate::parallelism::throughput::{decode_estimate, ThroughputCfg};
+
+/// Plan for the context the batch tail will reach, not its mean: the
+/// planning context is `max(mean, p95 × headroom)`.
+pub const PLAN_CTX_HEADROOM: f64 = 1.10;
+
+/// Watermark fraction at which a rollout re-shard is forced, ahead of
+/// the modeled OOM boundary at 1.0.
+pub const SWITCH_WATERMARK_FRAC: f64 = 0.85;
+
+/// Minimum modeled TGS gain for a throughput-motivated switch when
+/// rollout dominates the step wall time.
+pub const MIN_SWITCH_GAIN: f64 = 0.05;
+
+/// Stricter gain threshold when rollout is *not* the dominant stage —
+/// a switch buys less there, so it must promise more.
+pub const MIN_SWITCH_GAIN_MINOR_STAGE: f64 = 0.15;
+
+/// Decisions that must elapse after any switch before another
+/// non-forced switch is allowed (hysteresis against flapping).
+pub const REPLAN_COOLDOWN_DECISIONS: u64 = 3;
+
+/// Observed per-step signals the re-planner consumes. All fields come
+/// from the previous step's rollout stats and dispatch result.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplanSignals {
+    /// Mean episode context length of the last rollout batch.
+    pub ctx_mean: f64,
+    /// 95th-percentile episode context length.
+    pub ctx_p95: f64,
+    /// Longest episode context length.
+    pub ctx_max: f64,
+    /// Payload bytes the dispatcher moved peer-to-peer last step.
+    pub dispatch_bytes: u64,
+    /// Bytes routed through the controller (aggregation-aware split).
+    pub dispatch_controller_bytes: u64,
+    /// Rollout-stage wall time of the last step.
+    pub rollout_seconds: f64,
+    /// Update-stage wall time of the last step.
+    pub train_seconds: f64,
+}
+
+/// One re-planning decision: what each stage runs next, and why.
+#[derive(Debug, Clone)]
+pub struct ReplanDecision {
+    pub rollout: Decision<ParallelismConfig>,
+    pub train: Decision<ParallelismConfig>,
+    /// Context length the decision planned for (tail-adjusted).
+    pub planning_ctx: usize,
+    /// Watermark of the rollout config *entering* the decision, at the
+    /// planning context.
+    pub mem_watermark_frac: f64,
+    /// The rollout switch was memory-forced (watermark or OOM), not
+    /// throughput-motivated.
+    pub memory_forced: bool,
+}
+
+impl ReplanDecision {
+    /// Either stage changed shape — the dispatch plan must be
+    /// re-derived.
+    pub fn switched(&self) -> bool {
+        self.rollout.switched() || self.train.switched()
+    }
+
+    /// `"TP4xPP1xDP1/TP8xPP4xDP1"` — rollout shape / training shape.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}",
+            self.rollout.config().label(),
+            self.train.config().label()
+        )
+    }
+}
+
+/// The live re-planner: one per trainer, consulted at the
+/// ExpPrep stage boundary (shared by all three pipeline modes).
+#[derive(Debug, Clone)]
+pub struct Replanner {
+    shape: ModelShape,
+    cluster: ClusterSpec,
+    tcfg: ThroughputCfg,
+    /// Concurrent responses the rollout engine sustains (memory-model
+    /// batch dimension).
+    responses: usize,
+    rollout: ParallelismConfig,
+    train: ParallelismConfig,
+    decisions: u64,
+    last_switch: Option<u64>,
+    /// Switches performed across the run (metric).
+    pub switches: usize,
+    /// Highest watermark observed across the run (metric).
+    pub peak_watermark: f64,
+}
+
+impl Replanner {
+    /// Seed the planner at `initial_ctx`. `None` when no candidate
+    /// shape is feasible for either stage — the caller should fail
+    /// loudly rather than train on an un-plannable cluster.
+    pub fn new(
+        shape: ModelShape,
+        cluster: ClusterSpec,
+        tcfg: ThroughputCfg,
+        responses: usize,
+        initial_ctx: usize,
+    ) -> Option<Replanner> {
+        let mut rp = Replanner {
+            shape,
+            cluster,
+            tcfg,
+            responses,
+            rollout: ParallelismConfig::tp(1),
+            train: ParallelismConfig::tp(1),
+            decisions: 0,
+            last_switch: None,
+            switches: 0,
+            peak_watermark: 0.0,
+        };
+        rp.rollout = rp.best_rollout(initial_ctx)?.0;
+        rp.train = rp.best_train(initial_ctx)?;
+        Some(rp)
+    }
+
+    pub fn rollout_config(&self) -> ParallelismConfig {
+        self.rollout
+    }
+
+    pub fn train_config(&self) -> ParallelismConfig {
+        self.train
+    }
+
+    /// The shape a pipeline stage currently runs under.
+    pub fn config_for(&self, stage: Stage) -> ParallelismConfig {
+        match stage {
+            Stage::Rollout | Stage::ExperiencePrep => self.rollout,
+            Stage::ModelUpdate => self.train,
+        }
+    }
+
+    /// Decisions taken so far (the hysteresis clock — counted per
+    /// consultation, *not* per trainer step, so the async engine's
+    /// re-ordered bookkeeping cannot skew the cooldown).
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+
+    /// Dispatch worker count for the current training shape: one
+    /// worker per node the placement spans.
+    pub fn dispatch_workers(&self) -> usize {
+        self.train.nodes(&self.cluster)
+    }
+
+    /// Re-seed for the AIMD in-flight budget after a switch: an even
+    /// per-worker split of the last step's observed wire volume, so
+    /// the budget re-converges from evidence instead of a stale shape.
+    pub fn reseed_budget(signals: &ReplanSignals, n_workers: usize) -> Option<u64> {
+        if signals.dispatch_bytes == 0 {
+            return None;
+        }
+        Some((signals.dispatch_bytes / n_workers.max(1) as u64).max(1))
+    }
+
+    /// Best feasible rollout shape at `ctx` by modeled TGS.
+    fn best_rollout(&self, ctx: usize) -> Option<(ParallelismConfig, f64)> {
+        ParallelismConfig::rollout_candidates(&self.cluster)
+            .into_iter()
+            .filter_map(|cfg| {
+                decode_estimate(
+                    &self.shape,
+                    &self.cluster,
+                    cfg,
+                    &self.tcfg,
+                    ctx,
+                    self.responses,
+                )
+                .map(|e| (cfg, e.tgs))
+            })
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+    }
+
+    /// Does a training placement fit the activation memory at `ctx`?
+    fn train_fits(&self, cfg: ParallelismConfig, ctx: usize) -> bool {
+        cfg.placeable(&self.cluster)
+            && train_memory_per_gpu(&self.shape, cfg, ctx, 1, true)
+                <= usable_bytes(&self.cluster.gpu)
+    }
+
+    /// Smallest feasible (TP, PP) training placement at `ctx`: fewest
+    /// GPUs, ties broken toward higher TP (NVLink over pipeline
+    /// bubbles).
+    fn best_train(&self, ctx: usize) -> Option<ParallelismConfig> {
+        let mut best: Option<ParallelismConfig> = None;
+        let mut tp = 1;
+        while tp <= self.cluster.gpus_per_node {
+            let mut pp = 1;
+            loop {
+                let cfg = ParallelismConfig { tp, pp, dp: 1 };
+                if !cfg.placeable(&self.cluster) {
+                    break;
+                }
+                if self.train_fits(cfg, ctx) {
+                    let better = match best {
+                        None => true,
+                        Some(b) => {
+                            cfg.gpus() < b.gpus()
+                                || (cfg.gpus() == b.gpus() && cfg.tp > b.tp)
+                        }
+                    };
+                    if better {
+                        best = Some(cfg);
+                    }
+                    break; // larger pp at this tp only adds GPUs
+                }
+                pp *= 2;
+            }
+            tp *= 2;
+        }
+        best
+    }
+
+    /// Take one re-planning decision from the observed signals.
+    /// `force` is the test hook behind `--replan-force-step`: switch
+    /// the rollout shape to the best feasible alternative even when
+    /// the models prefer to stay, so serial-equivalence across a
+    /// switch is testable on workloads that never trigger one.
+    // earl-analyze: deterministic
+    pub fn decide(&mut self, s: &ReplanSignals, force: bool) -> ReplanDecision {
+        self.decisions += 1;
+        let planning_ctx =
+            (s.ctx_mean.max(s.ctx_p95 * PLAN_CTX_HEADROOM).ceil() as usize).max(1);
+        let watermark = rollout_watermark_frac(
+            &self.shape,
+            self.rollout,
+            &self.cluster.gpu,
+            planning_ctx,
+            self.responses,
+        );
+        if watermark > self.peak_watermark {
+            self.peak_watermark = watermark;
+        }
+        let cooldown_ok = match self.last_switch {
+            None => true,
+            Some(at) => self.decisions.saturating_sub(at) >= REPLAN_COOLDOWN_DECISIONS,
+        };
+
+        // Rollout side.
+        let current = decode_estimate(
+            &self.shape,
+            &self.cluster,
+            self.rollout,
+            &self.tcfg,
+            planning_ctx,
+            self.responses,
+        );
+        let memory_forced = watermark >= SWITCH_WATERMARK_FRAC || current.is_none();
+        let best = self.best_rollout(planning_ctx);
+        let next_rollout = if force {
+            self.best_alternative(planning_ctx).unwrap_or(self.rollout)
+        } else {
+            match (memory_forced, best, current) {
+                // Forced: take the best feasible shape, cooldown or not.
+                (true, Some((cfg, _)), _) => cfg,
+                // Throughput-motivated, hysteresis-gated.
+                (false, Some((cfg, tgs)), Some(cur)) if cooldown_ok => {
+                    let min_gain = if s.rollout_seconds >= s.train_seconds {
+                        MIN_SWITCH_GAIN
+                    } else {
+                        MIN_SWITCH_GAIN_MINOR_STAGE
+                    };
+                    if cfg != self.rollout && tgs > cur.tgs * (1.0 + min_gain) {
+                        cfg
+                    } else {
+                        self.rollout
+                    }
+                }
+                _ => self.rollout,
+            }
+        };
+        let rollout = if next_rollout != self.rollout {
+            Decision::Switch { from: self.rollout, to: next_rollout }
+        } else {
+            Decision::Keep(self.rollout)
+        };
+
+        // Training side: grow when forced out, shrink only on cooldown.
+        let next_train = if !self.train_fits(self.train, planning_ctx) {
+            self.best_train(planning_ctx).unwrap_or(self.train)
+        } else if cooldown_ok {
+            match self.best_train(planning_ctx) {
+                Some(cfg) if cfg.gpus() < self.train.gpus() => cfg,
+                _ => self.train,
+            }
+        } else {
+            self.train
+        };
+        let train = if next_train != self.train {
+            Decision::Switch { from: self.train, to: next_train }
+        } else {
+            Decision::Keep(self.train)
+        };
+
+        if rollout.switched() || train.switched() {
+            self.rollout = next_rollout;
+            self.train = next_train;
+            self.last_switch = Some(self.decisions);
+            self.switches += 1;
+        }
+        ReplanDecision {
+            rollout,
+            train,
+            planning_ctx,
+            mem_watermark_frac: watermark,
+            memory_forced,
+        }
+    }
+
+    /// Best feasible rollout shape that is *not* the current one (the
+    /// forced-switch target).
+    fn best_alternative(&self, ctx: usize) -> Option<ParallelismConfig> {
+        ParallelismConfig::rollout_candidates(&self.cluster)
+            .into_iter()
+            .filter(|&cfg| cfg != self.rollout)
+            .filter_map(|cfg| {
+                decode_estimate(
+                    &self.shape,
+                    &self.cluster,
+                    cfg,
+                    &self.tcfg,
+                    ctx,
+                    self.responses,
+                )
+                .map(|e| (cfg, e.tgs))
+            })
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(cfg, _)| cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner(responses: usize, initial_ctx: usize) -> Replanner {
+        Replanner::new(
+            ModelShape::qwen2_5_72b(),
+            ClusterSpec::paper_testbed(),
+            ThroughputCfg::default(),
+            responses,
+            initial_ctx,
+        )
+        .expect("paper testbed must be plannable")
+    }
+
+    fn sig(ctx: f64) -> ReplanSignals {
+        ReplanSignals {
+            ctx_mean: ctx,
+            ctx_p95: ctx * 1.2,
+            ctx_max: ctx * 1.3,
+            dispatch_bytes: 1 << 20,
+            dispatch_controller_bytes: 1 << 10,
+            rollout_seconds: 2.0,
+            train_seconds: 1.0,
+        }
+    }
+
+    #[test]
+    fn seeds_with_the_paper_shapes() {
+        let rp = planner(128, 4096);
+        // Short context, 128 responses: TP4 rollout wins (Fig. 3's
+        // short-context column); the 72B training placement spans
+        // multiple nodes.
+        assert_eq!(rp.rollout_config(), ParallelismConfig::tp(4));
+        assert!(rp.train_config().gpus() > 8);
+        assert_eq!(rp.dispatch_workers(), rp.train_config().nodes(&rp.cluster));
+        assert_eq!(rp.config_for(Stage::Rollout), rp.rollout_config());
+        assert_eq!(rp.config_for(Stage::ModelUpdate), rp.train_config());
+    }
+
+    #[test]
+    fn growing_context_reshards_before_the_oom_boundary() {
+        let mut rp = planner(128, 4096);
+        let gpu = ClusterSpec::paper_testbed().gpu;
+        let mut switched_at = None;
+        let mut ctx = 4096.0;
+        while ctx < 40_000.0 {
+            let from = rp.rollout_config();
+            let d = rp.decide(&sig(ctx), false);
+            if d.rollout.switched() && switched_at.is_none() {
+                switched_at = Some((ctx, d.mem_watermark_frac, from));
+            }
+            ctx *= 1.15;
+        }
+        let (at, watermark, from) = switched_at.expect("must re-shard on the ramp");
+        assert_eq!(from, ParallelismConfig::tp(4));
+        assert_eq!(rp.rollout_config(), ParallelismConfig::tp(8));
+        assert!(
+            watermark < 1.0,
+            "switch must precede the modeled OOM boundary (watermark {watermark:.3})"
+        );
+        // The abandoned static shape really does OOM further up the
+        // ramp the adaptive run survives.
+        assert!(crate::parallelism::memory::rollout_oom(
+            &ModelShape::qwen2_5_72b(),
+            ParallelismConfig::tp(4),
+            &gpu,
+            40_000,
+            128
+        ));
+        assert!(!crate::parallelism::memory::rollout_oom(
+            &ModelShape::qwen2_5_72b(),
+            rp.rollout_config(),
+            &gpu,
+            40_000,
+            128
+        ));
+        assert!(at < 40_000.0);
+        assert!(rp.switches >= 1);
+        assert!(rp.peak_watermark > 0.0);
+    }
+
+    #[test]
+    fn cooldown_blocks_immediate_flap_back() {
+        let mut rp = planner(128, 4096);
+        // Ride the ramp until the planner leaves TP4…
+        let mut ctx = 4096.0;
+        while rp.rollout_config() == ParallelismConfig::tp(4) {
+            rp.decide(&sig(ctx), false);
+            ctx *= 1.15;
+        }
+        // …then immediately report short contexts again: the cooldown
+        // must hold the switch for REPLAN_COOLDOWN_DECISIONS.
+        let mut held = 0;
+        for _ in 0..(REPLAN_COOLDOWN_DECISIONS - 1) {
+            let d = rp.decide(&sig(2048.0), false);
+            assert!(!d.rollout.switched(), "flapped inside the cooldown");
+            held += 1;
+        }
+        assert_eq!(held, REPLAN_COOLDOWN_DECISIONS - 1);
+    }
+
+    #[test]
+    fn forced_switch_moves_off_the_current_shape() {
+        let mut rp = planner(128, 4096);
+        let before = rp.rollout_config();
+        let d = rp.decide(&sig(4096.0), true);
+        assert!(d.rollout.switched(), "force must switch");
+        assert_ne!(rp.rollout_config(), before);
+    }
+
+    #[test]
+    fn train_placement_grows_with_context_and_workers_follow() {
+        let mut rp = planner(64, 2048);
+        let small = rp.train_config();
+        let workers_small = rp.dispatch_workers();
+        // A long-context batch forces the training activations over
+        // the per-GPU budget: the placement must grow.
+        for _ in 0..4 {
+            rp.decide(&sig(11_000.0), false);
+        }
+        let big = rp.train_config();
+        assert!(
+            big.gpus() > small.gpus(),
+            "training shape must grow: {} -> {}",
+            small.label(),
+            big.label()
+        );
+        assert!(rp.dispatch_workers() >= workers_small);
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let mut a = planner(128, 4096);
+        let mut b = planner(128, 4096);
+        let mut ctx = 4096.0;
+        for step in 0..30 {
+            let da = a.decide(&sig(ctx), false);
+            let db = b.decide(&sig(ctx), false);
+            assert_eq!(da.label(), db.label(), "diverged at decision {step}");
+            assert_eq!(da.switched(), db.switched());
+            assert_eq!(da.planning_ctx, db.planning_ctx);
+            ctx *= 1.1;
+        }
+        assert_eq!(a.switches, b.switches);
+        assert_eq!(a.decisions(), b.decisions());
+    }
+
+    #[test]
+    fn reseed_budget_splits_observed_bytes_per_worker() {
+        let s = ReplanSignals { dispatch_bytes: 4096, ..ReplanSignals::default() };
+        assert_eq!(Replanner::reseed_budget(&s, 4), Some(1024));
+        assert_eq!(Replanner::reseed_budget(&s, 0), Some(4096));
+        let empty = ReplanSignals::default();
+        assert_eq!(Replanner::reseed_budget(&empty, 4), None);
+    }
+
+    #[test]
+    fn label_names_both_stages() {
+        let mut rp = planner(128, 4096);
+        let d = rp.decide(&sig(4096.0), false);
+        let label = d.label();
+        assert!(label.contains('/'), "{label}");
+        assert!(label.starts_with("TP"), "{label}");
+    }
+}

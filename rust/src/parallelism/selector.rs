@@ -75,6 +75,13 @@ impl<C: Copy + PartialEq + std::fmt::Debug> RangeTable<C> {
     pub fn entries(&self) -> &[(usize, C, f64)] {
         &self.entries
     }
+
+    /// Largest profiled context bound — past it [`Self::lookup`]
+    /// extrapolates from the last entry instead of interpolating, which
+    /// the re-planner treats as "profile data exhausted".
+    pub fn max_bound(&self) -> usize {
+        self.entries.last().map(|e| e.0).unwrap_or(0)
+    }
 }
 
 /// What the selector decided before a stage.
@@ -178,6 +185,11 @@ mod tests {
         assert_eq!(t.lookup(9000).1, 8);
         assert_eq!(t.lookup(16384).1, 8);
         assert_eq!(t.lookup(999_999).1, 8); // beyond grid → largest bound
+    }
+
+    #[test]
+    fn max_bound_is_the_largest_profiled_ctx() {
+        assert_eq!(table_tp48().max_bound(), 32768);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 use crate::cluster::ClusterSpec;
 use crate::parallelism::config::ParallelismConfig;
 use crate::parallelism::memory::{self, MIN_LIVE_FRACTION};
+use crate::parallelism::selector::ProfilePoint;
 use crate::parallelism::shape::ModelShape;
 
 /// Tunable constants of the decode model.
@@ -138,6 +139,29 @@ pub fn min_live(responses: usize) -> f64 {
     (responses as f64 * MIN_LIVE_FRACTION).max(1.0)
 }
 
+/// Profile every TP-only rollout candidate on the cluster across a
+/// context grid — the [`ProfilePoint`]s a
+/// [`RangeTable`](crate::parallelism::RangeTable) or the live
+/// re-planner consume. OOM / unplaceable cells profile as `tgs: None`
+/// so table construction can refuse them.
+pub fn profile_rollout_candidates(
+    shape: &ModelShape,
+    cluster: &ClusterSpec,
+    tcfg: &ThroughputCfg,
+    ctxs: &[usize],
+    responses: usize,
+) -> Vec<ProfilePoint<ParallelismConfig>> {
+    let mut out = Vec::new();
+    for cfg in ParallelismConfig::rollout_candidates(cluster) {
+        for &ctx in ctxs {
+            let tgs =
+                decode_estimate(shape, cluster, cfg, tcfg, ctx, responses).map(|e| e.tgs);
+            out.push(ProfilePoint { config: cfg, ctx, tgs });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +262,26 @@ mod tests {
         )
         .unwrap();
         assert!(e.tgs > 100.0 && e.tgs < 5000.0, "TGS {:.0}", e.tgs);
+    }
+
+    #[test]
+    fn profile_covers_every_candidate_cell_and_marks_oom() {
+        let (shape, cluster, tcfg) = setup();
+        let ctxs = [2048usize, 32_768];
+        let pts = profile_rollout_candidates(&shape, &cluster, &tcfg, &ctxs, 128);
+        // 4 candidates (TP 1,2,4,8) × 2 contexts.
+        assert_eq!(pts.len(), 8);
+        // TP1 cannot hold the 72B at all; TP4 OOMs at (128, 32K).
+        let cell = |tp: usize, ctx: usize| {
+            pts.iter()
+                .find(|p| p.config == ParallelismConfig::tp(tp) && p.ctx == ctx)
+                .unwrap()
+                .tgs
+        };
+        assert!(cell(1, 2048).is_none());
+        assert!(cell(4, 32_768).is_none());
+        assert!(cell(4, 2048).is_some());
+        assert!(cell(8, 32_768).is_some());
     }
 
     #[test]

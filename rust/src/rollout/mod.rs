@@ -69,6 +69,11 @@ pub struct RolloutStats {
     pub episodes: usize,
     pub mean_reward: f64,
     pub mean_episode_context: f64,
+    /// 95th percentile of per-episode context length — the re-planner
+    /// plans for the tail, not the mean.
+    pub ctx_p95: f64,
+    /// Longest episode context in the batch.
+    pub ctx_max: f64,
     pub mean_turn_context: f64,
     pub mean_response_len: f64,
     pub truncated: usize,
@@ -334,11 +339,13 @@ impl RolloutEngine {
         stats.episodes = episodes.len();
         stats.mean_reward = episodes.iter().map(|e| e.reward as f64).sum::<f64>()
             / episodes.len() as f64;
-        stats.mean_episode_context = episodes
-            .iter()
-            .map(|e| e.context_len() as f64)
-            .sum::<f64>()
-            / episodes.len() as f64;
+        let ctx_samples: Vec<f64> =
+            episodes.iter().map(|e| e.context_len() as f64).collect();
+        stats.mean_episode_context =
+            ctx_samples.iter().sum::<f64>() / episodes.len() as f64;
+        stats.ctx_p95 =
+            crate::util::stats::percentile(&ctx_samples, 95.0).unwrap_or(0.0);
+        stats.ctx_max = ctx_samples.iter().copied().fold(0.0, f64::max);
         let all_turns: Vec<&Turn> =
             episodes.iter().flat_map(|e| e.turns.iter()).collect();
         if !all_turns.is_empty() {

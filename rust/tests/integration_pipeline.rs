@@ -150,6 +150,46 @@ fn serial_step_api_matches_serial_run() {
     }
 }
 
+#[test]
+fn forced_replan_switch_preserves_learning_curve() {
+    // The re-planner only re-derives the dispatch plan shape — forcing
+    // a mid-run parallelism switch must leave the learning curve
+    // bit-identical to a run without the re-planner.
+    let Some(dir) = artifacts_dir() else { return };
+    let baseline = run_mode(dir, PipelineMode::Serial);
+    let cfg = TrainConfig {
+        artifacts_dir: dir.to_path_buf(),
+        steps: 5,
+        seed: 42,
+        pipeline: PipelineMode::Serial,
+        max_staleness: 1,
+        replan: true,
+        replan_force_step: Some(2),
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run().unwrap();
+    let replanned = t.metrics.records.clone();
+
+    assert_eq!(baseline.len(), replanned.len());
+    assert!(
+        replanned.iter().any(|r| r.replan_switched),
+        "the forced re-plan never switched"
+    );
+    for (b, r) in baseline.iter().zip(&replanned) {
+        assert_eq!(
+            metric_row(b),
+            metric_row(r),
+            "replan switch changed training metrics at step {}",
+            b.step
+        );
+        assert!(!r.replan_config.is_empty(), "decision not recorded");
+        assert!(r.ctx_p95 >= 0.0 && r.mem_watermark_frac >= 0.0);
+    }
+    // The baseline never consulted the planner; its records say so.
+    assert!(baseline.iter().all(|r| r.replan_config.is_empty()));
+}
+
 /// A 6-phase relay plan: one item's bytes hop 0→1→2→3→0→1→2. The old
 /// TCP engine rejected any plan beyond 4 phases.
 fn relay_plan_6_phases(bytes: u64) -> DispatchPlan {
@@ -196,6 +236,7 @@ fn dispatch_worker_reuses_tcp_connections_across_steps() {
         payload: None,
         inflight_budget: None,
         adaptive_budget: false,
+        reset_budget: false,
         controller_bytes: 0,
         remote: None,
     };
@@ -329,6 +370,7 @@ fn pipelined_submit_then_recv_preserves_order_across_modes() {
         payload: None,
         inflight_budget: None,
         adaptive_budget: false,
+        reset_budget: false,
         controller_bytes: 0,
         remote: None,
     };

@@ -12,8 +12,9 @@ use earl::dispatch::{
 };
 use earl::envs::{ConnectFour, Game, Outcome, TicTacToe};
 use earl::parallelism::{
-    decode_estimate, rollout_memory, ModelShape, ParallelismConfig,
-    ProfilePoint, RangeTable, ThroughputCfg,
+    decode_estimate, fit_sequences, rollout_memory, rollout_oom,
+    rollout_watermark_frac, ModelShape, ParallelismConfig, ProfilePoint,
+    RangeTable, Replanner, ReplanSignals, ThroughputCfg,
 };
 use earl::rl::advantage::{reinforce_advantages, whiten, AdvantageCfg};
 use earl::rl::episode::{Episode, EpisodeStatus, ExperienceBatch, Turn};
@@ -518,6 +519,173 @@ fn prop_tgs_decreases_with_context() {
                 b.tgs
             );
         }
+    });
+}
+
+#[test]
+fn prop_range_table_lookup_total_and_monotone() {
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    let tcfg = ThroughputCfg::default();
+    check_default("range_table_lookup", |rng| {
+        let responses = *rng.choose(&[32usize, 64, 128]);
+        let ctx_grid = [2048usize, 4096, 8192, 16384, 32768];
+        let points: Vec<ProfilePoint<usize>> = ctx_grid
+            .iter()
+            .flat_map(|&ctx| [2usize, 4, 8].map(move |tp| (ctx, tp)))
+            .map(|(ctx, tp)| ProfilePoint {
+                config: tp,
+                ctx,
+                tgs: decode_estimate(
+                    &shape,
+                    &cluster,
+                    ParallelismConfig::tp(tp),
+                    &tcfg,
+                    ctx,
+                    responses,
+                )
+                .map(|e| e.tgs),
+            })
+            .collect();
+        let table = RangeTable::from_profile(&points).expect("feasible");
+        // Total: any query — including far outside the profiled grid —
+        // lands on an entry, and the entry's bound covers the query
+        // whenever any profiled bound does.
+        let ctx = 1 + rng.below(48 * 1024);
+        let (bound, _, tgs) = table.lookup(ctx);
+        if ctx <= table.max_bound() {
+            assert!(bound >= ctx, "bound {bound} below query {ctx}");
+        } else {
+            assert_eq!(bound, table.max_bound(), "overflow must clamp");
+        }
+        assert!(tgs > 0.0, "selected entry carries no throughput");
+        // Monotone: a longer context never maps to an earlier range.
+        let longer = ctx + rng.below(16 * 1024);
+        assert!(
+            table.lookup(longer).0 >= bound,
+            "lookup bound regressed: {ctx} -> {bound}, {longer} -> {}",
+            table.lookup(longer).0
+        );
+    });
+}
+
+#[test]
+fn prop_fit_sequences_monotone() {
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    check_default("fit_sequences_monotone", |rng| {
+        let tp = *rng.choose(&[1usize, 2, 4]);
+        let ctx = 1024 * gen::usize_in(rng, 1, 48);
+        let resp = 8 * gen::usize_in(rng, 1, 32);
+        let cfg = ParallelismConfig::tp(tp);
+        let fit = fit_sequences(&shape, cfg, &cluster.gpu, ctx, resp);
+        // More context can only shrink the resident batch.
+        assert!(
+            fit_sequences(&shape, cfg, &cluster.gpu, ctx * 2, resp) <= fit,
+            "fit rose with context (TP{tp}, ctx {ctx}, resp {resp})"
+        );
+        // More tensor parallelism can only grow it: weights shard down
+        // and per-sequence KV shards down.
+        let wider = ParallelismConfig::tp(tp * 2);
+        assert!(
+            fit_sequences(&shape, wider, &cluster.gpu, ctx, resp) >= fit,
+            "fit fell with TP (TP{tp}, ctx {ctx}, resp {resp})"
+        );
+    });
+}
+
+#[test]
+fn prop_rollout_oom_monotone() {
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    check_default("rollout_oom_monotone", |rng| {
+        let tp = *rng.choose(&[1usize, 2, 4]);
+        let ctx = 1024 * gen::usize_in(rng, 1, 48);
+        let resp = 8 * gen::usize_in(rng, 1, 32);
+        let cfg = ParallelismConfig::tp(tp);
+        if rollout_oom(&shape, cfg, &cluster.gpu, ctx, resp) {
+            // A config dead at some context stays dead at any longer one.
+            assert!(
+                rollout_oom(&shape, cfg, &cluster.gpu, ctx * 2, resp),
+                "OOM not monotone in ctx (TP{tp}, ctx {ctx}, resp {resp})"
+            );
+        } else {
+            // A config alive at TP t stays alive at TP 2t.
+            assert!(
+                !rollout_oom(
+                    &shape,
+                    ParallelismConfig::tp(tp * 2),
+                    &cluster.gpu,
+                    ctx,
+                    resp
+                ),
+                "OOM not anti-monotone in TP (TP{tp}, ctx {ctx}, resp {resp})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_watermark_crosses_one_exactly_at_oom() {
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    check_default("watermark_oom_equiv", |rng| {
+        let tp = *rng.choose(&[1usize, 2, 4, 8]);
+        let ctx = 1024 * gen::usize_in(rng, 1, 64);
+        // Multiples of 8 keep the min-live batch integral, which is
+        // where the doc-promised "crosses 1.0 exactly at the OOM flip"
+        // equivalence is exact (fractional min-live rounds inside the
+        // integer fit but not inside the watermark).
+        let resp = 8 * gen::usize_in(rng, 1, 32);
+        let cfg = ParallelismConfig::tp(tp);
+        let wm = rollout_watermark_frac(&shape, cfg, &cluster.gpu, ctx, resp);
+        let oom = rollout_oom(&shape, cfg, &cluster.gpu, ctx, resp);
+        if wm < 1.0 - 1e-9 {
+            assert!(!oom, "watermark {wm} < 1 but OOM (TP{tp}, ctx {ctx}, resp {resp})");
+        }
+        if wm > 1.0 + 1e-9 {
+            assert!(oom, "watermark {wm} > 1 but fits (TP{tp}, ctx {ctx}, resp {resp})");
+        }
+    });
+}
+
+#[test]
+fn prop_replanner_is_deterministic() {
+    let shape = ModelShape::qwen2_5_72b();
+    let cluster = ClusterSpec::paper_testbed();
+    let tcfg = ThroughputCfg::default();
+    check_default("replanner_deterministic", |rng| {
+        let responses = *rng.choose(&[32usize, 64, 128]);
+        let mut a = Replanner::new(shape, cluster.clone(), tcfg, responses, 4096)
+            .expect("plannable");
+        let mut b = Replanner::new(shape, cluster.clone(), tcfg, responses, 4096)
+            .expect("plannable");
+        // Same observed-signal stream => bit-identical decision stream,
+        // whatever the stream is. This is what makes a re-planned run
+        // reproducible from its metrics log.
+        for _ in 0..gen::usize_in(rng, 1, 12) {
+            let mean = 1024.0 * gen::usize_in(rng, 2, 48) as f64;
+            let s = ReplanSignals {
+                ctx_mean: mean,
+                ctx_p95: mean * 1.2,
+                ctx_max: mean * 1.3,
+                dispatch_bytes: rng.next_u64() % (1 << 24),
+                dispatch_controller_bytes: 1 << 10,
+                rollout_seconds: *rng.choose(&[0.5, 2.0]),
+                train_seconds: 1.0,
+            };
+            let da = a.decide(&s, false);
+            let db = b.decide(&s, false);
+            assert_eq!(da.label(), db.label());
+            assert_eq!(da.switched(), db.switched());
+            assert_eq!(da.planning_ctx, db.planning_ctx);
+            assert_eq!(da.memory_forced, db.memory_forced);
+            assert_eq!(da.mem_watermark_frac, db.mem_watermark_frac);
+        }
+        assert_eq!(a.switches, b.switches);
+        assert_eq!(a.peak_watermark, b.peak_watermark);
+        assert_eq!(a.rollout_config(), b.rollout_config());
+        assert_eq!(a.train_config(), b.train_config());
     });
 }
 
