@@ -24,13 +24,16 @@ analyze:
 # wire format, TCP runtime, `earl worker`), selector, and metrics build
 # and pass without the xla toolchain. The remote-ingest integration
 # test (2 `earl worker --ingest` processes reproducing the serial
-# learning curve + failure injection) runs here by construction — it is
-# re-run explicitly so a feature-gating regression cannot silently
-# filter it out of the suite.
+# learning curve + failure injection) and the worker-death chaos test
+# (3 processes, kill schedule mid-run, bit-identical curve through the
+# tree merge) run here by construction — they are re-run explicitly so
+# a feature-gating regression cannot silently filter them out of the
+# suite.
 check-core:
 	cd rust && cargo build --release --no-default-features
 	cd rust && cargo test -q --no-default-features
 	cd rust && cargo test -q --no-default-features --test integration_remote_ingest
+	cd rust && cargo test -q --no-default-features --test chaos_worker_death
 	cd rust && cargo bench --no-default-features --bench fig6_replan -- --smoke
 
 fmt:

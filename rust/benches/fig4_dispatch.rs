@@ -7,8 +7,10 @@
 
 use earl::cluster::ClusterSpec;
 use earl::dispatch::{
-    payload_bytes_per_token, plan_alltoall, plan_centralized, simulate_plan,
-    tcp::execute_plan_tcp_rated, DataLayout, TensorKind, WorkerMap,
+    build_merge_schedule, merge_tree_depth, payload_bytes_per_token,
+    plan_alltoall, plan_centralized, simulate_plan,
+    tcp::execute_plan_tcp_rated, DataLayout, MergeSink, TensorKind,
+    WireTensorId, WorkerMap, WorkerReport,
 };
 use earl::testkit::bench::print_table;
 use earl::util::bytes::{human_bytes, human_duration};
@@ -125,6 +127,70 @@ fn main() {
          dispatchable; aggregated quantities stay on the controller — \
          the remote-ingestion path delivers them inside its commit \
          frames)"
+    );
+
+    // Decentralized report reduction: instead of every worker answering
+    // its commit with a full report frame (star — the coordinator's
+    // ingress is O(workers)), the merge schedule pair-merges partials
+    // worker-to-worker and exactly one root frame reaches the
+    // coordinator, after ceil(log2 n) reduction levels.
+    println!("\n--- (d) star vs tree report merge (coordinator ingress) ---");
+    let report = WorkerReport {
+        worker: 0,
+        step: 0,
+        rows: 64,
+        gen_tokens: 4096,
+        loss_sum: 1.0,
+        update_seconds: 0.1,
+        grad: vec![0.0; 16 * 1024],
+        hist_counts: WireTensorId::ALL.iter().map(|_| 0).collect(),
+    };
+    let frame_bytes = report
+        .encode_frame()
+        .expect("bench report frame")
+        .len() as u64;
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8, 16, 32] {
+        let workers: Vec<u32> = (0..n as u32).collect();
+        let hosts: Vec<usize> = (0..n).collect();
+        let addrs: Vec<String> =
+            (0..n).map(|c| format!("10.0.0.{c}:7000")).collect();
+        let schedule = build_merge_schedule(&workers, &hosts, &addrs)
+            .expect("bench schedule");
+        let roots: usize = schedule
+            .values()
+            .flatten()
+            .filter(|op| op.sink == MergeSink::Reply)
+            .count();
+        let peer_hops: usize = schedule
+            .values()
+            .flatten()
+            .filter(|op| matches!(op.sink, MergeSink::Peer(_)))
+            .count();
+        rows.push(vec![
+            format!("{n}"),
+            format!("{n} ({})", human_bytes(frame_bytes * n as u64)),
+            format!("{roots} ({})", human_bytes(frame_bytes)),
+            format!("{}", merge_tree_depth(n)),
+            format!("{peer_hops}"),
+        ]);
+    }
+    print_table(
+        &[
+            "workers",
+            "star: coord reports",
+            "tree: coord reports",
+            "depth",
+            "peer hops",
+        ],
+        &rows,
+    );
+    println!(
+        "(each report frame carries the full gradient — at {} per frame \
+         the star merge funnels every worker's frame through the \
+         coordinator NIC, the tree spreads all but the root hop across \
+         worker-to-worker links)",
+        human_bytes(frame_bytes)
     );
     println!("\nfig4_dispatch: done");
 }

@@ -761,6 +761,38 @@ pub fn check_required(file: &SourceFile, spec: &WireSpec) -> Vec<Finding> {
     if spec.checksum_stream.is_empty() || spec.frame_stream.is_empty() {
         miss("checksum/frame stream order");
     }
+    // Control-plane tensor ids ride the same code table as the data
+    // tensors (the commit frame, the tree-merge partial, the synthetic
+    // bench payload); an extraction miss here would let the gate pass
+    // while those frames drift.
+    if let Some(e) = spec.enums.get("WireTensorId") {
+        for v in ["MergePartial", "IngestCommit", "Synthetic"] {
+            if !e.codes.iter().any(|(name, _)| name == v) {
+                miss(&format!("control tensor id WireTensorId::{v}"));
+            }
+        }
+        for (name, code) in &e.codes {
+            let is_control = matches!(
+                name.as_str(),
+                "MergePartial" | "IngestCommit" | "Synthetic"
+            );
+            // Control ids live at the top of the u16 space; data ids
+            // grow up from 0 — neither side may cross into the other.
+            if is_control != (*code >= 0xFF00) {
+                out.push(Finding {
+                    family: "wire-protocol",
+                    kind: "control-id-range",
+                    file: file.rel.clone(),
+                    line: 0,
+                    message: format!(
+                        "WireTensorId::{name} has code {code:#06x}: control \
+                         ids must sit in the reserved range >= 0xFF00 and \
+                         data ids below it"
+                    ),
+                });
+            }
+        }
+    }
     out
 }
 

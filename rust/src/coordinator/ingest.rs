@@ -10,13 +10,22 @@
 //!    and whitened here, on the controller;
 //! 2. scatter each row's wire shard to its consuming worker
 //!    ([`plan_ingest`]) through the checksummed TCP runtime, under the
-//!    (optionally AIMD-adapted) in-flight budget;
+//!    (optionally AIMD-adapted) in-flight budget; when a worker dies
+//!    mid-scatter its rows are re-planned onto the survivors
+//!    ([`replan_ingest_excluding`]) with bounded retries — a step
+//!    aborts only when *every* worker is gone;
 //! 3. commit: send every worker an [`IngestRequest`] naming its rows,
-//!    carrying its advantages and the broadcast parameters θ_step;
-//! 4. collect one [`WorkerReport`] per worker off the ack streams,
-//!    merge them **in worker order**, and apply the merged update to
-//!    the live [`IngestModel`] — all-or-nothing, so a dead or failing
+//!    carrying its advantages and the broadcast parameters θ_step —
+//!    plus, in multi-process runs, a merge schedule
+//!    ([`build_merge_schedule`]) under which the workers pair-merge
+//!    their partial reports over the ack wire so the coordinator
+//!    receives O(log n) reports instead of O(n);
+//! 4. collect the root [`WorkerReport`]s off the ack streams, merge
+//!    them **in worker order**, and apply the merged update to the
+//!    live [`IngestModel`] — all-or-nothing, so a dead or failing
 //!    worker yields a deterministic error and an untouched model.
+//!    [`merge_reports`]'s fixed reduction tree makes the result
+//!    bit-identical whether partials fold on the workers or here.
 //!
 //! [`IngestCoordinator::local`] runs the identical math without sockets
 //! (same wire slicing via [`local_batch`], same per-worker partials,
@@ -24,6 +33,7 @@
 //! reproduce **bit-for-bit** — integration-tested in
 //! `tests/integration_remote_ingest.rs`.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::Duration;
@@ -33,11 +43,17 @@ use anyhow::{bail, Context, Result};
 use crate::dispatch::ingest::{
     local_batch, merge_reports, worker_update, IngestModel,
 };
-use crate::dispatch::plan::plan_ingest;
-use crate::dispatch::tcp::{send_pool_threads, AimdBudget, ExecOptions, TcpRuntime};
+use crate::dispatch::plan::{
+    assign_standins, build_merge_schedule, merge_tree_depth, plan_ingest,
+    replan_ingest_excluding,
+};
+use crate::dispatch::tcp::{
+    send_pool_threads, AimdBudget, CommitSpec, DeadWorkers, ExecOptions,
+    TcpRuntime,
+};
 use crate::dispatch::wire::{
-    DispatchTensor, IngestHp, IngestRequest, StepPayload, WireTensorId,
-    WorkerReport,
+    DispatchTensor, IngestHp, IngestRequest, MergeOp, MergeSink, StepPayload,
+    WireTensorId, WorkerReport,
 };
 use crate::dispatch::DataLayout;
 use crate::metrics::{MetricsLog, WorkerStepMetrics};
@@ -48,6 +64,14 @@ use crate::util::threadpool::ThreadPool;
 /// Default wall-clock budget for one commit round-trip (request out,
 /// worker report back) before the step fails loudly.
 const DEFAULT_COMMIT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Re-plans one step may attempt after worker deaths before giving up
+/// (the initial scatter is not counted).
+const MAX_REDISPATCH_ATTEMPTS: usize = 3;
+
+/// Settle time between detecting a death and re-planning onto the
+/// survivors, letting in-flight connection teardown finish.
+const REDISPATCH_BACKOFF: Duration = Duration::from_millis(50);
 
 /// Configuration of a remote-ingestion training run.
 #[derive(Debug, Clone)]
@@ -190,6 +214,15 @@ pub struct IngestStepRecord {
     pub stall_seconds: f64,
     /// Budget the scatter ran under (after AIMD); 0 = unlimited.
     pub budget_bytes: u64,
+    /// Worker-death recoveries this step absorbed (re-plans of the
+    /// scatter plus commit retries); 0 on a clean step.
+    pub redispatches: u64,
+    /// Depth of the worker-side report reduction tree; 0 when every
+    /// report came straight to the coordinator (star mode, local mode).
+    pub merge_depth: u64,
+    /// Reports the coordinator physically received — `n_workers` in
+    /// star/local mode, O(log n) roots under the tree schedule.
+    pub reports_received: u64,
 }
 
 impl IngestStepRecord {
@@ -295,6 +328,7 @@ impl IngestCoordinator {
                     rows,
                     advantages,
                     params: self.model.w.clone(),
+                    merge_ops: Vec::new(),
                 },
             ));
         }
@@ -310,33 +344,230 @@ impl IngestCoordinator {
             dispatch_seconds: 0.0,
             stall_seconds: 0.0,
             budget_bytes: 0,
+            redispatches: 0,
+            merge_depth: 0,
+            reports_received: 0,
         };
 
         let reports: Vec<WorkerReport> = match &self.runtime {
             Some(rt) => {
-                let plan = plan_ingest(&consumer, ship.item_bytes());
-                let budget_now = match &self.budget {
-                    Some(b) => Some(b.current()),
-                    None => self.cfg.inflight_budget,
-                };
-                let out = rt
-                    .execute_opts(
-                        &plan,
-                        ExecOptions {
-                            payload: Some(&ship),
-                            inflight_budget: budget_now,
-                        },
-                    )
-                    .context("dispatching step shards")?;
-                if let Some(b) = self.budget.as_mut() {
-                    b.observe(out.report.stall_seconds);
+                // Logical worker -> (hosting connection, epoch its rows
+                // landed under). Survivors keep their original epoch
+                // across re-plans; displaced workers move to a stand-in
+                // at the re-plan's fresh epoch.
+                let mut hosting: BTreeMap<usize, (usize, u64)> =
+                    BTreeMap::new();
+                let mut dead: BTreeSet<usize> = BTreeSet::new();
+                let mut displaced: Vec<usize> =
+                    requests.iter().map(|(dst, _)| *dst).collect();
+                let mut attempts = 0usize;
+                // One worker-side tree attempt per step: a tree commit
+                // failure can be a merge peer dying mid-fold, which
+                // also errors the live workers waiting on it — so the
+                // retry runs in star mode, where a failure pins down
+                // exactly which connections are really gone.
+                let mut tree_ok = true;
+                loop {
+                    // (Re)ship any rows not yet hosted on a live worker.
+                    while !displaced.is_empty() {
+                        let survivors: Vec<usize> = (0..self.cfg.n_workers)
+                            .filter(|w| !dead.contains(w))
+                            .collect();
+                        if survivors.is_empty() {
+                            bail!(
+                                "all {} ingest workers dead; step {} \
+                                 aborted with the model untouched",
+                                self.cfg.n_workers,
+                                step
+                            );
+                        }
+                        if attempts > MAX_REDISPATCH_ATTEMPTS {
+                            bail!(
+                                "step {step} exceeded \
+                                 {MAX_REDISPATCH_ATTEMPTS} re-dispatch \
+                                 attempts (dead workers: {dead:?})"
+                            );
+                        }
+                        let (plan, targets) = if attempts == 0 {
+                            (
+                                plan_ingest(&consumer, ship.item_bytes()),
+                                displaced
+                                    .iter()
+                                    .map(|&w| (w, w))
+                                    .collect::<Vec<_>>(),
+                            )
+                        } else {
+                            std::thread::sleep(REDISPATCH_BACKOFF);
+                            (
+                                replan_ingest_excluding(
+                                    &consumer,
+                                    ship.item_bytes(),
+                                    &displaced,
+                                    &survivors,
+                                ),
+                                assign_standins(&displaced, &survivors),
+                            )
+                        };
+                        attempts += 1;
+                        let budget_now = match &self.budget {
+                            Some(b) => Some(b.current()),
+                            None => self.cfg.inflight_budget,
+                        };
+                        match rt.execute_opts(
+                            &plan,
+                            ExecOptions {
+                                payload: Some(&ship),
+                                inflight_budget: budget_now,
+                            },
+                        ) {
+                            Ok(out) => {
+                                if let Some(b) = self.budget.as_mut() {
+                                    b.observe(out.report.stall_seconds);
+                                }
+                                rec.dispatch_bytes += out.report.bytes;
+                                rec.dispatch_seconds += out.report.seconds;
+                                rec.stall_seconds +=
+                                    out.report.stall_seconds;
+                                rec.budget_bytes = budget_now.unwrap_or(0);
+                                for (w, conn) in targets {
+                                    hosting.insert(w, (conn, out.epoch));
+                                }
+                                displaced.clear();
+                            }
+                            Err(e) => {
+                                let Some(dw) =
+                                    e.downcast_ref::<DeadWorkers>()
+                                else {
+                                    return Err(e)
+                                        .context("dispatching step shards");
+                                };
+                                // Transfers to unlisted workers landed
+                                // at the attempt's epoch; only the
+                                // listed connections' rows stay
+                                // displaced — plus whatever earlier
+                                // attempts parked on them.
+                                let lost: BTreeSet<usize> =
+                                    dw.workers.iter().copied().collect();
+                                for (w, conn) in targets {
+                                    if !lost.contains(&conn) {
+                                        hosting
+                                            .insert(w, (conn, dw.epoch));
+                                    }
+                                }
+                                dead.extend(lost);
+                                hosting.retain(|_, &mut (conn, _)| {
+                                    !dead.contains(&conn)
+                                });
+                                displaced = requests
+                                    .iter()
+                                    .map(|(dst, _)| *dst)
+                                    .filter(|w| !hosting.contains_key(w))
+                                    .collect();
+                                rec.redispatches += 1;
+                                // Survivors absorb the redistributed
+                                // load: back the budget off as if the
+                                // death had been a full stall.
+                                if let Some(b) = self.budget.as_mut() {
+                                    b.observe(1.0);
+                                }
+                            }
+                        }
+                    }
+
+                    // Commit, pair-merging reports on the workers when
+                    // the deployment supports direct peer connections.
+                    let workers: Vec<u32> = requests
+                        .iter()
+                        .map(|(dst, _)| *dst as u32)
+                        .collect();
+                    let hosts: Vec<usize> = workers
+                        .iter()
+                        .map(|&w| hosting[&(w as usize)].0)
+                        .collect();
+                    let schedule = match rt.remote_worker_addrs() {
+                        Some(addrs) if tree_ok && workers.len() > 1 => {
+                            build_merge_schedule(&workers, &hosts, &addrs)?
+                        }
+                        _ => BTreeMap::new(),
+                    };
+                    // Per connection the commits arrive in ascending
+                    // worker order; every commit but the last carries a
+                    // marker op (store own leaf, reply nothing) and the
+                    // last carries the connection's schedule slice.
+                    let mut last_on_conn: BTreeMap<usize, u32> =
+                        BTreeMap::new();
+                    for (&w, &conn) in workers.iter().zip(&hosts) {
+                        last_on_conn.insert(conn, w);
+                    }
+                    let mut specs = Vec::with_capacity(requests.len());
+                    for ((dst, req), &conn) in requests.iter().zip(&hosts)
+                    {
+                        let w = *dst as u32;
+                        let merge_ops = if schedule.is_empty() {
+                            Vec::new()
+                        } else if last_on_conn[&conn] == w {
+                            schedule.get(&conn).cloned().unwrap_or_default()
+                        } else {
+                            vec![MergeOp {
+                                inputs: vec![w],
+                                out_key: w,
+                                sink: MergeSink::Store,
+                            }]
+                        };
+                        let mut req = req.clone();
+                        req.merge_ops = merge_ops;
+                        specs.push(CommitSpec {
+                            dst: conn,
+                            epoch: hosting[dst].1,
+                            req,
+                        });
+                    }
+                    rec.merge_depth = if schedule.is_empty() {
+                        0
+                    } else {
+                        merge_tree_depth(workers.len())
+                    };
+                    match rt
+                        .ingest_commit_specs(&specs, self.cfg.commit_timeout)
+                    {
+                        Ok(reports) => break reports,
+                        Err(e) => {
+                            let Some(dw) = e.downcast_ref::<DeadWorkers>()
+                            else {
+                                return Err(e).context(
+                                    "committing step on ingest workers",
+                                );
+                            };
+                            rec.redispatches += 1;
+                            if let Some(b) = self.budget.as_mut() {
+                                b.observe(1.0);
+                            }
+                            if !schedule.is_empty() {
+                                // Don't trust the dead set from a tree
+                                // round — fall back to star and let the
+                                // retry separate dead connections from
+                                // live ones starved by a dead peer.
+                                tree_ok = false;
+                                continue;
+                            }
+                            dead.extend(dw.workers.iter().copied());
+                            hosting.retain(|_, &mut (conn, _)| {
+                                !dead.contains(&conn)
+                            });
+                            displaced = requests
+                                .iter()
+                                .map(|(dst, _)| *dst)
+                                .filter(|w| !hosting.contains_key(w))
+                                .collect();
+                            if displaced.is_empty() {
+                                return Err(e).context(
+                                    "commit failed without losing any \
+                                     hosted rows",
+                                );
+                            }
+                        }
+                    }
                 }
-                rec.dispatch_bytes = out.report.bytes;
-                rec.dispatch_seconds = out.report.seconds;
-                rec.stall_seconds = out.report.stall_seconds;
-                rec.budget_bytes = budget_now.unwrap_or(0);
-                rt.ingest_commit(out.epoch, &requests, self.cfg.commit_timeout)
-                    .context("committing step on ingest workers")?
             }
             None => {
                 // Serial reference: per-worker partials over the same
@@ -349,6 +580,7 @@ impl IngestCoordinator {
                 reps
             }
         };
+        rec.reports_received = reports.len() as u64;
 
         let merged = merge_reports(
             &reports,

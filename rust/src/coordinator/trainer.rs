@@ -312,10 +312,18 @@ impl Trainer {
         let (replan_config, replan_switched, mem_watermark_frac) =
             match self.replanner.as_mut() {
                 Some(rp) => {
-                    self.replan_signals.ctx_mean = rolled.rstats.mean_episode_context;
-                    self.replan_signals.ctx_p95 = rolled.rstats.ctx_p95;
-                    self.replan_signals.ctx_max = rolled.rstats.ctx_max;
-                    self.replan_signals.rollout_seconds = rolled.rollout_seconds;
+                    // Only overwrite the length signals when the batch
+                    // actually produced episodes: an empty batch's zeroed
+                    // stats must not reach the cost models (decide()
+                    // additionally skips when the signals are absent).
+                    if rolled.rstats.episodes > 0 {
+                        self.replan_signals.ctx_mean =
+                            rolled.rstats.mean_episode_context;
+                        self.replan_signals.ctx_p95 = rolled.rstats.ctx_p95;
+                        self.replan_signals.ctx_max = rolled.rstats.ctx_max;
+                        self.replan_signals.rollout_seconds =
+                            rolled.rollout_seconds;
+                    }
                     let force =
                         self.cfg.replan_force_step == Some(rp.decisions() + 1);
                     let d = rp.decide(&self.replan_signals, force);
@@ -507,6 +515,8 @@ impl Trainer {
             dispatch_inflight_peak_bytes: 0,
             dispatch_stall_seconds: 0.0,
             dispatch_budget_bytes: 0,
+            dispatch_redispatches: 0,
+            merge_depth: 0,
             train_seconds: 0.0,
             step_wall_seconds: 0.0,
             param_staleness: staged.param_staleness,

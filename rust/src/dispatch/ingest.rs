@@ -239,12 +239,94 @@ pub fn worker_update(
     })
 }
 
+/// Pairwise-combine two partials into one — the node operation of the
+/// merge tree. `a` must precede `b` in worker order (the combined
+/// partial keeps `a`'s worker key, always the subtree's smallest), both
+/// must agree on step and shapes. Scalars and histogram counts add;
+/// `update_seconds` takes the max (the reduction's critical path).
+///
+/// Because this is the *only* way partials combine — used identically
+/// by the coordinator-side [`merge_reports`] reference and by workers
+/// executing [`crate::dispatch::wire::MergeOp`]s over the wire — the
+/// value of any tree node is a pure function of its ascending leaf
+/// list, and serial and distributed runs stay bit-identical.
+pub fn combine_reports(a: &WorkerReport, b: &WorkerReport) -> Result<WorkerReport> {
+    if b.worker <= a.worker {
+        bail!(
+            "combine order violated: worker {} merged after {}",
+            b.worker,
+            a.worker
+        );
+    }
+    if a.step != b.step {
+        bail!(
+            "cannot combine step-{} and step-{} partials",
+            a.step,
+            b.step
+        );
+    }
+    if a.grad.len() != b.grad.len() {
+        bail!(
+            "cannot combine {}-entry and {}-entry gradients",
+            a.grad.len(),
+            b.grad.len()
+        );
+    }
+    if a.hist_counts.len() != b.hist_counts.len() {
+        bail!(
+            "cannot combine {}-bin and {}-bin histograms",
+            a.hist_counts.len(),
+            b.hist_counts.len()
+        );
+    }
+    let mut grad = a.grad.clone();
+    for (g, d) in grad.iter_mut().zip(&b.grad) {
+        *g += *d;
+    }
+    let mut hist_counts = a.hist_counts.clone();
+    for (h, d) in hist_counts.iter_mut().zip(&b.hist_counts) {
+        *h += *d;
+    }
+    Ok(WorkerReport {
+        worker: a.worker,
+        step: a.step,
+        rows: a.rows + b.rows,
+        gen_tokens: a.gen_tokens + b.gen_tokens,
+        loss_sum: a.loss_sum + b.loss_sum,
+        update_seconds: a.update_seconds.max(b.update_seconds),
+        grad,
+        hist_counts,
+    })
+}
+
+/// Reduce ascending-ordered partials by recursive halving
+/// (`mid = len / 2`) — the same fixed tree shape
+/// [`crate::dispatch::plan::build_merge_schedule`] emits onto the wire,
+/// so the coordinator-side reference and the decentralized reduction
+/// perform the identical sequence of f32 additions.
+fn reduce_halving(reports: &[WorkerReport]) -> Result<WorkerReport> {
+    match reports.len() {
+        0 => bail!("no worker reports to reduce"),
+        1 => Ok(reports[0].clone()),
+        n => {
+            let mid = n / 2;
+            let left = reduce_halving(&reports[..mid])?;
+            let right = reduce_halving(&reports[mid..])?;
+            combine_reports(&left, &right)
+        }
+    }
+}
+
 /// Merge worker partials into one applicable update. Validation is the
 /// no-partial-merge guarantee: reports must come from distinct workers,
 /// agree on the step, carry full-vocab gradients, and together cover
 /// exactly `expect_rows` rows — anything else is an error and the model
 /// stays untouched. Callers pass reports sorted ascending by worker id;
-/// the fold order is part of the determinism contract.
+/// the reduction is the fixed recursive-halving tree of
+/// [`combine_reports`] nodes over that list, which is the determinism
+/// contract: the tree shape depends only on the ascending leaf list
+/// (the *logical* workers), never on which connection hosted a leaf or
+/// how many reports the coordinator physically received.
 pub fn merge_reports(
     reports: &[WorkerReport],
     vocab: usize,
@@ -255,10 +337,6 @@ pub fn merge_reports(
         bail!("no worker reports to merge");
     };
     let step = first.step;
-    let mut grad = vec![0.0f32; vocab];
-    let mut rows = 0u64;
-    let mut gen_tokens = 0u64;
-    let mut loss_sum = 0.0f64;
     let mut last_worker: Option<u32> = None;
     for rep in reports {
         if rep.step != step {
@@ -280,17 +358,22 @@ pub fn merge_reports(
                 rep.grad.len()
             );
         }
-        for (g, d) in grad.iter_mut().zip(&rep.grad) {
-            *g += *d;
-        }
-        rows += rep.rows;
-        gen_tokens += rep.gen_tokens;
-        loss_sum += rep.loss_sum;
     }
-    if rows != expect_rows {
-        bail!("reports cover {rows} rows, step dispatched {expect_rows}");
+    let root = reduce_halving(reports)?;
+    if root.rows != expect_rows {
+        bail!(
+            "reports cover {} rows, step dispatched {expect_rows}",
+            root.rows
+        );
     }
-    Ok(MergedUpdate { step, hp, rows, gen_tokens, loss_sum, grad })
+    Ok(MergedUpdate {
+        step,
+        hp,
+        rows: root.rows,
+        gen_tokens: root.gen_tokens,
+        loss_sum: root.loss_sum,
+        grad: root.grad,
+    })
 }
 
 /// Build the exact [`ReceivedBatch`] a remote worker would reassemble
@@ -344,6 +427,7 @@ mod tests {
             rows,
             advantages,
             params: vec![0.0; vocab],
+            merge_ops: vec![],
         }
     }
 
@@ -423,6 +507,73 @@ mod tests {
         let tight = request(0, vec![3], 2); // row 3 carries token id 3
         let batch = local_batch(&p, &tight.rows).unwrap();
         assert!(worker_update(&tight, &batch).is_err());
+    }
+
+    #[test]
+    fn wire_tree_shape_matches_the_merge_reports_reference() {
+        // Three workers, one row each: pair-merging the way the wire
+        // schedule does (right subtree first on its host, then the
+        // root) must produce the exact bytes merge_reports computes
+        // from the leaf list — the bit-identity contract of the
+        // decentralized reduction.
+        let p = payload(4);
+        let vocab = 4;
+        let hp = IngestHp { lr: 0.5, l2: 0.25 };
+        let reqs: Vec<IngestRequest> = (0..3)
+            .map(|w| {
+                let mut r = request(w, vec![w, w + 1], vocab);
+                r.hp = hp;
+                r.params = vec![0.5; vocab];
+                r
+            })
+            .collect();
+        let leaves: Vec<WorkerReport> = reqs
+            .iter()
+            .map(|r| {
+                worker_update(r, &local_batch(&p, &r.rows).unwrap()).unwrap()
+            })
+            .collect();
+        // mid = 3 / 2 = 1: right = combine(1, 2), root = combine(0, right).
+        let right = combine_reports(&leaves[1], &leaves[2]).unwrap();
+        let root = combine_reports(&leaves[0], &right).unwrap();
+        let reference = merge_reports(&leaves, vocab, hp, 6).unwrap();
+        assert_eq!(root.grad, reference.grad);
+        assert_eq!(root.loss_sum, reference.loss_sum);
+        assert_eq!(root.rows, reference.rows);
+        assert_eq!(root.gen_tokens, reference.gen_tokens);
+        // A one-report merge (the remote tree's root reply) still
+        // validates row coverage.
+        let via_root = merge_reports(
+            std::slice::from_ref(&root),
+            vocab,
+            hp,
+            6,
+        )
+        .unwrap();
+        assert_eq!(via_root.grad, reference.grad);
+        assert!(merge_reports(std::slice::from_ref(&root), vocab, hp, 7)
+            .is_err());
+    }
+
+    #[test]
+    fn combine_guards_order_step_and_shape() {
+        let p = payload(4);
+        let a = request(0, vec![0], 4);
+        let b = request(1, vec![1], 4);
+        let ra = worker_update(&a, &local_batch(&p, &a.rows).unwrap()).unwrap();
+        let rb = worker_update(&b, &local_batch(&p, &b.rows).unwrap()).unwrap();
+        assert!(combine_reports(&ra, &rb).is_ok());
+        // Order violation and self-combination refused.
+        assert!(combine_reports(&rb, &ra).is_err());
+        assert!(combine_reports(&ra, &ra).is_err());
+        // Step mismatch refused.
+        let mut stale = rb.clone();
+        stale.step = 9;
+        assert!(combine_reports(&ra, &stale).is_err());
+        // Shape mismatch refused.
+        let mut short = rb;
+        short.grad.pop();
+        assert!(combine_reports(&ra, &short).is_err());
     }
 
     #[test]

@@ -26,23 +26,26 @@ pub mod tcp;
 pub mod wire;
 
 pub use ingest::{
-    local_batch, merge_reports, worker_update, IngestModel, IngestStats,
-    MergedUpdate,
+    combine_reports, local_batch, merge_reports, worker_update, IngestModel,
+    IngestStats, MergedUpdate,
 };
 pub use layout::{payload_bytes_per_token, DataLayout, TensorKind};
 pub use payload::{PayloadModel, PAPER_TAB1};
 pub use plan::{
-    item_bytes, plan_alltoall, plan_centralized, plan_ingest, satisfies,
-    DispatchPlan, WorkerTransfer,
+    assign_standins, build_merge_schedule, item_bytes, merge_tree_depth,
+    plan_alltoall, plan_centralized, plan_ingest, replan_ingest_excluding,
+    satisfies, DispatchPlan, WorkerTransfer,
 };
 pub use sim::{simulate_plan, WorkerMap};
 pub use tcp::{
     execute_plan_tcp, execute_plan_tcp_rated, serve_worker, Ack, AimdBudget,
-    ExecOptions, ExecOutcome, TcpReport, TcpRuntime, WorkerOpts, ACK_LEN,
+    CommitSpec, DeadWorkers, ExecOptions, ExecOutcome, TcpReport, TcpRuntime,
+    WorkerOpts, ACK_LEN,
 };
 pub use wire::{
-    contiguous_runs, decode_frame, encode_frame, fnv1a64, ByteView,
-    DispatchTensor, Fnv64, FrameHeader, IngestHp, IngestRequest,
-    ReceivedBatch, ShardDesc, StepPayload, TransferPayload, WireDtype,
-    WireTensorId, WorkerReport, FRAME_HEADER_LEN, SHARD_DESC_LEN,
+    checked_u32, contiguous_runs, decode_frame, encode_frame, fnv1a64,
+    ByteView, DispatchTensor, Fnv64, FrameHeader, IngestHp, IngestRequest,
+    MergeOp, MergeSink, ReceivedBatch, ShardDesc, StepPayload,
+    TransferPayload, WireDtype, WireTensorId, WorkerReport, FRAME_HEADER_LEN,
+    SHARD_DESC_LEN,
 };

@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 
 use crate::dispatch::layout::{DataLayout, ItemId};
+use crate::dispatch::wire::{MergeOp, MergeSink};
 
 /// One planned point-to-point transfer between workers.
 #[derive(Debug, Clone, PartialEq)]
@@ -167,6 +168,166 @@ pub fn plan_ingest(consumer: &DataLayout, shard_bytes: u64) -> DispatchPlan {
     DispatchPlan { phases: vec![phase], strategy: "ingest-scatter" }
 }
 
+/// Deterministic stand-in assignment for displaced logical workers:
+/// the dead list (sorted ascending) maps round-robin onto the sorted
+/// survivor list. Returns `(dead_worker, stand_in)` pairs. Both the
+/// re-planner below and the coordinator's commit routing derive the
+/// same mapping from the same inputs, so they can never disagree.
+pub fn assign_standins(
+    dead: &[usize],
+    survivors: &[usize],
+) -> Vec<(usize, usize)> {
+    let mut dead: Vec<usize> = dead.to_vec();
+    dead.sort_unstable();
+    dead.dedup();
+    let mut survivors: Vec<usize> = survivors.to_vec();
+    survivors.sort_unstable();
+    survivors.dedup();
+    if survivors.is_empty() {
+        return Vec::new();
+    }
+    dead.into_iter()
+        .enumerate()
+        .map(|(i, d)| (d, survivors[i % survivors.len()]))
+        .collect()
+}
+
+/// Re-dispatch scatter after worker death: ship each dead worker's
+/// *entire* row set (the all-or-nothing retry unit — `worker_update`
+/// only reads the rows its request names, so a stand-in can hold extra
+/// rows without double-counting) to a surviving connection, one
+/// transfer per displaced worker so the dead→stand-in mapping stays
+/// recoverable from the plan. Rows already delivered to survivors are
+/// not re-shipped. Empty when there are no survivors — the caller
+/// aborts the step instead.
+pub fn replan_ingest_excluding(
+    consumer: &DataLayout,
+    shard_bytes: u64,
+    dead: &[usize],
+    survivors: &[usize],
+) -> DispatchPlan {
+    let phase: Vec<WorkerTransfer> = assign_standins(dead, survivors)
+        .into_iter()
+        .filter_map(|(worker, standin)| {
+            let items = consumer.items_of(worker);
+            if items.is_empty() {
+                None
+            } else {
+                Some(WorkerTransfer {
+                    src: 0,
+                    dst: standin,
+                    bytes: shard_bytes * items.len() as u64,
+                    items,
+                })
+            }
+        })
+        .collect();
+    DispatchPlan { phases: vec![phase], strategy: "ingest-replan" }
+}
+
+/// Depth of the recursive-halving merge tree over `n` leaves — the
+/// number of pair-merge levels between a leaf report and the single
+/// root the coordinator receives (`ceil(log2 n)`; 0 for the star merge
+/// or a single worker).
+pub fn merge_tree_depth(n: usize) -> u64 {
+    match n {
+        0 | 1 => 0,
+        n => {
+            let left = merge_tree_depth(n / 2);
+            let right = merge_tree_depth(n - n / 2);
+            1 + left.max(right)
+        }
+    }
+}
+
+/// Emit the decentralized merge-tree schedule for one step.
+///
+/// * `workers` — ascending logical-worker keys (the merge leaves).
+/// * `hosts` — per leaf, the connection index executing its update
+///   (identity in a healthy step; survivors stand in after deaths).
+/// * `addrs` — per connection, the dial address peers use to forward a
+///   [`crate::dispatch::wire::MergePartial`] frame to it.
+///
+/// Returns each connection's op list in dependency order (children
+/// before parents). The tree shape is the same recursive halving
+/// `merge_reports` uses over the *logical* list — hosting never changes
+/// the arithmetic, only where it happens — so the root the coordinator
+/// receives is bit-identical to the serial reference. The subtree over
+/// `[lo, hi)` materializes at `hosts[lo]` under key `workers[lo]`; a
+/// right subtree hosted elsewhere forwards its root to the left's host.
+pub fn build_merge_schedule(
+    workers: &[u32],
+    hosts: &[usize],
+    addrs: &[String],
+) -> anyhow::Result<BTreeMap<usize, Vec<MergeOp>>> {
+    if workers.len() != hosts.len() {
+        anyhow::bail!(
+            "{} workers but {} hosts in merge schedule",
+            workers.len(),
+            hosts.len()
+        );
+    }
+    if workers.windows(2).any(|w| w[1] <= w[0]) {
+        anyhow::bail!("merge-schedule workers must be ascending and distinct");
+    }
+    if let Some(&h) = hosts.iter().find(|&&h| h >= addrs.len()) {
+        anyhow::bail!("host {h} has no dial address (only {})", addrs.len());
+    }
+    let mut out: BTreeMap<usize, Vec<MergeOp>> = BTreeMap::new();
+    if workers.is_empty() {
+        return Ok(out);
+    }
+    emit_merge(workers, hosts, addrs, 0, workers.len(), MergeSink::Reply, &mut out)?;
+    Ok(out)
+}
+
+/// Recursive emitter for [`build_merge_schedule`]: produce the value of
+/// subtree `[lo, hi)` at `hosts[lo]`, then route it per `sink`.
+fn emit_merge(
+    workers: &[u32],
+    hosts: &[usize],
+    addrs: &[String],
+    lo: usize,
+    hi: usize,
+    sink: MergeSink,
+    out: &mut BTreeMap<usize, Vec<MergeOp>>,
+) -> anyhow::Result<()> {
+    let host = hosts[lo];
+    if hi - lo == 1 {
+        // Leaf: the report is already in its host's partial store
+        // (every local update stores itself). Only movement needs an op.
+        if sink != MergeSink::Store {
+            out.entry(host).or_default().push(MergeOp {
+                inputs: vec![workers[lo]],
+                out_key: workers[lo],
+                sink,
+            });
+        }
+        return Ok(());
+    }
+    let mid = lo + (hi - lo) / 2;
+    emit_merge(workers, hosts, addrs, lo, mid, MergeSink::Store, out)?;
+    let right_host = hosts[mid];
+    let right_sink = if right_host == host {
+        MergeSink::Store
+    } else {
+        if addrs[host].is_empty() {
+            anyhow::bail!(
+                "connection {host} is not peer-addressable; tree merge needs \
+                 dial addresses for every hosting connection"
+            );
+        }
+        MergeSink::Peer(addrs[host].clone())
+    };
+    emit_merge(workers, hosts, addrs, mid, hi, right_sink, out)?;
+    out.entry(host).or_default().push(MergeOp {
+        inputs: vec![workers[lo], workers[mid]],
+        out_key: workers[lo],
+        sink,
+    });
+    Ok(())
+}
+
 /// Does a plan leave every item at its consumer-required worker?
 pub fn satisfies(
     plan: &DispatchPlan,
@@ -281,6 +442,92 @@ mod tests {
         let sparse = DataLayout { n_workers: 3, owner: vec![0, 0, 2] };
         let plan = plan_ingest(&sparse, 7);
         assert_eq!(plan.phases[0].len(), 2);
+    }
+
+    #[test]
+    fn replan_covers_every_dead_workers_rows_once() {
+        let c = DataLayout::blocked(12, 4);
+        // Workers 1 and 3 died; 0 and 2 survive.
+        let plan = replan_ingest_excluding(&c, 100, &[1, 3], &[0, 2]);
+        assert_eq!(plan.phases.len(), 1);
+        assert_eq!(plan.strategy, "ingest-replan");
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &plan.phases[0] {
+            assert_eq!(t.src, 0);
+            assert!([0usize, 2].contains(&t.dst), "dst {} not a survivor", t.dst);
+            assert_eq!(t.bytes, 100 * t.items.len() as u64);
+            for &i in &t.items {
+                // Only dead workers' rows move, each exactly once.
+                assert!([1usize, 3].contains(&c.owner[i]));
+                assert!(seen.insert(i), "item {i} re-shipped twice");
+            }
+        }
+        let expect: std::collections::BTreeSet<usize> =
+            (0..12).filter(|&i| [1usize, 3].contains(&c.owner[i])).collect();
+        assert_eq!(seen, expect);
+        // Round-robin stand-ins: dead 1 → survivor 0, dead 3 → survivor 2.
+        assert_eq!(assign_standins(&[3, 1], &[2, 0]), vec![(1, 0), (3, 2)]);
+        // No survivors → nothing to plan (the caller aborts the step).
+        assert!(replan_ingest_excluding(&c, 100, &[1], &[])
+            .phases[0]
+            .is_empty());
+    }
+
+    #[test]
+    fn merge_schedule_reduces_to_one_reply() {
+        let addrs: Vec<String> =
+            (0..3).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect();
+        let sched =
+            build_merge_schedule(&[0, 1, 2], &[0, 1, 2], &addrs).unwrap();
+        // Exactly one Reply sink across all connections; every other op
+        // stores or forwards.
+        let ops: Vec<&MergeOp> = sched.values().flatten().collect();
+        let replies: Vec<&&MergeOp> = ops
+            .iter()
+            .filter(|op| op.sink == MergeSink::Reply)
+            .collect();
+        assert_eq!(replies.len(), 1);
+        // mid = 1: right subtree combine(1,2) on conn 1 forwards to
+        // conn 0; root combines (0, 1) and replies.
+        assert_eq!(replies[0].inputs, vec![0, 1]);
+        assert_eq!(replies[0].out_key, 0);
+        let conn1 = &sched[&1];
+        assert_eq!(conn1.len(), 1);
+        assert_eq!(conn1[0].inputs, vec![1, 2]);
+        assert_eq!(conn1[0].sink, MergeSink::Peer(addrs[0].clone()));
+        // Depth grows logarithmically.
+        assert_eq!(merge_tree_depth(1), 0);
+        assert_eq!(merge_tree_depth(2), 1);
+        assert_eq!(merge_tree_depth(3), 2);
+        assert_eq!(merge_tree_depth(8), 3);
+        assert_eq!(merge_tree_depth(9), 4);
+    }
+
+    #[test]
+    fn merge_schedule_keeps_same_host_subtrees_local() {
+        // Workers 1 and 2's updates both re-dispatched onto conn 0
+        // (deaths): every op lands on conn 0, nothing dials out, one
+        // Reply.
+        let addrs = vec!["127.0.0.1:9000".to_string()];
+        let sched = build_merge_schedule(&[0, 1, 2], &[0, 0, 0], &addrs).unwrap();
+        assert_eq!(sched.len(), 1);
+        let ops = &sched[&0];
+        assert!(ops.iter().all(|op| op.sink != MergeSink::Store
+            || op.inputs.len() > 1));
+        assert!(!ops.iter().any(|op| matches!(op.sink, MergeSink::Peer(_))));
+        assert_eq!(ops.last().unwrap().sink, MergeSink::Reply);
+        // Children precede parents in the per-connection list.
+        assert_eq!(ops[0].inputs, vec![1, 2]);
+        assert_eq!(ops[1].inputs, vec![0, 1]);
+
+        // A hosting connection without a dial address is an error when
+        // a peer must forward to it.
+        let bad = build_merge_schedule(
+            &[0, 1],
+            &[0, 1],
+            &[String::new(), "127.0.0.1:9001".to_string()],
+        );
+        assert!(bad.is_err());
     }
 
     #[test]

@@ -128,6 +128,15 @@ pub fn f64_le(b: &[u8]) -> f64 {
     f64::from_bits(u64_le(b))
 }
 
+/// Checked narrowing into a `u32` wire field. At paper-scale contexts a
+/// row count or byte width can legitimately exceed `u32::MAX`; silently
+/// truncating it would corrupt shard descriptors, so overflow is a
+/// framing error surfaced to the caller.
+pub fn checked_u32(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v)
+        .map_err(|_| anyhow::anyhow!("{what} {v} exceeds the wire's u32 field"))
+}
+
 // ---------------------------------------------------------------------------
 // Shard descriptors
 // ---------------------------------------------------------------------------
@@ -172,6 +181,12 @@ pub enum WireTensorId {
     /// update" commit, routed through the controller channel together
     /// with the aggregated quantities (advantages) per paper §3.3.
     IngestCommit,
+    /// One-row control shard carrying a serialized
+    /// [`WorkerReport`] result frame: a worker's pair-merged partial,
+    /// forwarded peer-to-peer during the decentralized tree reduction
+    /// (paper §3.3 taken to the merge side). Self-describing — the
+    /// receiver keys it by the report's own `(step, worker)`.
+    MergePartial,
     /// Byte-count-only transfers (benches / traffic models) with no
     /// backing tensor; drained and checksummed but never reassembled.
     Synthetic,
@@ -179,12 +194,13 @@ pub enum WireTensorId {
 
 impl WireTensorId {
     /// Every id that can appear on the wire (tests iterate this).
-    pub const ALL: [WireTensorId; 6] = [
+    pub const ALL: [WireTensorId; 7] = [
         WireTensorId::Tokens,
         WireTensorId::Mask,
         WireTensorId::Advantages,
         WireTensorId::RefLogprobs,
         WireTensorId::IngestCommit,
+        WireTensorId::MergePartial,
         WireTensorId::Synthetic,
     ];
 
@@ -195,6 +211,7 @@ impl WireTensorId {
             WireTensorId::Advantages => 2,
             WireTensorId::RefLogprobs => 3,
             WireTensorId::IngestCommit => 0xFFFE,
+            WireTensorId::MergePartial => 0xFFFD,
             WireTensorId::Synthetic => 0xFFFF,
         }
     }
@@ -206,6 +223,7 @@ impl WireTensorId {
             2 => WireTensorId::Advantages,
             3 => WireTensorId::RefLogprobs,
             0xFFFE => WireTensorId::IngestCommit,
+            0xFFFD => WireTensorId::MergePartial,
             0xFFFF => WireTensorId::Synthetic,
             other => bail!("unknown wire tensor id {other}"),
         })
@@ -451,20 +469,34 @@ impl DispatchTensor {
         &self.data[row * rb..(row + 1) * rb]
     }
 
-    /// Zero-copy shard over a contiguous row range.
-    pub fn row_slice(&self, row_start: usize, rows: usize) -> (ShardDesc, ByteView) {
-        assert!(row_start + rows <= self.rows, "row slice out of bounds");
+    /// Zero-copy shard over a contiguous row range. Every descriptor
+    /// field is range-checked: a row count, start, or row width that
+    /// does not fit the wire's `u32` fields is a framing error, never a
+    /// silent truncation (paper-scale contexts can exceed 4 GiB rows).
+    pub fn row_slice(
+        &self,
+        row_start: usize,
+        rows: usize,
+    ) -> Result<(ShardDesc, ByteView)> {
+        if row_start + rows > self.rows {
+            bail!(
+                "row slice {row_start}..{} out of bounds for {} rows",
+                row_start + rows,
+                self.rows
+            );
+        }
         let rb = self.row_bytes();
-        (
-            ShardDesc {
-                tensor: self.id,
-                dtype: self.dtype,
-                row_start: row_start as u32,
-                rows: rows as u32,
-                row_bytes: rb as u32,
-            },
+        let desc = ShardDesc {
+            tensor: self.id,
+            dtype: self.dtype,
+            row_start: checked_u32(row_start, "shard row_start")?,
+            rows: checked_u32(rows, "shard rows")?,
+            row_bytes: checked_u32(rb, "shard row_bytes")?,
+        };
+        Ok((
+            desc,
             ByteView::slice(Arc::clone(&self.data), row_start * rb, rows * rb),
-        )
+        ))
     }
 }
 
@@ -591,7 +623,7 @@ impl TransferPayload {
                 );
             }
             for t in payload.tensors() {
-                shards.push(t.row_slice(start, len));
+                shards.push(t.row_slice(start, len)?);
             }
         }
         Ok(TransferPayload { shards })
@@ -665,12 +697,16 @@ impl TransferPayload {
 
 /// Serialize one transfer into a standalone frame buffer.
 // earl-analyze: deterministic
-pub fn encode_frame(src: u64, epoch: u64, payload: &TransferPayload) -> Vec<u8> {
+pub fn encode_frame(
+    src: u64,
+    epoch: u64,
+    payload: &TransferPayload,
+) -> Result<Vec<u8>> {
     let header = FrameHeader {
         src,
         epoch,
         bytes: payload.payload_bytes(),
-        n_shards: payload.shards.len() as u32,
+        n_shards: checked_u32(payload.shards.len(), "frame n_shards")?,
         checksum: payload.checksum(),
     };
     let mut out = Vec::with_capacity(
@@ -685,7 +721,7 @@ pub fn encode_frame(src: u64, epoch: u64, payload: &TransferPayload) -> Vec<u8> 
     for (_, view) in &payload.shards {
         out.extend_from_slice(view.as_slice());
     }
-    out
+    Ok(out)
 }
 
 /// Parse and checksum-verify one frame buffer, returning the header and
@@ -742,7 +778,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<(FrameHeader, Vec<(ShardDesc, Vec<u8>)
 // ---------------------------------------------------------------------------
 
 /// One tensor being reassembled from shards.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct RecvTensor {
     pub tensor: WireTensorId,
     pub dtype: WireDtype,
@@ -769,7 +805,7 @@ impl RecvTensor {
 }
 
 /// Tensors reassembled on a receive side from one or more frames.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct ReceivedBatch {
     tensors: BTreeMap<u16, RecvTensor>,
 }
@@ -935,12 +971,52 @@ impl Default for IngestHp {
     }
 }
 
+/// Where a pair-merged partial goes after a [`MergeOp`] combines its
+/// inputs (the decentralized tree reduction of paper §3.3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MergeSink {
+    /// Keep the merged partial in the worker's local partial store for
+    /// a later op on the same connection.
+    Store,
+    /// Forward the merged partial to the peer worker at this address as
+    /// a [`WireTensorId::MergePartial`] frame.
+    Peer(String),
+    /// Return the merged partial as this commit's result frame — the
+    /// single O(log workers)-deep root the coordinator receives.
+    Reply,
+}
+
+impl MergeSink {
+    fn tag(&self) -> u8 {
+        match self {
+            MergeSink::Store => 0,
+            MergeSink::Peer(_) => 1,
+            MergeSink::Reply => 2,
+        }
+    }
+}
+
+/// One node of the merge tree, executed by the worker that hosts the
+/// op's left input: wait for every input partial (keyed by logical
+/// worker), combine them pairwise in key order, then route the result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MergeOp {
+    /// Logical-worker keys of the partials to combine, ascending.
+    pub inputs: Vec<u32>,
+    /// Logical-worker key the merged partial is stored or forwarded
+    /// under (always the smallest input key, so the tree shape is a
+    /// pure function of the ascending leaf list).
+    pub out_key: u32,
+    pub sink: MergeSink,
+}
+
 /// The controller-channel half of one dispatched step, addressed to one
 /// worker: which rows it must have received, the aggregated per-row
 /// advantages (computed on the controller — paper §3.3 keeps aggregated
 /// quantities out of the peer-to-peer exchange), the current model
-/// parameters, and the update hyperparameters. Serialized into the
-/// payload of an [`WireTensorId::IngestCommit`] shard.
+/// parameters, the update hyperparameters, and this worker's slice of
+/// the merge-tree schedule. Serialized into the payload of an
+/// [`WireTensorId::IngestCommit`] shard.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IngestRequest {
     /// Trainer step this update belongs to.
@@ -958,24 +1034,32 @@ pub struct IngestRequest {
     pub advantages: Vec<f32>,
     /// Current model parameters θ_step (broadcast each step).
     pub params: Vec<f32>,
+    /// Merge-tree ops this worker executes after its local update, in
+    /// dependency order (children before parents). Empty for the star
+    /// merge: the worker just replies with its own report.
+    pub merge_ops: Vec<MergeOp>,
 }
 
 impl IngestRequest {
     /// Serialize: `step u64 | worker u32 | vocab u32 | lr f32 | l2 f32 |
     /// n_rows u32 | n_params u32 | rows u32× | advantages f32× |
-    /// params f32×`, little-endian throughout.
+    /// params f32× | n_ops u32 | ops×`, little-endian throughout. Each
+    /// op is `n_inputs u32 | inputs u32× | out_key u32 | sink u8 |
+    /// pad u8×3 | addr_len u32 | addr utf8` (addr only for Peer sinks).
     // earl-analyze: deterministic
-    pub fn encode(&self) -> Vec<u8> {
+    pub fn encode(&self) -> Result<Vec<u8>> {
         let mut b = Vec::with_capacity(
-            INGEST_REQ_FIXED_LEN + self.rows.len() * 8 + self.params.len() * 4,
+            INGEST_REQ_FIXED_LEN + self.rows.len() * 8 + self.params.len() * 4 + 4,
         );
         b.extend_from_slice(&self.step.to_le_bytes());
         b.extend_from_slice(&self.worker.to_le_bytes());
         b.extend_from_slice(&self.vocab.to_le_bytes());
         b.extend_from_slice(&self.hp.lr.to_le_bytes());
         b.extend_from_slice(&self.hp.l2.to_le_bytes());
-        b.extend_from_slice(&(self.rows.len() as u32).to_le_bytes());
-        b.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        b.extend_from_slice(&checked_u32(self.rows.len(), "n_rows")?.to_le_bytes());
+        b.extend_from_slice(
+            &checked_u32(self.params.len(), "n_params")?.to_le_bytes(),
+        );
         for r in &self.rows {
             b.extend_from_slice(&r.to_le_bytes());
         }
@@ -984,6 +1068,28 @@ impl IngestRequest {
         }
         for p in &self.params {
             b.extend_from_slice(&p.to_le_bytes());
+        }
+        b.extend_from_slice(
+            &checked_u32(self.merge_ops.len(), "n_merge_ops")?.to_le_bytes(),
+        );
+        for op in &self.merge_ops {
+            b.extend_from_slice(
+                &checked_u32(op.inputs.len(), "merge op inputs")?.to_le_bytes(),
+            );
+            for k in &op.inputs {
+                b.extend_from_slice(&k.to_le_bytes());
+            }
+            b.extend_from_slice(&op.out_key.to_le_bytes());
+            b.push(op.sink.tag());
+            b.extend_from_slice(&[0u8; 3]);
+            let addr: &str = match &op.sink {
+                MergeSink::Peer(a) => a,
+                _ => "",
+            };
+            b.extend_from_slice(
+                &checked_u32(addr.len(), "merge peer addr")?.to_le_bytes(),
+            );
+            b.extend_from_slice(addr.as_bytes());
         }
         b
     }
@@ -1004,12 +1110,14 @@ impl IngestRequest {
         let hp = IngestHp { lr: f32_at(16), l2: f32_at(20) };
         let n_rows = u32_at(24) as usize;
         let n_params = u32_at(28) as usize;
-        let need = INGEST_REQ_FIXED_LEN + n_rows * 8 + n_params * 4;
+        // Fixed-layout sections plus the merge-op count; the op section
+        // itself is variable-length and bounds-checked as it is walked.
+        let need = INGEST_REQ_FIXED_LEN + n_rows * 8 + n_params * 4 + 4;
         if need > MAX_RESULT_BYTES {
             bail!("ingest request claims {need} bytes");
         }
-        if buf.len() != need {
-            bail!("ingest request is {} bytes, layout wants {need}", buf.len());
+        if buf.len() < need {
+            bail!("ingest request is {} bytes, layout wants {need}+", buf.len());
         }
         let mut off = INGEST_REQ_FIXED_LEN;
         let mut rows = Vec::with_capacity(n_rows);
@@ -1027,22 +1135,78 @@ impl IngestRequest {
             params.push(f32_at(off));
             off += 4;
         }
-        Ok(IngestRequest { step, worker, vocab, hp, rows, advantages, params })
+        let take_u32 = |off: &mut usize| -> Result<u32> {
+            if *off + 4 > buf.len() {
+                bail!("truncated ingest request at merge-op offset {off}");
+            }
+            let v = u32_le(&buf[*off..*off + 4]);
+            *off += 4;
+            Ok(v)
+        };
+        let n_ops = take_u32(&mut off)? as usize;
+        if n_ops > MAX_FRAME_SHARDS as usize {
+            bail!("ingest request claims {n_ops} merge ops");
+        }
+        let mut merge_ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            let n_inputs = take_u32(&mut off)? as usize;
+            if n_inputs > MAX_FRAME_SHARDS as usize {
+                bail!("merge op claims {n_inputs} inputs");
+            }
+            let mut inputs = Vec::with_capacity(n_inputs);
+            for _ in 0..n_inputs {
+                inputs.push(take_u32(&mut off)?);
+            }
+            let out_key = take_u32(&mut off)?;
+            if off + 4 > buf.len() {
+                bail!("truncated ingest request in merge-op sink");
+            }
+            let tag = buf[off];
+            off += 4; // tag + 3 pad bytes
+            let addr_len = take_u32(&mut off)? as usize;
+            if off + addr_len > buf.len() {
+                bail!("truncated ingest request in merge-op peer addr");
+            }
+            let addr = std::str::from_utf8(&buf[off..off + addr_len])
+                .map_err(|_| anyhow::anyhow!("merge peer addr is not utf-8"))?
+                .to_string();
+            off += addr_len;
+            let sink = match tag {
+                0 => MergeSink::Store,
+                1 => MergeSink::Peer(addr),
+                2 => MergeSink::Reply,
+                other => bail!("unknown merge sink tag {other}"),
+            };
+            merge_ops.push(MergeOp { inputs, out_key, sink });
+        }
+        if off != buf.len() {
+            bail!("ingest request is {} bytes, layout wants {off}", buf.len());
+        }
+        Ok(IngestRequest {
+            step,
+            worker,
+            vocab,
+            hp,
+            rows,
+            advantages,
+            params,
+            merge_ops,
+        })
     }
 
     /// Wrap the serialized request into a single-shard transfer payload
     /// (the commit frame the coordinator sends after the data shards).
-    pub fn commit_payload(&self) -> TransferPayload {
-        let bytes: Arc<[u8]> = self.encode().into();
+    pub fn commit_payload(&self) -> Result<TransferPayload> {
+        let bytes: Arc<[u8]> = self.encode()?.into();
         let desc = ShardDesc {
             tensor: WireTensorId::IngestCommit,
             dtype: WireDtype::F32,
             row_start: 0,
             rows: 1,
-            row_bytes: bytes.len() as u32,
+            row_bytes: checked_u32(bytes.len(), "commit payload")?,
         };
         let view = ByteView::whole(bytes);
-        TransferPayload { shards: vec![(desc, view)] }
+        Ok(TransferPayload { shards: vec![(desc, view)] })
     }
 }
 
@@ -1077,18 +1241,20 @@ impl WorkerReport {
     /// Serialize body: `worker u32 | n_grad u32 | step u64 | rows u64 |
     /// gen_tokens u64 | loss_sum f64 | update_seconds f64 | n_hist u32 |
     /// pad u32 | grad f32× | hist u64×`.
-    fn encode_body(&self) -> Vec<u8> {
+    fn encode_body(&self) -> Result<Vec<u8>> {
         let mut b = Vec::with_capacity(
             RESULT_FIXED_LEN + self.grad.len() * 4 + self.hist_counts.len() * 8,
         );
         b.extend_from_slice(&self.worker.to_le_bytes());
-        b.extend_from_slice(&(self.grad.len() as u32).to_le_bytes());
+        b.extend_from_slice(&checked_u32(self.grad.len(), "n_grad")?.to_le_bytes());
         b.extend_from_slice(&self.step.to_le_bytes());
         b.extend_from_slice(&self.rows.to_le_bytes());
         b.extend_from_slice(&self.gen_tokens.to_le_bytes());
         b.extend_from_slice(&self.loss_sum.to_le_bytes());
         b.extend_from_slice(&self.update_seconds.to_le_bytes());
-        b.extend_from_slice(&(self.hist_counts.len() as u32).to_le_bytes());
+        b.extend_from_slice(
+            &checked_u32(self.hist_counts.len(), "n_hist")?.to_le_bytes(),
+        );
         b.extend_from_slice(&0u32.to_le_bytes());
         for g in &self.grad {
             b.extend_from_slice(&g.to_le_bytes());
@@ -1096,21 +1262,39 @@ impl WorkerReport {
         for h in &self.hist_counts {
             b.extend_from_slice(&h.to_le_bytes());
         }
-        b
+        Ok(b)
     }
 
     /// Serialize the full result frame:
     /// `RESULT_MAGIC u32 | body_len u32 | body | fnv1a64(body) u64`.
     // earl-analyze: deterministic
-    pub fn encode_frame(&self) -> Vec<u8> {
-        let body = self.encode_body();
+    pub fn encode_frame(&self) -> Result<Vec<u8>> {
+        let body = self.encode_body()?;
         let mut out = Vec::with_capacity(8 + body.len() + 8);
         out.extend_from_slice(&RESULT_MAGIC.to_le_bytes());
-        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&checked_u32(body.len(), "result body")?.to_le_bytes());
         let sum = fnv1a64(&body);
         out.extend_from_slice(&body);
         out.extend_from_slice(&sum.to_le_bytes());
-        out
+        Ok(out)
+    }
+
+    /// Wrap this report's serialized result frame into a single-shard
+    /// transfer payload (tensor [`WireTensorId::MergePartial`]) — how a
+    /// merged partial rides the peer-to-peer data wire during the tree
+    /// reduction. Self-describing: the receiver keys the decoded report
+    /// by its own `(step, worker)`.
+    pub fn merge_partial_payload(&self) -> Result<TransferPayload> {
+        let bytes: Arc<[u8]> = self.encode_frame()?.into();
+        let desc = ShardDesc {
+            tensor: WireTensorId::MergePartial,
+            dtype: WireDtype::F32,
+            row_start: 0,
+            rows: 1,
+            row_bytes: checked_u32(bytes.len(), "merge partial payload")?,
+        };
+        let view = ByteView::whole(bytes);
+        Ok(TransferPayload { shards: vec![(desc, view)] })
     }
 
     fn decode_body(body: &[u8]) -> Result<WorkerReport> {
@@ -1247,7 +1431,7 @@ mod tests {
     fn frame_roundtrips_byte_identical() {
         let p = tensors();
         let tp = TransferPayload::for_items(&p, &[0, 2, 3]).unwrap();
-        let frame = encode_frame(7, 42, &tp);
+        let frame = encode_frame(7, 42, &tp).unwrap();
         let (header, shards) = decode_frame(&frame).unwrap();
         assert_eq!(header.src, 7);
         assert_eq!(header.epoch, 42);
@@ -1265,7 +1449,7 @@ mod tests {
     fn corrupt_payload_is_rejected() {
         let p = tensors();
         let tp = TransferPayload::for_items(&p, &[0, 1]).unwrap();
-        let mut frame = encode_frame(0, 1, &tp);
+        let mut frame = encode_frame(0, 1, &tp).unwrap();
         let last = frame.len() - 1;
         frame[last] ^= 0xFF;
         assert!(decode_frame(&frame).is_err(), "corrupt frame must fail");
@@ -1348,13 +1532,14 @@ mod tests {
             rows: vec![2, 3, 5],
             advantages: vec![0.5, -1.0, 0.25],
             params: vec![0.0, 0.1, -0.2, 0.3],
+            merge_ops: vec![],
         }
     }
 
     #[test]
     fn ingest_request_roundtrips() {
         let req = sample_request();
-        let wire = req.encode();
+        let wire = req.encode().unwrap();
         assert_eq!(IngestRequest::decode(&wire).unwrap(), req);
         // Truncation and padding both rejected.
         assert!(IngestRequest::decode(&wire[..wire.len() - 1]).is_err());
@@ -1364,12 +1549,35 @@ mod tests {
     }
 
     #[test]
+    fn ingest_request_roundtrips_with_merge_schedule() {
+        let req = IngestRequest {
+            merge_ops: vec![
+                MergeOp { inputs: vec![0, 1], out_key: 0, sink: MergeSink::Store },
+                MergeOp {
+                    inputs: vec![2, 3],
+                    out_key: 2,
+                    sink: MergeSink::Peer("127.0.0.1:4242".into()),
+                },
+                MergeOp { inputs: vec![0, 2], out_key: 0, sink: MergeSink::Reply },
+            ],
+            ..sample_request()
+        };
+        let wire = req.encode().unwrap();
+        assert_eq!(IngestRequest::decode(&wire).unwrap(), req);
+        // Truncation inside the op section is rejected, not mis-parsed.
+        assert!(IngestRequest::decode(&wire[..wire.len() - 3]).is_err());
+        let mut padded = wire;
+        padded.push(0);
+        assert!(IngestRequest::decode(&padded).is_err());
+    }
+
+    #[test]
     fn ingest_commit_rides_a_normal_frame() {
         let req = sample_request();
-        let tp = req.commit_payload();
+        let tp = req.commit_payload().unwrap();
         assert_eq!(tp.shards.len(), 1);
         assert_eq!(tp.shards[0].0.tensor, WireTensorId::IngestCommit);
-        let frame = encode_frame(0, 7, &tp);
+        let frame = encode_frame(0, 7, &tp).unwrap();
         let (header, shards) = decode_frame(&frame).unwrap();
         assert_eq!(header.epoch, 7);
         assert_eq!(shards.len(), 1);
@@ -1393,14 +1601,31 @@ mod tests {
     #[test]
     fn result_frame_roundtrips_byte_identical() {
         let rep = sample_report();
-        let frame = rep.encode_frame();
-        assert_eq!(frame, sample_report().encode_frame());
+        let frame = rep.encode_frame().unwrap();
+        assert_eq!(frame, sample_report().encode_frame().unwrap());
         assert_eq!(WorkerReport::decode_frame(&frame).unwrap(), rep);
     }
 
     #[test]
+    fn merge_partial_rides_a_normal_frame() {
+        // A merged partial travels the same checksummed data wire as
+        // tensor shards: one MergePartial shard whose single row is the
+        // report's result frame, byte for byte.
+        let rep = sample_report();
+        let tp = rep.merge_partial_payload().unwrap();
+        assert_eq!(tp.shards.len(), 1);
+        assert_eq!(tp.shards[0].0.tensor, WireTensorId::MergePartial);
+        let frame = encode_frame(0, 3, &tp).unwrap();
+        let (header, shards) = decode_frame(&frame).unwrap();
+        assert_eq!(header.epoch, 3);
+        assert_eq!(shards.len(), 1);
+        let back = WorkerReport::decode_frame(&shards[0].1).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
     fn result_frame_rejects_corruption_and_truncation() {
-        let frame = sample_report().encode_frame();
+        let frame = sample_report().encode_frame().unwrap();
         for cut in [0, 7, 15, frame.len() - 1] {
             assert!(WorkerReport::decode_frame(&frame[..cut]).is_err());
         }
@@ -1425,10 +1650,14 @@ mod tests {
         let mut b = ReceivedBatch::new();
         let ta = TransferPayload::for_items(&p, &[0]).unwrap();
         let tb = TransferPayload::for_items(&p, &[2, 3]).unwrap();
-        for (desc, bytes) in decode_frame(&encode_frame(0, 0, &ta)).unwrap().1 {
+        for (desc, bytes) in
+            decode_frame(&encode_frame(0, 0, &ta).unwrap()).unwrap().1
+        {
             a.insert(&desc, &bytes).unwrap();
         }
-        for (desc, bytes) in decode_frame(&encode_frame(1, 0, &tb)).unwrap().1 {
+        for (desc, bytes) in
+            decode_frame(&encode_frame(1, 0, &tb).unwrap()).unwrap().1
+        {
             b.insert(&desc, &bytes).unwrap();
         }
         a.merge(b).unwrap();

@@ -70,6 +70,13 @@ pub struct StepRecord {
     /// Per-NIC in-flight budget the dispatch stage ran under (after
     /// AIMD adaptation); 0 = unlimited.
     pub dispatch_budget_bytes: u64,
+    /// Worker-death recoveries the dispatch/ingest stage absorbed this
+    /// step (scatter re-plans plus commit retries); 0 on a clean step.
+    pub dispatch_redispatches: u64,
+    /// Depth of the worker-side report reduction tree the step's
+    /// ingest commit ran under; 0 = every report went straight to the
+    /// coordinator (star mode, local/simulated modes).
+    pub merge_depth: u64,
     pub train_seconds: f64,
     /// Wall-clock duration of the whole step. Under the overlapped
     /// pipeline this is less than the summed stage time — the gap is the
@@ -124,6 +131,11 @@ impl StepRecord {
                 "dispatch_budget_bytes",
                 Json::num(self.dispatch_budget_bytes as f64),
             ),
+            (
+                "dispatch_redispatches",
+                Json::num(self.dispatch_redispatches as f64),
+            ),
+            ("merge_depth", Json::num(self.merge_depth as f64)),
             ("train_seconds", Json::num(self.train_seconds)),
             ("step_wall_seconds", Json::num(self.step_wall_seconds)),
             ("param_staleness", Json::num(self.param_staleness as f64)),
@@ -347,6 +359,8 @@ mod tests {
             dispatch_inflight_peak_bytes: 2048,
             dispatch_stall_seconds: 0.05,
             dispatch_budget_bytes: 0,
+            dispatch_redispatches: 1,
+            merge_depth: 2,
             train_seconds: 2.0,
             step_wall_seconds: 2.0,
             param_staleness: 0,
@@ -373,6 +387,8 @@ mod tests {
         );
         assert_eq!(j.at(&["dispatch_stall_seconds"]).as_f64(), Some(0.05));
         assert_eq!(j.at(&["dispatch_budget_bytes"]).as_usize(), Some(0));
+        assert_eq!(j.at(&["dispatch_redispatches"]).as_usize(), Some(1));
+        assert_eq!(j.at(&["merge_depth"]).as_usize(), Some(2));
         assert_eq!(
             j.at(&["replan_config"]).as_str(),
             Some("TP4xPP1xDP1/TP8xPP4xDP1")

@@ -82,6 +82,16 @@ pub struct ReplanSignals {
     pub train_seconds: f64,
 }
 
+impl ReplanSignals {
+    /// The rollout-side length stats are present. An empty rollout
+    /// batch (or a step that skipped rollout entirely) leaves them at
+    /// zero — planning on that would target `ctx = 1` and flap, so
+    /// [`Replanner::decide`] keeps the current shapes instead.
+    pub fn has_rollout_stats(&self) -> bool {
+        self.ctx_mean > 0.0 && self.ctx_max > 0.0
+    }
+}
+
 /// One re-planning decision: what each stage runs next, and why.
 #[derive(Debug, Clone)]
 pub struct ReplanDecision {
@@ -266,6 +276,18 @@ impl Replanner {
     /// switch is testable on workloads that never trigger one.
     // earl-analyze: deterministic
     pub fn decide(&mut self, s: &ReplanSignals, force: bool) -> ReplanDecision {
+        if !s.has_rollout_stats() {
+            // Absent stats (empty rollout batch) carry no length
+            // signal: keep both shapes and consume no decision tick,
+            // so the cooldown window is unaffected by skipped steps.
+            return ReplanDecision {
+                rollout: Decision::Keep(self.rollout),
+                train: Decision::Keep(self.train),
+                planning_ctx: 0,
+                mem_watermark_frac: 0.0,
+                memory_forced: false,
+            };
+        }
         self.decisions += 1;
         let planning_ctx =
             (s.ctx_mean.max(s.ctx_p95 * PLAN_CTX_HEADROOM).ceil() as usize).max(1);

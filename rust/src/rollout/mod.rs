@@ -19,7 +19,7 @@ pub mod sampler;
 
 pub use sampler::{model_logprob, sample_token, SamplerCfg};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use xla::Literal;
 
 use crate::envs::{Game, Opponent, Outcome, Side};
@@ -109,6 +109,22 @@ impl Slot {
     }
 }
 
+/// The engine was asked to roll out a zero-episode batch. Typed (rather
+/// than a stringly `anyhow!`) so callers can downcast, distinguish
+/// "nothing to aggregate" from a real engine failure, and skip the step
+/// instead of aborting the run — and so no NaN/zero statistics are ever
+/// fabricated for an empty batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EmptyBatchError;
+
+impl std::fmt::Display for EmptyBatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rollout batch is empty: no episodes to aggregate")
+    }
+}
+
+impl std::error::Error for EmptyBatchError {}
+
 /// Batched rollout driver.
 ///
 /// Constructed **once** and reused across training steps (the paper's
@@ -171,6 +187,9 @@ impl RolloutEngine {
         make_opponent: &dyn Fn() -> Box<dyn Opponent>,
     ) -> Result<(Vec<Episode>, RolloutStats)> {
         let batch = engine.manifest.batch;
+        if batch == 0 {
+            return Err(EmptyBatchError.into());
+        }
         let budget = self.context_budget(engine);
 
         let mut opponents: Vec<Box<dyn Opponent>> =
@@ -324,28 +343,43 @@ impl RolloutEngine {
             0.0
         };
 
-        // 3. Package episodes.
+        // 3. Package episodes. A slot without a terminal status is a
+        // driver bug (the decode loop above only exits once every slot
+        // finished) — surface it as an error, never a panic.
         let episodes: Vec<Episode> = slots
             .into_iter()
-            .map(|s| Episode {
-                tokens: s.tokens,
-                action_mask: s.mask,
-                turns: s.turns,
-                status: s.status.unwrap(),
-                reward: s.reward,
+            .enumerate()
+            .map(|(i, s)| {
+                let status = s.status.ok_or_else(|| {
+                    anyhow!("episode slot {i} never terminated (no status)")
+                })?;
+                Ok(Episode {
+                    tokens: s.tokens,
+                    action_mask: s.mask,
+                    turns: s.turns,
+                    status,
+                    reward: s.reward,
+                })
             })
-            .collect();
+            .collect::<Result<_>>()?;
 
         stats.episodes = episodes.len();
-        stats.mean_reward = episodes.iter().map(|e| e.reward as f64).sum::<f64>()
-            / episodes.len() as f64;
-        let ctx_samples: Vec<f64> =
-            episodes.iter().map(|e| e.context_len() as f64).collect();
-        stats.mean_episode_context =
-            ctx_samples.iter().sum::<f64>() / episodes.len() as f64;
-        stats.ctx_p95 =
-            crate::util::stats::percentile(&ctx_samples, 95.0).unwrap_or(0.0);
-        stats.ctx_max = ctx_samples.iter().copied().fold(0.0, f64::max);
+        // Guarded even though the `batch == 0` bail above makes an empty
+        // batch unreachable here: stats must never fabricate NaN means or
+        // a zero ctx_p95 — the re-planner consumes these as real signals.
+        if !episodes.is_empty() {
+            stats.mean_reward =
+                episodes.iter().map(|e| e.reward as f64).sum::<f64>()
+                    / episodes.len() as f64;
+            let ctx_samples: Vec<f64> =
+                episodes.iter().map(|e| e.context_len() as f64).collect();
+            stats.mean_episode_context =
+                ctx_samples.iter().sum::<f64>() / episodes.len() as f64;
+            stats.ctx_p95 =
+                crate::util::stats::percentile(&ctx_samples, 95.0)
+                    .unwrap_or(stats.mean_episode_context);
+            stats.ctx_max = ctx_samples.iter().copied().fold(0.0, f64::max);
+        }
         let all_turns: Vec<&Turn> =
             episodes.iter().flat_map(|e| e.turns.iter()).collect();
         if !all_turns.is_empty() {

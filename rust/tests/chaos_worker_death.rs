@@ -1,0 +1,165 @@
+//! Chaos: worker death mid-run against a 3-process ingest fleet.
+//!
+//! The coordinator must treat worker death as a *recoverable* event:
+//! each killed worker's rows are re-planned onto the survivors
+//! (`replan_ingest_excluding`) and the learning curve stays
+//! **bit-identical** to the serial reference — fault tolerance is a
+//! systems property, not a training change. Only the loss of the whole
+//! fleet is an error, and a deterministic one: the model is untouched.
+//!
+//! Also pins the tentpole efficiency claim of the tree merge: with a
+//! merge schedule attached, the coordinator receives exactly **one**
+//! root report per step (O(log n) reduction depth on the workers)
+//! instead of one per worker, and the root is bit-identical to the
+//! star/serial fold because `merge_reports` uses the same fixed
+//! recursive-halving tree over the logical worker list.
+//!
+//! Runs without the `xla` feature (CI job `core-no-xla`,
+//! `make check-core`).
+
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use earl::coordinator::{IngestCfg, IngestCoordinator};
+use earl::dispatch::merge_tree_depth;
+
+/// A spawned `earl worker --ingest` process, killed on drop even if the
+/// test panics first.
+struct WorkerProc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl WorkerProc {
+    fn kill(&mut self) {
+        self.child.kill().unwrap();
+        self.child.wait().unwrap();
+    }
+}
+
+fn spawn_ingest_worker() -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_earl"))
+        .args(["worker", "--listen", "127.0.0.1:0", "--ingest", "--quiet"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning earl worker --ingest");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .and_then(|a| a.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable worker banner {line:?}"));
+    WorkerProc { child, addr }
+}
+
+fn cfg() -> IngestCfg {
+    IngestCfg {
+        n_workers: 3,
+        rows: 9,
+        seq: 24,
+        vocab: 16,
+        seed: 11,
+        commit_timeout: Duration::from_secs(60),
+        ..IngestCfg::default()
+    }
+}
+
+#[test]
+fn killing_workers_mid_run_keeps_the_curve_bit_identical() {
+    const STEPS: usize = 6;
+    let cfg = cfg();
+
+    // Serial reference for the whole trajectory.
+    let mut serial = IngestCoordinator::local(cfg.clone()).unwrap();
+    let mut reference = Vec::new();
+    for _ in 0..STEPS {
+        reference.push(serial.step().unwrap());
+    }
+
+    let mut workers: Vec<WorkerProc> =
+        (0..3).map(|_| spawn_ingest_worker()).collect();
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr).collect();
+    let mut coord = IngestCoordinator::connect(cfg.clone(), addrs).unwrap();
+
+    let t0 = Instant::now();
+    for (k, want) in reference.iter().enumerate() {
+        // Kill schedule: worker 2 dies before step 2, worker 1 before
+        // step 4 — the final steps run on a single survivor carrying
+        // all three logical workers' rows.
+        if k == 2 {
+            workers[2].kill();
+        }
+        if k == 4 {
+            workers[1].kill();
+        }
+        let got = coord.step().unwrap_or_else(|e| {
+            panic!("chaos step {k} failed to recover: {e:#}")
+        });
+        assert_eq!(
+            got.training_row(),
+            want.training_row(),
+            "chaos step {k} diverged from the serial reference"
+        );
+        if k == 2 || k == 4 {
+            assert!(
+                got.redispatches >= 1,
+                "kill step {k} recovered without recording a re-dispatch"
+            );
+        }
+        // Tentpole claim: the tree merge delivers exactly one root
+        // report per step — O(log n) reduction depth on the workers —
+        // instead of one report per worker (the star merge).
+        assert_eq!(
+            got.reports_received, 1,
+            "step {k} fell back to the star merge"
+        );
+        assert_eq!(got.merge_depth, merge_tree_depth(cfg.n_workers));
+        assert!(
+            (got.reports_received as usize) < cfg.n_workers,
+            "coordinator-received reports must shrink below O(workers)"
+        );
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(240),
+        "chaos recovery must not hang"
+    );
+    // The models agree exactly — same parameters, bit for bit — and
+    // every step's merged worker metrics account for every row.
+    assert_eq!(coord.model, serial.model);
+    assert_eq!(coord.model.step, STEPS as u64);
+    for (step, m) in coord.metrics.worker_steps.iter() {
+        assert_eq!(m.rows, cfg.rows as u64, "step {step} lost worker rows");
+    }
+
+    // Kill the last survivor: the step fails deterministically, fast,
+    // and the model is untouched.
+    let params_before = coord.model.w.clone();
+    let step_before = coord.model.step;
+    workers[0].kill();
+    let t1 = Instant::now();
+    let err = coord.step().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("dead")
+            || format!("{err:#}").contains("worker"),
+        "unexpected total-loss error: {err:#}"
+    );
+    assert!(
+        t1.elapsed() < Duration::from_secs(60),
+        "total-loss failure must surface promptly"
+    );
+    assert_eq!(coord.model.step, step_before);
+    assert_eq!(coord.model.w, params_before);
+}

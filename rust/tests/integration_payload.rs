@@ -249,7 +249,7 @@ fn checksum_failure_rejects_transfer_end_to_end() {
     let payload = real_payload();
     let items: Vec<usize> = (0..payload.rows()).collect();
     let tp = TransferPayload::for_items(&payload, &items).unwrap();
-    let mut frame = earl::dispatch::encode_frame(0, 1, &tp);
+    let mut frame = earl::dispatch::encode_frame(0, 1, &tp).unwrap();
     let last = frame.len() - 1;
     frame[last] ^= 0xA5;
 
@@ -264,7 +264,7 @@ fn checksum_failure_rejects_transfer_end_to_end() {
     // Rejected frames are not dumped as verified data... but the dump
     // records the raw frame regardless; what matters end-to-end is the
     // rejection: a sender driving this connection fails its execute.
-    let good = earl::dispatch::encode_frame(0, 2, &tp);
+    let good = earl::dispatch::encode_frame(0, 2, &tp).unwrap();
     sock.write_all(&good).unwrap();
     let mut ack2 = [0u8; earl::dispatch::ACK_LEN];
     sock.read_exact(&mut ack2).unwrap();

@@ -210,6 +210,46 @@ fn ingest_eviction_caps_pending_epochs() {
     assert_eq!(state.pending_epochs(), 0);
 }
 
+#[test]
+fn ingest_eviction_spares_epochs_with_live_connections() {
+    use WireTensorId::Tokens;
+    let state = IngestState::new();
+    // Connection 42 feeds epoch 0, then goes quiet (e.g. a slow commit
+    // during a coordinator re-plan) while anonymous senders pile up
+    // MAX_PENDING_INGEST_EPOCHS of pressure. The live epoch must ride
+    // out the cap instead of being evicted under its connection.
+    state
+        .merge_from(0, batch_of(&[(Tokens, 8, 0)]), Some(42))
+        .expect("clean merge");
+    let total = MAX_PENDING_INGEST_EPOCHS as u64 + 6;
+    for epoch in 1..total {
+        state
+            .merge(epoch, batch_of(&[(Tokens, 8, 0)]))
+            .expect("clean merge");
+        assert!(
+            !state
+                .commit_batch(0)
+                .expect("live epoch evicted under pressure")
+                .is_empty(),
+            "live epoch emptied at pressure epoch {epoch}"
+        );
+        // The cap still bounds memory: only the protected epoch may
+        // exceed it.
+        assert!(state.pending_epochs() <= MAX_PENDING_INGEST_EPOCHS + 1);
+    }
+    // Once its connection closes, the epoch loses protection and the
+    // next merge's eviction sweep reclaims it.
+    state.conn_closed(42);
+    state
+        .merge(total, batch_of(&[(Tokens, 8, 0)]))
+        .expect("clean merge");
+    assert!(
+        state.commit_batch(0).is_err() || state.commit_batch(0).unwrap().is_empty(),
+        "unprotected stale epoch survived the eviction sweep"
+    );
+    assert!(state.pending_epochs() <= MAX_PENDING_INGEST_EPOCHS);
+}
+
 // ---------------------------------------------------------------------------
 // Real-thread stress (the schedule the enumerator abstracts): this is
 // the test the nightly ThreadSanitizer job leans on.

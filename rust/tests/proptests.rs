@@ -1,14 +1,16 @@
 //! Property-based tests over the coordinator invariants (DESIGN.md §6),
 //! using the in-tree `testkit` harness (no proptest crate offline).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use earl::cluster::ClusterSpec;
 use earl::dispatch::{
-    contiguous_runs, decode_frame, encode_frame, plan_alltoall,
-    plan_centralized, plan_ingest, satisfies, DataLayout, DispatchTensor,
-    FrameHeader, ReceivedBatch, StepPayload, TensorKind, TransferPayload,
-    WireTensorId, WorkerReport, FRAME_HEADER_LEN,
+    assign_standins, build_merge_schedule, contiguous_runs, decode_frame,
+    encode_frame, merge_tree_depth, plan_alltoall, plan_centralized,
+    plan_ingest, replan_ingest_excluding, satisfies, DataLayout,
+    DispatchTensor, FrameHeader, MergeSink, ReceivedBatch, StepPayload,
+    TensorKind, TransferPayload, WireTensorId, WorkerReport,
+    FRAME_HEADER_LEN,
 };
 use earl::envs::{ConnectFour, Game, Outcome, TicTacToe};
 use earl::parallelism::{
@@ -193,8 +195,8 @@ fn prop_shard_serialization_roundtrips() {
         assert_eq!(tp.checksum(), again.checksum());
 
         // Frame → decode → reassemble → byte-identical to the source.
-        let frame = encode_frame(3, 17, &tp);
-        assert_eq!(frame, encode_frame(3, 17, &again));
+        let frame = encode_frame(3, 17, &tp).unwrap();
+        assert_eq!(frame, encode_frame(3, 17, &again).unwrap());
         let (header, shards) = decode_frame(&frame).unwrap();
         assert_eq!(header.bytes, tp.payload_bytes());
         assert_eq!(header.checksum, tp.checksum());
@@ -212,7 +214,7 @@ fn prop_truncated_or_corrupt_frames_rejected() {
         let payload = random_payload(rng);
         let items: Vec<usize> = (0..payload.rows()).collect();
         let tp = TransferPayload::for_items(&payload, &items).unwrap();
-        let frame = encode_frame(0, 1, &tp);
+        let frame = encode_frame(0, 1, &tp).unwrap();
         // Any strict prefix must fail to decode.
         let cut = rng.below(frame.len());
         assert!(
@@ -350,6 +352,139 @@ fn prop_ingest_scatter_routes_every_row_once() {
     });
 }
 
+#[test]
+fn prop_replan_routes_every_dead_workers_row_exactly_once() {
+    check_default("ingest_replan", |rng| {
+        let workers = gen::usize_in(rng, 2, 10);
+        let items = gen::usize_in(rng, 1, 64);
+        let consumer = random_layout(rng, items, workers);
+        let shard = 1 + rng.below(10_000) as u64;
+        // Kill a random strict subset of the workers (Fisher–Yates,
+        // then split).
+        let mut ids: Vec<usize> = (0..workers).collect();
+        for i in (1..ids.len()).rev() {
+            ids.swap(i, rng.below(i + 1));
+        }
+        let n_dead = gen::usize_in(rng, 1, workers - 1);
+        let (dead, survivors) = ids.split_at(n_dead);
+        let dead_set: BTreeSet<usize> = dead.iter().copied().collect();
+        let surv_set: BTreeSet<usize> = survivors.iter().copied().collect();
+        let standin: BTreeMap<usize, usize> =
+            assign_standins(dead, survivors).into_iter().collect();
+
+        let plan = replan_ingest_excluding(&consumer, shard, dead, survivors);
+        assert_eq!(plan.phases.len(), 1);
+        assert_eq!(plan.strategy, "ingest-replan");
+        let mut seen = BTreeMap::new();
+        for t in &plan.phases[0] {
+            assert_eq!(t.src, 0, "re-plan leaves the coordinator slot");
+            assert!(
+                surv_set.contains(&t.dst),
+                "re-plan routed rows to a dead worker {}",
+                t.dst
+            );
+            assert_eq!(t.bytes, shard * t.items.len() as u64);
+            assert!(!t.items.is_empty(), "empty transfer re-planned");
+            for &i in &t.items {
+                let owner = consumer.owner[i];
+                assert!(
+                    dead_set.contains(&owner),
+                    "row {i} of survivor {owner} re-shipped"
+                );
+                assert_eq!(
+                    t.dst, standin[&owner],
+                    "row {i} sent to the wrong stand-in"
+                );
+                assert!(seen.insert(i, t.dst).is_none(), "row {i} twice");
+            }
+        }
+        let expect = consumer
+            .owner
+            .iter()
+            .filter(|o| dead_set.contains(*o))
+            .count();
+        assert_eq!(seen.len(), expect, "a dead worker's row never re-shipped");
+        assert_eq!(plan.total_bytes(), shard * expect as u64);
+    });
+}
+
+#[test]
+fn prop_merge_schedule_reduces_every_leaf_to_one_reply() {
+    check_default("merge_schedule", |rng| {
+        let n = gen::usize_in(rng, 2, 12);
+        let conns = gen::usize_in(rng, 1, n);
+        let workers: Vec<u32> = (0..n as u32).collect();
+        let hosts: Vec<usize> = (0..n).map(|_| rng.below(conns)).collect();
+        let addrs: Vec<String> = (0..conns)
+            .map(|c| format!("127.0.0.1:{}", 9000 + c))
+            .collect();
+        let schedule = build_merge_schedule(&workers, &hosts, &addrs).unwrap();
+
+        let mut replies = 0usize;
+        let mut folds = 0usize;
+        let mut consumed: BTreeSet<u32> = BTreeSet::new();
+        for (&conn, ops) in &schedule {
+            assert!(conn < conns, "schedule names unknown connection {conn}");
+            for op in ops {
+                assert_eq!(
+                    op.out_key, op.inputs[0],
+                    "fold must keep the lowest input key"
+                );
+                assert!(
+                    op.inputs.windows(2).all(|w| w[1] > w[0]),
+                    "op inputs must be ascending"
+                );
+                for &k in &op.inputs {
+                    assert!(
+                        workers.contains(&k),
+                        "op references unknown leaf {k}"
+                    );
+                    consumed.insert(k);
+                }
+                match &op.sink {
+                    MergeSink::Reply => {
+                        replies += 1;
+                        assert_eq!(
+                            op.out_key, workers[0],
+                            "the reply must be the root of the tree"
+                        );
+                        assert_eq!(
+                            conn, hosts[0],
+                            "the reply runs on the leftmost leaf's host"
+                        );
+                    }
+                    MergeSink::Peer(addr) => {
+                        assert!(
+                            addrs.contains(addr),
+                            "peer sink dials unknown address {addr}"
+                        );
+                    }
+                    MergeSink::Store => {}
+                }
+                match op.inputs.len() {
+                    2 => folds += 1,
+                    1 => assert!(
+                        matches!(op.sink, MergeSink::Peer(_)),
+                        "single-input ops only exist to forward a leaf"
+                    ),
+                    k => panic!("op with {k} inputs"),
+                }
+            }
+        }
+        assert_eq!(replies, 1, "exactly one op reports to the coordinator");
+        assert_eq!(folds, n - 1, "a binary tree over {n} leaves pair-merges");
+        assert_eq!(
+            consumed.len(),
+            n,
+            "every leaf report must be consumed by the tree"
+        );
+        // Depth is ceil(log2 n): the coordinator's O(log n) guarantee.
+        let depth = merge_tree_depth(n);
+        assert!((1u64 << depth) >= n as u64);
+        assert!((1u64 << (depth - 1)) < n as u64);
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Ingest result frames: encode → decode is byte-identical; truncation
 // and corruption are rejected (extends the shard suite to the frames
@@ -373,9 +508,9 @@ fn random_report(rng: &mut Pcg64) -> WorkerReport {
 fn prop_result_frames_roundtrip_byte_identical() {
     check_default("result_frame_roundtrip", |rng| {
         let rep = random_report(rng);
-        let frame = rep.encode_frame();
+        let frame = rep.encode_frame().unwrap();
         // Re-encoding is byte-identical (stable wire form).
-        assert_eq!(frame, rep.encode_frame());
+        assert_eq!(frame, rep.encode_frame().unwrap());
         let back = WorkerReport::decode_frame(&frame).unwrap();
         assert_eq!(back, rep);
     });
@@ -385,7 +520,7 @@ fn prop_result_frames_roundtrip_byte_identical() {
 fn prop_result_frames_reject_truncation_and_corruption() {
     check_default("result_frame_corruption", |rng| {
         let rep = random_report(rng);
-        let frame = rep.encode_frame();
+        let frame = rep.encode_frame().unwrap();
         // Any strict prefix fails.
         let cut = rng.below(frame.len());
         assert!(
