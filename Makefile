@@ -1,7 +1,7 @@
 # Repo-level targets. The rust crate lives in rust/; the AOT artifacts
 # it executes are produced by the python compile path.
 
-.PHONY: check check-core analyze fmt lint test artifacts bench-pipeline bench-replan
+.PHONY: check check-core analyze fmt lint test artifacts bench-pipeline bench-replan bench-artifacts
 
 # Full gate: formatting, clippy (warnings are errors), the earl-analyze
 # static-analysis pass, tier-1 tests, plus the XLA-free core build
@@ -24,16 +24,21 @@ analyze:
 # wire format, TCP runtime, `earl worker`), selector, and metrics build
 # and pass without the xla toolchain. The remote-ingest integration
 # test (2 `earl worker --ingest` processes reproducing the serial
-# learning curve + failure injection) and the worker-death chaos test
+# learning curve + failure injection), the worker-death chaos test
 # (3 processes, kill schedule mid-run, bit-identical curve through the
-# tree merge) run here by construction — they are re-run explicitly so
-# a feature-gating regression cannot silently filter them out of the
-# suite.
+# tree merge), the fleet-rollout integration test (an `earl worker
+# --rollout` fleet at --max-staleness 0 reproducing the serial curve
+# bit-for-bit), and the elastic-fleet chaos test (kill a rollout
+# worker, rejoin it two steps later, curve unchanged) run here by
+# construction — they are re-run explicitly so a feature-gating
+# regression cannot silently filter them out of the suite.
 check-core:
 	cd rust && cargo build --release --no-default-features
 	cd rust && cargo test -q --no-default-features
 	cd rust && cargo test -q --no-default-features --test integration_remote_ingest
 	cd rust && cargo test -q --no-default-features --test chaos_worker_death
+	cd rust && cargo test -q --no-default-features --test integration_fleet_rollout
+	cd rust && cargo test -q --no-default-features --test chaos_fleet_rejoin
 	cd rust && cargo bench --no-default-features --bench fig6_replan -- --smoke
 
 fmt:
@@ -63,3 +68,14 @@ bench-pipeline:
 # XLA-free: the full ramp writes rust/BENCH_replan.json.
 bench-replan:
 	cd rust && cargo bench --bench fig6_replan
+
+# Regenerate every committed deterministic bench artifact
+# (rust/BENCH_dispatch.json, rust/BENCH_pipeline.json,
+# rust/BENCH_replan.json). All three carry only cost-model numbers at
+# stable 6-decimal rounding — wall-clock measurements print to the
+# bench tables but never enter the JSON — so the files must come out
+# byte-identical on any machine.
+bench-artifacts:
+	cd rust && cargo bench --bench fig4_dispatch
+	cd rust && cargo bench --bench fig5_pipeline
+	cd rust && cargo bench --no-default-features --bench fig6_replan

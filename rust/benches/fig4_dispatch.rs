@@ -4,6 +4,15 @@
 //!
 //!   1. the cluster network simulator at full paper scale;
 //!   2. real TCP loopback sockets at 1/8 scale (same plans, real bytes).
+//!
+//! Emits `BENCH_dispatch.json` (schema in README.md) from the
+//! **deterministic** sections only — simulator makespans, the
+//! aggregation-aware payload split, and the merge-tree shape, all at
+//! stable 6-decimal rounding — so the committed artifact is
+//! byte-identical across machines. The TCP loopback timings are
+//! wall-clock and stay out of the JSON.
+
+use std::collections::BTreeMap;
 
 use earl::cluster::ClusterSpec;
 use earl::dispatch::{
@@ -14,9 +23,16 @@ use earl::dispatch::{
 };
 use earl::testkit::bench::print_table;
 use earl::util::bytes::{human_bytes, human_duration};
+use earl::util::json::Json;
 use earl::workload::fig4_shards;
 
 const WORKERS: usize = 8;
+
+/// Stable rounding for the committed artifact (keeps the JSON identical
+/// across libm implementations).
+fn round6(x: f64) -> f64 {
+    (x * 1e6).round() / 1e6
+}
 
 fn plans(
     shard_bytes: u64,
@@ -37,11 +53,13 @@ fn main() {
     println!("\n--- (a) network simulator, paper scale, {WORKERS} node-workers ---");
     let cluster = ClusterSpec::paper_testbed();
     let map = WorkerMap::one_per_node(&cluster, WORKERS);
+    let mut sim_rows: Vec<(usize, f64, f64)> = Vec::new();
     let mut rows = Vec::new();
     for (ctx, mib) in fig4_shards() {
         let (base, earl) = plans(mib << 20);
         let tb = simulate_plan(&cluster, &map, &base).makespan;
         let te = simulate_plan(&cluster, &map, &earl).makespan;
+        sim_rows.push((ctx, tb, te));
         rows.push(vec![
             format!("{ctx}"),
             format!("{mib} MiB"),
@@ -149,6 +167,7 @@ fn main() {
         .encode_frame()
         .expect("bench report frame")
         .len() as u64;
+    let mut tree_rows: Vec<(usize, u64, usize)> = Vec::new();
     let mut rows = Vec::new();
     for n in [2usize, 4, 8, 16, 32] {
         let workers: Vec<u32> = (0..n as u32).collect();
@@ -167,6 +186,7 @@ fn main() {
             .flatten()
             .filter(|op| matches!(op.sink, MergeSink::Peer(_)))
             .count();
+        tree_rows.push((n, merge_tree_depth(n), peer_hops));
         rows.push(vec![
             format!("{n}"),
             format!("{n} ({})", human_bytes(frame_bytes * n as u64)),
@@ -192,5 +212,45 @@ fn main() {
          worker-to-worker links)",
         human_bytes(frame_bytes)
     );
+
+    // Committed artifact: deterministic fields only (see module doc).
+    let mut fields: BTreeMap<String, Json> = BTreeMap::new();
+    fields.insert("bench".to_string(), Json::str("fig4_dispatch"));
+    fields.insert("workers".to_string(), Json::num(WORKERS as f64));
+    for (ctx, tb, te) in sim_rows {
+        let k = ctx / 1024;
+        fields.insert(
+            format!("sim_{k}k_baseline_seconds"),
+            Json::num(round6(tb)),
+        );
+        fields.insert(format!("sim_{k}k_earl_seconds"), Json::num(round6(te)));
+        fields.insert(format!("sim_{k}k_reduction"), Json::num(round6(tb / te)));
+    }
+    fields.insert(
+        "total_bytes_per_token".to_string(),
+        Json::num(round6(total_bpt)),
+    );
+    fields.insert(
+        "wire_bytes_per_token".to_string(),
+        Json::num(round6(wire_bpt)),
+    );
+    fields.insert(
+        "wire_saved_frac".to_string(),
+        Json::num(round6(1.0 - wire_bpt / total_bpt)),
+    );
+    fields.insert(
+        "report_frame_bytes".to_string(),
+        Json::num(frame_bytes as f64),
+    );
+    for (n, depth, peer_hops) in tree_rows {
+        fields.insert(format!("tree_depth_{n}"), Json::num(depth as f64));
+        fields.insert(
+            format!("tree_peer_hops_{n}"),
+            Json::num(peer_hops as f64),
+        );
+    }
+    std::fs::write("BENCH_dispatch.json", format!("{}\n", Json::Obj(fields)))
+        .expect("writing BENCH_dispatch.json");
+    println!("\nwrote BENCH_dispatch.json");
     println!("\nfig4_dispatch: done");
 }

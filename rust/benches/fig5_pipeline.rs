@@ -18,8 +18,13 @@
 //!   update stage thread for the async schedule), exercising the
 //!   identical overlap schedules without PJRT.
 //!
-//! Emits `BENCH_pipeline.json`; schema documented in README.md
-//! ("Benchmarks" section).
+//! Emits `BENCH_pipeline.json` (schema in README.md) from the
+//! **deterministic schedule model** only: stand-in stage durations are
+//! constants and the dispatch stage is the busiest worker's egress at
+//! the emulated NIC rate, so the committed artifact is byte-identical
+//! across machines (same discipline as `BENCH_replan.json`). The
+//! measured wall-clock steps/sec print to the table and sanity-check
+//! the schedules against the model.
 
 use std::path::Path;
 use std::sync::mpsc::sync_channel;
@@ -137,6 +142,35 @@ fn compute_stage(d: Duration) {
 const SYN_ROLLOUT: Duration = Duration::from_millis(40);
 const SYN_UPDATE: Duration = Duration::from_millis(40);
 const SYN_STEPS: u64 = 20;
+/// Emulated NIC rate of the synthetic dispatch jobs, bytes/sec.
+const SYN_NIC: f64 = 21e6;
+
+/// Stable rounding for the committed artifact (keeps the JSON identical
+/// across libm implementations).
+fn round6(x: f64) -> f64 {
+    (x * 1e6).round() / 1e6
+}
+
+/// Deterministic schedule model (see module doc): returns the dispatch
+/// stage seconds plus modeled serial / overlapped / overlapped-async
+/// steps per second.
+fn model_outcome() -> (f64, f64, f64, f64) {
+    let plan = synthetic_plan();
+    let mut egress = vec![0u64; 4];
+    for t in plan.phases.iter().flatten() {
+        egress[t.src] += t.bytes;
+    }
+    let d = *egress.iter().max().unwrap() as f64 / SYN_NIC;
+    let r = SYN_ROLLOUT.as_secs_f64();
+    let u = SYN_UPDATE.as_secs_f64();
+    // Serial runs R, D, U back to back; overlapped hides D(k) under
+    // U(k) + R(k+1); async additionally moves U off the engine thread,
+    // so the critical path is the longest single stage.
+    let serial = 1.0 / (r + d + u);
+    let overlapped = 1.0 / (r + u).max(d);
+    let async_sps = 1.0 / r.max(u).max(d);
+    (d, serial, overlapped, async_sps)
+}
 
 fn synthetic_plan() -> DispatchPlan {
     let p = DataLayout::round_robin(16, 4);
@@ -153,7 +187,7 @@ fn synthetic_job(step: u64) -> DispatchJob {
         // ~36ms on the busiest emulated NIC (750 KB egress per worker):
         // slightly cheaper than one stand-in compute stage, like a
         // well-balanced pipeline.
-        nic_bytes_per_sec: Some(21e6),
+        nic_bytes_per_sec: Some(SYN_NIC),
         payload: None,
         inflight_budget: None,
         adaptive_budget: false,
@@ -309,20 +343,31 @@ fn main() -> anyhow::Result<()> {
         println!("WARNING: overlapped metrics diverged from serial");
     }
 
+    // Committed artifact: the modeled schedule arithmetic only — the
+    // measured steps/sec above are wall-clock and vary per machine, so
+    // they never enter the JSON.
+    let (dispatch_s, m_serial, m_overlapped, m_async) = model_outcome();
+    println!(
+        "model: serial {m_serial:.3} / overlapped {m_overlapped:.3} / \
+         async {m_async:.3} st/s (dispatch stage {dispatch_s:.4}s)"
+    );
     let json = Json::obj(vec![
         ("bench", Json::str("fig5_pipeline")),
-        ("engine", Json::str(outcome.engine)),
-        ("steps", Json::num(outcome.steps as f64)),
-        ("serial_steps_per_sec", Json::num(outcome.serial_sps)),
-        ("overlapped_steps_per_sec", Json::num(outcome.overlapped_sps)),
+        ("engine", Json::str("model")),
+        ("steps", Json::num(SYN_STEPS as f64)),
+        ("rollout_seconds", Json::num(round6(SYN_ROLLOUT.as_secs_f64()))),
+        ("update_seconds", Json::num(round6(SYN_UPDATE.as_secs_f64()))),
+        ("dispatch_seconds", Json::num(round6(dispatch_s))),
+        ("serial_steps_per_sec", Json::num(round6(m_serial))),
+        ("overlapped_steps_per_sec", Json::num(round6(m_overlapped))),
         (
             "overlapped_async_steps_per_sec",
-            Json::num(outcome.async_sps),
+            Json::num(round6(m_async)),
         ),
-        ("speedup", Json::num(speedup)),
-        ("async_speedup", Json::num(async_speedup)),
+        ("speedup", Json::num(round6(m_overlapped / m_serial))),
+        ("async_speedup", Json::num(round6(m_async / m_serial))),
         ("max_staleness", Json::num(ASYNC_STALENESS as f64)),
-        ("metrics_match", Json::Bool(outcome.metrics_match)),
+        ("completed", Json::Bool(true)),
     ]);
     std::fs::write("BENCH_pipeline.json", format!("{json}\n"))?;
     println!("wrote BENCH_pipeline.json");

@@ -11,6 +11,12 @@
 //!   encode writes tile `0..LEN` without overlap — padding holes only
 //!   where declared in [`PAD_HOLES`] — and the decode reads touch
 //!   exactly the same byte ranges;
+//! * variable-length frames (a decode that bounds-checks a
+//!   `*_FIXED_LEN` const, reads a fixed prefix, then walks a cursor
+//!   over counted sections): the prefix reads tile `0..FIXED_LEN` —
+//!   holes only where declared in [`VAR_PAD_HOLES`] — the decoder has
+//!   at least one section loop, and (for body-level frames) a
+//!   `MAX_*_BYTES` guard bounds hostile claimed sizes;
 //! * the frame checksum covers every framed byte: the `.update(..)`
 //!   stream of `checksum()` must equal the `.extend_from_slice(..)`
 //!   stream of the frame encoder minus its leading header element.
@@ -31,6 +37,16 @@ use crate::util::json::Json;
 /// *expected* to leave): `ShardDesc` byte 3 pads `dtype u8` to the
 /// 4-byte `row_start` boundary.
 pub const PAD_HOLES: &[(&str, &[u64])] = &[("ShardDesc", &[3])];
+
+/// Declared padding bytes of variable-length frame prefixes:
+/// `WorkerReport` pads `n_hist u32` out to the 8-byte `RESULT_FIXED_LEN`
+/// boundary (bytes 52..56 written as zero, never read back).
+pub const VAR_PAD_HOLES: &[(&str, &[u64])] = &[("WorkerReport", &[52, 53, 54, 55])];
+
+/// Byte widths of the `*_at(offset)` read closures the wire module's
+/// variable-length decoders are written in.
+const AT_WIDTHS: &[(&str, u64)] =
+    &[("u32_at", 4), ("f32_at", 4), ("u64_at", 8), ("f64_at", 8)];
 
 /// Code tables of one wire enum.
 #[derive(Debug, Clone, Default)]
@@ -58,12 +74,30 @@ pub struct LayoutSpec {
     pub holes: Vec<u64>,
 }
 
+/// Shape of one variable-length frame: a fixed prefix the decoder reads
+/// at literal offsets, then a cursor walk over counted sections.
+#[derive(Debug, Clone, Default)]
+pub struct VarLayoutSpec {
+    /// Value of the `*_FIXED_LEN` const the decoder bounds-checks first.
+    pub fixed_len: u64,
+    /// Byte ranges of the fixed prefix read before the cursor walk, in
+    /// source order.
+    pub prefix_reads: Vec<(u64, u64)>,
+    /// Count of `for`-loop sections the cursor walk consumes.
+    pub sections: u64,
+    /// `MAX_*` bound consts referenced by the decoder's hostile-input
+    /// guards, in source order.
+    pub guards_max: Vec<String>,
+}
+
 /// The extracted protocol spec.
 #[derive(Debug, Clone, Default)]
 pub struct WireSpec {
     pub consts: BTreeMap<String, u64>,
     pub enums: BTreeMap<String, EnumSpec>,
     pub layouts: BTreeMap<String, LayoutSpec>,
+    /// Variable-length frames, keyed by impl type.
+    pub var_layouts: BTreeMap<String, VarLayoutSpec>,
     /// Argument expressions fed to the checksum, in stream order.
     pub checksum_stream: Vec<String>,
     /// Argument expressions appended by the frame encoder, in order.
@@ -146,10 +180,44 @@ impl WireSpec {
                 })
                 .collect(),
         );
+        let var_layouts = Json::Obj(
+            self.var_layouts
+                .iter()
+                .map(|(name, v)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("fixed_len", Json::num(v.fixed_len as f64)),
+                            (
+                                "prefix_reads",
+                                Json::arr(v.prefix_reads.iter().map(
+                                    |(a, b)| {
+                                        Json::arr([
+                                            Json::num(*a as f64),
+                                            Json::num(*b as f64),
+                                        ])
+                                    },
+                                )),
+                            ),
+                            ("sections", Json::num(v.sections as f64)),
+                            (
+                                "guards_max",
+                                Json::arr(
+                                    v.guards_max
+                                        .iter()
+                                        .map(|g| Json::str(g.as_str())),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("consts", consts),
             ("enums", enums),
             ("layouts", layouts),
+            ("var_layouts", var_layouts),
             (
                 "checksum_stream",
                 Json::arr(
@@ -331,6 +399,64 @@ fn extract_impl(
             );
         }
     }
+
+    // Variable-length layout: a decode that bounds-checks a
+    // `*_FIXED_LEN` const (body-framed types name it `decode_body`).
+    if let Some(&dec) = fns.get("decode_body").or_else(|| fns.get("decode")) {
+        if let Some(v) = extract_var_layout(toks, dec, &spec.consts) {
+            spec.var_layouts.insert(ty.to_string(), v);
+        }
+    }
+}
+
+/// Extract the variable-length shape of a decode body, keyed off the
+/// first `*_FIXED_LEN` const it mentions: fixed-prefix reads are
+/// literal-index slices plus `u32_at(OFF)`-style closure calls with
+/// literal offsets ([`AT_WIDTHS`]); sections are `for` loops; guards
+/// are referenced `MAX_*` consts. Returns `None` for fixed layouts.
+fn extract_var_layout(
+    toks: &[Tok],
+    body: (usize, usize),
+    consts: &BTreeMap<String, u64>,
+) -> Option<VarLayoutSpec> {
+    let fixed_name = (body.0..body.1).find_map(|j| {
+        let t = &toks[j];
+        (t.kind == TokKind::Ident && t.text.ends_with("_FIXED_LEN"))
+            .then(|| t.text.clone())
+    })?;
+    let fixed_len = consts.get(&fixed_name).copied()?;
+
+    let mut prefix_reads = literal_ranges(toks, body);
+    let mut sections = 0u64;
+    let mut guards_max = Vec::new();
+    let mut i = body.0;
+    while i < body.1 {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident {
+            if t.is_ident("for") {
+                sections += 1;
+            }
+            if t.text.starts_with("MAX_") && !guards_max.contains(&t.text) {
+                guards_max.push(t.text.clone());
+            }
+            if let Some(&(_, w)) =
+                AT_WIDTHS.iter().find(|(n, _)| t.is_ident(n))
+            {
+                // `u32_at(8)` — only literal offsets are prefix reads;
+                // cursor-driven calls (`u32_at(off)`) are the walk.
+                if toks.get(i + 1).is_some_and(|p| p.is_punct('('))
+                    && toks.get(i + 2).is_some_and(|n| n.kind == TokKind::Num)
+                    && toks.get(i + 3).is_some_and(|p| p.is_punct(')'))
+                {
+                    if let Some(o) = int_value(&toks[i + 2].text) {
+                        prefix_reads.push((o, o + w));
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    Some(VarLayoutSpec { fixed_len, prefix_reads, sections, guards_max })
 }
 
 /// Value of `const NAME: T = <literal | a << b>;` starting at `const`.
@@ -687,6 +813,58 @@ pub fn check_spec(file: &SourceFile, spec: &mut WireSpec) -> Vec<Finding> {
         }
     }
 
+    let var_pad: BTreeMap<&str, &[u64]> = VAR_PAD_HOLES.iter().copied().collect();
+    for (name, v) in &spec.var_layouts {
+        let len = v.fixed_len as usize;
+        let mut covered = vec![false; len];
+        for &(a, b) in &v.prefix_reads {
+            if b as usize > len || a >= b {
+                push(
+                    "var-prefix",
+                    format!(
+                        "{name}: decoder reads fixed-prefix bytes {a}..{b}, \
+                         outside the declared {len}-byte prefix"
+                    ),
+                );
+                continue;
+            }
+            for byte in a..b {
+                if covered[byte as usize] {
+                    push(
+                        "var-prefix",
+                        format!(
+                            "{name}: decoder reads fixed-prefix byte {byte} \
+                             twice (overlapping field reads)"
+                        ),
+                    );
+                }
+                covered[byte as usize] = true;
+            }
+        }
+        let allowed = var_pad.get(name.as_str()).copied().unwrap_or(&[]);
+        for byte in 0..len as u64 {
+            if !covered[byte as usize] && !allowed.contains(&byte) {
+                push(
+                    "var-prefix",
+                    format!(
+                        "{name}: decoder never reads byte {byte} of the \
+                         declared {len}-byte fixed prefix"
+                    ),
+                );
+            }
+        }
+        if v.sections == 0 {
+            push(
+                "var-prefix",
+                format!(
+                    "{name}: bounds-checks a fixed prefix but walks no \
+                     variable-length section — fixed layouts must declare \
+                     `encode(..) -> [u8; LEN]` instead"
+                ),
+            );
+        }
+    }
+
     if !spec.frame_stream.is_empty() || !spec.checksum_stream.is_empty() {
         let framed = &spec.frame_stream;
         let summed = &spec.checksum_stream;
@@ -730,6 +908,10 @@ pub fn check_required(file: &SourceFile, spec: &WireSpec) -> Vec<Finding> {
         "RESULT_MAGIC",
         "RESULT_FIXED_LEN",
         "INGEST_REQ_FIXED_LEN",
+        "EPISODE_MAGIC",
+        "EPISODE_BATCH_FIXED_LEN",
+        "SNAPSHOT_FIXED_LEN",
+        "ROLLOUT_REQ_LEN",
     ] {
         if !spec.consts.contains_key(c) {
             miss(&format!("const {c}"));
@@ -753,9 +935,17 @@ pub fn check_required(file: &SourceFile, spec: &WireSpec) -> Vec<Finding> {
     {
         miss("WireTensorId::ALL");
     }
-    for l in ["FrameHeader", "ShardDesc"] {
+    for l in ["FrameHeader", "ShardDesc", "RolloutRequest"] {
         if !spec.layouts.contains_key(l) {
             miss(&format!("fixed layout of {l}"));
+        }
+    }
+    // The variable-length frames of the result/ingest/rollout planes:
+    // an extraction miss here would let a prefix or guard regression
+    // through unchecked.
+    for l in ["IngestRequest", "WorkerReport", "EpisodeBatch", "SnapshotFrame"] {
+        if !spec.var_layouts.contains_key(l) {
+            miss(&format!("variable-length layout of {l}"));
         }
     }
     if spec.checksum_stream.is_empty() || spec.frame_stream.is_empty() {
@@ -763,10 +953,18 @@ pub fn check_required(file: &SourceFile, spec: &WireSpec) -> Vec<Finding> {
     }
     // Control-plane tensor ids ride the same code table as the data
     // tensors (the commit frame, the tree-merge partial, the synthetic
-    // bench payload); an extraction miss here would let the gate pass
-    // while those frames drift.
+    // bench payload, and the fleet-rollout trio: snapshot push, slice
+    // request, join handshake); an extraction miss here would let the
+    // gate pass while those frames drift.
     if let Some(e) = spec.enums.get("WireTensorId") {
-        for v in ["MergePartial", "IngestCommit", "Synthetic"] {
+        for v in [
+            "MergePartial",
+            "IngestCommit",
+            "Synthetic",
+            "Snapshot",
+            "RolloutRequest",
+            "FleetJoin",
+        ] {
             if !e.codes.iter().any(|(name, _)| name == v) {
                 miss(&format!("control tensor id WireTensorId::{v}"));
             }
@@ -774,7 +972,12 @@ pub fn check_required(file: &SourceFile, spec: &WireSpec) -> Vec<Finding> {
         for (name, code) in &e.codes {
             let is_control = matches!(
                 name.as_str(),
-                "MergePartial" | "IngestCommit" | "Synthetic"
+                "MergePartial"
+                    | "IngestCommit"
+                    | "Synthetic"
+                    | "Snapshot"
+                    | "RolloutRequest"
+                    | "FleetJoin"
             );
             // Control ids live at the top of the u16 space; data ids
             // grow up from 0 — neither side may cross into the other.
@@ -788,6 +991,25 @@ pub fn check_required(file: &SourceFile, spec: &WireSpec) -> Vec<Finding> {
                         "WireTensorId::{name} has code {code:#06x}: control \
                          ids must sit in the reserved range >= 0xFF00 and \
                          data ids below it"
+                    ),
+                });
+            }
+        }
+    }
+    // Frames whose decoder sees an attacker-controlled claimed size
+    // before allocating must bound it themselves ([`WorkerReport`]
+    // rides a framing layer that already caps its body).
+    for l in ["IngestRequest", "EpisodeBatch", "SnapshotFrame"] {
+        if let Some(v) = spec.var_layouts.get(l) {
+            if !v.guards_max.iter().any(|g| g.ends_with("_BYTES")) {
+                out.push(Finding {
+                    family: "wire-protocol",
+                    kind: "var-guard",
+                    file: file.rel.clone(),
+                    line: 0,
+                    message: format!(
+                        "{l}'s decoder has no MAX_*_BYTES guard bounding \
+                         the claimed frame size"
                     ),
                 });
             }
@@ -975,6 +1197,127 @@ pub fn encode_frame(p: &T) -> Vec<u8> {
         assert_eq!(spec.frame_stream.len(), 3);
         assert_eq!(findings.len(), 1, "{findings:?}");
         assert_eq!(findings[0].kind, "checksum-coverage");
+    }
+
+    const VAR_CLEAN: &str = r#"
+pub const REC_FIXED_LEN: usize = 12;
+pub const MAX_REC_BYTES: usize = 1 << 16;
+
+pub struct Rec {
+    pub step: u64,
+    pub vals: Vec<f32>,
+}
+
+impl Rec {
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&self.step.to_le_bytes());
+        b.extend_from_slice(&(self.vals.len() as u32).to_le_bytes());
+        for v in &self.vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(b)
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Rec> {
+        if buf.len() < REC_FIXED_LEN {
+            bail!("short");
+        }
+        let u32_at = |o: usize| u32_le(&buf[o..o + 4]);
+        let step = u64_le(&buf[..8]);
+        let n = u32_at(8) as usize;
+        let need = REC_FIXED_LEN + n * 4;
+        if need > MAX_REC_BYTES {
+            bail!("hostile");
+        }
+        let mut off = REC_FIXED_LEN;
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            vals.push(f32_le(&buf[off..off + 4]));
+            off += 4;
+        }
+        Ok(Rec { step, vals })
+    }
+}
+"#;
+
+    #[test]
+    fn var_layout_extracts_and_passes() {
+        let f = parse_source("dispatch/fixture.rs", VAR_CLEAN);
+        let (spec, findings) = analyze(&f);
+        assert!(findings.is_empty(), "{findings:?}");
+        let v = &spec.var_layouts["Rec"];
+        assert_eq!(v.fixed_len, 12);
+        assert_eq!(v.prefix_reads, vec![(0, 8), (8, 12)]);
+        assert_eq!(v.sections, 1);
+        assert_eq!(v.guards_max, vec!["MAX_REC_BYTES".to_string()]);
+        // The Result<Vec<u8>> encode is not a fixed layout.
+        assert!(!spec.layouts.contains_key("Rec"));
+    }
+
+    #[test]
+    fn var_prefix_hole_is_caught() {
+        // Seeded violation: the decoder bounds-checks a 16-byte prefix
+        // but only ever reads bytes 0..12 of it.
+        let src = "\
+pub const R_FIXED_LEN: usize = 16;
+pub struct R { a: u64 }
+impl R {
+    pub fn decode(buf: &[u8]) -> Result<R> {
+        if buf.len() < R_FIXED_LEN {
+            bail!(\"short\");
+        }
+        let a = u64_le(&buf[..8]);
+        let n = u32_le(&buf[8..12]) as usize;
+        let mut off = R_FIXED_LEN;
+        for _ in 0..n {
+            off += 4;
+        }
+        Ok(R { a })
+    }
+}
+";
+        let f = parse_source("dispatch/fixture.rs", src);
+        let (_, findings) = analyze(&f);
+        assert_eq!(findings.len(), 4, "{findings:?}");
+        assert!(findings.iter().all(|x| x.kind == "var-prefix"));
+        assert!(findings[0].message.contains("never reads byte 12"));
+    }
+
+    #[test]
+    fn missing_size_guard_on_episode_batch_is_caught() {
+        // A decode_body with no MAX_*_BYTES bound on the claimed size:
+        // fine as a generic var layout, but the required check flags it
+        // for the frames that parse attacker-controlled lengths.
+        let src = "\
+pub const EPISODE_BATCH_FIXED_LEN: usize = 8;
+pub struct EpisodeBatch { n: u32 }
+impl EpisodeBatch {
+    fn decode_body(body: &[u8]) -> Result<EpisodeBatch> {
+        if body.len() < EPISODE_BATCH_FIXED_LEN {
+            bail!(\"short\");
+        }
+        let n = u32_le(&body[..4]) as usize;
+        let pad = u32_le(&body[4..8]);
+        let mut off = EPISODE_BATCH_FIXED_LEN;
+        for _ in 0..n {
+            off += 4;
+        }
+        Ok(EpisodeBatch { n: pad })
+    }
+}
+";
+        let f = parse_source("dispatch/fixture.rs", src);
+        let (spec, findings) = analyze(&f);
+        assert!(findings.is_empty(), "{findings:?}");
+        let required = check_required(&f, &spec);
+        assert!(
+            required
+                .iter()
+                .any(|m| m.kind == "var-guard"
+                    && m.message.contains("EpisodeBatch")),
+            "{required:?}"
+        );
     }
 
     #[test]

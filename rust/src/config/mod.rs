@@ -1,6 +1,7 @@
 //! Typed run configuration: JSON config files (parsed with the built-in
 //! JSON substrate) + programmatic presets, validated before a run.
 
+use std::net::SocketAddr;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -114,6 +115,12 @@ pub struct TrainConfig {
     /// (1-based), exercising the switch path even when signals alone
     /// would keep the current shape.
     pub replan_force_step: Option<u64>,
+    /// Rollout-as-a-service: addresses of `earl worker --rollout`
+    /// processes to source episodes from instead of the in-process
+    /// decode loop. Empty (the default) keeps the local source with
+    /// zero behavior change. `max_staleness` doubles as the fleet's
+    /// snapshot-staleness floor.
+    pub rollout_fleet: Vec<SocketAddr>,
     pub metrics_path: Option<PathBuf>,
     pub checkpoint_path: Option<PathBuf>,
     pub seed: u64,
@@ -142,6 +149,7 @@ impl Default for TrainConfig {
             replan: false,
             replan_responses: 64,
             replan_force_step: None,
+            rollout_fleet: Vec::new(),
             metrics_path: None,
             checkpoint_path: None,
             seed: 0,
@@ -267,6 +275,16 @@ impl TrainConfig {
         if let Some(n) = j.at(&["replan_force_step"]).as_usize() {
             c.replan_force_step = Some(n as u64);
         }
+        if let Some(s) = j.at(&["rollout_fleet"]).as_str() {
+            c.rollout_fleet = s
+                .split(',')
+                .map(|a| {
+                    a.trim().parse::<SocketAddr>().map_err(|e| {
+                        anyhow!("rollout_fleet address {a:?}: {e}")
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
         if let Some(s) = j.at(&["metrics_path"]).as_str() {
             c.metrics_path = Some(PathBuf::from(s));
         }
@@ -361,6 +379,27 @@ mod tests {
         assert!(!d.replan);
         assert_eq!(d.replan_responses, 64);
         assert_eq!(d.replan_force_step, None);
+    }
+
+    #[test]
+    fn rollout_fleet_parses() {
+        let c = TrainConfig::from_json_str(
+            r#"{"rollout_fleet": "127.0.0.1:4000, 127.0.0.1:4001"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.rollout_fleet,
+            vec![
+                "127.0.0.1:4000".parse().unwrap(),
+                "127.0.0.1:4001".parse().unwrap()
+            ]
+        );
+        // Local episode source is the default.
+        assert!(TrainConfig::default().rollout_fleet.is_empty());
+        assert!(
+            TrainConfig::from_json_str(r#"{"rollout_fleet": "not-an-addr"}"#)
+                .is_err()
+        );
     }
 
     #[test]

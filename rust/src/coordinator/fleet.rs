@@ -1,0 +1,813 @@
+//! Fleet rollout coordinator: training steps whose episodes come from
+//! an **elastic fleet of snapshot-fed rollout workers** (`earl worker
+//! --rollout`) instead of the in-process engine — rollout-as-a-service.
+//!
+//! One step:
+//!
+//! 1. **snapshot push** — every live fleet connection receives a
+//!    [`SnapshotFrame`] carrying θ_step (the worker installs it into
+//!    its [`crate::rollout::host::RolloutHost`] staleness buffer);
+//! 2. **episode scatter** — the step's episode range is partitioned
+//!    into contiguous slices over the live workers in manifest order
+//!    ([`fleet_slices`]); each worker serves its slice with a
+//!    [`RolloutRequest`] → [`EpisodeBatch`] round-trip on the ack
+//!    stream. A failed worker's slice moves to a surviving stand-in
+//!    (bounded attempts), and slices nobody can serve are generated
+//!    **locally** via [`host_episode_slice`] — episode content is a
+//!    pure function of `(θ, seed, step, global index)`, so neither
+//!    re-dispatch nor fallback can disturb the learning curve;
+//! 3. **update** — the assembled episodes run the exact XLA-free
+//!    update path the ingestion coordinator uses: whitened REINFORCE
+//!    advantages, [`pack_episodes`] into padded tensors, one
+//!    [`worker_update`] over the staged payload, [`merge_reports`],
+//!    and an all-or-nothing [`IngestModel::apply`].
+//!
+//! [`FleetCoordinator::local`] runs the identical math with no sockets
+//! (the whole range generated locally): the serial reference a fleet
+//! deployment at `--max-staleness 0` must reproduce **bit-for-bit** —
+//! integration-tested in `tests/integration_fleet_rollout.rs` and under
+//! worker death/rejoin in `tests/chaos_fleet_rejoin.rs`.
+//!
+//! Membership is elastic: [`FleetCoordinator::join`] admits a worker
+//! mid-run, [`FleetCoordinator::rejoin`] re-admits a restarted one
+//! under its old id with a bumped generation (closing the
+//! restarted-worker gap of the ingest path). Admission runs the
+//! [`protocol_checksum`] handshake, so a version-skewed worker is
+//! rejected at the door.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::exp_prep::{pack_episodes, packed_payload};
+use crate::dispatch::ingest::{
+    local_batch, merge_reports, worker_update, IngestModel,
+};
+use crate::dispatch::plan::fleet_slices;
+use crate::dispatch::tcp::{Ack, ACK_EPISODES, ACK_JOIN, ACK_LEN};
+use crate::dispatch::wire::{
+    encode_frame, u32_le, u64_le, EpisodeBatch, IngestHp, IngestRequest,
+    RolloutRequest, SnapshotFrame, TransferPayload, EPISODE_MAGIC,
+    MAX_EPISODE_BATCH_BYTES,
+};
+use crate::registry::{
+    protocol_checksum, JoinAck, JoinRequest, Manifest, JOIN_MAGIC,
+    JOIN_REQ_LEN,
+};
+use crate::rl::advantage::whiten;
+use crate::rl::episode::{Episode, ExperienceBatch};
+use crate::rollout::host::{host_episode_slice, MIN_EPISODE_LEN};
+use crate::rollout::{episode_stats, RolloutStats};
+use crate::tokenizer as tok;
+
+/// Per-operation socket budget (connect, one frame write, one ack +
+/// follow-frame read) before a fleet round-trip fails loudly. Generous:
+/// a snapshot push is a parameter-vector copy and an episode batch is
+/// tens of kilobytes — only a dead or wedged worker reaches it, and the
+/// caller then re-plans the slice rather than hanging the step.
+pub const FLEET_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Stand-in attempts one slice may consume after its worker failed
+/// before the slice falls back to local generation.
+const MAX_FLEET_ATTEMPTS: usize = 3;
+
+/// Configuration of a fleet-rollout training run.
+#[derive(Debug, Clone)]
+pub struct FleetCfg {
+    /// Episodes per training step (= batch rows of the update).
+    pub episodes: usize,
+    /// Per-episode context budget; also the packing bucket, so no
+    /// episode is ever clipped.
+    pub max_len: usize,
+    /// Host-model vocabulary (must cover the tokenizer's table).
+    pub vocab: usize,
+    pub hp: IngestHp,
+    /// Run-level rollout seed (mixed with step and episode index).
+    pub seed: u64,
+    /// How many steps behind θ_step a serving snapshot may be. `0`
+    /// forces every episode onto the snapshot pushed this step — the
+    /// bit-for-bit-serial regime.
+    pub max_staleness: u64,
+    /// Per-operation socket timeout (see [`FLEET_IO_TIMEOUT`]).
+    pub io_timeout: Duration,
+}
+
+impl Default for FleetCfg {
+    fn default() -> Self {
+        FleetCfg {
+            episodes: 8,
+            max_len: 96,
+            vocab: tok::VOCAB,
+            hp: IngestHp::default(),
+            seed: 0,
+            max_staleness: 0,
+            io_timeout: FLEET_IO_TIMEOUT,
+        }
+    }
+}
+
+impl FleetCfg {
+    pub fn validate(&self) -> Result<()> {
+        if self.episodes == 0 {
+            bail!("episodes must be > 0");
+        }
+        if self.max_len < MIN_EPISODE_LEN {
+            bail!(
+                "max_len {} below the generator minimum {MIN_EPISODE_LEN}",
+                self.max_len
+            );
+        }
+        if self.vocab < tok::VOCAB {
+            bail!(
+                "vocab {} cannot cover the {}-token tokenizer table",
+                self.vocab,
+                tok::VOCAB
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One fleet training step's record.
+#[derive(Debug, Clone)]
+pub struct FleetStepRecord {
+    /// Optimizer step after the update.
+    pub step: u64,
+    /// Mean loss per generated token (deployment-independent).
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub rows: u64,
+    pub gen_tokens: u64,
+    /// Episodes served by fleet workers this step.
+    pub episodes_from_fleet: u64,
+    /// Episodes generated locally (local mode, or fleet fallback).
+    pub episodes_local: u64,
+    /// Slice re-dispatches worker failures forced this step.
+    pub redispatches: u64,
+    /// Worst observed `step − snapshot_step` over the step's batches.
+    pub max_snapshot_staleness: u64,
+    /// Episode context stats of the step's batch — the re-planner's
+    /// length signals, observed from the assembled episodes.
+    pub ctx_mean: f64,
+    pub ctx_p95: f64,
+    pub ctx_max: f64,
+    pub mean_reward: f64,
+    pub truncation_rate: f64,
+}
+
+impl FleetStepRecord {
+    /// The deployment-independent fields — what a fleet run at
+    /// staleness 0 must reproduce from the serial reference, step for
+    /// step.
+    pub fn training_row(&self) -> (u64, f64, f64, u64, u64) {
+        (self.step, self.loss, self.grad_norm, self.rows, self.gen_tokens)
+    }
+}
+
+/// One dedicated coordinator→worker control connection. Fleet control
+/// frames are strictly request/reply (frame out, ack + optional follow
+/// frame back), so a plain blocking stream with per-operation timeouts
+/// is simpler and easier to reason about than threading fleet replies
+/// through the bulk dispatcher's ack readers.
+struct FleetConn {
+    sock: TcpStream,
+    /// Execution epoch of the next frame (monotone per connection).
+    epoch: u64,
+}
+
+impl FleetConn {
+    fn dial(addr: SocketAddr, timeout: Duration) -> Result<FleetConn> {
+        let sock = TcpStream::connect_timeout(&addr, timeout)
+            .with_context(|| format!("dialing fleet worker {addr}"))?;
+        sock.set_nodelay(true).ok();
+        sock.set_read_timeout(Some(timeout))?;
+        sock.set_write_timeout(Some(timeout))?;
+        Ok(FleetConn { sock, epoch: 0 })
+    }
+
+    /// Write one control payload as a frame and read its ack, verifying
+    /// the epoch/checksum echo. The caller checks the status and reads
+    /// any follow frame.
+    fn send(&mut self, payload: &TransferPayload) -> Result<Ack> {
+        self.epoch += 1;
+        let frame = encode_frame(0, self.epoch, payload)?;
+        let want = payload.checksum();
+        self.sock.write_all(&frame).context("writing fleet frame")?;
+        let mut buf = [0u8; ACK_LEN];
+        self.sock.read_exact(&mut buf).context("reading fleet ack")?;
+        let ack = Ack::decode(&buf);
+        if ack.epoch != self.epoch || ack.checksum != want {
+            bail!(
+                "fleet ack mismatch: epoch {} checksum {:#x}, expected \
+                 {} / {want:#x}",
+                ack.epoch,
+                ack.checksum,
+                self.epoch
+            );
+        }
+        Ok(ack)
+    }
+
+    /// Read one checksummed follow frame (`magic u32 | body_len u32 |
+    /// body | fnv1a64(body) u64`) off the ack stream, returning the
+    /// body and its transmitted checksum.
+    fn read_follow(
+        &mut self,
+        want_magic: u32,
+        max_body: usize,
+        what: &str,
+    ) -> Result<(Vec<u8>, u64)> {
+        let mut head = [0u8; 8];
+        self.sock
+            .read_exact(&mut head)
+            .with_context(|| format!("{what} frame header"))?;
+        let magic = u32_le(&head[..4]);
+        if magic != want_magic {
+            bail!("bad {what} magic {magic:#x} (ack stream desynced)");
+        }
+        let body_len = u32_le(&head[4..8]) as usize;
+        if body_len > max_body {
+            bail!("{what} frame claims {body_len}-byte body");
+        }
+        let mut body = vec![0u8; body_len];
+        self.sock
+            .read_exact(&mut body)
+            .with_context(|| format!("{what} frame body"))?;
+        let mut sum = [0u8; 8];
+        self.sock
+            .read_exact(&mut sum)
+            .with_context(|| format!("{what} frame checksum"))?;
+        Ok((body, u64_le(&sum)))
+    }
+}
+
+/// The episodes one [`FleetClient::gather`] call assembled, plus the
+/// call's fleet counters.
+#[derive(Debug)]
+pub struct GatheredEpisodes {
+    /// The full requested range, in global-index order.
+    pub episodes: Vec<Episode>,
+    /// Episodes served by fleet workers.
+    pub from_fleet: u64,
+    /// Episodes generated locally (empty/dead fleet, or fallback).
+    pub from_local: u64,
+    /// Slice re-dispatches worker failures forced.
+    pub redispatches: u64,
+    /// Worst observed `step − snapshot_step` over the served batches.
+    pub max_snapshot_staleness: u64,
+}
+
+/// The reusable client half of rollout-as-a-service: elastic membership
+/// (join/rejoin behind the protocol handshake), snapshot pushes, and
+/// the scatter/gather of one step's episode range with stand-in
+/// re-dispatch and bit-identical local fallback. [`FleetCoordinator`]
+/// drives it for the XLA-free training loop; the trainer's
+/// `FleetRollout` episode source drives the same client from the PJRT
+/// loop — one protocol implementation, two consumers.
+pub struct FleetClient {
+    /// Every admitted worker, dead or alive — membership history is
+    /// what makes rejoin generations monotone.
+    pub manifest: Manifest,
+    /// Live control connections, keyed by logical worker id. A worker
+    /// in the manifest but absent here is dead (it may rejoin).
+    conns: BTreeMap<u64, FleetConn>,
+    next_worker: u64,
+    /// Run-level rollout seed (mixed with step and episode index).
+    pub seed: u64,
+    /// Vocabulary floor every rollout request advertises.
+    pub vocab: usize,
+    /// Per-episode context budget of every request.
+    pub max_len: usize,
+    /// How many steps behind θ_step a serving snapshot may be.
+    pub max_staleness: u64,
+    pub io_timeout: Duration,
+}
+
+impl FleetClient {
+    pub fn new(
+        seed: u64,
+        vocab: usize,
+        max_len: usize,
+        max_staleness: u64,
+        io_timeout: Duration,
+    ) -> FleetClient {
+        FleetClient {
+            manifest: Manifest::new(),
+            conns: BTreeMap::new(),
+            next_worker: 0,
+            seed,
+            vocab,
+            max_len,
+            max_staleness,
+            io_timeout,
+        }
+    }
+
+    /// Worker ids with a live control connection, in manifest order.
+    pub fn live_workers(&self) -> Vec<u64> {
+        self.manifest
+            .workers()
+            .map(|e| e.worker)
+            .filter(|w| self.conns.contains_key(w))
+            .collect()
+    }
+
+    /// Admit a new fleet worker: dial, run the protocol handshake, and
+    /// enter it into the manifest. Returns its logical worker id.
+    pub fn join(&mut self, addr: SocketAddr) -> Result<u64> {
+        let worker = self.next_worker;
+        let generation = match self.manifest.get(worker) {
+            Some(prev) => prev.generation + 1,
+            None => 0,
+        };
+        let conn = self.handshake(worker, generation, addr)?;
+        self.manifest.join(worker, &addr.to_string());
+        self.conns.insert(worker, conn);
+        self.next_worker += 1;
+        Ok(worker)
+    }
+
+    /// Re-admit a restarted worker under its existing id: the manifest
+    /// bumps its generation and the fresh process receives the current
+    /// snapshot on the next step like everyone else. This is the
+    /// mid-run rejoin the ingest path lacks.
+    pub fn rejoin(&mut self, worker: u64, addr: SocketAddr) -> Result<u64> {
+        let Some(prev) = self.manifest.get(worker) else {
+            bail!("worker {worker} was never admitted; use join");
+        };
+        let generation = prev.generation + 1;
+        let conn = self.handshake(worker, generation, addr)?;
+        let entered = self.manifest.join(worker, &addr.to_string());
+        debug_assert_eq!(entered, generation);
+        self.conns.insert(worker, conn);
+        Ok(generation)
+    }
+
+    fn handshake(
+        &self,
+        worker: u64,
+        generation: u64,
+        addr: SocketAddr,
+    ) -> Result<FleetConn> {
+        let mine = protocol_checksum();
+        let mut conn = FleetConn::dial(addr, self.io_timeout)?;
+        let req = JoinRequest { worker, generation, protocol: mine };
+        let ack = conn.send(&req.payload()?)?;
+        if ack.status != ACK_JOIN {
+            bail!(
+                "worker {worker} at {addr} refused the join handshake \
+                 (ack status {}); was it started with --rollout?",
+                ack.status
+            );
+        }
+        let (body, sum) = conn.read_follow(JOIN_MAGIC, JOIN_REQ_LEN, "join ack")?;
+        let reply = JoinAck::decode_checked(&body, sum)?;
+        if reply.worker != worker || reply.generation != generation {
+            bail!(
+                "join ack echoes worker {} generation {}, expected \
+                 {worker}/{generation}",
+                reply.worker,
+                reply.generation
+            );
+        }
+        if reply.protocol != mine {
+            bail!(
+                "worker {worker} speaks wire protocol {:#x}, coordinator \
+                 {mine:#x}: version skew, admission refused",
+                reply.protocol
+            );
+        }
+        Ok(conn)
+    }
+
+    /// Push θ_step to every live worker; ones that fail drop to dead
+    /// (their slices re-plan onto survivors this same step). Returns
+    /// the number of workers lost to the push.
+    pub fn push_snapshot(&mut self, step: u64, params: &[f32]) -> u64 {
+        if self.conns.is_empty() {
+            return 0;
+        }
+        let snap = SnapshotFrame { step, params: params.to_vec() };
+        let mut failed = 0u64;
+        let workers: Vec<u64> = self.conns.keys().copied().collect();
+        for w in workers {
+            let sent = snap.payload().and_then(|p| {
+                let conn = self.conns.get_mut(&w).expect("live conn");
+                let ack = conn.send(&p)?;
+                if ack.status != crate::dispatch::tcp::ACK_OK {
+                    bail!("snapshot push NACKed with status {}", ack.status);
+                }
+                Ok(())
+            });
+            if let Err(e) = sent {
+                eprintln!("[earl-fleet] worker {w} lost at snapshot push: {e:#}");
+                self.conns.remove(&w);
+                failed += 1;
+            }
+        }
+        failed
+    }
+
+    /// Ask `worker` for one slice; any failure kills its connection
+    /// (the slice re-plans, the worker may rejoin later).
+    fn request_slice(
+        &mut self,
+        worker: u64,
+        step: u64,
+        start: u64,
+        count: u64,
+    ) -> Result<EpisodeBatch> {
+        let req = RolloutRequest {
+            step,
+            min_snapshot_step: step.saturating_sub(self.max_staleness),
+            seed: self.seed,
+            worker: worker as u32,
+            vocab: self.vocab as u32,
+            episode_start: start as u32,
+            episode_count: count as u32,
+            max_len: self.max_len as u32,
+        };
+        let outcome = (|| {
+            let conn = self
+                .conns
+                .get_mut(&worker)
+                .ok_or_else(|| anyhow::anyhow!("worker {worker} is dead"))?;
+            let ack = conn.send(&req.payload()?)?;
+            if ack.status != ACK_EPISODES {
+                bail!("rollout request NACKed with status {}", ack.status);
+            }
+            let (body, sum) = conn.read_follow(
+                EPISODE_MAGIC,
+                MAX_EPISODE_BATCH_BYTES,
+                "episode batch",
+            )?;
+            let batch = EpisodeBatch::decode_checked(&body, sum)?;
+            if batch.step != step
+                || batch.worker != worker as u32
+                || batch.episodes.len() as u64 != count
+            {
+                bail!(
+                    "episode batch mismatch: step {} worker {} episodes \
+                     {}, requested {step}/{worker}/{count}",
+                    batch.step,
+                    batch.worker,
+                    batch.episodes.len()
+                );
+            }
+            if batch.snapshot_step < req.min_snapshot_step
+                || batch.snapshot_step > step
+            {
+                bail!(
+                    "episode batch generated at snapshot step {}, outside \
+                     [{}, {step}]",
+                    batch.snapshot_step,
+                    req.min_snapshot_step
+                );
+            }
+            for ep in &batch.episodes {
+                ep.validate()?;
+            }
+            Ok(batch)
+        })();
+        if outcome.is_err() {
+            self.conns.remove(&worker);
+        }
+        outcome
+    }
+
+    /// Assemble one step's episode range `[0, total)`: fleet slices
+    /// with stand-in re-dispatch, local generation against `params`
+    /// (the just-pushed θ_step) as the final fallback.
+    pub fn gather(
+        &mut self,
+        step: u64,
+        params: &[f32],
+        total: u64,
+    ) -> GatheredEpisodes {
+        let (mut from_fleet, mut from_local) = (0u64, 0u64);
+        let (mut redispatches, mut max_stale) = (0u64, 0u64);
+        let mut parts: BTreeMap<u64, Vec<Episode>> = BTreeMap::new();
+
+        let live = self.live_workers();
+        let slices = fleet_slices(total, &live);
+        let mut uncovered: Vec<(u64, u64)> = if slices.is_empty() {
+            vec![(0, total)]
+        } else {
+            Vec::new()
+        };
+        for (worker, start, count) in slices {
+            let mut served = false;
+            let mut attempts = 0usize;
+            let mut target = worker;
+            loop {
+                match self.request_slice(target, step, start, count) {
+                    Ok(batch) => {
+                        max_stale = max_stale.max(step - batch.snapshot_step);
+                        from_fleet += count;
+                        parts.insert(start, batch.episodes);
+                        served = true;
+                        break;
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[earl-fleet] worker {target} failed slice \
+                             {start}+{count}: {e:#}"
+                        );
+                        attempts += 1;
+                        redispatches += 1;
+                        // Purity of the episode function means any live
+                        // worker can stand in for the dead one.
+                        match self
+                            .live_workers()
+                            .into_iter()
+                            .find(|w| *w != target)
+                            .or_else(|| self.live_workers().first().copied())
+                        {
+                            Some(w) if attempts <= MAX_FLEET_ATTEMPTS => {
+                                target = w;
+                            }
+                            _ => break,
+                        }
+                    }
+                }
+            }
+            if !served {
+                uncovered.push((start, count));
+            }
+        }
+        // Local fallback: bit-identical to what a worker holding the
+        // just-pushed snapshot would have generated.
+        for (start, count) in uncovered {
+            parts.insert(
+                start,
+                host_episode_slice(
+                    params,
+                    self.seed,
+                    step,
+                    start,
+                    count,
+                    self.max_len,
+                ),
+            );
+            from_local += count;
+        }
+        let episodes: Vec<Episode> =
+            parts.into_values().flatten().collect();
+        GatheredEpisodes {
+            episodes,
+            from_fleet,
+            from_local,
+            redispatches,
+            max_snapshot_staleness: max_stale,
+        }
+    }
+}
+
+/// Coordinator of a fleet-rollout run; see the module docs for the
+/// step anatomy.
+pub struct FleetCoordinator {
+    pub cfg: FleetCfg,
+    pub model: IngestModel,
+    pub records: Vec<FleetStepRecord>,
+    /// Fleet membership + the socket protocol (the same client the
+    /// trainer's `FleetRollout` episode source drives).
+    pub client: FleetClient,
+}
+
+impl FleetCoordinator {
+    /// Serial reference deployment: every episode is generated locally
+    /// against the live parameters — no sockets, identical math.
+    pub fn local(cfg: FleetCfg) -> Result<FleetCoordinator> {
+        cfg.validate()?;
+        Ok(FleetCoordinator {
+            model: IngestModel::new(cfg.vocab),
+            records: Vec::new(),
+            client: FleetClient::new(
+                cfg.seed,
+                cfg.vocab,
+                cfg.max_len,
+                cfg.max_staleness,
+                cfg.io_timeout,
+            ),
+            cfg,
+        })
+    }
+
+    /// Fleet deployment with no members yet; admit workers with
+    /// [`Self::join`]. With an empty (or fully dead) fleet every step
+    /// falls back to local generation, so the run never stalls.
+    pub fn fleet(cfg: FleetCfg) -> Result<FleetCoordinator> {
+        Self::local(cfg)
+    }
+
+    /// Worker ids with a live control connection, in manifest order.
+    pub fn live_workers(&self) -> Vec<u64> {
+        self.client.live_workers()
+    }
+
+    /// Admit a new fleet worker; see [`FleetClient::join`].
+    pub fn join(&mut self, addr: SocketAddr) -> Result<u64> {
+        self.client.join(addr)
+    }
+
+    /// Re-admit a restarted worker; see [`FleetClient::rejoin`].
+    pub fn rejoin(&mut self, worker: u64, addr: SocketAddr) -> Result<u64> {
+        self.client.rejoin(worker, addr)
+    }
+
+    /// Run one training step; see the module docs. The model advances
+    /// only after the packed batch validated and merged — on any error
+    /// the model is untouched and the error surfaces.
+    pub fn step(&mut self) -> Result<FleetStepRecord> {
+        let step = self.model.step;
+        self.client.push_snapshot(step, &self.model.w);
+        let gathered =
+            self.client.gather(step, &self.model.w, self.cfg.episodes as u64);
+        let GatheredEpisodes {
+            episodes,
+            from_fleet,
+            from_local,
+            redispatches,
+            max_snapshot_staleness: max_stale,
+        } = gathered;
+        if episodes.len() != self.cfg.episodes {
+            bail!(
+                "assembled {} episodes for a {}-episode step",
+                episodes.len(),
+                self.cfg.episodes
+            );
+        }
+        let stats: RolloutStats = episode_stats(&episodes);
+
+        let mut batch = ExperienceBatch::new(episodes);
+        let mut advantages: Vec<f32> =
+            batch.episodes.iter().map(|e| e.reward).collect();
+        whiten(&mut advantages);
+        batch.advantages = advantages.clone();
+        let packed =
+            pack_episodes(&batch, self.cfg.episodes, self.cfg.max_len)?;
+        debug_assert_eq!(packed.clipped, 0, "bucket == max_len never clips");
+        let payload = packed_payload(&packed)?;
+
+        let rows: Vec<u32> = (0..self.cfg.episodes as u32).collect();
+        let req = IngestRequest {
+            step,
+            worker: 0,
+            vocab: self.cfg.vocab as u32,
+            hp: self.cfg.hp,
+            rows: rows.clone(),
+            advantages,
+            params: self.model.w.clone(),
+            merge_ops: Vec::new(),
+        };
+        let received = local_batch(&payload, &rows)?;
+        let report = worker_update(&req, &received)?;
+        let merged = merge_reports(
+            &[report],
+            self.cfg.vocab,
+            self.cfg.hp,
+            self.cfg.episodes as u64,
+        )?;
+        let applied = self.model.apply(&merged)?;
+
+        let rec = FleetStepRecord {
+            step: applied.step,
+            loss: applied.loss,
+            grad_norm: applied.grad_norm,
+            rows: applied.rows,
+            gen_tokens: applied.gen_tokens,
+            episodes_from_fleet: from_fleet,
+            episodes_local: from_local,
+            redispatches,
+            max_snapshot_staleness: max_stale,
+            ctx_mean: stats.mean_episode_context,
+            ctx_p95: stats.ctx_p95,
+            ctx_max: stats.ctx_max,
+            mean_reward: stats.mean_reward,
+            truncation_rate: stats.truncated as f64
+                / self.cfg.episodes as f64,
+        };
+        self.records.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Run `steps` consecutive steps, returning the last record.
+    pub fn run(&mut self, steps: u64) -> Result<FleetStepRecord> {
+        let mut last = None;
+        for _ in 0..steps {
+            last = Some(self.step()?);
+        }
+        last.ok_or_else(|| anyhow::anyhow!("run of zero steps"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::tcp::{serve_worker, WorkerOpts};
+    use std::net::TcpListener;
+
+    #[test]
+    fn cfg_validation_rejects_degenerate_shapes() {
+        assert!(FleetCfg { episodes: 0, ..FleetCfg::default() }
+            .validate()
+            .is_err());
+        assert!(FleetCfg { max_len: 4, ..FleetCfg::default() }
+            .validate()
+            .is_err());
+        assert!(FleetCfg { vocab: 8, ..FleetCfg::default() }
+            .validate()
+            .is_err());
+        FleetCfg::default().validate().unwrap();
+    }
+
+    #[test]
+    fn local_run_learns_and_is_reproducible() {
+        let cfg = FleetCfg::default();
+        let mut a = FleetCoordinator::local(cfg.clone()).unwrap();
+        let mut b = FleetCoordinator::local(cfg).unwrap();
+        for _ in 0..4 {
+            let ra = a.step().unwrap();
+            let rb = b.step().unwrap();
+            assert_eq!(ra.training_row(), rb.training_row());
+            assert!(ra.loss.is_finite() && ra.grad_norm.is_finite());
+            assert_eq!(ra.episodes_from_fleet, 0);
+            assert_eq!(ra.episodes_local, 8);
+            assert!(ra.ctx_mean > 0.0);
+        }
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.model.step, 4);
+        assert!(
+            a.model.w.iter().any(|&w| w != 0.0),
+            "four updates must move the parameters"
+        );
+    }
+
+    /// In-process fleet worker (a `serve_worker` thread with
+    /// `--rollout` semantics) vs. the serial reference: the defining
+    /// invariant of rollout-as-a-service, without process spawning.
+    #[test]
+    fn one_worker_fleet_matches_serial_bit_for_bit() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            serve_worker(
+                listener,
+                WorkerOpts { rollout: true, quiet: true, ..Default::default() },
+            )
+        });
+
+        let cfg = FleetCfg { max_staleness: 0, ..FleetCfg::default() };
+        let mut serial = FleetCoordinator::local(cfg.clone()).unwrap();
+        let mut fleet = FleetCoordinator::fleet(cfg).unwrap();
+        let id = fleet.join(addr).unwrap();
+        assert_eq!(id, 0);
+        assert_eq!(fleet.live_workers(), vec![0]);
+
+        for _ in 0..3 {
+            let rs = serial.step().unwrap();
+            let rf = fleet.step().unwrap();
+            assert_eq!(rs.training_row(), rf.training_row());
+            assert_eq!(rf.episodes_from_fleet, 8);
+            assert_eq!(rf.episodes_local, 0);
+            assert_eq!(rf.max_snapshot_staleness, 0);
+            assert_eq!(rf.redispatches, 0);
+        }
+        assert_eq!(serial.model, fleet.model);
+    }
+
+    #[test]
+    fn dead_fleet_falls_back_to_local_and_curve_is_unchanged() {
+        // Join a worker, then kill it by dropping the listener side:
+        // dial a port nobody serves. join must fail cleanly; a fleet
+        // with no members generates locally and matches serial.
+        let cfg = FleetCfg::default();
+        let mut fleet = FleetCoordinator::fleet(cfg.clone()).unwrap();
+        let dead = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = dead.local_addr().unwrap();
+        drop(dead);
+        assert!(fleet.join(addr).is_err());
+        assert!(fleet.live_workers().is_empty());
+
+        let mut serial = FleetCoordinator::local(cfg).unwrap();
+        for _ in 0..2 {
+            let rf = fleet.step().unwrap();
+            let rs = serial.step().unwrap();
+            assert_eq!(rf.training_row(), rs.training_row());
+            assert_eq!(rf.episodes_local, 8);
+        }
+        assert_eq!(fleet.model, serial.model);
+    }
+
+    #[test]
+    fn rejoin_requires_prior_admission() {
+        let mut fleet = FleetCoordinator::fleet(FleetCfg::default()).unwrap();
+        let err = fleet
+            .rejoin(7, "127.0.0.1:1".parse().unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("never admitted"), "{err:#}");
+    }
+}

@@ -4,11 +4,13 @@
 //! or through the overlapped step pipeline ([`pipeline`]).
 //!
 //! The trainer and the PJRT-backed stages need the `xla` feature; the
-//! dispatch stage (worker, plans, real payloads), batch packing, and
-//! the remote-ingestion coordinator ([`ingest`]) are available to
-//! `--no-default-features` builds.
+//! dispatch stage (worker, plans, real payloads), batch packing, the
+//! remote-ingestion coordinator ([`ingest`]), and the fleet-rollout
+//! coordinator ([`fleet`]) are available to `--no-default-features`
+//! builds.
 
 pub mod exp_prep;
+pub mod fleet;
 pub mod ingest;
 pub mod pipeline;
 #[cfg(feature = "xla")]
@@ -17,6 +19,10 @@ pub mod trainer;
 pub use exp_prep::{
     controller_item_bytes, dispatch_payload, pack_episodes, packed_payload,
     payload_item_bytes, train_bucket, wire_item_bytes, PackedBatch,
+};
+pub use fleet::{
+    FleetCfg, FleetClient, FleetCoordinator, FleetStepRecord,
+    GatheredEpisodes,
 };
 pub use ingest::{
     synthetic_step, IngestCfg, IngestCoordinator, IngestStepRecord,

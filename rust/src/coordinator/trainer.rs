@@ -44,14 +44,13 @@ use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use crate::cluster::ClusterSpec;
-use crate::config::{EnvKind, OpponentKind, TrainConfig};
+use crate::config::TrainConfig;
 use crate::coordinator::exp_prep;
 use crate::coordinator::pipeline::{
     DispatchJob, DispatchMode, DispatchResult, DispatchWorker, PipelineMode,
     UpdateJob, UpdateWorker,
 };
 use crate::dispatch::{plan_alltoall, plan_centralized, DataLayout};
-use crate::envs::{ConnectFour, Game, HeuristicOpponent, Opponent, RandomOpponent, TicTacToe};
 use crate::metrics::{MetricsLog, StepRecord};
 use crate::parallelism::{
     ModelShape, ProfilePoint, RangeTable, Replanner, ReplanSignals, Selector,
@@ -59,7 +58,9 @@ use crate::parallelism::{
 };
 use crate::rl::advantage::AdvantageCfg;
 use crate::rl::episode::{Episode, EpisodeStatus, ExperienceBatch};
-use crate::rollout::{RolloutEngine, RolloutStats};
+use crate::rollout::{
+    EpisodeSource, FleetRollout, LocalRollout, RolloutEngine, RolloutStats,
+};
 use crate::runtime::{Engine, ModelState, SnapshotBuffer, TrainBatch};
 use crate::util::threadpool::ThreadPool;
 
@@ -75,11 +76,16 @@ struct RolledOut {
     rstats: RolloutStats,
     rollout_seconds: f64,
     /// Optimizer steps the rollout policy lagged behind the freshest
-    /// parameters (0 in serial/overlapped modes).
+    /// parameters (0 in serial/overlapped modes; for fleet sourcing,
+    /// the worst observed snapshot staleness).
     param_staleness: u64,
     /// Seconds the rollout stage blocked in the bounded-staleness
     /// snapshot acquire (0 outside `OverlappedAsync`).
     snapshot_wait_seconds: f64,
+    /// Episodes served by fleet rollout workers.
+    episodes_from_fleet: u64,
+    /// Episodes generated in-process.
+    episodes_local: u64,
 }
 
 /// Rollout + ExpPrep outputs of one step, in flight between stages.
@@ -94,6 +100,8 @@ struct StagedStep {
     exp_prep_seconds: f64,
     param_staleness: u64,
     snapshot_wait_seconds: f64,
+    episodes_from_fleet: u64,
+    episodes_local: u64,
     /// Re-planner decision taken at this step's stage boundary
     /// (`""`/false/0.0 when the re-planner is disabled).
     replan_config: String,
@@ -105,20 +113,6 @@ struct StagedStep {
 /// everything for the record except the dispatch timings.
 struct PendingStep {
     rec: StepRecord,
-}
-
-fn game_factory(env: EnvKind) -> Box<dyn Fn() -> Box<dyn Game>> {
-    match env {
-        EnvKind::TicTacToe => Box::new(|| Box::new(TicTacToe::new())),
-        EnvKind::ConnectFour => Box::new(|| Box::new(ConnectFour::new())),
-    }
-}
-
-fn opponent_factory(kind: OpponentKind) -> Box<dyn Fn() -> Box<dyn Opponent>> {
-    match kind {
-        OpponentKind::Random => Box::new(|| Box::new(RandomOpponent)),
-        OpponentKind::Heuristic => Box::new(|| Box::new(HeuristicOpponent)),
-    }
 }
 
 /// The end-to-end trainer.
@@ -155,6 +149,11 @@ pub struct Trainer {
     replan_reset_budget: bool,
     /// Persistent rollout driver (decode buffers survive across steps).
     rollout: RolloutEngine,
+    /// Where the rollout stage's episodes come from: the in-process
+    /// decode loop ([`LocalRollout`], default — zero behavior change)
+    /// or the elastic worker fleet ([`FleetRollout`],
+    /// `cfg.rollout_fleet`).
+    source: Box<dyn EpisodeSource>,
     /// Shared parameter-snapshot buffer: published by whichever thread
     /// runs the update stage, read by the rollout stage.
     snapshots: Arc<SnapshotBuffer>,
@@ -206,6 +205,23 @@ impl Trainer {
         };
         let rollout_seed = cfg.seed;
         let rollout = RolloutEngine::new(cfg.rollout.clone());
+        // Episode source: local decode loop unless a rollout fleet is
+        // configured, in which case every address must admit cleanly
+        // (a worker that dies later degrades gracefully; one that was
+        // never there is a deployment error).
+        let source: Box<dyn EpisodeSource> = if cfg.rollout_fleet.is_empty() {
+            Box::new(LocalRollout)
+        } else {
+            let mut fleet = FleetRollout::new(&cfg, &engine);
+            for addr in &cfg.rollout_fleet {
+                let w = fleet
+                    .client
+                    .join(*addr)
+                    .with_context(|| format!("admitting rollout worker {addr}"))?;
+                eprintln!("[earl-fleet] rollout worker {w} joined from {addr}");
+            }
+            Box::new(fleet)
+        };
         // Shared pool: TCP send jobs of the persistent dispatch runtime.
         let dispatcher = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
         let cfg_budget = cfg.dispatch_inflight_budget;
@@ -245,6 +261,7 @@ impl Trainer {
             replan_signals: ReplanSignals::default(),
             replan_reset_budget: false,
             rollout,
+            source,
             snapshots: Arc::new(SnapshotBuffer::new()),
             dispatcher,
             rollout_seed,
@@ -252,12 +269,15 @@ impl Trainer {
         })
     }
 
-    /// Stage 1: ① selector decision, Rollout off `params`, monitor
-    /// feedback. An associated fn over split borrows so callers can pass
-    /// parameters owned by `self` (live state) or by a snapshot `Arc`.
-    /// Staleness bookkeeping (zeroed here) is filled in by the async
-    /// driver, the only schedule where it is nonzero.
+    /// Stage 1: ① selector decision, episodes off `params` through the
+    /// configured [`EpisodeSource`], monitor feedback. An associated fn
+    /// over split borrows so callers can pass parameters owned by
+    /// `self` (live state) or by a snapshot `Arc`. Pipeline-staleness
+    /// bookkeeping (zeroed here) is filled in by the async driver, the
+    /// only schedule where it is nonzero; fleet snapshot staleness
+    /// seeds `param_staleness` directly.
     fn stage_rollout(
+        source: &mut dyn EpisodeSource,
         rollout: &mut RolloutEngine,
         selector: &mut Selector<usize>,
         engine: &Engine,
@@ -271,27 +291,29 @@ impl Trainer {
         let switched = decision.switched();
 
         let t0 = Instant::now();
-        rollout.reseed(rollout_seed.wrapping_add(step_idx));
-        let make_game = game_factory(cfg.env);
-        let make_opponent = opponent_factory(cfg.opponent);
-        let (episodes, rstats) = rollout.run_batch(
+        let sourced = source.next_batch(
+            rollout,
             engine,
+            cfg,
+            rollout_seed,
+            step_idx,
             params,
-            make_game.as_ref(),
-            make_opponent.as_ref(),
         )?;
         let rollout_seconds = t0.elapsed().as_secs_f64();
 
-        // Feed the context monitor (paper: averaged context length).
-        selector.observe(rstats.mean_episode_context);
+        // Feed the context monitor (paper: averaged context length) —
+        // fleet-observed stats flow through the same channel.
+        selector.observe(sourced.stats.mean_episode_context);
 
         Ok(RolledOut {
             switched,
-            episodes,
-            rstats,
+            episodes: sourced.episodes,
+            rstats: sourced.stats,
             rollout_seconds,
-            param_staleness: 0,
+            param_staleness: sourced.snapshot_staleness,
             snapshot_wait_seconds: 0.0,
+            episodes_from_fleet: sourced.from_fleet,
+            episodes_local: sourced.local,
         })
     }
 
@@ -385,6 +407,8 @@ impl Trainer {
             exp_prep_seconds,
             param_staleness: rolled.param_staleness,
             snapshot_wait_seconds: rolled.snapshot_wait_seconds,
+            episodes_from_fleet: rolled.episodes_from_fleet,
+            episodes_local: rolled.episodes_local,
             replan_config,
             replan_switched,
             mem_watermark_frac,
@@ -402,6 +426,7 @@ impl Trainer {
         let use_snapshot = self.cfg.pipeline == PipelineMode::Overlapped;
         let rolled = match (use_snapshot, self.snapshots.front()) {
             (true, Some(snap)) => Self::stage_rollout(
+                self.source.as_mut(),
                 &mut self.rollout,
                 &mut self.selector,
                 &self.engine,
@@ -411,6 +436,7 @@ impl Trainer {
                 &snap.params,
             )?,
             _ => Self::stage_rollout(
+                self.source.as_mut(),
                 &mut self.rollout,
                 &mut self.selector,
                 &self.engine,
@@ -521,6 +547,8 @@ impl Trainer {
             step_wall_seconds: 0.0,
             param_staleness: staged.param_staleness,
             snapshot_wait_seconds: staged.snapshot_wait_seconds,
+            episodes_from_fleet: staged.episodes_from_fleet,
+            episodes_local: staged.episodes_local,
         }
     }
 
@@ -700,6 +728,7 @@ impl Trainer {
             let snapshot_wait_seconds = wait_t0.elapsed().as_secs_f64();
             let param_staleness = idx.saturating_sub(snap.step);
             let mut rolled = Self::stage_rollout(
+                self.source.as_mut(),
                 &mut self.rollout,
                 &mut self.selector,
                 &self.engine,
@@ -708,7 +737,9 @@ impl Trainer {
                 idx,
                 &snap.params,
             )?;
-            rolled.param_staleness = param_staleness;
+            // Pipeline staleness and fleet snapshot staleness measure
+            // the same lag; record the worse of the two.
+            rolled.param_staleness = rolled.param_staleness.max(param_staleness);
             rolled.snapshot_wait_seconds = snapshot_wait_seconds;
             if let Some(rec) = pending.take() {
                 self.join_async_step(updates, rec)?;

@@ -32,20 +32,20 @@ pub use ingest::{
 pub use layout::{payload_bytes_per_token, DataLayout, TensorKind};
 pub use payload::{PayloadModel, PAPER_TAB1};
 pub use plan::{
-    assign_standins, build_merge_schedule, item_bytes, merge_tree_depth,
-    plan_alltoall, plan_centralized, plan_ingest, replan_ingest_excluding,
-    satisfies, DispatchPlan, WorkerTransfer,
+    assign_standins, build_merge_schedule, fleet_slices, item_bytes,
+    merge_tree_depth, plan_alltoall, plan_centralized, plan_ingest,
+    replan_ingest_excluding, satisfies, DispatchPlan, WorkerTransfer,
 };
 pub use sim::{simulate_plan, WorkerMap};
 pub use tcp::{
     execute_plan_tcp, execute_plan_tcp_rated, serve_worker, Ack, AimdBudget,
     CommitSpec, DeadWorkers, ExecOptions, ExecOutcome, TcpReport, TcpRuntime,
-    WorkerOpts, ACK_LEN,
+    WorkerOpts, ACK_EPISODES, ACK_JOIN, ACK_LEN,
 };
 pub use wire::{
     checked_u32, contiguous_runs, decode_frame, encode_frame, fnv1a64,
-    ByteView, DispatchTensor, Fnv64, FrameHeader, IngestHp, IngestRequest,
-    MergeOp, MergeSink, ReceivedBatch, ShardDesc, StepPayload,
-    TransferPayload, WireDtype, WireTensorId, WorkerReport, FRAME_HEADER_LEN,
-    SHARD_DESC_LEN,
+    ByteView, DispatchTensor, EpisodeBatch, Fnv64, FrameHeader, IngestHp,
+    IngestRequest, MergeOp, MergeSink, ReceivedBatch, RolloutRequest,
+    ShardDesc, SnapshotFrame, StepPayload, TransferPayload, WireDtype,
+    WireTensorId, WorkerReport, FRAME_HEADER_LEN, SHARD_DESC_LEN,
 };

@@ -225,6 +225,39 @@ pub fn replan_ingest_excluding(
     DispatchPlan { phases: vec![phase], strategy: "ingest-replan" }
 }
 
+/// Partition one step's `episodes` into contiguous slices over the
+/// fleet's live workers, in the given (manifest) order: blocked as
+/// evenly as possible, earlier workers absorbing the remainder —
+/// the same shape [`crate::dispatch::layout::DataLayout::blocked`]
+/// gives row layouts. Returns `(worker, episode_start, episode_count)`
+/// triples; workers beyond the episode count get no slice. Because
+/// episode content is a pure function of the *global* episode index
+/// (see [`crate::rollout::host::host_episode`]), any re-partition of
+/// the same step — fewer workers after a death, a rejoined worker, the
+/// whole range as local fallback — yields bit-identical episodes.
+pub fn fleet_slices(
+    episodes: u64,
+    workers: &[u64],
+) -> Vec<(u64, u64, u64)> {
+    if episodes == 0 || workers.is_empty() {
+        return Vec::new();
+    }
+    let n = workers.len() as u64;
+    let base = episodes / n;
+    let rem = episodes % n;
+    let mut out = Vec::with_capacity(workers.len());
+    let mut start = 0u64;
+    for (i, &w) in workers.iter().enumerate() {
+        let count = base + u64::from((i as u64) < rem);
+        if count == 0 {
+            break;
+        }
+        out.push((w, start, count));
+        start += count;
+    }
+    out
+}
+
 /// Depth of the recursive-halving merge tree over `n` leaves — the
 /// number of pair-merge levels between a leaf report and the single
 /// root the coordinator receives (`ceil(log2 n)`; 0 for the star merge
@@ -340,6 +373,29 @@ pub fn satisfies(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_slices_tile_the_range_in_worker_order() {
+        let slices = fleet_slices(10, &[3, 7, 9]);
+        assert_eq!(slices, vec![(3, 0, 4), (7, 4, 3), (9, 7, 3)]);
+        // Remainder goes to the earliest workers; totals always tile.
+        for (eps, ws) in
+            [(1u64, vec![5u64, 6]), (7, vec![1]), (9, vec![2, 4, 8, 16])]
+        {
+            let s = fleet_slices(eps, &ws);
+            assert_eq!(s.iter().map(|(_, _, c)| c).sum::<u64>(), eps);
+            let mut next = 0;
+            for (_, start, count) in s {
+                assert_eq!(start, next);
+                assert!(count > 0);
+                next = start + count;
+            }
+        }
+        assert!(fleet_slices(0, &[1]).is_empty());
+        assert!(fleet_slices(5, &[]).is_empty());
+        // More workers than episodes: trailing workers get nothing.
+        assert_eq!(fleet_slices(2, &[1, 2, 3]).len(), 2);
+    }
 
     fn layouts() -> (DataLayout, DataLayout) {
         // 32 items: produced round-robin over 8 ExpPrep workers,

@@ -29,6 +29,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::dispatch::layout::ItemId;
+use crate::rl::episode::{Episode, EpisodeStatus, Turn};
 
 /// First field of every frame; a mismatch means the stream desynced.
 pub const WIRE_MAGIC: u32 = 0xEA71_D157;
@@ -190,11 +191,26 @@ pub enum WireTensorId {
     /// Byte-count-only transfers (benches / traffic models) with no
     /// backing tensor; drained and checksummed but never reassembled.
     Synthetic,
+    /// Control shard carrying a serialized [`SnapshotFrame`]: the
+    /// coordinator pushing bounded-stale parameters (θ + step epoch) to
+    /// a rollout-fleet worker, which installs it into its worker-side
+    /// [`crate::runtime::snapshot::StepBuffer`].
+    Snapshot,
+    /// Control shard carrying a serialized [`RolloutRequest`]: the
+    /// coordinator asking a rollout-fleet worker for a contiguous slice
+    /// of this step's episodes, generated against a snapshot no older
+    /// than the request's staleness floor.
+    RolloutRequest,
+    /// Control shard carrying a serialized
+    /// [`crate::registry::JoinRequest`]: a rollout worker's
+    /// checksum-verified handshake when joining (or rejoining) the
+    /// fleet manifest mid-run.
+    FleetJoin,
 }
 
 impl WireTensorId {
     /// Every id that can appear on the wire (tests iterate this).
-    pub const ALL: [WireTensorId; 7] = [
+    pub const ALL: [WireTensorId; 10] = [
         WireTensorId::Tokens,
         WireTensorId::Mask,
         WireTensorId::Advantages,
@@ -202,6 +218,9 @@ impl WireTensorId {
         WireTensorId::IngestCommit,
         WireTensorId::MergePartial,
         WireTensorId::Synthetic,
+        WireTensorId::Snapshot,
+        WireTensorId::RolloutRequest,
+        WireTensorId::FleetJoin,
     ];
 
     pub fn code(self) -> u16 {
@@ -213,6 +232,9 @@ impl WireTensorId {
             WireTensorId::IngestCommit => 0xFFFE,
             WireTensorId::MergePartial => 0xFFFD,
             WireTensorId::Synthetic => 0xFFFF,
+            WireTensorId::Snapshot => 0xFFFC,
+            WireTensorId::RolloutRequest => 0xFFFB,
+            WireTensorId::FleetJoin => 0xFFFA,
         }
     }
 
@@ -225,6 +247,9 @@ impl WireTensorId {
             0xFFFE => WireTensorId::IngestCommit,
             0xFFFD => WireTensorId::MergePartial,
             0xFFFF => WireTensorId::Synthetic,
+            0xFFFC => WireTensorId::Snapshot,
+            0xFFFB => WireTensorId::RolloutRequest,
+            0xFFFA => WireTensorId::FleetJoin,
             other => bail!("unknown wire tensor id {other}"),
         })
     }
@@ -1382,6 +1407,429 @@ impl WorkerReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Rollout-fleet control frames: parameter snapshot and rollout request
+// (coordinator → worker) and packed episode batch (worker →
+// coordinator, as a follow frame on the ack stream — same discipline
+// as ingest result frames)
+// ---------------------------------------------------------------------------
+
+/// First field of every episode-batch frame on the ack stream.
+pub const EPISODE_MAGIC: u32 = 0xEA71_E915;
+
+/// Fixed body prefix of a serialized [`EpisodeBatch`].
+pub const EPISODE_BATCH_FIXED_LEN: usize = 24;
+
+/// Largest episode-batch body the coordinator will allocate while
+/// decoding — guards against a corrupt length field.
+pub const MAX_EPISODE_BATCH_BYTES: usize = 1 << 26;
+
+/// Fixed body prefix of a serialized [`SnapshotFrame`].
+pub const SNAPSHOT_FIXED_LEN: usize = 12;
+
+/// Largest snapshot body a rollout worker will allocate while decoding.
+pub const MAX_SNAPSHOT_BYTES: usize = 1 << 26;
+
+/// Exact serialized length of a [`RolloutRequest`] — a pure fixed
+/// layout, so the wirespec checker extracts it like the header structs.
+pub const ROLLOUT_REQ_LEN: usize = 44;
+
+/// Bounded-stale parameters pushed to a rollout-fleet worker: θ plus
+/// the trainer step ("epoch") they were published at. The worker
+/// installs them into its local
+/// [`crate::runtime::snapshot::StepBuffer`], whose monotone-publish
+/// guard rejects regressions, and generation stamps every episode batch
+/// with the snapshot step it sampled from so the coordinator can audit
+/// staleness. Serialized into the payload of a
+/// [`WireTensorId::Snapshot`] shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotFrame {
+    /// Trainer step the parameters were published at.
+    pub step: u64,
+    /// Full parameter vector θ_step.
+    pub params: Vec<f32>,
+}
+
+impl SnapshotFrame {
+    /// Serialize: `step u64 | n_params u32 | params f32×`,
+    /// little-endian throughout.
+    // earl-analyze: deterministic
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut b = Vec::with_capacity(SNAPSHOT_FIXED_LEN + self.params.len() * 4);
+        b.extend_from_slice(&self.step.to_le_bytes());
+        b.extend_from_slice(
+            &checked_u32(self.params.len(), "n_params")?.to_le_bytes(),
+        );
+        for p in &self.params {
+            b.extend_from_slice(&p.to_le_bytes());
+        }
+        Ok(b)
+    }
+
+    // earl-analyze: deterministic
+    pub fn decode(buf: &[u8]) -> Result<SnapshotFrame> {
+        if buf.len() < SNAPSHOT_FIXED_LEN {
+            bail!(
+                "truncated snapshot frame: {} of {SNAPSHOT_FIXED_LEN}+ bytes",
+                buf.len()
+            );
+        }
+        let step = u64_le(&buf[..8]);
+        let n_params = u32_le(&buf[8..12]) as usize;
+        let need = SNAPSHOT_FIXED_LEN + n_params * 4;
+        if need > MAX_SNAPSHOT_BYTES {
+            bail!("snapshot frame claims {need} bytes");
+        }
+        if buf.len() != need {
+            bail!("snapshot frame is {} bytes, layout wants {need}", buf.len());
+        }
+        let mut params = Vec::with_capacity(n_params);
+        let mut off = SNAPSHOT_FIXED_LEN;
+        for _ in 0..n_params {
+            params.push(f32_le(&buf[off..off + 4]));
+            off += 4;
+        }
+        Ok(SnapshotFrame { step, params })
+    }
+
+    /// Wrap the serialized snapshot into a single-shard transfer payload
+    /// (tensor [`WireTensorId::Snapshot`]).
+    pub fn payload(&self) -> Result<TransferPayload> {
+        let bytes: Arc<[u8]> = self.encode()?.into();
+        let desc = ShardDesc {
+            tensor: WireTensorId::Snapshot,
+            dtype: WireDtype::F32,
+            row_start: 0,
+            rows: 1,
+            row_bytes: checked_u32(bytes.len(), "snapshot payload")?,
+        };
+        let view = ByteView::whole(bytes);
+        Ok(TransferPayload { shards: vec![(desc, view)] })
+    }
+}
+
+/// The coordinator asking a fleet worker for a contiguous slice of one
+/// step's episodes. Episode content is a pure function of
+/// `(snapshot params, seed, step, global episode index)` — see
+/// [`crate::rollout::host::host_episode`] — so any worker (or the
+/// coordinator itself, as local fallback) produces bit-identical
+/// episodes for the same slice; re-planning a dead worker's slice onto
+/// a survivor cannot disturb the learning curve. Serialized into the
+/// payload of a [`WireTensorId::RolloutRequest`] shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RolloutRequest {
+    /// Trainer step the episodes feed.
+    pub step: u64,
+    /// Staleness floor: the worker must generate against a snapshot
+    /// published at step ≥ this (`step - max_staleness`), blocking
+    /// briefly for the push to land if its buffer is behind.
+    pub min_snapshot_step: u64,
+    /// Run-level rollout seed (mixed with step and episode index).
+    pub seed: u64,
+    /// Fleet worker id the request is addressed to (echoed in the
+    /// episode batch so the coordinator can match replies).
+    pub worker: u32,
+    /// Vocabulary size episodes must stay inside.
+    pub vocab: u32,
+    /// Global index of the first episode of this slice.
+    pub episode_start: u32,
+    /// Number of consecutive episodes to generate.
+    pub episode_count: u32,
+    /// Context-length cap per episode.
+    pub max_len: u32,
+}
+
+impl RolloutRequest {
+    /// Serialize: `step u64 | min_snapshot_step u64 | seed u64 |
+    /// worker u32 | vocab u32 | episode_start u32 | episode_count u32 |
+    /// max_len u32`, little-endian throughout.
+    // earl-analyze: deterministic
+    pub fn encode(&self) -> [u8; ROLLOUT_REQ_LEN] {
+        let mut b = [0u8; ROLLOUT_REQ_LEN];
+        b[..8].copy_from_slice(&self.step.to_le_bytes());
+        b[8..16].copy_from_slice(&self.min_snapshot_step.to_le_bytes());
+        b[16..24].copy_from_slice(&self.seed.to_le_bytes());
+        b[24..28].copy_from_slice(&self.worker.to_le_bytes());
+        b[28..32].copy_from_slice(&self.vocab.to_le_bytes());
+        b[32..36].copy_from_slice(&self.episode_start.to_le_bytes());
+        b[36..40].copy_from_slice(&self.episode_count.to_le_bytes());
+        b[40..44].copy_from_slice(&self.max_len.to_le_bytes());
+        b
+    }
+
+    // earl-analyze: deterministic
+    pub fn decode(buf: &[u8]) -> Result<RolloutRequest> {
+        if buf.len() != ROLLOUT_REQ_LEN {
+            bail!(
+                "rollout request is {} bytes, layout wants {ROLLOUT_REQ_LEN}",
+                buf.len()
+            );
+        }
+        Ok(RolloutRequest {
+            step: u64_le(&buf[..8]),
+            min_snapshot_step: u64_le(&buf[8..16]),
+            seed: u64_le(&buf[16..24]),
+            worker: u32_le(&buf[24..28]),
+            vocab: u32_le(&buf[28..32]),
+            episode_start: u32_le(&buf[32..36]),
+            episode_count: u32_le(&buf[36..40]),
+            max_len: u32_le(&buf[40..44]),
+        })
+    }
+
+    /// Wrap the serialized request into a single-shard transfer payload
+    /// (tensor [`WireTensorId::RolloutRequest`]).
+    pub fn payload(&self) -> Result<TransferPayload> {
+        let bytes: Arc<[u8]> = self.encode().to_vec().into();
+        let desc = ShardDesc {
+            tensor: WireTensorId::RolloutRequest,
+            dtype: WireDtype::I32,
+            row_start: 0,
+            rows: 1,
+            row_bytes: checked_u32(bytes.len(), "rollout request payload")?,
+        };
+        let view = ByteView::whole(bytes);
+        Ok(TransferPayload { shards: vec![(desc, view)] })
+    }
+}
+
+/// A fleet worker's reply to a [`RolloutRequest`]: the packed episodes
+/// of its slice (tokens, action masks, turn bookkeeping with
+/// behavior log-probs) plus the step of the snapshot it generated
+/// against. Rides the ack stream as a checksummed follow frame — the
+/// same discipline as [`WorkerReport`] result frames.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpisodeBatch {
+    /// Echo of [`RolloutRequest::worker`].
+    pub worker: u32,
+    /// Echo of [`RolloutRequest::step`].
+    pub step: u64,
+    /// Step of the snapshot the episodes were generated against; the
+    /// coordinator audits `step - snapshot_step` against the staleness
+    /// bound.
+    pub snapshot_step: u64,
+    pub episodes: Vec<Episode>,
+}
+
+impl EpisodeBatch {
+    /// Serialize body: `worker u32 | n_episodes u32 | step u64 |
+    /// snapshot_step u64` then per episode `n_tokens u32 | n_turns u32 |
+    /// status u32 | reward f32 | tokens i32× | mask f32× | turns×`.
+    /// Each turn is `prompt_start u32 | response_start u32 |
+    /// response_end u32 | action_code u32 | behavior_logprob f32` where
+    /// `action_code` is 0 for no action, else `action + 1`.
+    fn encode_body(&self) -> Result<Vec<u8>> {
+        let mut b = Vec::with_capacity(
+            EPISODE_BATCH_FIXED_LEN
+                + self
+                    .episodes
+                    .iter()
+                    .map(|e| 16 + e.tokens.len() * 8 + e.turns.len() * 20)
+                    .sum::<usize>(),
+        );
+        b.extend_from_slice(&self.worker.to_le_bytes());
+        b.extend_from_slice(
+            &checked_u32(self.episodes.len(), "n_episodes")?.to_le_bytes(),
+        );
+        b.extend_from_slice(&self.step.to_le_bytes());
+        b.extend_from_slice(&self.snapshot_step.to_le_bytes());
+        for ep in &self.episodes {
+            if ep.tokens.len() != ep.action_mask.len() {
+                bail!(
+                    "episode has {} tokens but {} mask entries",
+                    ep.tokens.len(),
+                    ep.action_mask.len()
+                );
+            }
+            b.extend_from_slice(
+                &checked_u32(ep.tokens.len(), "n_tokens")?.to_le_bytes(),
+            );
+            b.extend_from_slice(
+                &checked_u32(ep.turns.len(), "n_turns")?.to_le_bytes(),
+            );
+            let status: u32 = match ep.status {
+                EpisodeStatus::Finished => 0,
+                EpisodeStatus::Illegal => 1,
+                EpisodeStatus::Truncated => 2,
+            };
+            b.extend_from_slice(&status.to_le_bytes());
+            b.extend_from_slice(&ep.reward.to_le_bytes());
+            for t in &ep.tokens {
+                b.extend_from_slice(&t.to_le_bytes());
+            }
+            for m in &ep.action_mask {
+                b.extend_from_slice(&m.to_le_bytes());
+            }
+            for t in &ep.turns {
+                b.extend_from_slice(
+                    &checked_u32(t.prompt_start, "prompt_start")?.to_le_bytes(),
+                );
+                b.extend_from_slice(
+                    &checked_u32(t.response_start, "response_start")?.to_le_bytes(),
+                );
+                b.extend_from_slice(
+                    &checked_u32(t.response_end, "response_end")?.to_le_bytes(),
+                );
+                let action_code = match t.action {
+                    None => 0u32,
+                    Some(a) => checked_u32(a, "action")?
+                        .checked_add(1)
+                        .ok_or_else(|| anyhow::anyhow!("action overflows u32"))?,
+                };
+                b.extend_from_slice(&action_code.to_le_bytes());
+                b.extend_from_slice(&t.behavior_logprob.to_le_bytes());
+            }
+        }
+        Ok(b)
+    }
+
+    /// Serialize the full frame:
+    /// `EPISODE_MAGIC u32 | body_len u32 | body | fnv1a64(body) u64`.
+    // earl-analyze: deterministic
+    pub fn encode_frame(&self) -> Result<Vec<u8>> {
+        let body = self.encode_body()?;
+        let mut out = Vec::with_capacity(8 + body.len() + 8);
+        out.extend_from_slice(&EPISODE_MAGIC.to_le_bytes());
+        out.extend_from_slice(&checked_u32(body.len(), "episode body")?.to_le_bytes());
+        let sum = fnv1a64(&body);
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&sum.to_le_bytes());
+        Ok(out)
+    }
+
+    fn decode_body(body: &[u8]) -> Result<EpisodeBatch> {
+        if body.len() < EPISODE_BATCH_FIXED_LEN {
+            bail!(
+                "truncated episode batch: {} of {EPISODE_BATCH_FIXED_LEN}+ bytes",
+                body.len()
+            );
+        }
+        if body.len() > MAX_EPISODE_BATCH_BYTES {
+            bail!("episode batch claims {} bytes", body.len());
+        }
+        let u32_at = |o: usize| u32_le(&body[o..o + 4]);
+        let u64_at = |o: usize| u64_le(&body[o..o + 8]);
+        let worker = u32_at(0);
+        let n_episodes = u32_at(4) as usize;
+        let step = u64_at(8);
+        let snapshot_step = u64_at(16);
+        if n_episodes > MAX_FRAME_SHARDS as usize {
+            bail!("episode batch claims {n_episodes} episodes");
+        }
+        let take_u32 = |off: &mut usize| -> Result<u32> {
+            if *off + 4 > body.len() {
+                bail!("truncated episode batch at offset {off}");
+            }
+            let v = u32_le(&body[*off..*off + 4]);
+            *off += 4;
+            Ok(v)
+        };
+        let take_f32 = |off: &mut usize| -> Result<f32> {
+            if *off + 4 > body.len() {
+                bail!("truncated episode batch at offset {off}");
+            }
+            let v = f32_le(&body[*off..*off + 4]);
+            *off += 4;
+            Ok(v)
+        };
+        let mut off = EPISODE_BATCH_FIXED_LEN;
+        let mut episodes = Vec::with_capacity(n_episodes);
+        for _ in 0..n_episodes {
+            let n_tokens = take_u32(&mut off)? as usize;
+            let n_turns = take_u32(&mut off)? as usize;
+            let status = match take_u32(&mut off)? {
+                0 => EpisodeStatus::Finished,
+                1 => EpisodeStatus::Illegal,
+                2 => EpisodeStatus::Truncated,
+                other => bail!("unknown episode status code {other}"),
+            };
+            let reward = take_f32(&mut off)?;
+            // The whole episode's remaining bytes, bounds-checked before
+            // any allocation.
+            let need = n_tokens * 8 + n_turns * 20;
+            if off + need > body.len() {
+                bail!(
+                    "episode batch is {} bytes, episode at {off} wants {need}",
+                    body.len()
+                );
+            }
+            let mut tokens = Vec::with_capacity(n_tokens);
+            for _ in 0..n_tokens {
+                tokens.push(u32_at(off) as i32);
+                off += 4;
+            }
+            let mut action_mask = Vec::with_capacity(n_tokens);
+            for _ in 0..n_tokens {
+                action_mask.push(f32_le(&body[off..off + 4]));
+                off += 4;
+            }
+            let mut turns = Vec::with_capacity(n_turns);
+            for _ in 0..n_turns {
+                let prompt_start = u32_at(off) as usize;
+                let response_start = u32_at(off + 4) as usize;
+                let response_end = u32_at(off + 8) as usize;
+                let action_code = u32_at(off + 12);
+                let behavior_logprob = f32_le(&body[off + 16..off + 20]);
+                off += 20;
+                turns.push(Turn {
+                    prompt_start,
+                    response_start,
+                    response_end,
+                    action: match action_code {
+                        0 => None,
+                        a => Some(a as usize - 1),
+                    },
+                    behavior_logprob,
+                });
+            }
+            episodes.push(Episode { tokens, action_mask, turns, status, reward });
+        }
+        if off != body.len() {
+            bail!("episode batch is {} bytes, layout wants {off}", body.len());
+        }
+        Ok(EpisodeBatch { worker, step, snapshot_step, episodes })
+    }
+
+    /// Checksum-verify and decode an episode-batch *body* against the
+    /// transmitted checksum — shared by [`Self::decode_frame`] and the
+    /// streaming follow-frame path, which consumes the magic/length
+    /// while framing the stream.
+    pub fn decode_checked(body: &[u8], want: u64) -> Result<EpisodeBatch> {
+        let got = fnv1a64(body);
+        if got != want {
+            bail!("episode frame checksum mismatch: {want:#x} vs {got:#x}");
+        }
+        Self::decode_body(body)
+    }
+
+    /// Parse and checksum-verify a standalone episode-batch frame.
+    /// Truncation, a bad magic, a hostile length, and corruption are
+    /// all rejected.
+    // earl-analyze: deterministic
+    pub fn decode_frame(buf: &[u8]) -> Result<EpisodeBatch> {
+        if buf.len() < 16 {
+            bail!("truncated episode frame: {} of 16+ bytes", buf.len());
+        }
+        let magic = u32_le(&buf[..4]);
+        if magic != EPISODE_MAGIC {
+            bail!("bad episode magic {magic:#x} (ack stream desynced?)");
+        }
+        let body_len = u32_le(&buf[4..8]) as usize;
+        if body_len > MAX_EPISODE_BATCH_BYTES {
+            bail!("episode frame claims {body_len}-byte body");
+        }
+        if buf.len() != 8 + body_len + 8 {
+            bail!(
+                "episode frame is {} bytes, header wants {}",
+                buf.len(),
+                8 + body_len + 8
+            );
+        }
+        let want = u64_le(&buf[8 + body_len..]);
+        Self::decode_checked(&buf[8..8 + body_len], want)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1641,6 +2089,138 @@ mod tests {
         let mut huge = frame;
         huge[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(WorkerReport::decode_frame(&huge).is_err());
+    }
+
+    fn sample_snapshot() -> SnapshotFrame {
+        SnapshotFrame { step: 9, params: vec![0.0, -0.5, 0.25, 1.0] }
+    }
+
+    fn sample_rollout_request() -> RolloutRequest {
+        RolloutRequest {
+            step: 9,
+            min_snapshot_step: 8,
+            seed: 0xDEAD_BEEF,
+            worker: 2,
+            vocab: 64,
+            episode_start: 12,
+            episode_count: 4,
+            max_len: 96,
+        }
+    }
+
+    fn sample_episode_batch() -> EpisodeBatch {
+        use crate::rl::episode::{Episode, EpisodeStatus, Turn};
+        EpisodeBatch {
+            worker: 2,
+            step: 9,
+            snapshot_step: 8,
+            episodes: vec![
+                Episode {
+                    tokens: vec![1, 5, 3, 40, 17, 10, 2],
+                    action_mask: vec![0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0],
+                    turns: vec![Turn {
+                        prompt_start: 1,
+                        response_start: 3,
+                        response_end: 5,
+                        action: Some(1),
+                        behavior_logprob: -1.5,
+                    }],
+                    status: EpisodeStatus::Finished,
+                    reward: 1.0,
+                },
+                Episode {
+                    tokens: vec![1, 5, 33, 13],
+                    action_mask: vec![0.0, 0.0, 1.0, 0.0],
+                    turns: vec![Turn {
+                        prompt_start: 1,
+                        response_start: 2,
+                        response_end: 3,
+                        action: None,
+                        behavior_logprob: -0.25,
+                    }],
+                    status: EpisodeStatus::Illegal,
+                    reward: -1.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn snapshot_frame_roundtrips_on_the_wire() {
+        let snap = sample_snapshot();
+        let wire = snap.encode().unwrap();
+        assert_eq!(SnapshotFrame::decode(&wire).unwrap(), snap);
+        assert!(SnapshotFrame::decode(&wire[..wire.len() - 1]).is_err());
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(SnapshotFrame::decode(&padded).is_err());
+        // Hostile param count must not allocate.
+        let mut huge = wire;
+        huge[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(SnapshotFrame::decode(&huge).is_err());
+        // The payload rides a normal control shard.
+        let tp = snap.payload().unwrap();
+        assert_eq!(tp.shards[0].0.tensor, WireTensorId::Snapshot);
+        let (_, shards) = decode_frame(&encode_frame(0, 5, &tp).unwrap()).unwrap();
+        assert_eq!(SnapshotFrame::decode(&shards[0].1).unwrap(), snap);
+    }
+
+    #[test]
+    fn rollout_request_roundtrips_on_the_wire() {
+        let req = sample_rollout_request();
+        let wire = req.encode();
+        assert_eq!(wire.len(), ROLLOUT_REQ_LEN);
+        assert_eq!(RolloutRequest::decode(&wire).unwrap(), req);
+        assert!(RolloutRequest::decode(&wire[..wire.len() - 1]).is_err());
+        let tp = req.payload().unwrap();
+        assert_eq!(tp.shards[0].0.tensor, WireTensorId::RolloutRequest);
+        let (_, shards) = decode_frame(&encode_frame(0, 5, &tp).unwrap()).unwrap();
+        assert_eq!(RolloutRequest::decode(&shards[0].1).unwrap(), req);
+    }
+
+    #[test]
+    fn episode_batch_roundtrips_byte_identical() {
+        let batch = sample_episode_batch();
+        let frame = batch.encode_frame().unwrap();
+        assert_eq!(frame, sample_episode_batch().encode_frame().unwrap());
+        assert_eq!(EpisodeBatch::decode_frame(&frame).unwrap(), batch);
+    }
+
+    #[test]
+    fn episode_frame_rejects_corruption_and_truncation() {
+        let frame = sample_episode_batch().encode_frame().unwrap();
+        for cut in [0, 7, 15, frame.len() - 1] {
+            assert!(EpisodeBatch::decode_frame(&frame[..cut]).is_err());
+        }
+        // Flip one body byte → checksum failure.
+        let mut corrupt = frame.clone();
+        corrupt[20] ^= 0x40;
+        assert!(EpisodeBatch::decode_frame(&corrupt).is_err());
+        // Bad magic.
+        let mut bad = frame.clone();
+        bad[0] ^= 0xFF;
+        assert!(EpisodeBatch::decode_frame(&bad).is_err());
+        // Hostile length field must not allocate.
+        let mut huge = frame;
+        huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(EpisodeBatch::decode_frame(&huge).is_err());
+    }
+
+    #[test]
+    fn episode_body_rejects_hostile_counts_and_trailing_bytes() {
+        let batch = sample_episode_batch();
+        let body = batch.encode_body().unwrap();
+        // Hostile per-episode token count inside a checksum-valid body:
+        // rebuild the frame around the tampered body so only the walk
+        // rejects it.
+        let mut hostile = body.clone();
+        hostile[EPISODE_BATCH_FIXED_LEN..EPISODE_BATCH_FIXED_LEN + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(EpisodeBatch::decode_checked(&hostile, fnv1a64(&hostile)).is_err());
+        // Trailing bytes after the last episode are rejected.
+        let mut padded = body;
+        padded.extend_from_slice(&[0u8; 4]);
+        assert!(EpisodeBatch::decode_checked(&padded, fnv1a64(&padded)).is_err());
     }
 
     #[test]

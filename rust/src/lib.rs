@@ -33,8 +33,8 @@ pub mod dispatch;
 pub mod envs;
 pub mod metrics;
 pub mod parallelism;
+pub mod registry;
 pub mod rl;
-#[cfg(feature = "xla")]
 pub mod rollout;
 pub mod runtime;
 pub mod testkit;

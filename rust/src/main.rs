@@ -8,10 +8,13 @@
 //!   worker         serve the dispatcher's receive side (multi-process mode)
 //!   ingest-demo    distributed update steps on `earl worker --ingest`
 //!                  processes (or the serial reference without --connect)
+//!   fleet-demo     rollout-as-a-service training on `earl worker
+//!                  --rollout` processes (or the serial reference
+//!                  without --connect)
 //!
 //! `train` and `profile` need the `xla` feature (on by default); the
-//! dispatcher commands — `worker` and `ingest-demo` included — work in
-//! `--no-default-features` builds too.
+//! dispatcher commands — `worker`, `ingest-demo`, and `fleet-demo`
+//! included — work in `--no-default-features` builds too.
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
@@ -25,7 +28,9 @@ use anyhow::{bail, Context, Result};
 use earl::cluster::ClusterSpec;
 #[cfg(feature = "xla")]
 use earl::config::{EnvKind, OpponentKind, TrainConfig};
-use earl::coordinator::{IngestCfg, IngestCoordinator};
+use earl::coordinator::{
+    FleetCfg, FleetCoordinator, IngestCfg, IngestCoordinator,
+};
 #[cfg(feature = "xla")]
 use earl::coordinator::{DispatchMode, PipelineMode, Trainer};
 use earl::dispatch::{
@@ -100,6 +105,7 @@ fn main() -> Result<()> {
         "dispatch-bench" => cmd_dispatch_bench(&args),
         "worker" => cmd_worker(&args),
         "ingest-demo" => cmd_ingest_demo(&args),
+        "fleet-demo" => cmd_fleet_demo(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -135,6 +141,8 @@ fn print_help() {
              --replan-responses N (memory-model batch dim, default 64)\n\
              --replan-force-step N (force a switch at decision N)\n\
              --connect A1,A2,... (remote `earl worker` addresses for tcp)\n\
+             --rollout-fleet A1,A2,... (source episodes from an\n\
+               `earl worker --rollout` fleet instead of the local loop)\n\
              --lr F --kl F --ent F --gamma F --seed N\n\
              --artifacts DIR --metrics FILE --checkpoint FILE --config FILE\n\
            profile          measure real per-bucket decode TGS table\n\
@@ -149,13 +157,19 @@ fn print_help() {
              --listen ADDR (default 127.0.0.1:0; bound address printed)\n\
              --nic BYTES_PER_SEC --dump DIR (write received frames)\n\
              --ingest (consume shards into worker-local update steps)\n\
-             --quiet\n\
+             --rollout (serve snapshot-fed episode generation to a\n\
+               fleet coordinator) --quiet\n\
            ingest-demo      distributed update steps over real sockets\n\
              --connect A1,A2,... (ingesting workers; omit = serial\n\
                reference) --workers N (serial-mode worker split)\n\
              --steps N --rows N --seq N --vocab N\n\
              --lr F --l2 F --seed N --budget BYTES --adaptive\n\
-             --agg-unaware"
+             --agg-unaware\n\
+           fleet-demo       rollout-as-a-service training over sockets\n\
+             --connect A1,A2,... (`earl worker --rollout` addresses;\n\
+               omit = serial reference, identical curve)\n\
+             --steps N --episodes N --max-len N --vocab N\n\
+             --lr F --l2 F --seed N --max-staleness N"
     );
 }
 
@@ -193,6 +207,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
             nic_bytes_per_sec: nic,
             dump_dir: args.get("dump").map(PathBuf::from),
             ingest: args.has("ingest"),
+            rollout: args.has("rollout"),
             quiet: args.has("quiet"),
         },
     )
@@ -279,6 +294,93 @@ fn cmd_ingest_demo(args: &Args) -> Result<()> {
     println!(
         "final params: step={} sum={:.6} (identical across serial and \
          multi-process runs of the same seed)",
+        coord.model.step, sum
+    );
+    Ok(())
+}
+
+/// Rollout-as-a-service training: push θ snapshots to `earl worker
+/// --rollout` processes, scatter episode-slice requests across the
+/// fleet, and train on the assembled batch — or generate every episode
+/// locally when `--connect` is absent. Episode content is a pure
+/// function of (θ, seed, step, episode index), so both modes print
+/// identical training rows for the same seed at `--max-staleness 0`.
+fn cmd_fleet_demo(args: &Args) -> Result<()> {
+    let mut cfg = FleetCfg::default();
+    if let Some(n) = args.get_usize("episodes")? {
+        cfg.episodes = n;
+    }
+    if let Some(n) = args.get_usize("max-len")? {
+        cfg.max_len = n;
+    }
+    if let Some(n) = args.get_usize("vocab")? {
+        cfg.vocab = n;
+    }
+    if let Some(n) = args.get_usize("seed")? {
+        cfg.seed = n as u64;
+    }
+    if let Some(n) = args.get_usize("max-staleness")? {
+        cfg.max_staleness = n as u64;
+    }
+    if let Some(v) = args.get("lr") {
+        cfg.hp = IngestHp { lr: v.parse().context("--lr")?, ..cfg.hp };
+    }
+    if let Some(v) = args.get("l2") {
+        cfg.hp = IngestHp { l2: v.parse().context("--l2")?, ..cfg.hp };
+    }
+    let steps = args.get_usize("steps")?.unwrap_or(5) as u64;
+
+    let mut coord = match args.get("connect") {
+        Some(v) => {
+            let addrs = parse_connect(v)?;
+            let mut coord = FleetCoordinator::fleet(cfg)?;
+            for addr in &addrs {
+                let worker = coord.join(*addr)?;
+                println!("joined rollout worker {worker} at {addr}");
+            }
+            println!(
+                "== fleet rollout: {} workers, {} episodes/step, \
+                 max-staleness {} ==",
+                addrs.len(),
+                coord.cfg.episodes,
+                coord.cfg.max_staleness
+            );
+            coord
+        }
+        None => {
+            let coord = FleetCoordinator::local(cfg)?;
+            println!(
+                "== serial rollout reference: {} episodes/step ==",
+                coord.cfg.episodes
+            );
+            coord
+        }
+    };
+    println!(
+        "{:>5} {:>12} {:>12} {:>6} {:>8} {:>6} {:>6} {:>6}",
+        "step", "loss", "grad_norm", "rows", "gen_tok", "fleet", "local",
+        "stale"
+    );
+    for _ in 0..steps {
+        let r = coord.step()?;
+        println!(
+            "{:>5} {:>12.6} {:>12.6} {:>6} {:>8} {:>6} {:>6} {:>6}",
+            r.step,
+            r.loss,
+            r.grad_norm,
+            r.rows,
+            r.gen_tokens,
+            r.episodes_from_fleet,
+            r.episodes_local,
+            r.max_snapshot_staleness,
+        );
+    }
+    // Same fingerprint discipline as ingest-demo: serial and fleet runs
+    // of one seed must land on the same θ.
+    let sum: f64 = coord.model.w.iter().map(|&w| w as f64).sum();
+    println!(
+        "final params: step={} sum={:.6} (identical across serial and \
+         fleet runs of the same seed at max-staleness 0)",
         coord.model.step, sum
     );
     Ok(())
@@ -377,6 +479,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(n) = args.get_usize("replan-force-step")? {
         cfg.replan_force_step = Some(n as u64);
+    }
+    if let Some(v) = args.get("rollout-fleet") {
+        cfg.rollout_fleet = parse_connect(v)?;
     }
 
     let dispatch_mode = match args.get("dispatch") {

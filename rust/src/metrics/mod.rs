@@ -89,6 +89,12 @@ pub struct StepRecord {
     /// Seconds the rollout stage blocked in the bounded-staleness
     /// snapshot acquire (async pipeline only).
     pub snapshot_wait_seconds: f64,
+    /// Episodes served by fleet rollout workers this step
+    /// (rollout-as-a-service; 0 with the local episode source).
+    pub episodes_from_fleet: u64,
+    /// Episodes generated in-process this step (the local source, or
+    /// the fleet path's bit-identical fallback).
+    pub episodes_local: u64,
 }
 
 impl StepRecord {
@@ -143,6 +149,11 @@ impl StepRecord {
                 "snapshot_wait_seconds",
                 Json::num(self.snapshot_wait_seconds),
             ),
+            (
+                "episodes_from_fleet",
+                Json::num(self.episodes_from_fleet as f64),
+            ),
+            ("episodes_local", Json::num(self.episodes_local as f64)),
         ])
     }
 
@@ -293,25 +304,41 @@ impl MetricsLog {
         slice.iter().map(|r| r.mean_return).sum::<f64>() / slice.len() as f64
     }
 
-    /// One-line summary of the re-planner's run: switch count, peak
-    /// memory watermark, and the final per-stage shapes. `None` when no
-    /// recorded step carried re-planner state.
+    /// One-line run summary of the adaptive machinery: the re-planner's
+    /// switch count, peak memory watermark, and final per-stage shapes,
+    /// plus — when any step sourced episodes from the rollout fleet —
+    /// the fleet-vs-local episode split. `None` when no recorded step
+    /// carried re-planner state or fleet episodes.
     pub fn replan_summary(&self) -> Option<String> {
         let planned: Vec<&StepRecord> = self
             .records
             .iter()
             .filter(|r| !r.replan_config.is_empty())
             .collect();
-        let last = planned.last()?;
-        let switches = planned.iter().filter(|r| r.replan_switched).count();
-        let peak = planned
-            .iter()
-            .map(|r| r.mem_watermark_frac)
-            .fold(0.0, f64::max);
-        Some(format!(
-            "replan: {} switch(es), peak watermark {:.2}, final {}",
-            switches, peak, last.replan_config
-        ))
+        let replan_part = planned.last().map(|last| {
+            let switches = planned.iter().filter(|r| r.replan_switched).count();
+            let peak = planned
+                .iter()
+                .map(|r| r.mem_watermark_frac)
+                .fold(0.0, f64::max);
+            format!(
+                "replan: {} switch(es), peak watermark {:.2}, final {}",
+                switches, peak, last.replan_config
+            )
+        });
+        let fleet: u64 =
+            self.records.iter().map(|r| r.episodes_from_fleet).sum();
+        let fleet_part = (fleet > 0).then(|| {
+            let local: u64 =
+                self.records.iter().map(|r| r.episodes_local).sum();
+            format!("episodes: {fleet} from fleet, {local} local")
+        });
+        match (replan_part, fleet_part) {
+            (Some(r), Some(f)) => Some(format!("{r}; {f}")),
+            (Some(r), None) => Some(r),
+            (None, Some(f)) => Some(f),
+            (None, None) => None,
+        }
     }
 
     /// Training throughput in steps/sec over recorded wall step times,
@@ -365,6 +392,8 @@ mod tests {
             step_wall_seconds: 2.0,
             param_staleness: 0,
             snapshot_wait_seconds: 0.0,
+            episodes_from_fleet: 0,
+            episodes_local: 0,
         }
     }
 
@@ -396,6 +425,8 @@ mod tests {
         assert_eq!(j.at(&["replan_switched"]).as_bool(), Some(false));
         assert_eq!(j.at(&["ctx_p95"]).as_f64(), Some(180.0));
         assert_eq!(j.at(&["mem_watermark_frac"]).as_f64(), Some(0.4));
+        assert_eq!(j.at(&["episodes_from_fleet"]).as_usize(), Some(0));
+        assert_eq!(j.at(&["episodes_local"]).as_usize(), Some(0));
     }
 
     fn worker_metrics(rows: u64, tokens_per_row: f64) -> WorkerStepMetrics {
@@ -515,6 +546,29 @@ mod tests {
         assert!(s.contains("1 switch(es)"), "{s}");
         assert!(s.contains("0.62"), "{s}");
         assert!(s.contains("final TP8xPP1xDP1/TP8xPP4xDP1"), "{s}");
+        // No fleet episodes recorded → no episode-sourcing clause.
+        assert!(!s.contains("from fleet"), "{s}");
+    }
+
+    #[test]
+    fn replan_summary_reports_fleet_episode_split() {
+        let mut log = MetricsLog::memory();
+        // Fleet sourcing without the re-planner still gets a summary.
+        let mut a = rec(0, 0.0);
+        a.replan_config = String::new();
+        a.episodes_from_fleet = 6;
+        a.episodes_local = 2;
+        log.record(a).unwrap();
+        let s = log.replan_summary().unwrap();
+        assert_eq!(s, "episodes: 6 from fleet, 2 local");
+
+        // With the re-planner on, both clauses join on one line.
+        let mut b = rec(1, 0.0);
+        b.episodes_from_fleet = 8;
+        log.record(b).unwrap();
+        let s = log.replan_summary().unwrap();
+        assert!(s.contains("replan: "), "{s}");
+        assert!(s.contains("episodes: 14 from fleet, 2 local"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Deterministic worker manifest — the fleet's membership record.
+//!
+//! The manifest is the coordinator's single source of truth for which
+//! rollout workers exist, where they listen, and how many times each
+//! has (re)joined. Entries live in a `BTreeMap` keyed by logical worker
+//! id, so iteration order — and therefore the serialized manifest, its
+//! checksum, and every episode-slice plan derived from it — is a pure
+//! function of the membership *set*, independent of join order or
+//! wall-clock arrival. Two coordinators that admit the same workers in
+//! any order hold byte-identical manifests (proptested in
+//! `tests/proptests.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::dispatch::wire::{checked_u32, fnv1a64, u32_le, u64_le};
+
+/// First field of a serialized [`Manifest`].
+pub const MANIFEST_MAGIC: u32 = 0xEA71_3A21;
+
+/// Largest serialized manifest a decoder will allocate for.
+pub const MAX_MANIFEST_BYTES: usize = 1 << 20;
+
+/// One admitted rollout worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerEntry {
+    /// Logical worker id — assigned once, stable across rejoins.
+    pub worker: u64,
+    /// Address the worker's `serve_worker` loop listens on.
+    pub addr: String,
+    /// 0 on first join; bumped on every rejoin of the same id, so a
+    /// stale connection from a previous incarnation can be told apart
+    /// from the live one.
+    pub generation: u64,
+}
+
+/// Deterministic-order membership record of the rollout fleet.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Manifest {
+    entries: BTreeMap<u64, WorkerEntry>,
+}
+
+impl Manifest {
+    pub fn new() -> Manifest {
+        Manifest::default()
+    }
+
+    /// Admit `worker` at `addr`. First join gets generation 0; a rejoin
+    /// of a known id (same or new address — restarts rebind) bumps its
+    /// generation. Returns the admitted generation.
+    pub fn join(&mut self, worker: u64, addr: &str) -> u64 {
+        let generation = match self.entries.get(&worker) {
+            Some(prev) => prev.generation + 1,
+            None => 0,
+        };
+        self.entries.insert(
+            worker,
+            WorkerEntry { worker, addr: addr.to_string(), generation },
+        );
+        generation
+    }
+
+    /// Drop `worker` from the membership (death, not rejoin — the
+    /// generation counter restarts at 0 if it ever joins again under
+    /// the same id). Returns the removed entry, if any.
+    pub fn leave(&mut self, worker: u64) -> Option<WorkerEntry> {
+        self.entries.remove(&worker)
+    }
+
+    pub fn get(&self, worker: u64) -> Option<&WorkerEntry> {
+        self.entries.get(&worker)
+    }
+
+    /// Members in ascending worker-id order — the order every
+    /// episode-slice plan walks.
+    pub fn workers(&self) -> impl Iterator<Item = &WorkerEntry> {
+        self.entries.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize: `MANIFEST_MAGIC u32 | n u32` then per entry (ascending
+    /// worker id) `worker u64 | generation u64 | addr_len u32 | addr
+    /// utf8`, little-endian throughout. Deterministic by construction:
+    /// the `BTreeMap` fixes the entry order.
+    // earl-analyze: deterministic
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut b = Vec::with_capacity(8 + self.entries.len() * 24);
+        b.extend_from_slice(&MANIFEST_MAGIC.to_le_bytes());
+        b.extend_from_slice(
+            &checked_u32(self.entries.len(), "manifest entries")?.to_le_bytes(),
+        );
+        for e in self.entries.values() {
+            b.extend_from_slice(&e.worker.to_le_bytes());
+            b.extend_from_slice(&e.generation.to_le_bytes());
+            b.extend_from_slice(
+                &checked_u32(e.addr.len(), "manifest addr")?.to_le_bytes(),
+            );
+            b.extend_from_slice(e.addr.as_bytes());
+        }
+        Ok(b)
+    }
+
+    // earl-analyze: deterministic
+    pub fn decode(buf: &[u8]) -> Result<Manifest> {
+        if buf.len() < 8 {
+            bail!("truncated manifest: {} of 8+ bytes", buf.len());
+        }
+        if buf.len() > MAX_MANIFEST_BYTES {
+            bail!("manifest claims {} bytes", buf.len());
+        }
+        let magic = u32_le(&buf[..4]);
+        if magic != MANIFEST_MAGIC {
+            bail!("bad manifest magic {magic:#x}");
+        }
+        let n = u32_le(&buf[4..8]) as usize;
+        let mut entries = BTreeMap::new();
+        let mut off = 8;
+        for _ in 0..n {
+            if off + 20 > buf.len() {
+                bail!("truncated manifest entry at offset {off}");
+            }
+            let worker = u64_le(&buf[off..off + 8]);
+            let generation = u64_le(&buf[off + 8..off + 16]);
+            let addr_len = u32_le(&buf[off + 16..off + 20]) as usize;
+            off += 20;
+            if off + addr_len > buf.len() {
+                bail!("truncated manifest addr at offset {off}");
+            }
+            let addr = std::str::from_utf8(&buf[off..off + addr_len])
+                .map_err(|_| anyhow::anyhow!("manifest addr is not utf-8"))?
+                .to_string();
+            off += addr_len;
+            if entries.insert(worker, WorkerEntry { worker, addr, generation }).is_some()
+            {
+                bail!("manifest repeats worker {worker}");
+            }
+        }
+        if off != buf.len() {
+            bail!("manifest is {} bytes, layout wants {off}", buf.len());
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// FNV-1a 64 over the serialized manifest — the fleet-membership
+    /// fingerprint logged each time the membership changes.
+    pub fn checksum(&self) -> Result<u64> {
+        Ok(fnv1a64(&self.encode()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_order_does_not_change_the_bytes() {
+        let mut a = Manifest::new();
+        a.join(2, "127.0.0.1:7072");
+        a.join(0, "127.0.0.1:7070");
+        a.join(1, "127.0.0.1:7071");
+        let mut b = Manifest::new();
+        b.join(0, "127.0.0.1:7070");
+        b.join(1, "127.0.0.1:7071");
+        b.join(2, "127.0.0.1:7072");
+        assert_eq!(a.encode().unwrap(), b.encode().unwrap());
+        assert_eq!(a.checksum().unwrap(), b.checksum().unwrap());
+    }
+
+    #[test]
+    fn rejoin_bumps_generation_and_changes_the_fingerprint() {
+        let mut m = Manifest::new();
+        assert_eq!(m.join(0, "127.0.0.1:7070"), 0);
+        let first = m.checksum().unwrap();
+        assert_eq!(m.join(0, "127.0.0.1:7099"), 1);
+        assert_eq!(m.get(0).unwrap().generation, 1);
+        assert_eq!(m.get(0).unwrap().addr, "127.0.0.1:7099");
+        assert_ne!(m.checksum().unwrap(), first);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_rejects_corruption() {
+        let mut m = Manifest::new();
+        m.join(3, "127.0.0.1:7073");
+        m.join(1, "127.0.0.1:7071");
+        let wire = m.encode().unwrap();
+        assert_eq!(Manifest::decode(&wire).unwrap(), m);
+        assert!(Manifest::decode(&wire[..wire.len() - 1]).is_err());
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(Manifest::decode(&padded).is_err());
+        let mut bad = wire;
+        bad[0] ^= 0xFF;
+        assert!(Manifest::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn workers_iterate_ascending() {
+        let mut m = Manifest::new();
+        m.join(5, "e");
+        m.join(1, "a");
+        m.join(3, "c");
+        let ids: Vec<u64> = m.workers().map(|e| e.worker).collect();
+        assert_eq!(ids, vec![1, 3, 5]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Fleet registry: deterministic worker manifest + checksum-verified
+//! join handshake.
+//!
+//! Rollout-as-a-service needs membership to be *elastic* (workers join,
+//! die, and rejoin mid-run) without ever becoming *ambiguous*: every
+//! episode-slice plan is derived from the manifest, so membership must
+//! be a deterministic function of who was admitted — see
+//! [`manifest::Manifest`]. Admission itself is guarded by a protocol
+//! handshake: joiner and coordinator exchange [`protocol_checksum`]
+//! fingerprints of the wire format they were compiled against, so a
+//! version-skewed worker is rejected at the door instead of feeding
+//! undecodable frames into the middle of a training step.
+
+pub mod manifest;
+
+use anyhow::{bail, Result};
+
+use crate::dispatch::wire::{
+    checked_u32, fnv1a64, u32_le, u64_le, ByteView, Fnv64, ShardDesc,
+    TransferPayload, WireDtype, WireTensorId, EPISODE_BATCH_FIXED_LEN,
+    EPISODE_MAGIC, FRAME_HEADER_LEN, RESULT_MAGIC, ROLLOUT_REQ_LEN, SHARD_DESC_LEN,
+    SNAPSHOT_FIXED_LEN, WIRE_MAGIC,
+};
+
+pub use manifest::{Manifest, WorkerEntry, MANIFEST_MAGIC};
+
+/// First field of every join-ack frame on the ack stream.
+pub const JOIN_MAGIC: u32 = 0xEA71_0901;
+
+/// Exact serialized length of a [`JoinRequest`] / [`JoinAck`] body.
+pub const JOIN_REQ_LEN: usize = 24;
+
+/// Fingerprint of the wire protocol this build speaks: FNV-1a 64 over
+/// the framing constants and the full control-id table. Joiner and
+/// coordinator exchange it during the handshake; any disagreement —
+/// renumbered tensor id, resized fixed layout, new frame magic — is a
+/// deterministic mismatch, so a worker built against a different wire
+/// format can never be admitted to the fleet.
+pub fn protocol_checksum() -> u64 {
+    let mut f = Fnv64::new();
+    f.update(&WIRE_MAGIC.to_le_bytes());
+    f.update(&(FRAME_HEADER_LEN as u64).to_le_bytes());
+    f.update(&(SHARD_DESC_LEN as u64).to_le_bytes());
+    f.update(&RESULT_MAGIC.to_le_bytes());
+    f.update(&EPISODE_MAGIC.to_le_bytes());
+    f.update(&(EPISODE_BATCH_FIXED_LEN as u64).to_le_bytes());
+    f.update(&(ROLLOUT_REQ_LEN as u64).to_le_bytes());
+    f.update(&(SNAPSHOT_FIXED_LEN as u64).to_le_bytes());
+    f.update(&JOIN_MAGIC.to_le_bytes());
+    for id in WireTensorId::ALL {
+        f.update(&id.code().to_le_bytes());
+    }
+    f.finish()
+}
+
+/// The coordinator's half of the join handshake, serialized into the
+/// payload of a [`WireTensorId::FleetJoin`] shard: the logical worker
+/// id and generation being admitted, plus the coordinator's
+/// [`protocol_checksum`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JoinRequest {
+    pub worker: u64,
+    pub generation: u64,
+    pub protocol: u64,
+}
+
+impl JoinRequest {
+    /// Serialize: `worker u64 | generation u64 | protocol u64`,
+    /// little-endian throughout.
+    // earl-analyze: deterministic
+    pub fn encode(&self) -> [u8; JOIN_REQ_LEN] {
+        let mut b = [0u8; JOIN_REQ_LEN];
+        b[..8].copy_from_slice(&self.worker.to_le_bytes());
+        b[8..16].copy_from_slice(&self.generation.to_le_bytes());
+        b[16..24].copy_from_slice(&self.protocol.to_le_bytes());
+        b
+    }
+
+    // earl-analyze: deterministic
+    pub fn decode(buf: &[u8]) -> Result<JoinRequest> {
+        if buf.len() != JOIN_REQ_LEN {
+            bail!("join request is {} bytes, layout wants {JOIN_REQ_LEN}", buf.len());
+        }
+        Ok(JoinRequest {
+            worker: u64_le(&buf[..8]),
+            generation: u64_le(&buf[8..16]),
+            protocol: u64_le(&buf[16..24]),
+        })
+    }
+
+    /// Wrap the serialized request into a single-shard transfer payload
+    /// (tensor [`WireTensorId::FleetJoin`]).
+    pub fn payload(&self) -> Result<TransferPayload> {
+        let bytes: std::sync::Arc<[u8]> = self.encode().to_vec().into();
+        let desc = ShardDesc {
+            tensor: WireTensorId::FleetJoin,
+            dtype: WireDtype::I32,
+            row_start: 0,
+            rows: 1,
+            row_bytes: checked_u32(bytes.len(), "join request payload")?,
+        };
+        let view = ByteView::whole(bytes);
+        Ok(TransferPayload { shards: vec![(desc, view)] })
+    }
+}
+
+/// The worker's half of the handshake: it echoes the admitted id and
+/// generation and answers with its *own* [`protocol_checksum`]. Rides
+/// the ack stream as a checksummed follow frame
+/// (`JOIN_MAGIC u32 | body_len u32 | body | fnv1a64(body) u64`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JoinAck {
+    pub worker: u64,
+    pub generation: u64,
+    pub protocol: u64,
+}
+
+impl JoinAck {
+    // earl-analyze: deterministic
+    pub fn encode_frame(&self) -> Vec<u8> {
+        let mut body = [0u8; JOIN_REQ_LEN];
+        body[..8].copy_from_slice(&self.worker.to_le_bytes());
+        body[8..16].copy_from_slice(&self.generation.to_le_bytes());
+        body[16..24].copy_from_slice(&self.protocol.to_le_bytes());
+        let mut out = Vec::with_capacity(8 + JOIN_REQ_LEN + 8);
+        out.extend_from_slice(&JOIN_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(JOIN_REQ_LEN as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        out
+    }
+
+    /// Checksum-verify and decode a join-ack *body* against the
+    /// transmitted checksum — the streaming follow-frame path consumes
+    /// the magic/length while framing the stream.
+    pub fn decode_checked(body: &[u8], want: u64) -> Result<JoinAck> {
+        let got = fnv1a64(body);
+        if got != want {
+            bail!("join ack checksum mismatch: {want:#x} vs {got:#x}");
+        }
+        if body.len() != JOIN_REQ_LEN {
+            bail!("join ack is {} bytes, layout wants {JOIN_REQ_LEN}", body.len());
+        }
+        Ok(JoinAck {
+            worker: u64_le(&body[..8]),
+            generation: u64_le(&body[8..16]),
+            protocol: u64_le(&body[16..24]),
+        })
+    }
+
+    /// Parse and checksum-verify a standalone join-ack frame.
+    // earl-analyze: deterministic
+    pub fn decode_frame(buf: &[u8]) -> Result<JoinAck> {
+        if buf.len() < 16 {
+            bail!("truncated join ack: {} of 16+ bytes", buf.len());
+        }
+        let magic = u32_le(&buf[..4]);
+        if magic != JOIN_MAGIC {
+            bail!("bad join ack magic {magic:#x}");
+        }
+        let body_len = u32_le(&buf[4..8]) as usize;
+        if body_len != JOIN_REQ_LEN {
+            bail!("join ack claims {body_len}-byte body");
+        }
+        if buf.len() != 8 + body_len + 8 {
+            bail!(
+                "join ack is {} bytes, header wants {}",
+                buf.len(),
+                8 + body_len + 8
+            );
+        }
+        let want = u64_le(&buf[8 + body_len..]);
+        Self::decode_checked(&buf[8..8 + body_len], want)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_checksum_is_stable_within_a_build() {
+        assert_eq!(protocol_checksum(), protocol_checksum());
+        assert_ne!(protocol_checksum(), 0);
+    }
+
+    #[test]
+    fn join_request_roundtrips() {
+        let req =
+            JoinRequest { worker: 3, generation: 2, protocol: protocol_checksum() };
+        let wire = req.encode();
+        assert_eq!(JoinRequest::decode(&wire).unwrap(), req);
+        assert!(JoinRequest::decode(&wire[..wire.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn join_ack_roundtrips_and_rejects_corruption() {
+        let ack = JoinAck { worker: 3, generation: 2, protocol: protocol_checksum() };
+        let frame = ack.encode_frame();
+        assert_eq!(JoinAck::decode_frame(&frame).unwrap(), ack);
+        for cut in [0, 7, 15, frame.len() - 1] {
+            assert!(JoinAck::decode_frame(&frame[..cut]).is_err());
+        }
+        let mut corrupt = frame.clone();
+        corrupt[10] ^= 0x04;
+        assert!(JoinAck::decode_frame(&corrupt).is_err());
+        let mut bad = frame;
+        bad[0] ^= 0xFF;
+        assert!(JoinAck::decode_frame(&bad).is_err());
+    }
+}

@@ -1,32 +1,39 @@
-//! Rollout engine: batched multi-turn agent↔environment interaction over
-//! the PJRT policy, with per-turn / per-episode context accounting —
-//! the stage whose context growth drives everything EARL optimizes.
+//! Rollout: episode generation as a *service* behind the
+//! [`source::EpisodeSource`] seam.
 //!
-//! The engine plays `batch` episodes in lockstep. Each agent turn appends
-//! `ENV <board> SEP AGENT` to every live context, then decodes token by
-//! token (one batched `logits` execution per decode position — there is
-//! no KV cache in the AOT artifacts, so each position is a fresh
-//! full-sequence forward, exactly the workload shape whose cost explodes
-//! with context and motivates bucket/parallelism switching).
+//! The stage whose context growth drives everything EARL optimizes is
+//! split into three layers:
 //!
-//! Context-limit behaviour is the experiment knob of paper Fig. 1:
-//! * [`LimitPolicy::Hard`] — truncate the episode when the context hits
-//!   a fixed budget (the baseline that collapses);
-//! * [`LimitPolicy::Buckets`] — let the live bucket (selected by the
-//!   Parallelism Selector) grow up to the largest compiled bucket.
+//! * [`engine`] (xla) — the batched multi-turn PJRT decode loop, the
+//!   coordinator-local generator ([`engine::RolloutEngine`]);
+//! * [`host`] — the XLA-free deterministic episode generator a fleet
+//!   worker runs against its installed parameter snapshot
+//!   ([`host::RolloutHost`]): episode content is a pure function of
+//!   `(θ, seed, step, episode index)`, so any worker — or the
+//!   coordinator as local fallback — produces bit-identical episodes
+//!   for the same slice;
+//! * [`source`] (xla) — the `EpisodeSource` trait the trainer consumes:
+//!   [`source::LocalRollout`] (current behavior, bit-identical) or
+//!   [`source::FleetRollout`] (snapshot-fed elastic worker fleet).
+//!
+//! Shared, XLA-free vocabulary lives here: the context-limit policy,
+//! the rollout configuration, and the per-batch statistics record that
+//! feeds the parallelism re-planner.
 
+pub mod host;
+#[cfg(feature = "xla")]
+pub mod engine;
 pub mod sampler;
+#[cfg(feature = "xla")]
+pub mod source;
 
+#[cfg(feature = "xla")]
+pub use engine::RolloutEngine;
 pub use sampler::{model_logprob, sample_token, SamplerCfg};
+#[cfg(feature = "xla")]
+pub use source::{EpisodeSource, FleetRollout, LocalRollout, SourcedEpisodes};
 
-use anyhow::{anyhow, Result};
-use xla::Literal;
-
-use crate::envs::{Game, Opponent, Outcome, Side};
-use crate::rl::episode::{Episode, EpisodeStatus, Turn};
-use crate::runtime::{Engine, TokenBatch};
-use crate::tokenizer as tok;
-use crate::util::rng::Pcg64;
+use crate::rl::episode::{Episode, EpisodeStatus};
 
 /// Context-limit policy for the rollout stage.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -86,29 +93,6 @@ pub struct RolloutStats {
     pub max_bucket_used: usize,
 }
 
-/// One live episode slot in the lockstep batch.
-struct Slot {
-    game: Box<dyn Game>,
-    tokens: Vec<i32>,
-    mask: Vec<f32>,
-    turns: Vec<Turn>,
-    status: Option<EpisodeStatus>,
-    reward: f32,
-    /// Generation state within the current turn.
-    response_start: usize,
-    prompt_start: usize,
-    generating: bool,
-    /// Behavior-policy logprob accumulated over the current turn's
-    /// generated tokens (recorded into [`Turn::behavior_logprob`]).
-    turn_logprob: f32,
-}
-
-impl Slot {
-    fn live(&self) -> bool {
-        self.status.is_none()
-    }
-}
-
 /// The engine was asked to roll out a zero-episode batch. Typed (rather
 /// than a stringly `anyhow!`) so callers can downcast, distinguish
 /// "nothing to aggregate" from a real engine failure, and skip the step
@@ -125,368 +109,48 @@ impl std::fmt::Display for EmptyBatchError {
 
 impl std::error::Error for EmptyBatchError {}
 
-/// Batched rollout driver.
-///
-/// Constructed **once** and reused across training steps (the paper's
-/// steady-state rollout service): it owns no per-step state beyond the
-/// RNG (reset via [`RolloutEngine::reseed`]) and a persistent decode
-/// input buffer, so the per-step hot path performs no engine rebuilds
-/// and no decode-buffer allocations after warmup.
-pub struct RolloutEngine {
-    cfg: RolloutCfg,
-    rng: Pcg64,
-    /// Reusable decode-input buffer; `Vec` capacity is retained across
-    /// positions, batches, and steps (allocation-free steady state).
-    scratch: TokenBatch,
-}
-
-impl RolloutEngine {
-    pub fn new(cfg: RolloutCfg) -> Self {
-        let rng = Pcg64::new(cfg.seed);
-        RolloutEngine { cfg, rng, scratch: TokenBatch::new(0, 0) }
+/// Episode-level statistics of a batch that arrived over the wire
+/// (fleet path): everything the re-planner's length signals need —
+/// context mean/p95/max, turn stats, outcome counts — computed from the
+/// episodes alone. Decode-timing fields (`decode_seconds`, `tgs`,
+/// `max_bucket_used`) stay zero: the fleet coordinator never observed
+/// the decode loop, and fabricating throughput from wall-clock gaps
+/// would feed the re-planner noise.
+pub fn episode_stats(episodes: &[Episode]) -> RolloutStats {
+    let mut stats = RolloutStats { episodes: episodes.len(), ..Default::default() };
+    if episodes.is_empty() {
+        return stats;
     }
-
-    /// Reset the sampling RNG for a new step (replaces per-step engine
-    /// reconstruction).
-    pub fn reseed(&mut self, seed: u64) {
-        self.rng = Pcg64::new(seed);
-    }
-
-    pub fn cfg(&self) -> &RolloutCfg {
-        &self.cfg
-    }
-
-    /// Effective context budget: the hard limit, or the largest compiled
-    /// bucket under the dynamic policy.
-    pub fn context_budget(&self, engine: &Engine) -> usize {
-        match self.cfg.limit {
-            LimitPolicy::Hard(n) => n.min(engine.manifest.max_bucket()),
-            LimitPolicy::Buckets => engine.manifest.max_bucket(),
-        }
-    }
-
-    /// Clear and size the persistent decode buffer for one forward.
-    fn reset_scratch(&mut self, batch: usize, seq: usize) {
-        self.scratch.data.clear();
-        self.scratch.data.resize(batch * seq, 0);
-        self.scratch.batch = batch;
-        self.scratch.seq = seq;
-    }
-
-    /// Play one batch of episodes with the given policy parameters
-    /// (live `ModelState` params or a pipeline [`crate::runtime::ParamSnapshot`]).
-    ///
-    /// `make_game`/`make_opponent` are factories so every slot gets fresh
-    /// state; the opponent RNG is forked per slot for determinism under
-    /// any scheduling.
-    pub fn run_batch(
-        &mut self,
-        engine: &Engine,
-        params: &[Literal],
-        make_game: &dyn Fn() -> Box<dyn Game>,
-        make_opponent: &dyn Fn() -> Box<dyn Opponent>,
-    ) -> Result<(Vec<Episode>, RolloutStats)> {
-        let batch = engine.manifest.batch;
-        if batch == 0 {
-            return Err(EmptyBatchError.into());
-        }
-        let budget = self.context_budget(engine);
-
-        let mut opponents: Vec<Box<dyn Opponent>> =
-            (0..batch).map(|_| make_opponent()).collect();
-        let mut opp_rngs: Vec<Pcg64> =
-            (0..batch).map(|i| self.rng.fork(i as u64)).collect();
-
-        let mut slots: Vec<Slot> = (0..batch)
-            .map(|_| {
-                let mut game = make_game();
-                game.reset();
-                Slot {
-                    game,
-                    tokens: vec![tok::BOS],
-                    mask: vec![0.0],
-                    turns: Vec::new(),
-                    status: None,
-                    reward: 0.0,
-                    response_start: 0,
-                    prompt_start: 0,
-                    generating: false,
-                    turn_logprob: 0.0,
-                }
-            })
-            .collect();
-
-        let mut stats = RolloutStats::default();
-        let decode_t0 = std::time::Instant::now();
-
-        loop {
-            // 1. Open a new agent turn on every live, non-generating slot.
-            for (i, slot) in slots.iter_mut().enumerate() {
-                if !slot.live() || slot.generating {
-                    continue;
-                }
-                debug_assert_eq!(slot.game.to_move(), Side::X);
-                Self::open_turn(slot, budget, self.cfg.fail_reward)?;
-                if slot.live() {
-                    slot.generating = true;
-                }
-                let _ = i;
-            }
-
-            if slots.iter().all(|s| !s.live()) {
-                break;
-            }
-
-            // 2. Batched decode: one logits() execution per position until
-            //    every generating slot has produced its move.
-            while slots.iter().any(|s| s.live() && s.generating) {
-                let max_len = slots
-                    .iter()
-                    .filter(|s| s.live() && s.generating)
-                    .map(|s| s.tokens.len())
-                    .max()
-                    .unwrap();
-                // Next position must fit the bucket.
-                let bucket = match engine.manifest.bucket_for(max_len) {
-                    Some(b) => b,
-                    None => {
-                        // Shouldn't happen: budget <= max bucket, and slots
-                        // at budget are truncated in step 3.
-                        engine.manifest.max_bucket()
-                    }
-                };
-                stats.max_bucket_used = stats.max_bucket_used.max(bucket);
-
-                self.reset_scratch(batch, bucket);
-                for (i, slot) in slots.iter().enumerate() {
-                    if slot.live() && slot.generating {
-                        let n = slot.tokens.len().min(bucket);
-                        self.scratch.row_mut(i)[..n]
-                            .copy_from_slice(&slot.tokens[..n]);
-                    }
-                }
-                let logits = engine.logits(params, &self.scratch)?;
-                let vocab = engine.manifest.model.vocab;
-
-                for (i, slot) in slots.iter_mut().enumerate() {
-                    if !(slot.live() && slot.generating) {
-                        continue;
-                    }
-                    let pos = slot.tokens.len() - 1;
-                    let base = (i * bucket + pos) * vocab;
-                    let row = &logits[base..base + vocab];
-
-                    let legal = slot.game.legal_actions();
-                    let resp_len = slot.tokens.len() - slot.response_start;
-                    let must_move =
-                        resp_len + 1 >= self.cfg.max_response_tokens
-                            || slot.tokens.len() + 2 > budget;
-                    let token = sample_token(
-                        row,
-                        &legal,
-                        self.cfg.sampler,
-                        must_move,
-                        &mut self.rng,
-                    );
-                    slot.tokens.push(token);
-                    slot.mask.push(1.0);
-                    // Behavior-policy record for the off-policy
-                    // correction of the stale-rollout pipeline.
-                    slot.turn_logprob += sampler::model_logprob(row, token);
-                    stats.generated_tokens += 1;
-
-                    if let Some(action) = tok::decode_move(token) {
-                        slot.generating = false;
-                        Self::close_turn(slot, Some(action));
-                        if slot.game.is_legal(action) {
-                            slot.game.play(action);
-                            Self::resolve_after_agent_move(
-                                slot,
-                                &mut *opponents[i],
-                                &mut opp_rngs[i],
-                            );
-                        } else {
-                            Self::finish(
-                                slot,
-                                EpisodeStatus::Illegal,
-                                self.cfg.fail_reward,
-                            );
-                        }
-                    } else if !tok::is_think(token) {
-                        // Unconstrained sampling picked a non-action token.
-                        slot.generating = false;
-                        Self::close_turn(slot, None);
-                        Self::finish(
-                            slot,
-                            EpisodeStatus::Illegal,
-                            self.cfg.fail_reward,
-                        );
-                    } else if slot.tokens.len() >= budget {
-                        // Ran out of context mid-reasoning: the truncated
-                        // "low-quality data" of paper Fig. 1b.
-                        slot.generating = false;
-                        Self::close_turn(slot, None);
-                        Self::finish(
-                            slot,
-                            EpisodeStatus::Truncated,
-                            self.cfg.fail_reward,
-                        );
-                    }
-                }
-            }
-        }
-
-        stats.decode_seconds = decode_t0.elapsed().as_secs_f64();
-        stats.tgs = if stats.decode_seconds > 0.0 {
-            stats.generated_tokens as f64 / stats.decode_seconds
-        } else {
-            0.0
-        };
-
-        // 3. Package episodes. A slot without a terminal status is a
-        // driver bug (the decode loop above only exits once every slot
-        // finished) — surface it as an error, never a panic.
-        let episodes: Vec<Episode> = slots
-            .into_iter()
-            .enumerate()
-            .map(|(i, s)| {
-                let status = s.status.ok_or_else(|| {
-                    anyhow!("episode slot {i} never terminated (no status)")
-                })?;
-                Ok(Episode {
-                    tokens: s.tokens,
-                    action_mask: s.mask,
-                    turns: s.turns,
-                    status,
-                    reward: s.reward,
-                })
-            })
-            .collect::<Result<_>>()?;
-
-        stats.episodes = episodes.len();
-        // Guarded even though the `batch == 0` bail above makes an empty
-        // batch unreachable here: stats must never fabricate NaN means or
-        // a zero ctx_p95 — the re-planner consumes these as real signals.
-        if !episodes.is_empty() {
-            stats.mean_reward =
-                episodes.iter().map(|e| e.reward as f64).sum::<f64>()
-                    / episodes.len() as f64;
-            let ctx_samples: Vec<f64> =
-                episodes.iter().map(|e| e.context_len() as f64).collect();
-            stats.mean_episode_context =
-                ctx_samples.iter().sum::<f64>() / episodes.len() as f64;
-            stats.ctx_p95 =
-                crate::util::stats::percentile(&ctx_samples, 95.0)
-                    .unwrap_or(stats.mean_episode_context);
-            stats.ctx_max = ctx_samples.iter().copied().fold(0.0, f64::max);
-        }
-        let all_turns: Vec<&Turn> =
-            episodes.iter().flat_map(|e| e.turns.iter()).collect();
-        if !all_turns.is_empty() {
-            stats.mean_turn_context = all_turns
-                .iter()
-                .map(|t| t.context_len() as f64)
-                .sum::<f64>()
-                / all_turns.len() as f64;
-            stats.mean_response_len = all_turns
-                .iter()
-                .map(|t| t.response_len() as f64)
-                .sum::<f64>()
-                / all_turns.len() as f64;
-        }
-        stats.truncated = episodes
+    stats.mean_reward = episodes.iter().map(|e| e.reward as f64).sum::<f64>()
+        / episodes.len() as f64;
+    let ctx_samples: Vec<f64> =
+        episodes.iter().map(|e| e.context_len() as f64).collect();
+    stats.mean_episode_context =
+        ctx_samples.iter().sum::<f64>() / episodes.len() as f64;
+    stats.ctx_p95 = crate::util::stats::percentile(&ctx_samples, 95.0)
+        .unwrap_or(stats.mean_episode_context);
+    stats.ctx_max = ctx_samples.iter().copied().fold(0.0, f64::max);
+    let n_turns: usize = episodes.iter().map(|e| e.n_turns()).sum();
+    if n_turns > 0 {
+        stats.mean_turn_context = episodes
             .iter()
-            .filter(|e| e.status == EpisodeStatus::Truncated)
-            .count();
-        stats.illegal = episodes
+            .flat_map(|e| e.turns.iter())
+            .map(|t| t.context_len() as f64)
+            .sum::<f64>()
+            / n_turns as f64;
+        stats.mean_response_len = episodes
             .iter()
-            .filter(|e| e.status == EpisodeStatus::Illegal)
-            .count();
-
-        for e in &episodes {
-            debug_assert!(e.validate().is_ok(), "{:?}", e.validate());
-        }
-        Ok((episodes, stats))
+            .flat_map(|e| e.turns.iter())
+            .map(|t| t.response_len() as f64)
+            .sum::<f64>()
+            / n_turns as f64;
     }
-
-    /// Append `ENV <board> SEP AGENT` and mark the turn open. If even the
-    /// prompt does not fit the budget, truncate immediately.
-    fn open_turn(slot: &mut Slot, budget: usize, fail_reward: f32) -> Result<()> {
-        let prompt_start = slot.tokens.len();
-        let mut prompt = vec![tok::ENV];
-        slot.game.board_tokens(&mut prompt);
-        prompt.push(tok::SEP);
-        prompt.push(tok::AGENT);
-
-        // Prompt + at least one generated token must fit.
-        if slot.tokens.len() + prompt.len() + 1 > budget {
-            slot.status = Some(EpisodeStatus::Truncated);
-            slot.reward = fail_reward;
-            return Ok(());
-        }
-        slot.tokens.extend_from_slice(&prompt);
-        slot.mask.extend(std::iter::repeat(0.0).take(prompt.len()));
-        slot.prompt_start = prompt_start;
-        slot.response_start = slot.tokens.len();
-        slot.turn_logprob = 0.0;
-        Ok(())
-    }
-
-    fn close_turn(slot: &mut Slot, action: Option<usize>) {
-        slot.turns.push(Turn {
-            prompt_start: slot.prompt_start,
-            response_start: slot.response_start,
-            response_end: slot.tokens.len(),
-            action,
-            behavior_logprob: slot.turn_logprob,
-        });
-    }
-
-    /// After a legal agent move: check terminal, else let the opponent
-    /// reply, check terminal again.
-    fn resolve_after_agent_move(
-        slot: &mut Slot,
-        opponent: &mut dyn Opponent,
-        rng: &mut Pcg64,
-    ) {
-        if let Some(out) = slot.game.outcome() {
-            Self::finish_game(slot, out);
-            return;
-        }
-        let action = opponent.choose(slot.game.as_ref(), rng);
-        slot.game.play(action);
-        if let Some(out) = slot.game.outcome() {
-            Self::finish_game(slot, out);
-        }
-    }
-
-    fn finish_game(slot: &mut Slot, out: Outcome) {
-        let result_tok = match out {
-            Outcome::XWins => tok::RES_WIN,
-            Outcome::OWins => tok::RES_LOSE,
-            Outcome::Draw => tok::RES_DRAW,
-        };
-        slot.tokens.push(result_tok);
-        slot.mask.push(0.0);
-        slot.tokens.push(tok::EOS);
-        slot.mask.push(0.0);
-        slot.status = Some(EpisodeStatus::Finished);
-        slot.reward = out.agent_reward();
-    }
-
-    fn finish(slot: &mut Slot, status: EpisodeStatus, reward: f32) {
-        let result_tok = match status {
-            EpisodeStatus::Illegal => tok::RES_ILLEGAL,
-            EpisodeStatus::Truncated => tok::RES_TRUNCATED,
-            EpisodeStatus::Finished => unreachable!(),
-        };
-        if slot.tokens.len() < usize::MAX {
-            slot.tokens.push(result_tok);
-            slot.mask.push(0.0);
-        }
-        slot.status = Some(status);
-        slot.reward = reward;
-    }
+    stats.truncated =
+        episodes.iter().filter(|e| e.status == EpisodeStatus::Truncated).count();
+    stats.illegal =
+        episodes.iter().filter(|e| e.status == EpisodeStatus::Illegal).count();
+    stats.generated_tokens = episodes.iter().map(|e| e.generated_tokens()).sum();
+    stats
 }
 
 #[cfg(test)]
@@ -502,27 +166,10 @@ mod tests {
     }
 
     #[test]
-    fn scratch_buffer_is_zeroed_and_reuses_capacity() {
-        let mut re = RolloutEngine::new(RolloutCfg::default());
-        re.reset_scratch(4, 8);
-        assert_eq!(re.scratch.data.len(), 32);
-        re.scratch.row_mut(1)[0] = 7;
-        let cap = re.scratch.data.capacity();
-        re.reset_scratch(4, 8);
-        assert_eq!(re.scratch.row(1)[0], 0, "scratch must be zeroed");
-        assert_eq!(re.scratch.data.capacity(), cap, "no realloc at same size");
-        re.reset_scratch(2, 4);
-        assert_eq!(re.scratch.data.len(), 8);
-        assert!(re.scratch.data.capacity() >= cap, "capacity retained");
-    }
-
-    #[test]
-    fn reseed_resets_sampling_stream() {
-        let mut a = RolloutEngine::new(RolloutCfg::default());
-        let mut b = RolloutEngine::new(RolloutCfg::default());
-        b.reseed(99);
-        b.reseed(0);
-        // Same seed -> identical RNG draws regardless of reseed history.
-        assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+    fn episode_stats_empty_is_all_zero() {
+        let s = episode_stats(&[]);
+        assert_eq!(s.episodes, 0);
+        assert_eq!(s.mean_reward, 0.0);
+        assert_eq!(s.ctx_p95, 0.0);
     }
 }

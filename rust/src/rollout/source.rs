@@ -1,0 +1,190 @@
+//! The [`EpisodeSource`] seam: where the trainer's rollout stage gets
+//! its episodes from.
+//!
+//! The trainer consumes episodes through this trait and nothing else,
+//! so the rollout path can be inverted without touching the training
+//! loop:
+//!
+//! * [`LocalRollout`] — the in-process PJRT decode loop
+//!   ([`RolloutEngine::run_batch`]), bit-identical to the pre-seam
+//!   behavior and the default;
+//! * [`FleetRollout`] — rollout-as-a-service: push a θ snapshot to an
+//!   elastic fleet of `earl worker --rollout` processes, scatter the
+//!   step's episode range across them, and assemble the replies
+//!   (driving the same [`FleetClient`] as the XLA-free
+//!   [`crate::coordinator::fleet::FleetCoordinator`]). Workers may die
+//!   and rejoin mid-run; episode purity makes the curve invariant.
+//!
+//! Both report per-step source counters and batch statistics, so the
+//! parallelism re-planner's length signals ([`RolloutStats`]) are fed
+//! identically no matter where the episodes came from.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::config::{EnvKind, OpponentKind, TrainConfig};
+use crate::coordinator::fleet::{FleetClient, FLEET_IO_TIMEOUT};
+use crate::envs::{
+    ConnectFour, Game, HeuristicOpponent, Opponent, RandomOpponent, TicTacToe,
+};
+use crate::rl::episode::Episode;
+use crate::rollout::engine::RolloutEngine;
+use crate::rollout::host::MIN_EPISODE_LEN;
+use crate::rollout::{episode_stats, LimitPolicy, RolloutStats};
+use crate::runtime::Engine;
+use crate::tokenizer as tok;
+
+/// One step's sourced episodes plus provenance counters.
+pub struct SourcedEpisodes {
+    pub episodes: Vec<Episode>,
+    pub stats: RolloutStats,
+    /// Episodes served by fleet rollout workers.
+    pub from_fleet: u64,
+    /// Episodes generated in-process (local source, or fleet fallback).
+    pub local: u64,
+    /// Worst observed `step − snapshot_step` across the step's fleet
+    /// batches (0 for local generation).
+    pub snapshot_staleness: u64,
+}
+
+/// Episode provider of the trainer's rollout stage.
+pub trait EpisodeSource: Send {
+    /// Short provenance tag for logs ("local" / "fleet").
+    fn label(&self) -> &'static str;
+
+    /// Produce one step's episodes against policy parameters `params`.
+    fn next_batch(
+        &mut self,
+        rollout: &mut RolloutEngine,
+        engine: &Engine,
+        cfg: &TrainConfig,
+        rollout_seed: u64,
+        step: u64,
+        params: &[Literal],
+    ) -> Result<SourcedEpisodes>;
+}
+
+pub fn game_factory(env: EnvKind) -> Box<dyn Fn() -> Box<dyn Game>> {
+    match env {
+        EnvKind::TicTacToe => Box::new(|| Box::new(TicTacToe::new())),
+        EnvKind::ConnectFour => Box::new(|| Box::new(ConnectFour::new())),
+    }
+}
+
+pub fn opponent_factory(kind: OpponentKind) -> Box<dyn Fn() -> Box<dyn Opponent>> {
+    match kind {
+        OpponentKind::Random => Box::new(|| Box::new(RandomOpponent)),
+        OpponentKind::Heuristic => Box::new(|| Box::new(HeuristicOpponent)),
+    }
+}
+
+/// The default source: the in-process PJRT decode loop. Behavior is
+/// bit-identical to the pre-seam trainer (same reseed, same factories,
+/// same `run_batch` call).
+pub struct LocalRollout;
+
+impl EpisodeSource for LocalRollout {
+    fn label(&self) -> &'static str {
+        "local"
+    }
+
+    fn next_batch(
+        &mut self,
+        rollout: &mut RolloutEngine,
+        engine: &Engine,
+        cfg: &TrainConfig,
+        rollout_seed: u64,
+        step: u64,
+        params: &[Literal],
+    ) -> Result<SourcedEpisodes> {
+        rollout.reseed(rollout_seed.wrapping_add(step));
+        let make_game = game_factory(cfg.env);
+        let make_opponent = opponent_factory(cfg.opponent);
+        let (episodes, stats) = rollout.run_batch(
+            engine,
+            params,
+            make_game.as_ref(),
+            make_opponent.as_ref(),
+        )?;
+        Ok(SourcedEpisodes {
+            local: episodes.len() as u64,
+            episodes,
+            stats,
+            from_fleet: 0,
+            snapshot_staleness: 0,
+        })
+    }
+}
+
+/// Rollout-as-a-service: episodes come from the snapshot-fed worker
+/// fleet, with bit-identical local fallback when the fleet shrinks to
+/// nothing. Decode-timing stats (`tgs`, `decode_seconds`) stay zero —
+/// the coordinator never observed the generation loop.
+pub struct FleetRollout {
+    /// Membership + the socket protocol — the exact client the XLA-free
+    /// fleet coordinator drives, so the two deployments cannot drift.
+    pub client: FleetClient,
+}
+
+impl FleetRollout {
+    /// Derive the fleet request shape from the run config: requests
+    /// advertise the tokenizer vocabulary and the trainer's context
+    /// budget, and reuse `cfg.max_staleness` as the snapshot-staleness
+    /// floor (0 = every episode on this step's snapshot).
+    pub fn new(cfg: &TrainConfig, engine: &Engine) -> FleetRollout {
+        let budget = match cfg.rollout.limit {
+            LimitPolicy::Hard(n) => n.min(engine.manifest.max_bucket()),
+            LimitPolicy::Buckets => engine.manifest.max_bucket(),
+        }
+        .max(MIN_EPISODE_LEN);
+        FleetRollout {
+            client: FleetClient::new(
+                cfg.seed,
+                tok::VOCAB,
+                budget,
+                cfg.max_staleness,
+                FLEET_IO_TIMEOUT,
+            ),
+        }
+    }
+}
+
+impl EpisodeSource for FleetRollout {
+    fn label(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn next_batch(
+        &mut self,
+        _rollout: &mut RolloutEngine,
+        engine: &Engine,
+        _cfg: &TrainConfig,
+        _rollout_seed: u64,
+        step: u64,
+        params: &[Literal],
+    ) -> Result<SourcedEpisodes> {
+        // The fleet generator reads θ as a flat f32 vector (its content
+        // enters the episode function through a digest).
+        let mut flat = Vec::new();
+        for lit in params {
+            flat.extend(lit.to_vec::<f32>()?);
+        }
+        let total = engine.manifest.batch as u64;
+        self.client.push_snapshot(step, &flat);
+        let gathered = self.client.gather(step, &flat, total);
+        if gathered.episodes.len() as u64 != total {
+            bail!(
+                "fleet assembled {} episodes for a {total}-episode step",
+                gathered.episodes.len()
+            );
+        }
+        let stats = episode_stats(&gathered.episodes);
+        Ok(SourcedEpisodes {
+            episodes: gathered.episodes,
+            stats,
+            from_fleet: gathered.from_fleet,
+            local: gathered.from_local,
+            snapshot_staleness: gathered.max_snapshot_staleness,
+        })
+    }
+}

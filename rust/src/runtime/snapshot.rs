@@ -103,12 +103,25 @@ impl<T> StepBuffer<T> {
     /// staleness budget), failing after `timeout` so a wedged publisher
     /// surfaces as an error instead of a silent hang.
     pub fn acquire(&self, min_step: u64, timeout: Duration) -> Result<Arc<T>> {
+        self.acquire_stamped(min_step, timeout).map(|(_, v)| v)
+    }
+
+    /// [`Self::acquire`], but the returned value carries the step it
+    /// was published at. Fleet rollout workers need the stamp: every
+    /// episode batch echoes the snapshot step it was generated against,
+    /// so the coordinator can audit observed staleness per batch rather
+    /// than trusting the bound held.
+    pub fn acquire_stamped(
+        &self,
+        min_step: u64,
+        timeout: Duration,
+    ) -> Result<(u64, Arc<T>)> {
         let deadline = Instant::now() + timeout;
         let mut inner = self.locked();
         loop {
             if let Some((s, v)) = inner.slots[inner.front].as_ref() {
                 if *s >= min_step {
-                    return Ok(Arc::clone(v));
+                    return Ok((*s, Arc::clone(v)));
                 }
             }
             let now = Instant::now();
@@ -184,6 +197,15 @@ mod tests {
         let fresh = buf.acquire(5, Duration::from_secs(10)).unwrap();
         assert_eq!(*fresh, 55);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn acquire_stamped_returns_the_published_step() {
+        let buf = StepBuffer::new();
+        buf.publish(7, 70u64).unwrap();
+        let (step, v) = buf.acquire_stamped(3, Duration::from_millis(40)).unwrap();
+        assert_eq!(step, 7, "stamp is the published step, not the floor");
+        assert_eq!(*v, 70);
     }
 
     #[test]

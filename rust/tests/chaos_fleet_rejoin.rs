@@ -1,0 +1,161 @@
+//! Chaos: rollout-worker death and mid-run rejoin against a 2-process
+//! fleet.
+//!
+//! The elastic-fleet contract: a killed rollout worker's episode slice
+//! re-plans onto a survivor (or falls back to bit-identical local
+//! generation), a restarted process **rejoins mid-run** under its old
+//! id with a bumped generation — the gap the ingest fleet leaves open —
+//! and none of it can disturb the learning curve, because episode
+//! content is a pure function of `(θ, seed, step, global index)`. Even
+//! losing the whole fleet only degrades to local generation; the run
+//! never stalls and never diverges.
+//!
+//! Runs without the `xla` feature (CI job `core-no-xla`,
+//! `make check-core`).
+
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use earl::coordinator::{FleetCfg, FleetCoordinator};
+
+/// A spawned `earl worker --rollout` process, killed on drop even if
+/// the test panics first.
+struct WorkerProc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl WorkerProc {
+    fn kill(&mut self) {
+        self.child.kill().unwrap();
+        self.child.wait().unwrap();
+    }
+}
+
+fn spawn_rollout_worker() -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_earl"))
+        .args(["worker", "--listen", "127.0.0.1:0", "--rollout", "--quiet"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning earl worker --rollout");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .and_then(|a| a.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable worker banner {line:?}"));
+    WorkerProc { child, addr }
+}
+
+#[test]
+fn kill_and_rejoin_keep_the_curve_bit_identical() {
+    const STEPS: usize = 8;
+    let cfg = FleetCfg {
+        seed: 23,
+        max_staleness: 0,
+        io_timeout: Duration::from_secs(10),
+        ..FleetCfg::default()
+    };
+
+    // Serial reference for the whole trajectory.
+    let mut serial = FleetCoordinator::local(cfg.clone()).unwrap();
+    let mut reference = Vec::new();
+    for _ in 0..STEPS {
+        reference.push(serial.step().unwrap());
+    }
+
+    let mut workers: Vec<WorkerProc> =
+        (0..2).map(|_| spawn_rollout_worker()).collect();
+    let mut coord = FleetCoordinator::fleet(cfg.clone()).unwrap();
+    for w in &workers {
+        coord.join(w.addr).unwrap();
+    }
+    assert_eq!(coord.live_workers(), vec![0, 1]);
+
+    let t0 = Instant::now();
+    for (k, want) in reference.iter().enumerate() {
+        // Chaos schedule: worker 1 dies before step 2, a restarted
+        // process rejoins under its id before step 4, and the whole
+        // fleet dies before step 6 — the final steps run all-local.
+        if k == 2 {
+            workers[1].kill();
+        }
+        if k == 4 {
+            workers[1] = spawn_rollout_worker();
+            let generation = coord.rejoin(1, workers[1].addr).unwrap();
+            assert_eq!(
+                generation, 1,
+                "rejoin must bump the manifest generation"
+            );
+            assert_eq!(coord.live_workers(), vec![0, 1]);
+        }
+        if k == 6 {
+            workers[0].kill();
+            workers[1].kill();
+        }
+        let got = coord.step().unwrap_or_else(|e| {
+            panic!("chaos step {k} failed to recover: {e:#}")
+        });
+        assert_eq!(
+            got.training_row(),
+            want.training_row(),
+            "chaos step {k} diverged from the serial reference"
+        );
+        assert_eq!(
+            got.episodes_from_fleet + got.episodes_local,
+            cfg.episodes as u64,
+            "step {k} lost episodes"
+        );
+        match k {
+            // Both workers live: the whole range is fleet-served.
+            0 | 1 | 4 | 5 => {
+                assert_eq!(got.episodes_from_fleet, cfg.episodes as u64);
+                assert_eq!(got.redispatches, 0, "step {k} re-dispatched");
+            }
+            // Worker 1 just died: the loss surfaces at the snapshot
+            // push, and the survivor carries the whole range.
+            2 | 3 => {
+                assert_eq!(coord.live_workers(), vec![0]);
+                assert_eq!(
+                    got.episodes_from_fleet + got.episodes_local,
+                    cfg.episodes as u64
+                );
+            }
+            // Whole fleet dead: pure local fallback.
+            6 | 7 => {
+                assert_eq!(got.episodes_local, cfg.episodes as u64);
+                assert_eq!(got.episodes_from_fleet, 0);
+            }
+            _ => {}
+        }
+        assert_eq!(
+            got.max_snapshot_staleness, 0,
+            "staleness floor 0 must pin every episode to this step's θ"
+        );
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(240),
+        "chaos recovery must not hang"
+    );
+    // Same parameters, bit for bit, through death, rejoin, and total
+    // fleet loss.
+    assert_eq!(coord.model, serial.model);
+    assert_eq!(coord.model.step, STEPS as u64);
+    // The membership history survives it all: worker 1's entry carries
+    // its rejoin generation.
+    assert_eq!(coord.client.manifest.get(1).unwrap().generation, 1);
+    assert_eq!(coord.client.manifest.len(), 2);
+}

@@ -1,0 +1,155 @@
+//! Rollout-as-a-service across real process boundaries.
+//!
+//! The defining invariant of the fleet rollout path: a fleet of
+//! `earl worker --rollout` processes at `--max-staleness 0` reproduces
+//! the serial learning curve **step for step, bit for bit** — episode
+//! content is a pure function of `(θ, seed, step, global index)`, so
+//! where an episode is generated cannot leak into training. Also pins
+//! partition invariance (1 worker ≡ 2 workers ≡ serial) and the
+//! handshake's refusal of a worker that does not serve rollout.
+//!
+//! Runs without the `xla` feature (CI job `core-no-xla`,
+//! `make check-core`).
+
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+
+use earl::coordinator::{FleetCfg, FleetCoordinator};
+
+/// A spawned `earl worker --rollout` process, killed on drop even if
+/// the test panics first.
+struct WorkerProc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_rollout_worker() -> WorkerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_earl"))
+        .args(["worker", "--listen", "127.0.0.1:0", "--rollout", "--quiet"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning earl worker --rollout");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .and_then(|a| a.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable worker banner {line:?}"));
+    WorkerProc { child, addr }
+}
+
+fn cfg() -> FleetCfg {
+    FleetCfg { seed: 17, max_staleness: 0, ..FleetCfg::default() }
+}
+
+#[test]
+fn one_worker_process_reproduces_the_serial_curve_bit_for_bit() {
+    const STEPS: usize = 4;
+    let cfg = cfg();
+
+    let mut serial = FleetCoordinator::local(cfg.clone()).unwrap();
+    let mut reference = Vec::new();
+    for _ in 0..STEPS {
+        reference.push(serial.step().unwrap());
+    }
+
+    let worker = spawn_rollout_worker();
+    let mut fleet = FleetCoordinator::fleet(cfg.clone()).unwrap();
+    let id = fleet.join(worker.addr).unwrap();
+    assert_eq!(id, 0);
+    assert_eq!(fleet.live_workers(), vec![0]);
+
+    for (k, want) in reference.iter().enumerate() {
+        let got = fleet.step().unwrap();
+        assert_eq!(
+            got.training_row(),
+            want.training_row(),
+            "fleet step {k} diverged from the serial reference"
+        );
+        assert_eq!(got.episodes_from_fleet, cfg.episodes as u64);
+        assert_eq!(got.episodes_local, 0, "step {k} fell back to local");
+        assert_eq!(got.max_snapshot_staleness, 0);
+        assert_eq!(got.redispatches, 0);
+    }
+    // Same parameters, bit for bit.
+    assert_eq!(fleet.model, serial.model);
+    assert_eq!(fleet.model.step, STEPS as u64);
+}
+
+#[test]
+fn fleet_partitioning_is_curve_invariant() {
+    // Two workers split each step's range; the curve and final model
+    // must match both the serial reference and a 1-worker fleet.
+    const STEPS: usize = 3;
+    let cfg = cfg();
+
+    let mut serial = FleetCoordinator::local(cfg.clone()).unwrap();
+    let mut reference = Vec::new();
+    for _ in 0..STEPS {
+        reference.push(serial.step().unwrap());
+    }
+
+    let workers: Vec<WorkerProc> =
+        (0..2).map(|_| spawn_rollout_worker()).collect();
+    let mut fleet = FleetCoordinator::fleet(cfg.clone()).unwrap();
+    for w in &workers {
+        fleet.join(w.addr).unwrap();
+    }
+    assert_eq!(fleet.live_workers(), vec![0, 1]);
+
+    for (k, want) in reference.iter().enumerate() {
+        let got = fleet.step().unwrap();
+        assert_eq!(
+            got.training_row(),
+            want.training_row(),
+            "2-worker step {k} diverged from the serial reference"
+        );
+        assert_eq!(got.episodes_from_fleet, cfg.episodes as u64);
+        assert_eq!(got.episodes_local, 0);
+    }
+    assert_eq!(fleet.model, serial.model);
+}
+
+#[test]
+fn join_is_refused_by_a_worker_not_serving_rollout() {
+    // A plain dispatch worker (no --rollout) NACKs the join handshake;
+    // admission must fail loudly instead of entering a worker that can
+    // never serve an episode slice.
+    let mut child = Command::new(env!("CARGO_BIN_EXE_earl"))
+        .args(["worker", "--listen", "127.0.0.1:0", "--quiet"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning earl worker");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr: SocketAddr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .and_then(|a| a.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable worker banner {line:?}"));
+
+    let mut fleet = FleetCoordinator::fleet(cfg()).unwrap();
+    let err = fleet.join(addr).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("--rollout"),
+        "refusal should point at the missing --rollout flag: {err:#}"
+    );
+    assert!(fleet.live_workers().is_empty());
+    let _ = child.kill();
+    let _ = child.wait();
+}

@@ -8,8 +8,8 @@ use earl::dispatch::{
     assign_standins, build_merge_schedule, contiguous_runs, decode_frame,
     encode_frame, merge_tree_depth, plan_alltoall, plan_centralized,
     plan_ingest, replan_ingest_excluding, satisfies, DataLayout,
-    DispatchTensor, FrameHeader, MergeSink, ReceivedBatch, StepPayload,
-    TensorKind, TransferPayload, WireTensorId, WorkerReport,
+    DispatchTensor, EpisodeBatch, FrameHeader, MergeSink, ReceivedBatch,
+    StepPayload, TensorKind, TransferPayload, WireTensorId, WorkerReport,
     FRAME_HEADER_LEN,
 };
 use earl::envs::{ConnectFour, Game, Outcome, TicTacToe};
@@ -18,6 +18,7 @@ use earl::parallelism::{
     rollout_watermark_frac, ModelShape, ParallelismConfig, ProfilePoint,
     RangeTable, Replanner, ReplanSignals, ThroughputCfg,
 };
+use earl::registry::Manifest;
 use earl::rl::advantage::{reinforce_advantages, whiten, AdvantageCfg};
 use earl::rl::episode::{Episode, EpisodeStatus, ExperienceBatch, Turn};
 use earl::testkit::{check_default, gen};
@@ -536,6 +537,117 @@ fn prop_result_frames_reject_truncation_and_corruption() {
         corrupt[idx] ^= 1 + rng.below(255) as u8;
         assert!(
             WorkerReport::decode_frame(&corrupt).is_err(),
+            "bit flip at {idx} must be rejected"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fleet wire discipline: the worker manifest is a set (join order can
+// never leak into its bytes or checksum), and episode batches obey the
+// same roundtrip / any-byte-flip contract as result frames.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_manifest_bytes_are_join_order_invariant() {
+    check_default("manifest_join_order", |rng| {
+        let n = gen::usize_in(rng, 1, 10);
+        let entries: Vec<(u64, String)> = (0..n as u64)
+            .map(|w| (w, format!("10.0.0.{}:{}", w + 1, 7000 + rng.below(2000))))
+            .collect();
+        let mut a = Manifest::new();
+        for (w, addr) in &entries {
+            a.join(*w, addr);
+        }
+        // Admit the same set in a random permutation.
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            order.swap(i, rng.below(i + 1));
+        }
+        let mut b = Manifest::new();
+        for &i in &order {
+            let (w, addr) = &entries[i];
+            b.join(*w, addr);
+        }
+        assert_eq!(a, b);
+        assert_eq!(a.encode().unwrap(), b.encode().unwrap());
+        assert_eq!(a.checksum().unwrap(), b.checksum().unwrap());
+        // The wire form roundtrips, and plans always walk ascending ids
+        // regardless of admission order.
+        assert_eq!(Manifest::decode(&a.encode().unwrap()).unwrap(), a);
+        let ids: Vec<u64> = b.workers().map(|e| e.worker).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+        // A rejoin bumps the generation and must change the fingerprint:
+        // a coordinator can tell a restarted worker from a stale one.
+        let before = b.checksum().unwrap();
+        let (w, addr) = &entries[rng.below(n)];
+        assert_eq!(b.join(*w, addr), 1);
+        assert_ne!(b.checksum().unwrap(), before);
+    });
+}
+
+fn random_episode_batch(rng: &mut Pcg64) -> EpisodeBatch {
+    let n = gen::usize_in(rng, 1, 5);
+    let episodes: Vec<Episode> = (0..n)
+        .map(|_| {
+            let n_turns = gen::usize_in(rng, 1, 4);
+            let reward = *rng.choose(&[-1.0f32, 0.0, 1.0]);
+            let mut ep = synth_episode(rng, n_turns, reward);
+            ep.status = *rng.choose(&[
+                EpisodeStatus::Finished,
+                EpisodeStatus::Illegal,
+                EpisodeStatus::Truncated,
+            ]);
+            // Cover both arms of the action wire code (0 = None).
+            for t in ep.turns.iter_mut() {
+                if rng.below(2) == 0 {
+                    t.action = Some(rng.below(9));
+                }
+            }
+            ep
+        })
+        .collect();
+    EpisodeBatch {
+        worker: rng.below(64) as u32,
+        step: rng.next_u64() >> 16,
+        snapshot_step: rng.below(1000) as u64,
+        episodes,
+    }
+}
+
+#[test]
+fn prop_episode_batches_roundtrip_byte_identical() {
+    check_default("episode_batch_roundtrip", |rng| {
+        let batch = random_episode_batch(rng);
+        let frame = batch.encode_frame().unwrap();
+        // Re-encoding is byte-identical (stable wire form).
+        assert_eq!(frame, batch.encode_frame().unwrap());
+        let back = EpisodeBatch::decode_frame(&frame).unwrap();
+        assert_eq!(back, batch);
+    });
+}
+
+#[test]
+fn prop_episode_batches_reject_truncation_and_corruption() {
+    check_default("episode_batch_corruption", |rng| {
+        let batch = random_episode_batch(rng);
+        let frame = batch.encode_frame().unwrap();
+        // Any strict prefix fails.
+        let cut = rng.below(frame.len());
+        assert!(
+            EpisodeBatch::decode_frame(&frame[..cut]).is_err(),
+            "decode must reject {cut}-byte prefix of {}",
+            frame.len()
+        );
+        // Any single-byte flip fails: magic, length, body, or checksum
+        // corruption is never silently accepted into training data.
+        let idx = rng.below(frame.len());
+        let mut corrupt = frame.clone();
+        corrupt[idx] ^= 1 + rng.below(255) as u8;
+        assert!(
+            EpisodeBatch::decode_frame(&corrupt).is_err(),
             "bit flip at {idx} must be rejected"
         );
     });
