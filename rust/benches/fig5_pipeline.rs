@@ -35,7 +35,7 @@ use earl::config::TrainConfig;
 use earl::coordinator::{
     DispatchJob, DispatchMode, DispatchWorker, PipelineMode, Trainer,
 };
-use earl::dispatch::{plan_alltoall, DataLayout, DispatchPlan};
+use earl::dispatch::{plan_alltoall, Codec, DataLayout, DispatchPlan};
 use earl::metrics::StepRecord;
 use earl::testkit::bench::print_table;
 use earl::util::json::Json;
@@ -194,6 +194,7 @@ fn synthetic_job(step: u64) -> DispatchJob {
         reset_budget: false,
         controller_bytes: 0,
         remote: None,
+        codec: Codec::None,
     }
 }
 

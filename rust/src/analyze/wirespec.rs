@@ -34,9 +34,9 @@ use crate::analyze::Finding;
 use crate::util::json::Json;
 
 /// Declared padding bytes of fixed layouts (holes the encoder is
-/// *expected* to leave): `ShardDesc` byte 3 pads `dtype u8` to the
-/// 4-byte `row_start` boundary.
-pub const PAD_HOLES: &[(&str, &[u64])] = &[("ShardDesc", &[3])];
+/// *expected* to leave). Currently none: `ShardDesc` byte 3 — a pad
+/// hole until the codec field claimed it — now carries `codec u8`.
+pub const PAD_HOLES: &[(&str, &[u64])] = &[];
 
 /// Declared padding bytes of variable-length frame prefixes:
 /// `WorkerReport` pads `n_hist u32` out to the 8-byte `RESULT_FIXED_LEN`
@@ -917,7 +917,7 @@ pub fn check_required(file: &SourceFile, spec: &WireSpec) -> Vec<Finding> {
             miss(&format!("const {c}"));
         }
     }
-    for e in ["WireTensorId", "WireDtype"] {
+    for e in ["WireTensorId", "WireDtype", "Codec"] {
         match spec.enums.get(e) {
             None => miss(&format!("enum {e}")),
             Some(s) => {

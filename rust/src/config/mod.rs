@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::pipeline::PipelineMode;
+use crate::dispatch::wire::Codec;
 use crate::rollout::{LimitPolicy, RolloutCfg, SamplerCfg};
 use crate::runtime::TrainHp;
 
@@ -101,6 +102,11 @@ pub struct TrainConfig {
     /// stay on the controller and are reported as
     /// `dispatch_controller_bytes`.
     pub dispatch_aggregation_aware: bool,
+    /// Wire codec offered when negotiating dispatch/fleet connections
+    /// (`"lz"` by default, `"none"` to ship every shard raw). Applied
+    /// per tensor — only ids whose bytes compress well opt in — and
+    /// always lossless, so learning curves are codec-invariant.
+    pub wire_codec: Codec,
     /// Enable the live parallelism re-planner: between RL stages, feed
     /// the observed context distribution and stage timings into the
     /// memory/throughput models and re-select the cluster-level
@@ -146,6 +152,7 @@ impl Default for TrainConfig {
             dispatch_inflight_budget: None,
             dispatch_budget_adaptive: false,
             dispatch_aggregation_aware: true,
+            wire_codec: Codec::Lz,
             replan: false,
             replan_responses: 64,
             replan_force_step: None,
@@ -266,6 +273,9 @@ impl TrainConfig {
         if let Some(b) = j.at(&["dispatch_aggregation_aware"]).as_bool() {
             c.dispatch_aggregation_aware = b;
         }
+        if let Some(s) = j.at(&["wire_codec"]).as_str() {
+            c.wire_codec = Codec::parse(s)?;
+        }
         if let Some(b) = j.at(&["replan"]).as_bool() {
             c.replan = b;
         }
@@ -349,6 +359,18 @@ mod tests {
         assert!(!d.dispatch_budget_adaptive);
         // Aggregation-aware planning is the paper-faithful default.
         assert!(d.dispatch_aggregation_aware);
+    }
+
+    #[test]
+    fn wire_codec_parses() {
+        let c =
+            TrainConfig::from_json_str(r#"{"wire_codec": "none"}"#).unwrap();
+        assert_eq!(c.wire_codec, Codec::None);
+        // Compression is the default; unknown names are rejected.
+        assert_eq!(TrainConfig::default().wire_codec, Codec::Lz);
+        assert!(
+            TrainConfig::from_json_str(r#"{"wire_codec": "zstd"}"#).is_err()
+        );
     }
 
     #[test]

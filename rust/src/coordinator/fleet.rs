@@ -47,9 +47,11 @@ use crate::dispatch::ingest::{
     local_batch, merge_reports, worker_update, IngestModel,
 };
 use crate::dispatch::plan::fleet_slices;
-use crate::dispatch::tcp::{Ack, ACK_EPISODES, ACK_JOIN, ACK_LEN};
+use crate::dispatch::tcp::{
+    read_follow_body, Ack, ACK_EPISODES, ACK_JOIN, ACK_LEN,
+};
 use crate::dispatch::wire::{
-    encode_frame, u32_le, u64_le, EpisodeBatch, IngestHp, IngestRequest,
+    encode_frame, Codec, EpisodeBatch, IngestHp, IngestRequest,
     RolloutRequest, SnapshotFrame, TransferPayload, EPISODE_MAGIC,
     MAX_EPISODE_BATCH_BYTES,
 };
@@ -93,6 +95,11 @@ pub struct FleetCfg {
     pub max_staleness: u64,
     /// Per-operation socket timeout (see [`FLEET_IO_TIMEOUT`]).
     pub io_timeout: Duration,
+    /// Preferred wire codec for fleet pushes. Offered (alongside the
+    /// always-available [`Codec::None`]) during the join handshake;
+    /// the worker's reply fixes the per-connection codec. Lossless, so
+    /// any choice preserves bit-identity with the serial reference.
+    pub codec: Codec,
 }
 
 impl Default for FleetCfg {
@@ -105,6 +112,7 @@ impl Default for FleetCfg {
             seed: 0,
             max_staleness: 0,
             io_timeout: FLEET_IO_TIMEOUT,
+            codec: Codec::Lz,
         }
     }
 }
@@ -149,6 +157,12 @@ pub struct FleetStepRecord {
     pub redispatches: u64,
     /// Worst observed `step − snapshot_step` over the step's batches.
     pub max_snapshot_staleness: u64,
+    /// Full-θ bytes this step's snapshot push represented (raw size ×
+    /// live workers; 0 with an empty fleet).
+    pub snapshot_raw_bytes: u64,
+    /// Bytes the push actually put on the wire after delta encoding
+    /// against each worker's acked base and codec compression.
+    pub snapshot_wire_bytes: u64,
     /// Episode context stats of the step's batch — the re-planner's
     /// length signals, observed from the assembled episodes.
     pub ctx_mean: f64,
@@ -176,6 +190,12 @@ struct FleetConn {
     sock: TcpStream,
     /// Execution epoch of the next frame (monotone per connection).
     epoch: u64,
+    /// Wire codec negotiated at join; applied to every snapshot push.
+    codec: Codec,
+    /// Last snapshot this worker acked — the delta base of the next
+    /// push. `None` (fresh/rejoined connection) forces a full push, so
+    /// a restarted worker can never be handed an unresolvable delta.
+    acked: Option<(u64, Vec<f32>)>,
 }
 
 impl FleetConn {
@@ -185,7 +205,7 @@ impl FleetConn {
         sock.set_nodelay(true).ok();
         sock.set_read_timeout(Some(timeout))?;
         sock.set_write_timeout(Some(timeout))?;
-        Ok(FleetConn { sock, epoch: 0 })
+        Ok(FleetConn { sock, epoch: 0, codec: Codec::None, acked: None })
     }
 
     /// Write one control payload as a frame and read its ack, verifying
@@ -213,34 +233,17 @@ impl FleetConn {
 
     /// Read one checksummed follow frame (`magic u32 | body_len u32 |
     /// body | fnv1a64(body) u64`) off the ack stream, returning the
-    /// body and its transmitted checksum.
+    /// body and its transmitted checksum. Delegates to the shared
+    /// streaming reader, which caps `body_len` before allocating and
+    /// folds the FNV hash into the read loop.
     fn read_follow(
         &mut self,
         want_magic: u32,
         max_body: usize,
         what: &str,
     ) -> Result<(Vec<u8>, u64)> {
-        let mut head = [0u8; 8];
-        self.sock
-            .read_exact(&mut head)
-            .with_context(|| format!("{what} frame header"))?;
-        let magic = u32_le(&head[..4]);
-        if magic != want_magic {
-            bail!("bad {what} magic {magic:#x} (ack stream desynced)");
-        }
-        let body_len = u32_le(&head[4..8]) as usize;
-        if body_len > max_body {
-            bail!("{what} frame claims {body_len}-byte body");
-        }
-        let mut body = vec![0u8; body_len];
-        self.sock
-            .read_exact(&mut body)
-            .with_context(|| format!("{what} frame body"))?;
-        let mut sum = [0u8; 8];
-        self.sock
-            .read_exact(&mut sum)
-            .with_context(|| format!("{what} frame checksum"))?;
-        Ok((body, u64_le(&sum)))
+        read_follow_body(&mut self.sock, want_magic, max_body, what)
+            .map_err(|e| anyhow::anyhow!("{what} follow frame: {e}"))
     }
 }
 
@@ -284,6 +287,14 @@ pub struct FleetClient {
     /// How many steps behind θ_step a serving snapshot may be.
     pub max_staleness: u64,
     pub io_timeout: Duration,
+    /// Codec capability bitset offered in every join handshake
+    /// ([`Codec::cap_bit`]s; always includes [`Codec::None`]).
+    pub codec_caps: u64,
+    /// Cumulative logical snapshot bytes pushed (pre-codec, pre-delta).
+    pub snapshot_raw_bytes: u64,
+    /// Cumulative bytes of snapshot payload actually put on the wire
+    /// (after delta encoding and compression).
+    pub snapshot_wire_bytes: u64,
 }
 
 impl FleetClient {
@@ -293,6 +304,7 @@ impl FleetClient {
         max_len: usize,
         max_staleness: u64,
         io_timeout: Duration,
+        codec: Codec,
     ) -> FleetClient {
         FleetClient {
             manifest: Manifest::new(),
@@ -303,6 +315,9 @@ impl FleetClient {
             max_len,
             max_staleness,
             io_timeout,
+            codec_caps: Codec::None.cap_bit() | codec.cap_bit(),
+            snapshot_raw_bytes: 0,
+            snapshot_wire_bytes: 0,
         }
     }
 
@@ -354,7 +369,12 @@ impl FleetClient {
     ) -> Result<FleetConn> {
         let mine = protocol_checksum();
         let mut conn = FleetConn::dial(addr, self.io_timeout)?;
-        let req = JoinRequest { worker, generation, protocol: mine };
+        let req = JoinRequest {
+            worker,
+            generation,
+            protocol: mine,
+            codec_caps: self.codec_caps,
+        };
         let ack = conn.send(&req.payload()?)?;
         if ack.status != ACK_JOIN {
             bail!(
@@ -380,32 +400,71 @@ impl FleetClient {
                 reply.protocol
             );
         }
+        if reply.codec.cap_bit() & self.codec_caps == 0 {
+            bail!(
+                "worker {worker} negotiated codec {} outside the offered \
+                 capability set {:#b}",
+                reply.codec.name(),
+                self.codec_caps
+            );
+        }
+        conn.codec = reply.codec;
         Ok(conn)
     }
 
     /// Push θ_step to every live worker; ones that fail drop to dead
-    /// (their slices re-plan onto survivors this same step). Returns
-    /// the number of workers lost to the push.
+    /// (their slices re-plan onto survivors this same step). Each
+    /// connection gets a **delta** frame against its last acked
+    /// snapshot when that is smaller (full push otherwise — notably on
+    /// fresh or rejoined connections, whose delta base is unknown),
+    /// compressed with its negotiated codec. Returns the number of
+    /// workers lost to the push.
     pub fn push_snapshot(&mut self, step: u64, params: &[f32]) -> u64 {
         if self.conns.is_empty() {
             return 0;
         }
-        let snap = SnapshotFrame { step, params: params.to_vec() };
         let mut failed = 0u64;
         let workers: Vec<u64> = self.conns.keys().copied().collect();
         for w in workers {
-            let sent = snap.payload().and_then(|p| {
-                let conn = self.conns.get_mut(&w).expect("live conn");
-                let ack = conn.send(&p)?;
+            let Some(conn) = self.conns.get_mut(&w) else {
+                continue;
+            };
+            let sent = (|| {
+                let snap = match &conn.acked {
+                    Some((base_step, base)) => {
+                        SnapshotFrame::delta_from(step, params, *base_step, base)
+                            .unwrap_or_else(|| {
+                                SnapshotFrame::full(step, params.to_vec())
+                            })
+                    }
+                    None => SnapshotFrame::full(step, params.to_vec()),
+                };
+                let payload = snap.payload()?.compress(conn.codec);
+                let wire = payload.wire_bytes();
+                let ack = conn.send(&payload)?;
                 if ack.status != crate::dispatch::tcp::ACK_OK {
                     bail!("snapshot push NACKed with status {}", ack.status);
                 }
-                Ok(())
-            });
-            if let Err(e) = sent {
-                eprintln!("[earl-fleet] worker {w} lost at snapshot push: {e:#}");
-                self.conns.remove(&w);
-                failed += 1;
+                // Acked ⇒ installed: the request/reply discipline makes
+                // this the worker's resolvable delta base next step.
+                conn.acked = Some((step, params.to_vec()));
+                Ok(wire)
+            })();
+            match sent {
+                Ok(wire) => {
+                    // Logical volume counts the full θ either way — the
+                    // raw−wire gap is exactly what delta+codec saved.
+                    self.snapshot_raw_bytes +=
+                        (params.len() * std::mem::size_of::<f32>()) as u64;
+                    self.snapshot_wire_bytes += wire;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[earl-fleet] worker {w} lost at snapshot push: {e:#}"
+                    );
+                    self.conns.remove(&w);
+                    failed += 1;
+                }
             }
         }
         failed
@@ -591,6 +650,7 @@ impl FleetCoordinator {
                 cfg.max_len,
                 cfg.max_staleness,
                 cfg.io_timeout,
+                cfg.codec,
             ),
             cfg,
         })
@@ -623,6 +683,10 @@ impl FleetCoordinator {
     /// the model is untouched and the error surfaces.
     pub fn step(&mut self) -> Result<FleetStepRecord> {
         let step = self.model.step;
+        let (raw0, wire0) = (
+            self.client.snapshot_raw_bytes,
+            self.client.snapshot_wire_bytes,
+        );
         self.client.push_snapshot(step, &self.model.w);
         let gathered =
             self.client.gather(step, &self.model.w, self.cfg.episodes as u64);
@@ -683,6 +747,8 @@ impl FleetCoordinator {
             episodes_local: from_local,
             redispatches,
             max_snapshot_staleness: max_stale,
+            snapshot_raw_bytes: self.client.snapshot_raw_bytes - raw0,
+            snapshot_wire_bytes: self.client.snapshot_wire_bytes - wire0,
             ctx_mean: stats.mean_episode_context,
             ctx_p95: stats.ctx_p95,
             ctx_max: stats.ctx_max,

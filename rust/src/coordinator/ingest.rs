@@ -52,8 +52,8 @@ use crate::dispatch::tcp::{
     TcpRuntime,
 };
 use crate::dispatch::wire::{
-    DispatchTensor, IngestHp, IngestRequest, MergeOp, MergeSink, StepPayload,
-    WireTensorId, WorkerReport,
+    Codec, DispatchTensor, IngestHp, IngestRequest, MergeOp, MergeSink,
+    StepPayload, WireTensorId, WorkerReport,
 };
 use crate::dispatch::DataLayout;
 use crate::metrics::{MetricsLog, WorkerStepMetrics};
@@ -96,6 +96,9 @@ pub struct IngestCfg {
     pub adaptive_budget: bool,
     /// How long a step may await worker acks + reports before failing.
     pub commit_timeout: Duration,
+    /// Wire codec for the scatter: shards of tensors that compress well
+    /// travel encoded. Lossless, so training rows are codec-independent.
+    pub codec: Codec,
 }
 
 impl Default for IngestCfg {
@@ -111,6 +114,7 @@ impl Default for IngestCfg {
             inflight_budget: None,
             adaptive_budget: false,
             commit_timeout: DEFAULT_COMMIT_TIMEOUT,
+            codec: Codec::Lz,
         }
     }
 }
@@ -207,6 +211,9 @@ pub struct IngestStepRecord {
     pub gen_tokens: u64,
     /// Payload bytes the dispatcher moved (0 in local mode).
     pub dispatch_bytes: u64,
+    /// Bytes the scatter actually put on the wire (== `dispatch_bytes`
+    /// under the raw codec; smaller wherever compression paid).
+    pub dispatch_wire_bytes: u64,
     /// Bytes kept on the controller by aggregation-aware planning.
     pub controller_bytes: u64,
     /// Measured scatter window (0 in local mode).
@@ -340,6 +347,7 @@ impl IngestCoordinator {
             rows: 0,
             gen_tokens: 0,
             dispatch_bytes: 0,
+            dispatch_wire_bytes: 0,
             controller_bytes,
             dispatch_seconds: 0.0,
             stall_seconds: 0.0,
@@ -418,6 +426,7 @@ impl IngestCoordinator {
                             ExecOptions {
                                 payload: Some(&ship),
                                 inflight_budget: budget_now,
+                                codec: self.cfg.codec,
                             },
                         ) {
                             Ok(out) => {
@@ -425,6 +434,8 @@ impl IngestCoordinator {
                                     b.observe(out.report.stall_seconds);
                                 }
                                 rec.dispatch_bytes += out.report.bytes;
+                                rec.dispatch_wire_bytes +=
+                                    out.report.wire_bytes;
                                 rec.dispatch_seconds += out.report.seconds;
                                 rec.stall_seconds +=
                                     out.report.stall_seconds;

@@ -76,8 +76,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::dispatch::{
-    simulate_plan, DispatchPlan, ExecOptions, StepPayload, TcpRuntime,
-    WorkerMap,
+    simulate_plan, Codec, DispatchPlan, ExecOptions, StepPayload, TcpRuntime,
+    WireTensorId, WorkerMap,
 };
 #[cfg(feature = "xla")]
 use crate::runtime::{
@@ -172,6 +172,10 @@ pub struct DispatchJob {
     /// Standalone worker-process addresses (one per worker) for
     /// `DispatchMode::Tcp`; `None` = in-process loopback workers.
     pub remote: Option<Arc<Vec<SocketAddr>>>,
+    /// Wire codec for payload-backed TCP dispatch: shards of tensors
+    /// that compress well travel encoded, the rest raw. Lossless either
+    /// way, so training metrics are codec-independent.
+    pub codec: Codec,
 }
 
 /// Completion record of one dispatch stage execution.
@@ -201,6 +205,12 @@ pub struct DispatchResult {
     /// The per-NIC in-flight budget this execute actually ran under
     /// (after AIMD adaptation); 0 = unlimited.
     pub inflight_budget_bytes: u64,
+    /// Bytes actually put on the wire (after per-shard compression);
+    /// equals `bytes` for raw codecs and the simulated modes.
+    pub wire_bytes: u64,
+    /// Per-tensor `(id, logical bytes, wire bytes)` of the exchange,
+    /// ascending by tensor code (TCP mode; empty simulated).
+    pub tensor_bytes: Vec<(WireTensorId, u64, u64)>,
 }
 
 /// Cached TCP runtime keyed by the job shape that created it.
@@ -236,6 +246,8 @@ fn run_job(
                 stall_seconds: 0.0,
                 controller_bytes: job.controller_bytes,
                 inflight_budget_bytes: 0,
+                wire_bytes: job.plan.total_bytes(),
+                tensor_bytes: Vec::new(),
             })
         }
         DispatchMode::Tcp => {
@@ -297,6 +309,11 @@ fn run_job(
                     let aimd = cache.aimd.get_or_insert_with(|| {
                         crate::dispatch::tcp::AimdBudget::new(seed)
                     });
+                    // A re-planner may hand an *existing* controller a
+                    // new seed (e.g. after reseed_budget); retune the
+                    // min/max range to it instead of silently keeping
+                    // the range of the construction-time seed.
+                    aimd.reseed(seed);
                     Some(aimd.current())
                 }
                 (_, budget) => budget,
@@ -306,6 +323,7 @@ fn run_job(
                 ExecOptions {
                     payload: job.payload.as_deref(),
                     inflight_budget: effective,
+                    codec: job.codec,
                 },
             )?;
             let report = outcome.report;
@@ -325,6 +343,8 @@ fn run_job(
                 stall_seconds: report.stall_seconds,
                 controller_bytes: job.controller_bytes,
                 inflight_budget_bytes: effective.unwrap_or(0),
+                wire_bytes: report.wire_bytes,
+                tensor_bytes: report.tensor_bytes,
             })
         }
     }
@@ -596,6 +616,7 @@ mod tests {
             reset_budget: false,
             controller_bytes: 0,
             remote: None,
+            codec: Codec::None,
         }
     }
 
@@ -724,6 +745,7 @@ mod tests {
             reset_budget: false,
             controller_bytes: 0,
             remote: None,
+            codec: Codec::None,
         })
         .unwrap();
         let warm = w.recv().unwrap();
@@ -742,6 +764,7 @@ mod tests {
             reset_budget: false,
             controller_bytes: 0,
             remote: None,
+            codec: Codec::None,
         })
         .unwrap();
         let submit_secs = t0.elapsed().as_secs_f64();

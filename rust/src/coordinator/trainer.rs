@@ -509,6 +509,7 @@ impl Trainer {
             reset_budget: std::mem::take(&mut self.replan_reset_budget),
             controller_bytes,
             remote: self.dispatch_remote.clone(),
+            codec: self.cfg.wire_codec,
         })
     }
 
@@ -537,6 +538,8 @@ impl Trainer {
             dispatch_seconds: 0.0,
             dispatch_wall_seconds: 0.0,
             dispatch_bytes: 0,
+            dispatch_wire_bytes: 0,
+            dispatch_tensor_bytes: Vec::new(),
             dispatch_controller_bytes: 0,
             dispatch_inflight_peak_bytes: 0,
             dispatch_stall_seconds: 0.0,
@@ -589,6 +592,12 @@ impl Trainer {
         rec.dispatch_seconds = d.modeled_seconds;
         rec.dispatch_wall_seconds = d.wall_seconds;
         rec.dispatch_bytes = d.bytes;
+        rec.dispatch_wire_bytes = d.wire_bytes;
+        rec.dispatch_tensor_bytes = d
+            .tensor_bytes
+            .iter()
+            .map(|(id, raw, wire)| (id.name().to_string(), *raw, *wire))
+            .collect();
         rec.dispatch_controller_bytes = d.controller_bytes;
         rec.dispatch_inflight_peak_bytes = d.inflight_peak_bytes;
         rec.dispatch_stall_seconds = d.stall_seconds;

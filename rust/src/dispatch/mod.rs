@@ -43,9 +43,11 @@ pub use tcp::{
     WorkerOpts, ACK_EPISODES, ACK_JOIN, ACK_LEN,
 };
 pub use wire::{
-    checked_u32, contiguous_runs, decode_frame, encode_frame, fnv1a64,
-    ByteView, DispatchTensor, EpisodeBatch, Fnv64, FrameHeader, IngestHp,
-    IngestRequest, MergeOp, MergeSink, ReceivedBatch, RolloutRequest,
-    ShardDesc, SnapshotFrame, StepPayload, TransferPayload, WireDtype,
-    WireTensorId, WorkerReport, FRAME_HEADER_LEN, SHARD_DESC_LEN,
+    checked_u32, contiguous_runs, decode_frame, decode_shard_bytes,
+    encode_frame, fnv1a64, lz_compress, lz_decompress, ByteView, Codec,
+    DispatchTensor, EpisodeBatch, Fnv64, FrameHeader, IngestHp, IngestRequest,
+    MergeOp, MergeSink, ReceivedBatch, RolloutRequest, ShardDesc,
+    SnapshotBody, SnapshotFrame, StepPayload, TransferPayload, WireDtype,
+    WireTensorId, WorkerReport, FRAME_HEADER_LEN, MAX_FRAME_BYTES,
+    SHARD_DESC_LEN,
 };

@@ -12,16 +12,20 @@
 //! On the wire, one transfer is one frame:
 //!
 //! ```text
-//! FrameHeader (40 B): magic | n_shards | src | epoch | bytes | checksum
-//! n_shards × ShardDesc (16 B): tensor id | dtype | row_start | rows | row_bytes
-//! payload: shard payloads concatenated in descriptor order
+//! FrameHeader (40 B): magic | n_shards | src | epoch | wire bytes | checksum
+//! n_shards × ShardDesc (24 B): tensor id | dtype | codec | row_start | rows |
+//!                              row_bytes | wire_bytes
+//! payload: shard payloads concatenated in descriptor order, each
+//!          encoded with its descriptor's [`Codec`]
 //! ```
 //!
 //! The checksum is FNV-1a 64 over the descriptor table plus the payload
-//! bytes; the receiver recomputes it as it drains the stream and
-//! rejects mismatching frames in its acknowledgement. Receivers
-//! reassemble shards into a [`ReceivedBatch`], which tests assert is
-//! byte-identical to the sender's staged tensors.
+//! bytes *as they travel* (compressed where a codec applies); the
+//! receiver recomputes it as it drains the stream and rejects
+//! mismatching frames in its acknowledgement. Receivers reassemble
+//! shards into a [`ReceivedBatch`], which tests assert is
+//! byte-identical to the sender's staged tensors — codecs are lossless
+//! by construction.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -38,7 +42,7 @@ pub const WIRE_MAGIC: u32 = 0xEA71_D157;
 pub const FRAME_HEADER_LEN: usize = 40;
 
 /// Encoded size of a [`ShardDesc`] on the wire.
-pub const SHARD_DESC_LEN: usize = 16;
+pub const SHARD_DESC_LEN: usize = 24;
 
 /// Largest tensor buffer (`(row_start + rows) * row_bytes`) the receive
 /// side will allocate during reassembly — guards the allocator against
@@ -48,6 +52,13 @@ pub const MAX_SHARD_BYTES: u64 = 1 << 32;
 
 /// Largest descriptor table the receive side will read.
 pub const MAX_FRAME_SHARDS: u32 = 1 << 20;
+
+/// Largest header-declared payload byte count a receiver will drain or
+/// buffer for one frame. A corrupt 40-byte header must not be able to
+/// drive a multi-GB allocation or an unbounded socket drain before any
+/// checksum runs — the size guard fires first and the connection is
+/// dropped as desynced.
+pub const MAX_FRAME_BYTES: u64 = 1 << 34;
 
 // ---------------------------------------------------------------------------
 // Checksum
@@ -136,6 +147,204 @@ pub fn f64_le(b: &[u8]) -> f64 {
 pub fn checked_u32(v: usize, what: &str) -> Result<u32> {
     u32::try_from(v)
         .map_err(|_| anyhow::anyhow!("{what} {v} exceeds the wire's u32 field"))
+}
+
+// ---------------------------------------------------------------------------
+// Shard codecs
+// ---------------------------------------------------------------------------
+
+/// Per-shard wire codec, negotiated per connection at join time and
+/// chosen per [`WireTensorId`]: token ids, masks, and reference
+/// logprobs are highly repetitive at long context and compress well;
+/// whitened advantages are near-random f32 noise and ship raw. Every
+/// codec is lossless — compression can never disturb bit-identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    /// Identity: the shard travels exactly its staged bytes.
+    #[default]
+    None,
+    /// Dependency-free LZSS: 4096-byte window, greedy single-probe
+    /// hash matching, 8-flag control bytes (see [`lz_compress`]).
+    Lz,
+}
+
+impl Codec {
+    /// Every codec this build supports (tests and capability masks
+    /// iterate this).
+    pub const ALL: [Codec; 2] = [Codec::None, Codec::Lz];
+
+    pub fn code(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::Lz => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Codec> {
+        Ok(match c {
+            0 => Codec::None,
+            1 => Codec::Lz,
+            other => bail!("unknown wire codec code {other}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::Lz => "lz",
+        }
+    }
+
+    /// Parse a config/CLI spelling (`"none"` / `"lz"`).
+    pub fn parse(s: &str) -> Result<Codec> {
+        Ok(match s {
+            "none" => Codec::None,
+            "lz" => Codec::Lz,
+            other => bail!("unknown wire codec {other:?} (want none|lz)"),
+        })
+    }
+
+    /// This codec's bit in a join-handshake capability mask.
+    pub fn cap_bit(self) -> u64 {
+        1u64 << self.code()
+    }
+
+    /// Capability mask advertising every codec this build supports.
+    pub fn supported_caps() -> u64 {
+        Codec::ALL.iter().fold(0, |m, c| m | c.cap_bit())
+    }
+
+    /// Pick the best codec both capability masks advertise. `None` is
+    /// always mutually supported (its bit is implied), so negotiation
+    /// cannot fail — an old peer that advertises nothing gets identity.
+    pub fn negotiate(a: u64, b: u64) -> Codec {
+        let both = a & b;
+        if both & Codec::Lz.cap_bit() != 0 {
+            Codec::Lz
+        } else {
+            Codec::None
+        }
+    }
+}
+
+/// LZSS parameters: offsets fit 12 bits (4096-byte window), match
+/// lengths fit 4 bits (`3..=18` bytes). One control byte carries 8
+/// item flags; flag 0 = literal byte, flag 1 = 2-byte match token
+/// `offset-1 (12 bits) | len-3 (4 bits)`, little-endian.
+const LZ_WINDOW: usize = 4096;
+const LZ_MIN_MATCH: usize = 3;
+const LZ_MAX_MATCH: usize = 18;
+const LZ_HASH_SIZE: usize = 4096;
+
+fn lz_hash(b: &[u8]) -> usize {
+    let key = (b[0] as u32) << 16 | (b[1] as u32) << 8 | b[2] as u32;
+    (key.wrapping_mul(2654435761) >> 20) as usize & (LZ_HASH_SIZE - 1)
+}
+
+/// Compress `src` with the dependency-free LZSS codec ([`Codec::Lz`]).
+/// O(n): one single-entry hash probe per position, greedy matches.
+/// The output is only worth shipping when strictly smaller than `src`
+/// — callers fall back to [`Codec::None`] otherwise.
+// earl-analyze: deterministic
+pub fn lz_compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + 16);
+    let mut table = vec![usize::MAX; LZ_HASH_SIZE];
+    let mut i = 0usize;
+    let mut ctrl_idx = 0usize;
+    let mut ctrl_bit = 8u32;
+    while i < src.len() {
+        if ctrl_bit == 8 {
+            ctrl_idx = out.len();
+            out.push(0);
+            ctrl_bit = 0;
+        }
+        let mut matched = 0usize;
+        if i + LZ_MIN_MATCH <= src.len() {
+            let h = lz_hash(&src[i..i + 3]);
+            let cand = table[h];
+            table[h] = i;
+            if cand != usize::MAX && cand < i && i - cand <= LZ_WINDOW {
+                let cap = LZ_MAX_MATCH.min(src.len() - i);
+                let mut len = 0usize;
+                while len < cap && src[cand + len] == src[i + len] {
+                    len += 1;
+                }
+                if len >= LZ_MIN_MATCH {
+                    let offset = i - cand;
+                    out[ctrl_idx] |= 1 << ctrl_bit;
+                    let token =
+                        (((offset - 1) as u16) << 4) | (len - LZ_MIN_MATCH) as u16;
+                    out.extend_from_slice(&token.to_le_bytes());
+                    matched = len;
+                }
+            }
+        }
+        if matched == 0 {
+            out.push(src[i]);
+            i += 1;
+        } else {
+            i += matched;
+        }
+        ctrl_bit += 1;
+    }
+    out
+}
+
+/// Decompress an [`lz_compress`] stream into exactly `expect` bytes.
+/// Every token is bounds-checked against both the input and the
+/// declared output size, so a truncated or hostile stream is an error
+/// — never an over-allocation (callers bound `expect` against the
+/// shard guards first) or a panic.
+// earl-analyze: deterministic
+pub fn lz_decompress(src: &[u8], expect: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expect);
+    let mut i = 0usize;
+    while i < src.len() {
+        let ctrl = src[i];
+        i += 1;
+        for bit in 0..8 {
+            if i >= src.len() {
+                break;
+            }
+            if ctrl & (1 << bit) != 0 {
+                if i + 2 > src.len() {
+                    bail!("truncated lz match token at byte {i}");
+                }
+                let token = u16_le(&src[i..i + 2]);
+                i += 2;
+                let offset = (token >> 4) as usize + 1;
+                let len = (token & 0xF) as usize + LZ_MIN_MATCH;
+                if offset > out.len() {
+                    bail!(
+                        "lz match reaches {offset} bytes back with only {} decoded",
+                        out.len()
+                    );
+                }
+                if out.len() + len > expect {
+                    bail!("lz stream overruns its declared {expect} bytes");
+                }
+                // Byte-at-a-time: matches may self-overlap (RLE-style).
+                let start = out.len() - offset;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            } else {
+                if out.len() + 1 > expect {
+                    bail!("lz stream overruns its declared {expect} bytes");
+                }
+                out.push(src[i]);
+                i += 1;
+            }
+        }
+    }
+    if out.len() != expect {
+        bail!(
+            "lz stream decodes to {} bytes, descriptor says {expect}",
+            out.len()
+        );
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -263,6 +472,37 @@ impl WireTensorId {
     pub fn needs_aggregation(self) -> bool {
         matches!(self, WireTensorId::Advantages)
     }
+
+    /// Whether this tensor's staged bytes are worth running through the
+    /// negotiated codec: token ids, loss masks, reference logprobs, and
+    /// θ snapshots are repetitive at long context; whitened advantages
+    /// are near-random f32 noise, and the remaining control shards are
+    /// tiny serialized structs — both ship raw.
+    pub fn compresses_well(self) -> bool {
+        matches!(
+            self,
+            WireTensorId::Tokens
+                | WireTensorId::Mask
+                | WireTensorId::RefLogprobs
+                | WireTensorId::Snapshot
+        )
+    }
+
+    /// Stable lowercase label used in metrics records and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            WireTensorId::Tokens => "tokens",
+            WireTensorId::Mask => "mask",
+            WireTensorId::Advantages => "advantages",
+            WireTensorId::RefLogprobs => "ref_logprobs",
+            WireTensorId::IngestCommit => "ingest_commit",
+            WireTensorId::MergePartial => "merge_partial",
+            WireTensorId::Synthetic => "synthetic",
+            WireTensorId::Snapshot => "snapshot",
+            WireTensorId::RolloutRequest => "rollout_request",
+            WireTensorId::FleetJoin => "fleet_join",
+        }
+    }
 }
 
 /// Descriptor of one contiguous row range of one tensor inside a frame.
@@ -270,29 +510,81 @@ impl WireTensorId {
 pub struct ShardDesc {
     pub tensor: WireTensorId,
     pub dtype: WireDtype,
+    /// How the shard's payload bytes are encoded on the wire.
+    pub codec: Codec,
     /// First batch row of the slice.
     pub row_start: u32,
     /// Number of consecutive rows.
     pub rows: u32,
     /// Bytes per row (`cols * dtype.size()`).
     pub row_bytes: u32,
+    /// Bytes the shard actually occupies on the stream: equal to
+    /// [`Self::payload_bytes`] for [`Codec::None`], strictly smaller
+    /// for a compressed shard (the sender only compresses when it
+    /// pays).
+    pub wire_bytes: u64,
 }
 
 impl ShardDesc {
+    /// Descriptor of an uncompressed shard: the wire carries exactly
+    /// the logical bytes.
+    pub fn raw(
+        tensor: WireTensorId,
+        dtype: WireDtype,
+        row_start: u32,
+        rows: u32,
+        row_bytes: u32,
+    ) -> ShardDesc {
+        ShardDesc {
+            tensor,
+            dtype,
+            codec: Codec::None,
+            row_start,
+            rows,
+            row_bytes,
+            wire_bytes: rows as u64 * row_bytes as u64,
+        }
+    }
+
+    /// Logical (decoded) bytes of the shard.
     pub fn payload_bytes(&self) -> u64 {
         self.rows as u64 * self.row_bytes as u64
     }
 
-    /// Fixed 16-byte little-endian layout:
-    /// `tensor u16 | dtype u8 | pad u8 | row_start u32 | rows u32 | row_bytes u32`.
+    /// Cross-field sanity, checked before any receive-side read sized
+    /// by `wire_bytes`: an identity shard travels exactly its logical
+    /// bytes, and a compressed shard must be strictly smaller — a
+    /// corrupt `wire_bytes` can therefore never inflate the receive
+    /// path past the logical-size guards.
+    pub fn check_wire_bytes(&self) -> Result<()> {
+        match self.codec {
+            Codec::None if self.wire_bytes != self.payload_bytes() => bail!(
+                "uncompressed shard declares {} wire bytes for {} payload bytes",
+                self.wire_bytes,
+                self.payload_bytes()
+            ),
+            Codec::Lz if self.wire_bytes >= self.payload_bytes() => bail!(
+                "compressed shard declares {} wire bytes for {} payload bytes",
+                self.wire_bytes,
+                self.payload_bytes()
+            ),
+            _ => Ok(()),
+        }
+    }
+
+    /// Fixed 24-byte little-endian layout:
+    /// `tensor u16 | dtype u8 | codec u8 | row_start u32 | rows u32 |
+    /// row_bytes u32 | wire_bytes u64`.
     // earl-analyze: deterministic
     pub fn encode(&self) -> [u8; SHARD_DESC_LEN] {
         let mut b = [0u8; SHARD_DESC_LEN];
         b[..2].copy_from_slice(&self.tensor.code().to_le_bytes());
         b[2] = self.dtype.code();
+        b[3] = self.codec.code();
         b[4..8].copy_from_slice(&self.row_start.to_le_bytes());
         b[8..12].copy_from_slice(&self.rows.to_le_bytes());
         b[12..16].copy_from_slice(&self.row_bytes.to_le_bytes());
+        b[16..24].copy_from_slice(&self.wire_bytes.to_le_bytes());
         b
     }
 
@@ -307,9 +599,11 @@ impl ShardDesc {
         Ok(ShardDesc {
             tensor: WireTensorId::from_code(u16_le(&buf[..2]))?,
             dtype: WireDtype::from_code(buf[2])?,
+            codec: Codec::from_code(buf[3])?,
             row_start: u32_le(&buf[4..8]),
             rows: u32_le(&buf[8..12]),
             row_bytes: u32_le(&buf[12..16]),
+            wire_bytes: u64_le(&buf[16..24]),
         })
     }
 }
@@ -329,7 +623,8 @@ pub struct FrameHeader {
     /// (stale completions of a timed-out predecessor are discarded).
     pub epoch: u64,
     /// Payload bytes following the descriptor table on the stream
-    /// (descriptor table itself not counted).
+    /// (descriptor table itself not counted) — *wire* bytes, i.e. the
+    /// sum of each shard's possibly-compressed `wire_bytes`.
     pub bytes: u64,
     /// Shard descriptors following this header.
     pub n_shards: u32,
@@ -511,13 +806,13 @@ impl DispatchTensor {
             );
         }
         let rb = self.row_bytes();
-        let desc = ShardDesc {
-            tensor: self.id,
-            dtype: self.dtype,
-            row_start: checked_u32(row_start, "shard row_start")?,
-            rows: checked_u32(rows, "shard rows")?,
-            row_bytes: checked_u32(rb, "shard row_bytes")?,
-        };
+        let desc = ShardDesc::raw(
+            self.id,
+            self.dtype,
+            checked_u32(row_start, "shard row_start")?,
+            checked_u32(rows, "shard rows")?,
+            checked_u32(rb, "shard row_bytes")?,
+        );
         Ok((
             desc,
             ByteView::slice(Arc::clone(&self.data), row_start * rb, rows * rb),
@@ -679,14 +974,16 @@ impl TransferPayload {
         let mut row = 0u32;
         while left > 0 {
             let n = left.min(chunk);
+            // `n <= SYNTH_CHUNK = 1 MiB`, so the narrowing can't lose bits.
+            debug_assert!(n <= u32::MAX as u64);
             shards.push((
-                ShardDesc {
-                    tensor: WireTensorId::Synthetic,
-                    dtype: WireDtype::F32,
-                    row_start: row,
-                    rows: 1,
-                    row_bytes: n as u32,
-                },
+                ShardDesc::raw(
+                    WireTensorId::Synthetic,
+                    WireDtype::F32,
+                    row,
+                    1,
+                    n as u32,
+                ),
                 ByteView::slice(Arc::clone(&arc), 0, n as usize),
             ));
             left -= n;
@@ -695,8 +992,44 @@ impl TransferPayload {
         TransferPayload { shards }
     }
 
+    /// Logical (decoded) payload bytes — what budget accounting and
+    /// the dispatch planners reason about, independent of codec.
     pub fn payload_bytes(&self) -> u64 {
         self.shards.iter().map(|(d, _)| d.payload_bytes()).sum()
+    }
+
+    /// Bytes the payload actually occupies on the stream (compressed
+    /// where a codec applies) — what [`FrameHeader::bytes`] declares.
+    pub fn wire_bytes(&self) -> u64 {
+        self.shards.iter().map(|(d, _)| d.wire_bytes).sum()
+    }
+
+    /// Apply the negotiated codec to every shard whose tensor
+    /// [`WireTensorId::compresses_well`], keeping the compressed form
+    /// only where it is strictly smaller — so `wire_bytes <
+    /// payload_bytes` holds for every non-identity shard and a frame
+    /// can never grow from compression.
+    pub fn compress(self, codec: Codec) -> TransferPayload {
+        if codec == Codec::None {
+            return self;
+        }
+        let shards = self
+            .shards
+            .into_iter()
+            .map(|(mut desc, view)| {
+                if desc.codec == Codec::None && desc.tensor.compresses_well() {
+                    let packed = lz_compress(view.as_slice());
+                    if (packed.len() as u64) < desc.payload_bytes() {
+                        desc.codec = Codec::Lz;
+                        desc.wire_bytes = packed.len() as u64;
+                        let arc: Arc<[u8]> = packed.into();
+                        return (desc, ByteView::whole(arc));
+                    }
+                }
+                (desc, view)
+            })
+            .collect();
+        TransferPayload { shards }
     }
 
     /// FNV-1a 64 over the descriptor table then the payload bytes, in
@@ -730,7 +1063,7 @@ pub fn encode_frame(
     let header = FrameHeader {
         src,
         epoch,
-        bytes: payload.payload_bytes(),
+        bytes: payload.wire_bytes(),
         n_shards: checked_u32(payload.shards.len(), "frame n_shards")?,
         checksum: payload.checksum(),
     };
@@ -749,14 +1082,29 @@ pub fn encode_frame(
     Ok(out)
 }
 
+/// Decode one shard's wire bytes back into its logical payload bytes
+/// according to the descriptor's codec. Identity shards copy; LZ
+/// shards decompress into exactly `payload_bytes` (anything else is a
+/// framing error).
+// earl-analyze: deterministic
+pub fn decode_shard_bytes(desc: &ShardDesc, wire: &[u8]) -> Result<Vec<u8>> {
+    match desc.codec {
+        Codec::None => Ok(wire.to_vec()),
+        Codec::Lz => lz_decompress(wire, desc.payload_bytes() as usize),
+    }
+}
+
 /// Parse and checksum-verify one frame buffer, returning the header and
-/// each shard's descriptor + payload bytes. Truncated or corrupt
-/// buffers are errors.
+/// each shard's descriptor + decoded payload bytes. Truncated or
+/// corrupt buffers are errors.
 // earl-analyze: deterministic
 pub fn decode_frame(buf: &[u8]) -> Result<(FrameHeader, Vec<(ShardDesc, Vec<u8>)>)> {
     let header = FrameHeader::decode(buf)?;
     if header.n_shards > MAX_FRAME_SHARDS {
         bail!("frame claims {} shards", header.n_shards);
+    }
+    if header.bytes > MAX_FRAME_BYTES {
+        bail!("frame claims {} payload bytes", header.bytes);
     }
     let desc_len = header.n_shards as usize * SHARD_DESC_LEN;
     let body_end = FRAME_HEADER_LEN + desc_len + header.bytes as usize;
@@ -772,21 +1120,25 @@ pub fn decode_frame(buf: &[u8]) -> Result<(FrameHeader, Vec<(ShardDesc, Vec<u8>)
             &desc_bytes[i * SHARD_DESC_LEN..(i + 1) * SHARD_DESC_LEN],
         )?);
     }
-    let declared: u64 = descs.iter().map(|d| d.payload_bytes()).sum();
+    let declared: u64 = descs.iter().map(|d| d.wire_bytes).sum();
     if declared != header.bytes {
         bail!(
-            "descriptor table declares {declared} payload bytes, header {}",
+            "descriptor table declares {declared} wire bytes, header {}",
             header.bytes
         );
     }
     let mut shards = Vec::with_capacity(descs.len());
     let mut off = FRAME_HEADER_LEN + desc_len;
     for desc in descs {
-        let n = desc.payload_bytes() as usize;
-        let bytes = buf[off..off + n].to_vec();
-        f.update(&bytes);
+        desc.check_wire_bytes()?;
+        if desc.payload_bytes() > MAX_SHARD_BYTES {
+            bail!("shard claims {} payload bytes", desc.payload_bytes());
+        }
+        let n = desc.wire_bytes as usize;
+        let wire = &buf[off..off + n];
+        f.update(wire);
         off += n;
-        shards.push((desc, bytes));
+        shards.push((desc, decode_shard_bytes(&desc, wire)?));
     }
     if f.finish() != header.checksum {
         bail!(
@@ -909,13 +1261,13 @@ impl ReceivedBatch {
         for (_, t) in other.tensors {
             for row in 0..t.present.len() {
                 if let Some(bytes) = t.row(row) {
-                    let desc = ShardDesc {
-                        tensor: t.tensor,
-                        dtype: t.dtype,
-                        row_start: row as u32,
-                        rows: 1,
-                        row_bytes: t.row_bytes as u32,
-                    };
+                    let desc = ShardDesc::raw(
+                        t.tensor,
+                        t.dtype,
+                        checked_u32(row, "merge row")?,
+                        1,
+                        checked_u32(t.row_bytes, "merge row_bytes")?,
+                    );
                     self.insert(&desc, bytes)?;
                 }
             }
@@ -1223,13 +1575,13 @@ impl IngestRequest {
     /// (the commit frame the coordinator sends after the data shards).
     pub fn commit_payload(&self) -> Result<TransferPayload> {
         let bytes: Arc<[u8]> = self.encode()?.into();
-        let desc = ShardDesc {
-            tensor: WireTensorId::IngestCommit,
-            dtype: WireDtype::F32,
-            row_start: 0,
-            rows: 1,
-            row_bytes: checked_u32(bytes.len(), "commit payload")?,
-        };
+        let desc = ShardDesc::raw(
+            WireTensorId::IngestCommit,
+            WireDtype::F32,
+            0,
+            1,
+            checked_u32(bytes.len(), "commit payload")?,
+        );
         let view = ByteView::whole(bytes);
         Ok(TransferPayload { shards: vec![(desc, view)] })
     }
@@ -1311,13 +1663,13 @@ impl WorkerReport {
     /// by its own `(step, worker)`.
     pub fn merge_partial_payload(&self) -> Result<TransferPayload> {
         let bytes: Arc<[u8]> = self.encode_frame()?.into();
-        let desc = ShardDesc {
-            tensor: WireTensorId::MergePartial,
-            dtype: WireDtype::F32,
-            row_start: 0,
-            rows: 1,
-            row_bytes: checked_u32(bytes.len(), "merge partial payload")?,
-        };
+        let desc = ShardDesc::raw(
+            WireTensorId::MergePartial,
+            WireDtype::F32,
+            0,
+            1,
+            checked_u32(bytes.len(), "merge partial payload")?,
+        );
         let view = ByteView::whole(bytes);
         Ok(TransferPayload { shards: vec![(desc, view)] })
     }
@@ -1425,7 +1777,7 @@ pub const EPISODE_BATCH_FIXED_LEN: usize = 24;
 pub const MAX_EPISODE_BATCH_BYTES: usize = 1 << 26;
 
 /// Fixed body prefix of a serialized [`SnapshotFrame`].
-pub const SNAPSHOT_FIXED_LEN: usize = 12;
+pub const SNAPSHOT_FIXED_LEN: usize = 24;
 
 /// Largest snapshot body a rollout worker will allocate while decoding.
 pub const MAX_SNAPSHOT_BYTES: usize = 1 << 26;
@@ -1434,34 +1786,134 @@ pub const MAX_SNAPSHOT_BYTES: usize = 1 << 26;
 /// layout, so the wirespec checker extracts it like the header structs.
 pub const ROLLOUT_REQ_LEN: usize = 44;
 
+/// How a [`SnapshotFrame`] encodes θ.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapshotBody {
+    /// The full parameter vector θ_step — self-contained.
+    Full(Vec<f32>),
+    /// Sparse changes against the base snapshot named by
+    /// [`SnapshotFrame::base_step`]: `(index, new value)` pairs,
+    /// ascending by index. 8 B per changed entry vs 4 B per entry of a
+    /// full body, so the sender only delta-encodes when fewer than
+    /// half the parameters moved.
+    Delta(Vec<(u32, f32)>),
+}
+
 /// Bounded-stale parameters pushed to a rollout-fleet worker: θ plus
 /// the trainer step ("epoch") they were published at. The worker
 /// installs them into its local
 /// [`crate::runtime::snapshot::StepBuffer`], whose monotone-publish
 /// guard rejects regressions, and generation stamps every episode batch
 /// with the snapshot step it sampled from so the coordinator can audit
-/// staleness. Serialized into the payload of a
-/// [`WireTensorId::Snapshot`] shard.
+/// staleness. A delta body encodes θ against the worker's last *acked*
+/// snapshot (the coordinator tracks acks per connection and falls back
+/// to a full push for fresh or rejoining workers). Serialized into the
+/// payload of a [`WireTensorId::Snapshot`] shard.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SnapshotFrame {
     /// Trainer step the parameters were published at.
     pub step: u64,
-    /// Full parameter vector θ_step.
-    pub params: Vec<f32>,
+    /// For a delta body: the step of the snapshot the delta applies on
+    /// top of. Equal to `step` for full bodies (unused there).
+    pub base_step: u64,
+    pub body: SnapshotBody,
 }
 
 impl SnapshotFrame {
-    /// Serialize: `step u64 | n_params u32 | params f32×`,
-    /// little-endian throughout.
+    /// A self-contained full-θ push.
+    pub fn full(step: u64, params: Vec<f32>) -> SnapshotFrame {
+        SnapshotFrame { step, base_step: step, body: SnapshotBody::Full(params) }
+    }
+
+    /// Sparse-encode `params` against a base snapshot the receiver
+    /// already holds. Returns `None` when the shapes disagree, an
+    /// index overflows the wire field, or the delta would not be
+    /// strictly smaller on the wire than a full body — callers then
+    /// fall back to [`Self::full`].
+    pub fn delta_from(
+        step: u64,
+        params: &[f32],
+        base_step: u64,
+        base: &[f32],
+    ) -> Option<SnapshotFrame> {
+        if base.len() != params.len() {
+            return None;
+        }
+        let mut entries = Vec::new();
+        for (i, (p, b)) in params.iter().zip(base).enumerate() {
+            // Bit-level comparison: the resolved vector must reproduce
+            // θ_step exactly, NaNs and signed zeros included.
+            if p.to_bits() != b.to_bits() {
+                entries.push((u32::try_from(i).ok()?, *p));
+            }
+        }
+        if entries.len() * 8 >= params.len() * 4 {
+            return None;
+        }
+        Some(SnapshotFrame { step, base_step, body: SnapshotBody::Delta(entries) })
+    }
+
+    /// Materialize θ_step: a full body stands alone; a delta body
+    /// applies on top of `base`, which must be exactly the snapshot
+    /// (step and shape) the delta was encoded against.
+    pub fn resolve(&self, base: Option<(u64, &[f32])>) -> Result<Vec<f32>> {
+        match &self.body {
+            SnapshotBody::Full(params) => Ok(params.clone()),
+            SnapshotBody::Delta(entries) => {
+                let Some((base_step, base_params)) = base else {
+                    bail!(
+                        "delta snapshot for step {} with no base installed",
+                        self.step
+                    );
+                };
+                if base_step != self.base_step {
+                    bail!(
+                        "delta snapshot applies to step {}, base is step {base_step}",
+                        self.base_step
+                    );
+                }
+                let mut params = base_params.to_vec();
+                for &(i, v) in entries {
+                    let Some(slot) = params.get_mut(i as usize) else {
+                        bail!(
+                            "delta snapshot touches index {i} of {} params",
+                            params.len()
+                        );
+                    };
+                    *slot = v;
+                }
+                Ok(params)
+            }
+        }
+    }
+
+    /// Serialize: `step u64 | base_step u64 | mode u32 | n_entries u32`
+    /// then per entry `value f32` (mode 0, full) or
+    /// `index u32 | value f32` (mode 1, delta), little-endian
+    /// throughout.
     // earl-analyze: deterministic
     pub fn encode(&self) -> Result<Vec<u8>> {
-        let mut b = Vec::with_capacity(SNAPSHOT_FIXED_LEN + self.params.len() * 4);
+        let (mode, n, entry_bytes) = match &self.body {
+            SnapshotBody::Full(p) => (0u32, p.len(), 4),
+            SnapshotBody::Delta(e) => (1u32, e.len(), 8),
+        };
+        let mut b = Vec::with_capacity(SNAPSHOT_FIXED_LEN + n * entry_bytes);
         b.extend_from_slice(&self.step.to_le_bytes());
-        b.extend_from_slice(
-            &checked_u32(self.params.len(), "n_params")?.to_le_bytes(),
-        );
-        for p in &self.params {
-            b.extend_from_slice(&p.to_le_bytes());
+        b.extend_from_slice(&self.base_step.to_le_bytes());
+        b.extend_from_slice(&mode.to_le_bytes());
+        b.extend_from_slice(&checked_u32(n, "n_entries")?.to_le_bytes());
+        match &self.body {
+            SnapshotBody::Full(params) => {
+                for p in params {
+                    b.extend_from_slice(&p.to_le_bytes());
+                }
+            }
+            SnapshotBody::Delta(entries) => {
+                for (i, v) in entries {
+                    b.extend_from_slice(&i.to_le_bytes());
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
         }
         Ok(b)
     }
@@ -1475,34 +1927,52 @@ impl SnapshotFrame {
             );
         }
         let step = u64_le(&buf[..8]);
-        let n_params = u32_le(&buf[8..12]) as usize;
-        let need = SNAPSHOT_FIXED_LEN + n_params * 4;
+        let base_step = u64_le(&buf[8..16]);
+        let mode = u32_le(&buf[16..20]);
+        let n_entries = u32_le(&buf[20..24]) as usize;
+        let entry_bytes = match mode {
+            0 => 4,
+            1 => 8,
+            other => bail!("unknown snapshot mode {other}"),
+        };
+        let need = SNAPSHOT_FIXED_LEN + n_entries * entry_bytes;
         if need > MAX_SNAPSHOT_BYTES {
             bail!("snapshot frame claims {need} bytes");
         }
         if buf.len() != need {
             bail!("snapshot frame is {} bytes, layout wants {need}", buf.len());
         }
-        let mut params = Vec::with_capacity(n_params);
         let mut off = SNAPSHOT_FIXED_LEN;
-        for _ in 0..n_params {
-            params.push(f32_le(&buf[off..off + 4]));
-            off += 4;
-        }
-        Ok(SnapshotFrame { step, params })
+        let body = if mode == 0 {
+            let mut params = Vec::with_capacity(n_entries);
+            for _ in 0..n_entries {
+                params.push(f32_le(&buf[off..off + 4]));
+                off += 4;
+            }
+            SnapshotBody::Full(params)
+        } else {
+            let mut entries = Vec::with_capacity(n_entries);
+            for _ in 0..n_entries {
+                entries
+                    .push((u32_le(&buf[off..off + 4]), f32_le(&buf[off + 4..off + 8])));
+                off += 8;
+            }
+            SnapshotBody::Delta(entries)
+        };
+        Ok(SnapshotFrame { step, base_step, body })
     }
 
     /// Wrap the serialized snapshot into a single-shard transfer payload
     /// (tensor [`WireTensorId::Snapshot`]).
     pub fn payload(&self) -> Result<TransferPayload> {
         let bytes: Arc<[u8]> = self.encode()?.into();
-        let desc = ShardDesc {
-            tensor: WireTensorId::Snapshot,
-            dtype: WireDtype::F32,
-            row_start: 0,
-            rows: 1,
-            row_bytes: checked_u32(bytes.len(), "snapshot payload")?,
-        };
+        let desc = ShardDesc::raw(
+            WireTensorId::Snapshot,
+            WireDtype::F32,
+            0,
+            1,
+            checked_u32(bytes.len(), "snapshot payload")?,
+        );
         let view = ByteView::whole(bytes);
         Ok(TransferPayload { shards: vec![(desc, view)] })
     }
@@ -1581,13 +2051,13 @@ impl RolloutRequest {
     /// (tensor [`WireTensorId::RolloutRequest`]).
     pub fn payload(&self) -> Result<TransferPayload> {
         let bytes: Arc<[u8]> = self.encode().to_vec().into();
-        let desc = ShardDesc {
-            tensor: WireTensorId::RolloutRequest,
-            dtype: WireDtype::I32,
-            row_start: 0,
-            rows: 1,
-            row_bytes: checked_u32(bytes.len(), "rollout request payload")?,
-        };
+        let desc = ShardDesc::raw(
+            WireTensorId::RolloutRequest,
+            WireDtype::I32,
+            0,
+            1,
+            checked_u32(bytes.len(), "rollout request payload")?,
+        );
         let view = ByteView::whole(bytes);
         Ok(TransferPayload { shards: vec![(desc, view)] })
     }
@@ -1925,13 +2395,8 @@ mod tests {
         // checksum only runs after the payload streams), not turned
         // into a multi-gigabyte allocation.
         let mut batch = ReceivedBatch::new();
-        let desc = ShardDesc {
-            tensor: WireTensorId::Tokens,
-            dtype: WireDtype::I32,
-            row_start: u32::MAX,
-            rows: 1,
-            row_bytes: 64,
-        };
+        let desc =
+            ShardDesc::raw(WireTensorId::Tokens, WireDtype::I32, u32::MAX, 1, 64);
         assert!(batch.reserve(&desc).is_err());
         assert!(batch.is_empty());
     }
@@ -2092,7 +2557,7 @@ mod tests {
     }
 
     fn sample_snapshot() -> SnapshotFrame {
-        SnapshotFrame { step: 9, params: vec![0.0, -0.5, 0.25, 1.0] }
+        SnapshotFrame::full(9, vec![0.0, -0.5, 0.25, 1.0])
     }
 
     fn sample_rollout_request() -> RolloutRequest {
@@ -2154,9 +2619,9 @@ mod tests {
         let mut padded = wire.clone();
         padded.push(0);
         assert!(SnapshotFrame::decode(&padded).is_err());
-        // Hostile param count must not allocate.
+        // Hostile entry count must not allocate.
         let mut huge = wire;
-        huge[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        huge[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(SnapshotFrame::decode(&huge).is_err());
         // The payload rides a normal control shard.
         let tp = snap.payload().unwrap();
@@ -2221,6 +2686,205 @@ mod tests {
         let mut padded = body;
         padded.extend_from_slice(&[0u8; 4]);
         assert!(EpisodeBatch::decode_checked(&padded, fnv1a64(&padded)).is_err());
+    }
+
+    /// Deterministic compressible byte pattern (repetitive, like token
+    /// ids at long context).
+    fn compressible(n: usize) -> Vec<u8> {
+        (0..n).map(|i| ((i / 7) % 23) as u8).collect()
+    }
+
+    /// Deterministic high-entropy byte pattern (like whitened f32s).
+    fn noisy(n: usize) -> Vec<u8> {
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        (0..n)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x >> 56) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lz_roundtrips_byte_identical() {
+        for src in [
+            Vec::new(),
+            vec![7u8],
+            b"abcabcabcabcabc".to_vec(),
+            compressible(10_000),
+            noisy(4_096),
+            vec![0u8; 100_000],
+        ] {
+            let packed = lz_compress(&src);
+            let back = lz_decompress(&packed, src.len()).unwrap();
+            assert_eq!(back, src, "lz roundtrip must be lossless");
+        }
+        // Repetitive data actually shrinks.
+        assert!(lz_compress(&compressible(10_000)).len() < 10_000);
+        assert!(lz_compress(&vec![0u8; 100_000]).len() < 2_000);
+    }
+
+    #[test]
+    fn lz_rejects_truncated_and_hostile_streams() {
+        let src = compressible(5_000);
+        let packed = lz_compress(&src);
+        for cut in [1, packed.len() / 2, packed.len() - 1] {
+            assert!(lz_decompress(&packed[..cut], src.len()).is_err());
+        }
+        // Wrong declared size in either direction.
+        assert!(lz_decompress(&packed, src.len() - 1).is_err());
+        assert!(lz_decompress(&packed, src.len() + 1).is_err());
+        // A match token reaching before the start of the output.
+        let hostile = [0b0000_0001u8, 0xFF, 0xFF];
+        assert!(lz_decompress(&hostile, 18).is_err());
+    }
+
+    #[test]
+    fn compressed_frame_roundtrips_byte_identical() {
+        let tokens: Vec<i32> = (0..4 * 512).map(|i| (i / 7) % 23).collect();
+        let p = StepPayload::new(vec![
+            DispatchTensor::from_i32(WireTensorId::Tokens, 4, 512, &tokens).unwrap(),
+            DispatchTensor::from_f32(WireTensorId::Mask, 4, 512, &[1.0; 4 * 512])
+                .unwrap(),
+        ])
+        .unwrap();
+        let raw = TransferPayload::for_items(&p, &[0, 1, 2, 3]).unwrap();
+        let tp = TransferPayload::for_items(&p, &[0, 1, 2, 3])
+            .unwrap()
+            .compress(Codec::Lz);
+        // Compression pays on this payload and never changes logical size.
+        assert!(tp.wire_bytes() < raw.wire_bytes());
+        assert_eq!(tp.payload_bytes(), raw.payload_bytes());
+        let frame = encode_frame(3, 11, &tp).unwrap();
+        assert!(frame.len() < encode_frame(3, 11, &raw).unwrap().len());
+        let (header, shards) = decode_frame(&frame).unwrap();
+        assert_eq!(header.bytes, tp.wire_bytes());
+        let mut batch = ReceivedBatch::new();
+        for (desc, bytes) in &shards {
+            batch.insert(desc, bytes).unwrap();
+        }
+        assert_eq!(
+            batch.assert_matches(&p, &[0, 1, 2, 3]).unwrap(),
+            tp.payload_bytes()
+        );
+    }
+
+    #[test]
+    fn compression_skips_noise_and_aggregated_tensors() {
+        let noise: Vec<f32> = noisy(4 * 64 * 4)
+            .chunks(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect();
+        let p = StepPayload::new(vec![DispatchTensor::from_f32(
+            WireTensorId::Advantages,
+            4,
+            64,
+            &noise,
+        )
+        .unwrap()])
+        .unwrap();
+        let tp = TransferPayload::for_items(&p, &[0, 1, 2, 3])
+            .unwrap()
+            .compress(Codec::Lz);
+        // Advantages never compress (policy), so wire == logical.
+        assert_eq!(tp.wire_bytes(), tp.payload_bytes());
+        assert!(tp.shards.iter().all(|(d, _)| d.codec == Codec::None));
+    }
+
+    #[test]
+    fn truncated_compressed_frame_is_rejected() {
+        let tokens: Vec<i32> = (0..2 * 256).map(|i| (i / 5) % 17).collect();
+        let p = StepPayload::new(vec![DispatchTensor::from_i32(
+            WireTensorId::Tokens,
+            2,
+            256,
+            &tokens,
+        )
+        .unwrap()])
+        .unwrap();
+        let tp =
+            TransferPayload::for_items(&p, &[0, 1]).unwrap().compress(Codec::Lz);
+        assert!(tp.shards[0].0.codec == Codec::Lz, "fixture must compress");
+        let frame = encode_frame(0, 1, &tp).unwrap();
+        for cut in [frame.len() - 1, frame.len() - 8, FRAME_HEADER_LEN + 3] {
+            assert!(decode_frame(&frame[..cut]).is_err(), "truncated at {cut}");
+        }
+        // Flip a compressed payload byte → checksum failure.
+        let mut corrupt = frame.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0x10;
+        assert!(decode_frame(&corrupt).is_err());
+    }
+
+    #[test]
+    fn shard_desc_wire_bytes_sanity_is_enforced() {
+        let mut desc =
+            ShardDesc::raw(WireTensorId::Tokens, WireDtype::I32, 0, 2, 16);
+        desc.check_wire_bytes().unwrap();
+        // Identity shard lying about its wire size.
+        desc.wire_bytes = 31;
+        assert!(desc.check_wire_bytes().is_err());
+        // "Compressed" shard that is not smaller than its payload.
+        desc.codec = Codec::Lz;
+        desc.wire_bytes = 32;
+        assert!(desc.check_wire_bytes().is_err());
+        desc.wire_bytes = 31;
+        desc.check_wire_bytes().unwrap();
+    }
+
+    #[test]
+    fn codec_negotiation_prefers_lz_and_degrades_to_identity() {
+        let all = Codec::supported_caps();
+        assert_eq!(Codec::negotiate(all, all), Codec::Lz);
+        assert_eq!(Codec::negotiate(all, Codec::None.cap_bit()), Codec::None);
+        // An old peer advertising nothing still interoperates.
+        assert_eq!(Codec::negotiate(all, 0), Codec::None);
+        for c in Codec::ALL {
+            assert_eq!(Codec::from_code(c.code()).unwrap(), c);
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert!(Codec::from_code(250).is_err());
+        assert!(Codec::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn delta_snapshot_resolves_bit_identical() {
+        let base: Vec<f32> = (0..256).map(|i| i as f32 * 0.5).collect();
+        let mut next = base.clone();
+        next[3] = -1.25;
+        next[200] = f32::NAN;
+        let frame = SnapshotFrame::delta_from(10, &next, 9, &base).unwrap();
+        assert!(matches!(&frame.body, SnapshotBody::Delta(e) if e.len() == 2));
+        let wire = frame.encode().unwrap();
+        let back = SnapshotFrame::decode(&wire).unwrap();
+        assert_eq!(back, frame);
+        let resolved = back.resolve(Some((9, &base))).unwrap();
+        assert_eq!(resolved.len(), next.len());
+        for (a, b) in resolved.iter().zip(&next) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Delta against the wrong base step, or no base, is an error.
+        assert!(back.resolve(Some((8, &base))).is_err());
+        assert!(back.resolve(None).is_err());
+        // And the delta frame is strictly smaller than the full push.
+        let full = SnapshotFrame::full(10, next.clone()).encode().unwrap();
+        assert!(wire.len() < full.len());
+    }
+
+    #[test]
+    fn delta_snapshot_falls_back_when_it_does_not_pay() {
+        let base: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        // Everything changed: a delta would be 2× the full body.
+        let next: Vec<f32> = base.iter().map(|v| v + 1.0).collect();
+        assert!(SnapshotFrame::delta_from(5, &next, 4, &base).is_none());
+        // Shape mismatch (a rejoining worker with stale vocab) falls back.
+        assert!(SnapshotFrame::delta_from(5, &next[..32], 4, &base).is_none());
+        // Unchanged θ is the best case: an empty delta.
+        let same = SnapshotFrame::delta_from(5, &base, 4, &base).unwrap();
+        assert!(matches!(&same.body, SnapshotBody::Delta(e) if e.is_empty()));
+        assert_eq!(same.resolve(Some((4, &base))).unwrap(), base);
     }
 
     #[test]

@@ -704,7 +704,11 @@ fn cmd_dispatch_bench(args: &Args) -> Result<()> {
         let item_bytes = shard_bytes / n as u64;
         let base = plan_centralized(&producer, &consumer, item_bytes, 0);
         let earl = plan_alltoall(&producer, &consumer, item_bytes);
-        let opts = ExecOptions { payload: None, inflight_budget: budget };
+        let opts = ExecOptions {
+            payload: None,
+            inflight_budget: budget,
+            ..Default::default()
+        };
         let rb = runtime.execute_opts(&base, opts)?.report;
         let re = runtime.execute_opts(&earl, opts)?.report;
         println!(

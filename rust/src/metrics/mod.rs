@@ -57,6 +57,15 @@ pub struct StepRecord {
     /// serialized size of every shipped (checksum-verified) ExpPrep
     /// tensor shard.
     pub dispatch_bytes: u64,
+    /// Bytes the dispatcher actually put on the wire for those shards
+    /// after per-tensor codec negotiation — equals `dispatch_bytes`
+    /// with the codec off (and in the simulated modes, which never
+    /// serialize).
+    pub dispatch_wire_bytes: u64,
+    /// Per-tensor `(name, raw_bytes, wire_bytes)` split of the shipped
+    /// payload (TCP mode; empty simulated). Raw sums to
+    /// `dispatch_bytes`, wire to `dispatch_wire_bytes`.
+    pub dispatch_tensor_bytes: Vec<(String, u64, u64)>,
     /// Bytes aggregation-aware planning (paper §3.3) kept on the
     /// controller instead of dispatching (the aggregated advantages);
     /// 0 when the whole payload ships.
@@ -121,6 +130,27 @@ impl StepRecord {
             ("dispatch_seconds", Json::num(self.dispatch_seconds)),
             ("dispatch_wall_seconds", Json::num(self.dispatch_wall_seconds)),
             ("dispatch_bytes", Json::num(self.dispatch_bytes as f64)),
+            (
+                "dispatch_wire_bytes",
+                Json::num(self.dispatch_wire_bytes as f64),
+            ),
+            (
+                "dispatch_tensor_bytes",
+                Json::obj(
+                    self.dispatch_tensor_bytes
+                        .iter()
+                        .map(|(name, raw, wire)| {
+                            (
+                                name.as_str(),
+                                Json::obj(vec![
+                                    ("raw", Json::num(*raw as f64)),
+                                    ("wire", Json::num(*wire as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "dispatch_controller_bytes",
                 Json::num(self.dispatch_controller_bytes as f64),
@@ -382,6 +412,11 @@ mod tests {
             dispatch_seconds: 0.1,
             dispatch_wall_seconds: 0.2,
             dispatch_bytes: 4096,
+            dispatch_wire_bytes: 3072,
+            dispatch_tensor_bytes: vec![
+                ("tokens".to_string(), 2048, 1024),
+                ("mask".to_string(), 2048, 2048),
+            ],
             dispatch_controller_bytes: 1024,
             dispatch_inflight_peak_bytes: 2048,
             dispatch_stall_seconds: 0.05,
@@ -406,6 +441,19 @@ mod tests {
         assert_eq!(j.at(&["bucket"]).as_usize(), Some(128));
         assert_eq!(j.at(&["selector_switched"]).as_bool(), Some(false));
         assert_eq!(j.at(&["dispatch_bytes"]).as_usize(), Some(4096));
+        assert_eq!(j.at(&["dispatch_wire_bytes"]).as_usize(), Some(3072));
+        assert_eq!(
+            j.at(&["dispatch_tensor_bytes", "tokens", "raw"]).as_usize(),
+            Some(2048)
+        );
+        assert_eq!(
+            j.at(&["dispatch_tensor_bytes", "tokens", "wire"]).as_usize(),
+            Some(1024)
+        );
+        assert_eq!(
+            j.at(&["dispatch_tensor_bytes", "mask", "wire"]).as_usize(),
+            Some(2048)
+        );
         assert_eq!(
             j.at(&["dispatch_controller_bytes"]).as_usize(),
             Some(1024)

@@ -16,7 +16,7 @@ pub mod manifest;
 use anyhow::{bail, Result};
 
 use crate::dispatch::wire::{
-    checked_u32, fnv1a64, u32_le, u64_le, ByteView, Fnv64, ShardDesc,
+    checked_u32, fnv1a64, u32_le, u64_le, ByteView, Codec, Fnv64, ShardDesc,
     TransferPayload, WireDtype, WireTensorId, EPISODE_BATCH_FIXED_LEN,
     EPISODE_MAGIC, FRAME_HEADER_LEN, RESULT_MAGIC, ROLLOUT_REQ_LEN, SHARD_DESC_LEN,
     SNAPSHOT_FIXED_LEN, WIRE_MAGIC,
@@ -28,7 +28,7 @@ pub use manifest::{Manifest, WorkerEntry, MANIFEST_MAGIC};
 pub const JOIN_MAGIC: u32 = 0xEA71_0901;
 
 /// Exact serialized length of a [`JoinRequest`] / [`JoinAck`] body.
-pub const JOIN_REQ_LEN: usize = 24;
+pub const JOIN_REQ_LEN: usize = 32;
 
 /// Fingerprint of the wire protocol this build speaks: FNV-1a 64 over
 /// the framing constants and the full control-id table. Joiner and
@@ -47,32 +47,39 @@ pub fn protocol_checksum() -> u64 {
     f.update(&(ROLLOUT_REQ_LEN as u64).to_le_bytes());
     f.update(&(SNAPSHOT_FIXED_LEN as u64).to_le_bytes());
     f.update(&JOIN_MAGIC.to_le_bytes());
+    f.update(&(JOIN_REQ_LEN as u64).to_le_bytes());
     for id in WireTensorId::ALL {
         f.update(&id.code().to_le_bytes());
+    }
+    for c in Codec::ALL {
+        f.update(&[c.code()]);
     }
     f.finish()
 }
 
 /// The coordinator's half of the join handshake, serialized into the
 /// payload of a [`WireTensorId::FleetJoin`] shard: the logical worker
-/// id and generation being admitted, plus the coordinator's
-/// [`protocol_checksum`].
+/// id and generation being admitted, the coordinator's
+/// [`protocol_checksum`], and the codec capabilities it offers
+/// (a bitset of [`Codec::cap_bit`]s).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct JoinRequest {
     pub worker: u64,
     pub generation: u64,
     pub protocol: u64,
+    pub codec_caps: u64,
 }
 
 impl JoinRequest {
-    /// Serialize: `worker u64 | generation u64 | protocol u64`,
-    /// little-endian throughout.
+    /// Serialize: `worker u64 | generation u64 | protocol u64 |
+    /// codec_caps u64`, little-endian throughout.
     // earl-analyze: deterministic
     pub fn encode(&self) -> [u8; JOIN_REQ_LEN] {
         let mut b = [0u8; JOIN_REQ_LEN];
         b[..8].copy_from_slice(&self.worker.to_le_bytes());
         b[8..16].copy_from_slice(&self.generation.to_le_bytes());
         b[16..24].copy_from_slice(&self.protocol.to_le_bytes());
+        b[24..32].copy_from_slice(&self.codec_caps.to_le_bytes());
         b
     }
 
@@ -85,6 +92,7 @@ impl JoinRequest {
             worker: u64_le(&buf[..8]),
             generation: u64_le(&buf[8..16]),
             protocol: u64_le(&buf[16..24]),
+            codec_caps: u64_le(&buf[24..32]),
         })
     }
 
@@ -92,20 +100,22 @@ impl JoinRequest {
     /// (tensor [`WireTensorId::FleetJoin`]).
     pub fn payload(&self) -> Result<TransferPayload> {
         let bytes: std::sync::Arc<[u8]> = self.encode().to_vec().into();
-        let desc = ShardDesc {
-            tensor: WireTensorId::FleetJoin,
-            dtype: WireDtype::I32,
-            row_start: 0,
-            rows: 1,
-            row_bytes: checked_u32(bytes.len(), "join request payload")?,
-        };
+        let desc = ShardDesc::raw(
+            WireTensorId::FleetJoin,
+            WireDtype::I32,
+            0,
+            1,
+            checked_u32(bytes.len(), "join request payload")?,
+        );
         let view = ByteView::whole(bytes);
         Ok(TransferPayload { shards: vec![(desc, view)] })
     }
 }
 
 /// The worker's half of the handshake: it echoes the admitted id and
-/// generation and answers with its *own* [`protocol_checksum`]. Rides
+/// generation, answers with its *own* [`protocol_checksum`], and names
+/// the [`Codec`] it negotiated from the request's capability bitset
+/// (the intersection with its own caps — [`Codec::negotiate`]). Rides
 /// the ack stream as a checksummed follow frame
 /// (`JOIN_MAGIC u32 | body_len u32 | body | fnv1a64(body) u64`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -113,6 +123,7 @@ pub struct JoinAck {
     pub worker: u64,
     pub generation: u64,
     pub protocol: u64,
+    pub codec: Codec,
 }
 
 impl JoinAck {
@@ -122,6 +133,7 @@ impl JoinAck {
         body[..8].copy_from_slice(&self.worker.to_le_bytes());
         body[8..16].copy_from_slice(&self.generation.to_le_bytes());
         body[16..24].copy_from_slice(&self.protocol.to_le_bytes());
+        body[24..32].copy_from_slice(&(self.codec.code() as u64).to_le_bytes());
         let mut out = Vec::with_capacity(8 + JOIN_REQ_LEN + 8);
         out.extend_from_slice(&JOIN_MAGIC.to_le_bytes());
         out.extend_from_slice(&(JOIN_REQ_LEN as u32).to_le_bytes());
@@ -141,10 +153,16 @@ impl JoinAck {
         if body.len() != JOIN_REQ_LEN {
             bail!("join ack is {} bytes, layout wants {JOIN_REQ_LEN}", body.len());
         }
+        let raw = u64_le(&body[24..32]);
+        if raw > u8::MAX as u64 {
+            bail!("join ack names out-of-range codec {raw}");
+        }
+        let codec = Codec::from_code(raw as u8)?;
         Ok(JoinAck {
             worker: u64_le(&body[..8]),
             generation: u64_le(&body[8..16]),
             protocol: u64_le(&body[16..24]),
+            codec,
         })
     }
 
@@ -186,8 +204,12 @@ mod tests {
 
     #[test]
     fn join_request_roundtrips() {
-        let req =
-            JoinRequest { worker: 3, generation: 2, protocol: protocol_checksum() };
+        let req = JoinRequest {
+            worker: 3,
+            generation: 2,
+            protocol: protocol_checksum(),
+            codec_caps: Codec::supported_caps(),
+        };
         let wire = req.encode();
         assert_eq!(JoinRequest::decode(&wire).unwrap(), req);
         assert!(JoinRequest::decode(&wire[..wire.len() - 1]).is_err());
@@ -195,7 +217,12 @@ mod tests {
 
     #[test]
     fn join_ack_roundtrips_and_rejects_corruption() {
-        let ack = JoinAck { worker: 3, generation: 2, protocol: protocol_checksum() };
+        let ack = JoinAck {
+            worker: 3,
+            generation: 2,
+            protocol: protocol_checksum(),
+            codec: Codec::Lz,
+        };
         let frame = ack.encode_frame();
         assert_eq!(JoinAck::decode_frame(&frame).unwrap(), ack);
         for cut in [0, 7, 15, frame.len() - 1] {
@@ -207,5 +234,24 @@ mod tests {
         let mut bad = frame;
         bad[0] ^= 0xFF;
         assert!(JoinAck::decode_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn join_ack_rejects_unknown_codec() {
+        let ack = JoinAck {
+            worker: 1,
+            generation: 1,
+            protocol: protocol_checksum(),
+            codec: Codec::None,
+        };
+        let mut frame = ack.encode_frame();
+        // Codec code rides at body[24..32] → frame[8 + 24]. Re-sign the
+        // body so only the codec validation can reject it.
+        frame[8 + 24] = 0x7F;
+        let body_end = 8 + JOIN_REQ_LEN;
+        let sum = fnv1a64(&frame[8..body_end]);
+        frame[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let err = JoinAck::decode_frame(&frame).unwrap_err();
+        assert!(err.to_string().contains("codec"), "{err}");
     }
 }

@@ -144,6 +144,7 @@ impl FleetRollout {
                 budget,
                 cfg.max_staleness,
                 FLEET_IO_TIMEOUT,
+                cfg.wire_codec,
             ),
         }
     }

@@ -98,6 +98,15 @@ impl<T> StepBuffer<T> {
         inner.slots[inner.front].as_ref().map(|(s, _)| *s)
     }
 
+    /// The front value together with its stamp, read under one lock —
+    /// [`Self::front`] + [`Self::front_step`] as separate calls could
+    /// interleave with a publish and pair a value with the wrong step.
+    /// Delta-snapshot installs resolve against this pair atomically.
+    pub fn front_stamped(&self) -> Option<(u64, Arc<T>)> {
+        let inner = self.locked();
+        inner.slots[inner.front].as_ref().map(|(s, v)| (*s, Arc::clone(v)))
+    }
+
     /// Bounded-staleness acquire: block until the front is at least
     /// `min_step` (i.e. refuse any value older than the caller's
     /// staleness budget), failing after `timeout` so a wedged publisher
@@ -197,6 +206,15 @@ mod tests {
         let fresh = buf.acquire(5, Duration::from_secs(10)).unwrap();
         assert_eq!(*fresh, 55);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn front_stamped_pairs_value_and_step() {
+        let buf = StepBuffer::new();
+        assert!(buf.front_stamped().is_none());
+        buf.publish(9, 90u64).unwrap();
+        let (s, v) = buf.front_stamped().unwrap();
+        assert_eq!((s, *v), (9, 90));
     }
 
     #[test]

@@ -17,8 +17,8 @@ use earl::coordinator::{
     packed_payload, DispatchJob, DispatchMode, DispatchWorker,
 };
 use earl::dispatch::{
-    decode_frame, plan_alltoall, DataLayout, ExecOptions, ReceivedBatch,
-    StepPayload, TcpRuntime, TransferPayload,
+    decode_frame, plan_alltoall, Codec, DataLayout, ExecOptions,
+    ReceivedBatch, StepPayload, TcpRuntime, TransferPayload,
 };
 use earl::rl::advantage::{reinforce_advantages, AdvantageCfg};
 use earl::rl::episode::{Episode, EpisodeStatus, ExperienceBatch, Turn};
@@ -85,7 +85,11 @@ fn real_packed_batch_roundtrips_single_process() {
     let out = rt
         .execute_opts(
             &plan,
-            ExecOptions { payload: Some(&payload), inflight_budget: None },
+            ExecOptions {
+                payload: Some(&payload),
+                inflight_budget: None,
+                ..Default::default()
+            },
         )
         .unwrap();
     assert_eq!(out.report.bytes, payload.total_bytes());
@@ -126,8 +130,10 @@ fn dispatch_worker_ships_real_payload() {
             payload: Some(Arc::clone(&payload)),
             inflight_budget: Some(payload.item_bytes()),
             adaptive_budget: false,
+            reset_budget: false,
             controller_bytes: 0,
             remote: None,
+            codec: Codec::None,
         })
         .unwrap();
         let r = w.recv().unwrap();
@@ -204,7 +210,11 @@ fn real_packed_batch_roundtrips_across_processes() {
     let out = rt
         .execute_opts(
             &plan,
-            ExecOptions { payload: Some(&payload), inflight_budget: None },
+            ExecOptions {
+                payload: Some(&payload),
+                inflight_budget: None,
+                ..Default::default()
+            },
         )
         .unwrap();
     assert_eq!(out.report.bytes, payload.total_bytes());

@@ -19,7 +19,8 @@ use earl::coordinator::{
     DispatchJob, DispatchMode, DispatchWorker, PipelineMode, Trainer,
 };
 use earl::dispatch::{
-    plan_alltoall, DataLayout, DispatchPlan, TcpRuntime, WorkerTransfer,
+    plan_alltoall, Codec, DataLayout, DispatchPlan, TcpRuntime,
+    WorkerTransfer,
 };
 use earl::metrics::StepRecord;
 use earl::runtime::{ModelState, SnapshotBuffer};
@@ -239,6 +240,7 @@ fn dispatch_worker_reuses_tcp_connections_across_steps() {
         reset_budget: false,
         controller_bytes: 0,
         remote: None,
+        codec: Codec::None,
     };
     let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(8)));
     w.submit(job(0)).unwrap();
@@ -373,6 +375,7 @@ fn pipelined_submit_then_recv_preserves_order_across_modes() {
         reset_budget: false,
         controller_bytes: 0,
         remote: None,
+        codec: Codec::None,
     };
     let mut w = DispatchWorker::spawn(Arc::new(ThreadPool::new(4)));
     w.submit(mk(1, DispatchMode::Simulated)).unwrap();

@@ -25,13 +25,7 @@ use earl::runtime::snapshot::StepBuffer;
 
 fn one_row(tensor: WireTensorId, row_bytes: u32, row: u32) -> ReceivedBatch {
     let mut b = ReceivedBatch::new();
-    let desc = ShardDesc {
-        tensor,
-        dtype: WireDtype::I32,
-        row_start: row,
-        rows: 1,
-        row_bytes,
-    };
+    let desc = ShardDesc::raw(tensor, WireDtype::I32, row, 1, row_bytes);
     b.insert(&desc, &vec![0xAB; row_bytes as usize]).unwrap();
     b
 }

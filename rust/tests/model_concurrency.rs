@@ -98,13 +98,7 @@ type Shard = (WireTensorId, u32, u32);
 fn batch_of(shards: &[Shard]) -> ReceivedBatch {
     let mut b = ReceivedBatch::new();
     for &(tensor, row_bytes, row) in shards {
-        let desc = ShardDesc {
-            tensor,
-            dtype: WireDtype::I32,
-            row_start: row,
-            rows: 1,
-            row_bytes,
-        };
+        let desc = ShardDesc::raw(tensor, WireDtype::I32, row, 1, row_bytes);
         b.insert(&desc, &vec![0xAB; row_bytes as usize])
             .expect("self-consistent test batch");
     }

@@ -6,11 +6,12 @@ use std::collections::{BTreeMap, BTreeSet};
 use earl::cluster::ClusterSpec;
 use earl::dispatch::{
     assign_standins, build_merge_schedule, contiguous_runs, decode_frame,
-    encode_frame, merge_tree_depth, plan_alltoall, plan_centralized,
-    plan_ingest, replan_ingest_excluding, satisfies, DataLayout,
-    DispatchTensor, EpisodeBatch, FrameHeader, MergeSink, ReceivedBatch,
-    StepPayload, TensorKind, TransferPayload, WireTensorId, WorkerReport,
-    FRAME_HEADER_LEN,
+    encode_frame, lz_compress, lz_decompress, merge_tree_depth,
+    plan_alltoall, plan_centralized, plan_ingest, replan_ingest_excluding,
+    satisfies, Codec, DataLayout, DispatchTensor, EpisodeBatch, FrameHeader,
+    MergeSink, ReceivedBatch, StepPayload, TensorKind, TransferPayload,
+    WireTensorId, WorkerReport, FRAME_HEADER_LEN, MAX_FRAME_BYTES,
+    SHARD_DESC_LEN,
 };
 use earl::envs::{ConnectFour, Game, Outcome, TicTacToe};
 use earl::parallelism::{
@@ -229,6 +230,230 @@ fn prop_truncated_or_corrupt_frames_rejected() {
         let idx = body_start + rng.below(tp.payload_bytes() as usize);
         corrupt[idx] ^= 1 + rng.below(255) as u8;
         assert!(decode_frame(&corrupt).is_err(), "bit flip at {idx}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Negotiated wire codec: LZ roundtrip byte-identity on arbitrary
+// inputs, compressed frames under the same truncation/corruption
+// contract as raw ones, and single-field header mutations rejected at
+// the guards — before any header-declared allocation.
+// ---------------------------------------------------------------------------
+
+fn random_bytes(rng: &mut Pcg64) -> Vec<u8> {
+    match rng.below(4) {
+        // Incompressible: uniform noise.
+        0 => (0..gen::usize_in(rng, 0, 600))
+            .map(|_| rng.next_u64() as u8)
+            .collect(),
+        // Highly compressible: one long run.
+        1 => vec![rng.next_u64() as u8; gen::usize_in(rng, 0, 600)],
+        // Token-like: a small repeating alphabet with jitter.
+        2 => {
+            let alphabet: Vec<u8> =
+                (0..gen::usize_in(rng, 1, 8)).map(|i| i as u8 * 17).collect();
+            (0..gen::usize_in(rng, 0, 600))
+                .map(|_| *rng.choose(&alphabet))
+                .collect()
+        }
+        // Self-overlap stress: a short motif tiled past the window.
+        _ => {
+            let motif: Vec<u8> = (0..gen::usize_in(rng, 1, 5))
+                .map(|_| rng.next_u64() as u8)
+                .collect();
+            let n = gen::usize_in(rng, 0, 600);
+            (0..n).map(|i| motif[i % motif.len()]).collect()
+        }
+    }
+}
+
+#[test]
+fn prop_lz_roundtrips_arbitrary_bytes() {
+    check_default("lz_roundtrip", |rng| {
+        let src = random_bytes(rng);
+        let packed = lz_compress(&src);
+        let back = lz_decompress(&packed, src.len()).unwrap_or_else(|e| {
+            panic!("lz roundtrip failed for {} bytes: {e}", src.len())
+        });
+        assert_eq!(back, src, "lossless codec drifted");
+        // The declared size is part of the contract: a stream that
+        // inflates to anything but `expect` is a framing error, both
+        // ways (truncated payload and trailing garbage).
+        if !src.is_empty() {
+            assert!(lz_decompress(&packed, src.len() - 1).is_err());
+        }
+        assert!(lz_decompress(&packed, src.len() + 1).is_err());
+    });
+}
+
+/// A payload whose Tokens/Mask planes compress (small alphabet,
+/// constant mask) while Advantages stay incompressible noise — the
+/// shape `compresses_well` is tuned for.
+fn compressible_payload(rng: &mut Pcg64) -> StepPayload {
+    let rows = gen::usize_in(rng, 1, 8);
+    let cols = gen::usize_in(rng, 8, 64);
+    let tokens: Vec<i32> =
+        (0..rows * cols).map(|_| rng.below(7) as i32).collect();
+    let mask: Vec<f32> = vec![1.0; rows * cols];
+    let adv: Vec<f32> =
+        (0..rows * cols).map(|_| rng.gaussian() as f32).collect();
+    StepPayload::new(vec![
+        DispatchTensor::from_i32(WireTensorId::Tokens, rows, cols, &tokens)
+            .unwrap(),
+        DispatchTensor::from_f32(WireTensorId::Mask, rows, cols, &mask)
+            .unwrap(),
+        DispatchTensor::from_f32(WireTensorId::Advantages, rows, cols, &adv)
+            .unwrap(),
+    ])
+    .unwrap()
+}
+
+#[test]
+fn prop_compressed_frames_decode_byte_identical() {
+    check_default("codec_frame_roundtrip", |rng| {
+        let payload = compressible_payload(rng);
+        let items: Vec<usize> = (0..payload.rows()).collect();
+        let raw = TransferPayload::for_items(&payload, &items).unwrap();
+        let tp = TransferPayload::for_items(&payload, &items)
+            .unwrap()
+            .compress(Codec::Lz);
+        // Compression never grows the wire form (a shard only keeps
+        // its packed bytes when strictly smaller) and never touches
+        // the logical byte count.
+        assert!(tp.wire_bytes() <= raw.wire_bytes());
+        assert_eq!(tp.payload_bytes(), raw.payload_bytes());
+        for (desc, _) in &tp.shards {
+            desc.check_wire_bytes().unwrap();
+            if desc.codec == Codec::Lz {
+                assert!(desc.tensor.compresses_well(), "{:?}", desc.tensor);
+            }
+        }
+        // The frame decodes back to the exact source bytes.
+        let frame = encode_frame(1, 9, &tp).unwrap();
+        let (header, shards) = decode_frame(&frame).unwrap();
+        assert_eq!(header.bytes, tp.wire_bytes());
+        let mut batch = ReceivedBatch::new();
+        for (desc, bytes) in &shards {
+            batch.insert(desc, bytes).unwrap();
+        }
+        batch.assert_matches(&payload, &items).unwrap();
+    });
+}
+
+#[test]
+fn prop_truncated_or_corrupt_compressed_frames_rejected() {
+    check_default("codec_frame_corruption", |rng| {
+        let payload = compressible_payload(rng);
+        let items: Vec<usize> = (0..payload.rows()).collect();
+        let tp = TransferPayload::for_items(&payload, &items)
+            .unwrap()
+            .compress(Codec::Lz);
+        let frame = encode_frame(0, 1, &tp).unwrap();
+        // Any strict prefix fails — including cuts inside a compressed
+        // shard body, which must not decompress "short but clean".
+        let cut = rng.below(frame.len());
+        assert!(
+            decode_frame(&frame[..cut]).is_err(),
+            "decode must reject {cut}-byte prefix of {}",
+            frame.len()
+        );
+        // Any single-byte flip past the magic fails: the checksum is
+        // computed over the *wire* (compressed) bytes, so corruption is
+        // caught before any decompressed data escapes.
+        let idx = 4 + rng.below(frame.len() - 4);
+        let mut corrupt = frame.clone();
+        corrupt[idx] ^= 1 + rng.below(255) as u8;
+        assert!(decode_frame(&corrupt).is_err(), "bit flip at {idx}");
+    });
+}
+
+#[test]
+fn prop_header_field_mutations_rejected_at_the_guards() {
+    use earl::dispatch::wire::MAX_FRAME_SHARDS;
+    check_default("header_mutation_guards", |rng| {
+        let payload = compressible_payload(rng);
+        let items: Vec<usize> = (0..payload.rows()).collect();
+        let tp = TransferPayload::for_items(&payload, &items).unwrap();
+        let frame = encode_frame(2, 3, &tp).unwrap();
+        let header = FrameHeader::decode(&frame).unwrap();
+
+        // Mutate exactly one verified header field. Oversized `bytes` /
+        // `n_shards` claims must die at the MAX_* guards — this test
+        // completing at all is the allocation evidence, since honoring
+        // a u64::MAX-ish claim would OOM before failing.
+        let mut bad = header;
+        match rng.below(3) {
+            0 => {
+                bad.bytes = MAX_FRAME_BYTES
+                    + 1
+                    + (rng.next_u64() % (u64::MAX / 2 - MAX_FRAME_BYTES));
+            }
+            1 => {
+                bad.n_shards = MAX_FRAME_SHARDS
+                    + 1
+                    + (rng.next_u64() as u32 % (u32::MAX - MAX_FRAME_SHARDS));
+            }
+            _ => {
+                bad.checksum ^= 1 + rng.next_u64() % (u64::MAX - 1);
+            }
+        }
+        let mut mutated = frame.clone();
+        mutated[..FRAME_HEADER_LEN].copy_from_slice(&bad.encode());
+        assert!(
+            decode_frame(&mutated).is_err(),
+            "mutated header accepted: {bad:?}"
+        );
+
+        // In-range but wrong declarations are caught by the descriptor
+        // cross-check (sum of per-shard wire bytes), not trusted.
+        let mut skew = header;
+        skew.bytes ^= 1 + rng.below(1 << 20) as u64;
+        let mut skewed = frame;
+        skewed[..FRAME_HEADER_LEN].copy_from_slice(&skew.encode());
+        assert!(decode_frame(&skewed).is_err(), "byte-count skew accepted");
+    });
+}
+
+#[test]
+fn prop_shard_desc_codec_consistency_enforced() {
+    check_default("shard_desc_codec_guard", |rng| {
+        // An identity shard must declare wire == payload bytes; an LZ
+        // shard strictly fewer. Random (codec, wire, payload) triples
+        // that violate either rule are rejected before any payload is
+        // read.
+        let rows = 1 + rng.below(64) as u32;
+        let row_bytes = 1 + rng.below(4096) as u32;
+        let payload = rows as u64 * row_bytes as u64;
+        let desc = |codec, wire_bytes| earl::dispatch::ShardDesc {
+            tensor: WireTensorId::Tokens,
+            dtype: earl::dispatch::WireDtype::I32,
+            codec,
+            row_start: 0,
+            rows,
+            row_bytes,
+            wire_bytes,
+        };
+        assert!(desc(Codec::None, payload).check_wire_bytes().is_ok());
+        assert!(desc(Codec::None, payload + 1).check_wire_bytes().is_err());
+        assert!(
+            desc(Codec::None, payload - 1).check_wire_bytes().is_err()
+        );
+        assert!(desc(Codec::Lz, payload).check_wire_bytes().is_err());
+        assert!(
+            desc(Codec::Lz, payload + rng.next_u64() % (1 << 30))
+                .check_wire_bytes()
+                .is_err(),
+            "inflating 'compressed' shard accepted"
+        );
+        if payload > 1 {
+            let smaller = 1 + rng.next_u64() % (payload - 1);
+            assert!(desc(Codec::Lz, smaller).check_wire_bytes().is_ok());
+        }
+        // The serialized descriptor roundtrips its codec byte.
+        let d = desc(Codec::Lz, payload.saturating_sub(2).max(1));
+        let wire = d.encode();
+        assert_eq!(wire.len(), SHARD_DESC_LEN);
+        assert_eq!(earl::dispatch::ShardDesc::decode(&wire).unwrap(), d);
     });
 }
 

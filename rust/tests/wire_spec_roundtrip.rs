@@ -10,7 +10,7 @@ use earl::analyze::source::parse_source;
 use earl::analyze::wirespec;
 use earl::analyze::WIRE_MODULE;
 use earl::dispatch::wire::{
-    FrameHeader, ShardDesc, WireDtype, WireTensorId, FRAME_HEADER_LEN,
+    Codec, FrameHeader, ShardDesc, WireDtype, WireTensorId, FRAME_HEADER_LEN,
     SHARD_DESC_LEN, WIRE_MAGIC,
 };
 
@@ -105,27 +105,54 @@ fn shard_desc_roundtrips_for_every_variant_and_dtype() {
 
     for tensor in WireTensorId::ALL {
         for dtype in [WireDtype::I32, WireDtype::F32] {
-            let desc = ShardDesc {
-                tensor,
-                dtype,
-                row_start: 0x0102_0304,
-                rows: 0x0A0B_0C0D,
-                row_bytes: 0xF00D_BEEF,
-            };
-            let bytes = desc.encode();
-            assert_eq!(bytes.len(), layout.len as usize);
-            let back = ShardDesc::decode(&bytes)
-                .unwrap_or_else(|e| panic!("decode {tensor:?}/{dtype:?}: {e}"));
-            assert_eq!(back, desc, "roundtrip drift for {tensor:?}/{dtype:?}");
-            // Declared padding holes stay zero on the wire (they are
-            // covered by the checksum, so garbage there would make
-            // equal frames compare unequal).
-            for &hole in &layout.holes {
+            for codec in Codec::ALL {
+                let desc = ShardDesc {
+                    tensor,
+                    dtype,
+                    codec,
+                    row_start: 0x0102_0304,
+                    rows: 0x0A0B_0C0D,
+                    row_bytes: 0xF00D_BEEF,
+                    wire_bytes: 0x0011_2233_4455_6677,
+                };
+                let bytes = desc.encode();
+                assert_eq!(bytes.len(), layout.len as usize);
+                let back = ShardDesc::decode(&bytes).unwrap_or_else(|e| {
+                    panic!("decode {tensor:?}/{dtype:?}/{codec:?}: {e}")
+                });
                 assert_eq!(
-                    bytes[hole as usize], 0,
-                    "pad byte {hole} of ShardDesc not zeroed"
+                    back, desc,
+                    "roundtrip drift for {tensor:?}/{dtype:?}/{codec:?}"
                 );
+                // Declared padding holes stay zero on the wire (they
+                // are covered by the checksum, so garbage there would
+                // make equal frames compare unequal).
+                for &hole in &layout.holes {
+                    assert_eq!(
+                        bytes[hole as usize], 0,
+                        "pad byte {hole} of ShardDesc not zeroed"
+                    );
+                }
             }
+        }
+    }
+}
+
+#[test]
+fn codec_from_code_is_exhaustive_over_u8() {
+    let spec = wire_spec();
+    let e = spec.enums.get("Codec").expect("Codec spec");
+    let valid: std::collections::BTreeSet<u64> =
+        e.codes.iter().map(|(_, c)| *c).collect();
+    assert_eq!(e.codes.len(), Codec::ALL.len());
+
+    for c in 0..=u8::MAX {
+        match Codec::from_code(c) {
+            Ok(k) => {
+                assert!(valid.contains(&(c as u64)));
+                assert_eq!(k.code(), c);
+            }
+            Err(_) => assert!(!valid.contains(&(c as u64))),
         }
     }
 }
@@ -136,7 +163,7 @@ fn frame_header_roundtrips_at_the_spec_width() {
     let layout = spec.layouts.get("FrameHeader").expect("FrameHeader layout");
     assert_eq!(layout.len as usize, FRAME_HEADER_LEN);
     assert_eq!(spec.consts.get("FRAME_HEADER_LEN"), Some(&40));
-    assert_eq!(spec.consts.get("SHARD_DESC_LEN"), Some(&16));
+    assert_eq!(spec.consts.get("SHARD_DESC_LEN"), Some(&24));
     assert_eq!(spec.consts.get("WIRE_MAGIC"), Some(&(WIRE_MAGIC as u64)));
     assert!(layout.holes.is_empty(), "FrameHeader grew padding");
 
